@@ -1,0 +1,37 @@
+//! Shared hand-rolled bench harness (criterion is not available in this
+//! offline image): warmup + repeated timing with mean/min reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub iters: usize,
+}
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("{name:<44} mean {mean:>10.3} ms   min {min:>10.3} ms   ({iters} iters)");
+    BenchResult { name: name.to_string(), mean_ms: mean, min_ms: min, iters }
+}
+
+pub fn throughput(name: &str, bytes: usize, iters: usize, f: impl FnMut()) -> f64 {
+    let r = bench(name, iters, f);
+    let mbs = bytes as f64 / 1e6 / (r.min_ms / 1e3);
+    println!("{:<44}   -> {mbs:.1} MB/s (best)", "");
+    mbs
+}
+
+pub fn artifacts_ready() -> bool {
+    std::path::Path::new(&format!("{}/model_S.eqw", entquant::artifacts_dir())).exists()
+}

@@ -1,0 +1,62 @@
+//! Bench: rANS decode/encode throughput across entropy levels, chunk
+//! sizes and framing — the substrate numbers behind Figure 5's decode
+//! overhead and the §A.1 block-joint ablation.  Run via `cargo bench`.
+
+mod common;
+
+use common::{bench, throughput};
+use entquant::ans::{Bitstream, Huffman};
+use entquant::entropy::entropy_of;
+use entquant::tensor::Rng;
+
+fn skewed(n: usize, spread: f64, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| ((rng.normal().abs() * spread) as usize).min(255) as u8).collect()
+}
+
+fn main() {
+    let n = 4 << 20; // 4M symbols ~ one M-model block x8
+    println!("== rANS decode throughput vs entropy (n = {} MiB) ==", n >> 20);
+    for spread in [0.3f64, 2.0, 10.0, 60.0] {
+        let data = skewed(n, spread, 7);
+        let h = entropy_of(&data);
+        let bs = Bitstream::encode(&data, 256 * 1024);
+        let mut out = vec![0u8; n];
+        throughput(
+            &format!("decode H={h:.2} bits ({:.2} bits/sym stored)", bs.payload.len() as f64 * 8.0 / n as f64),
+            n,
+            5,
+            || bs.decode_into(&mut out, 1).unwrap(),
+        );
+    }
+
+    println!("\n== decode throughput vs chunk size (H~3.3) ==");
+    let data = skewed(n, 10.0, 9);
+    for chunk in [16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024] {
+        let bs = Bitstream::encode(&data, chunk);
+        let mut out = vec![0u8; n];
+        throughput(&format!("decode chunk={}KiB", chunk >> 10), n, 5, || {
+            bs.decode_into(&mut out, 1).unwrap()
+        });
+    }
+
+    println!("\n== encode throughput ==");
+    let data = skewed(n, 10.0, 11);
+    bench("rans encode 4MiB", 5, || {
+        let _ = Bitstream::encode(&data, 256 * 1024);
+    });
+
+    println!("\n== ANS vs Huffman in the sub-1-bit regime (the paper's motivation) ==");
+    let mut rare = vec![0u8; 1 << 20];
+    for i in 0..4000 {
+        rare[i * 260] = 1 + (i % 7) as u8;
+    }
+    let h = entropy_of(&rare);
+    let bs = Bitstream::encode(&rare, 256 * 1024);
+    let huff = Huffman::from_data(&rare);
+    println!(
+        "H = {h:.3} bits/sym | ANS stores {:.3} bits/sym | Huffman floor {:.3} bits/sym",
+        bs.payload.len() as f64 * 8.0 / rare.len() as f64,
+        huff.mean_bits(&rare)
+    );
+}

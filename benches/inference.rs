@@ -1,0 +1,74 @@
+//! Bench: end-to-end serving throughput per residency mode (Figure 5 /
+//! F.1-F.3).  Uses the PJRT engine over the M-model artifacts; skips
+//! cleanly when artifacts are missing.
+
+mod common;
+
+use common::artifacts_ready;
+use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::runtime::Runtime;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn main() {
+    if !artifacts_ready() {
+        println!("artifacts missing; run `make artifacts` first");
+        return;
+    }
+    let art = entquant::artifacts_dir();
+    if !std::path::Path::new(&format!("{art}/manifest.json")).exists() {
+        println!("manifest missing; run `make artifacts` first");
+        return;
+    }
+    let model = entquant::model::load_eqw(&format!("{art}/model_M.eqw")).unwrap();
+    let (cm, rep) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )
+    .unwrap();
+    println!(
+        "serving M at {:.2} effective bits/param\n",
+        rep.effective_bits_per_param
+    );
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin")).unwrap();
+    let max_new = 12;
+    println!(
+        "{:<14} {:>6} {:>11} {:>13} {:>14} {:>12}",
+        "Mode", "Batch", "TTFT(ms)", "Prefill(ms)", "Decode tok/s", "ResidentMiB"
+    );
+    for residency in [
+        Residency::Bf16Resident,
+        Residency::F8Resident,
+        Residency::EntQuant,
+        Residency::DiskOffload,
+    ] {
+        for batch_n in [1usize, 4] {
+            let rt = Runtime::new(&art).unwrap();
+            let engine = ServingEngine::new(
+                rt,
+                cm.clone(),
+                EngineOpts { residency, ..Default::default() },
+            )
+            .unwrap();
+            let reqs: Vec<Request> = (0..batch_n)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: valid[i * 101..i * 101 + 64].to_vec(),
+                    max_new_tokens: max_new,
+                })
+                .collect();
+            let batch = &pack(&reqs, &[(1, 128), (4, 128)])[0];
+            // warm the executable cache, then measure
+            let _ = engine.generate(batch, 2).unwrap();
+            let (_, m) = engine.generate(batch, max_new).unwrap();
+            println!(
+                "{:<14} {batch_n:>6} {:>11.0} {:>13.0} {:>14.1} {:>12.2}",
+                format!("{residency:?}"),
+                m.ttft_ms,
+                m.prefill_ms,
+                (m.decode_tokens * batch_n) as f64 / (m.decode_ms / 1e3),
+                engine.resident_weight_bytes() as f64 / (1 << 20) as f64
+            );
+        }
+    }
+    println!("\nexpected shape (paper Fig 5): EntQuant ~ F8Resident within 1.5-2x of Bf16, DiskOffload far behind on decode");
+}

@@ -1,0 +1,64 @@
+//! Bench: fast table regenerators (Table 1, Fig A.1/B.1 sweeps) — the
+//! no-eval subset that is cheap enough for `cargo bench`.  The full
+//! evaluation tables run through the CLI (`entquant table2` etc.).
+
+mod common;
+
+use common::artifacts_ready;
+use entquant::entropy;
+use entquant::model::load_eqw;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn main() {
+    if !artifacts_ready() {
+        println!("artifacts missing; run `make artifacts` first");
+        return;
+    }
+    let art = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{art}/model_S.eqw")).unwrap();
+
+    println!("== Table 1: unique values (fixed vs EntQuant) ==");
+    println!("{:<10} {:>10} {:>14}", "bits", "fixed", "entquant");
+    for bits in [4.0f64, 3.0, 2.0] {
+        let (cm, _) = compress_model(
+            &model,
+            &CompressOpts { target_bits: Some(bits), ..Default::default() },
+        )
+        .unwrap();
+        let q = cm.to_qmodel().unwrap();
+        let mut uniq = 0usize;
+        let mut n = 0usize;
+        for b in &q.blocks {
+            for l in &b.linears {
+                use std::collections::BTreeSet;
+                let set: BTreeSet<u32> = l.code_values().data.iter().map(|v| v.to_bits()).collect();
+                uniq += set.len();
+                n += 1;
+            }
+        }
+        println!("{bits:<10} {:>10} {:>14.2}", 1u64 << (bits as u32), uniq as f64 / n as f64);
+    }
+
+    println!("\n== Fig A.1 sweep: lambda -> entropy (S model) ==");
+    for lam in [0.1f64, 1.0, 10.0, 100.0, 1000.0] {
+        let (cm, rep) = compress_model(&model, &CompressOpts { lam, ..Default::default() }).unwrap();
+        // verify the stored stream really achieves the entropy
+        let mut total_bits = 0usize;
+        let mut syms = 0usize;
+        for b in &cm.blocks {
+            total_bits += b.bitstream.serialized_len() * 8;
+            syms += b.n_symbols();
+        }
+        println!(
+            "lam {lam:>8.1}: H {:.3} bits/param, stored {:.3} bits/param, sparsity {:.3}",
+            rep.mean_entropy_bits,
+            total_bits as f64 / syms as f64,
+            rep.mean_sparsity
+        );
+        assert!(
+            total_bits as f64 / syms as f64 <= rep.mean_entropy_bits + 0.25,
+            "coder must track entropy"
+        );
+    }
+    let _ = entropy::entropy_of(&[0u8]);
+}

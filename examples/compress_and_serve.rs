@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): load the
+//! build-time-trained M checkpoint, compress it data-free to ~3
+//! effective bits, then serve batched requests through the full
+//! three-layer stack — rust coordinator -> PJRT executables (lowered
+//! from the JAX model whose linears are the Pallas qmatmul kernel) —
+//! with on-the-fly block-wise ANS decoding, reporting latency and
+//! throughput.  Recorded in EXPERIMENTS.md §E2E.
+//!
+//!   cargo run --release --example compress_and_serve
+
+use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::eval::perplexity;
+use entquant::runtime::Runtime;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn main() -> anyhow::Result<()> {
+    let art = entquant::artifacts_dir();
+    let model = entquant::model::load_eqw(&format!("{art}/model_M.eqw"))?;
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    println!("[1/4] loaded trained M checkpoint: {} params", model.config.params());
+
+    // -- compress (paper Algorithm 1, data-free)
+    let t0 = std::time::Instant::now();
+    let (cm, rep) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )?;
+    println!(
+        "[2/4] compressed in {:.1}s: {:.2} effective bits/param (entropy {:.2}), distortion {:.4}",
+        t0.elapsed().as_secs_f64(),
+        rep.effective_bits_per_param,
+        rep.mean_entropy_bits,
+        rep.total_distortion
+    );
+    let base_ppl = perplexity(&model, &valid, 128, 4);
+    let comp_ppl = perplexity(&cm.to_model()?, &valid, 128, 4);
+    println!("      quality: base ppl {base_ppl:.3} -> compressed ppl {comp_ppl:.3}");
+
+    // -- serve (paper Algorithm 2 + §A.1 block-wise decode pipeline)
+    let rt = Runtime::new(&art)?;
+    println!("[3/4] PJRT runtime up on {}", rt.platform());
+    let engine = ServingEngine::new(
+        rt,
+        cm,
+        EngineOpts { residency: Residency::EntQuant, pipeline: true, ..Default::default() },
+    )?;
+
+    let requests: Vec<Request> = (0..8)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: valid[i * 120..i * 120 + 64].to_vec(),
+            max_new_tokens: 24,
+        })
+        .collect();
+    let slots = engine.runtime().manifest.prefill_slots.clone();
+    let t1 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    println!("[4/4] serving {} batched requests ...", requests.len());
+    for batch in pack(&requests, &slots) {
+        let (outputs, m) = engine.generate(&batch, 24)?;
+        for (r, out) in batch.requests.iter().zip(&outputs) {
+            let prompt_tail: String =
+                r.prompt[r.prompt.len() - 24..].iter().map(|&b| b as char).collect();
+            let text: String = out.iter().map(|&b| b as char).collect();
+            println!("    [{}] ...{prompt_tail} | {text}", r.id);
+            total_tokens += out.len();
+        }
+        println!(
+            "    batch {:?}: ttft {:.0} ms, {:.1} decode tok/s/lane, ans-decode {:.0} ms, pjrt {:.0} ms",
+            batch.slot,
+            m.ttft_ms,
+            m.decode_tokens as f64 / (m.decode_ms / 1e3),
+            m.ans_decode_ms,
+            m.exec_ms,
+        );
+    }
+    let wall = t1.elapsed().as_secs_f64();
+    println!(
+        "done: {total_tokens} new tokens in {wall:.2}s = {:.1} tok/s aggregate; resident weights {:.2} MiB (vs {:.2} MiB bf16)",
+        total_tokens as f64 / wall,
+        engine.resident_weight_bytes() as f64 / (1 << 20) as f64,
+        model.bf16_bytes() as f64 / (1 << 20) as f64,
+    );
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Pareto sweep (paper Figure 4): sweep lambda across the full range and
+//! print the memory-perplexity frontier for one model, demonstrating
+//! that EntQuant's compression rate is continuously tunable — the core
+//! "decoupling" claim.
+//!
+//!   cargo run --release --example pareto_sweep [size]
+
+use entquant::eval::perplexity;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn main() -> anyhow::Result<()> {
+    let size = std::env::args().nth(1).unwrap_or_else(|| "S".into());
+    let art = entquant::artifacts_dir();
+    let model = entquant::model::load_eqw(&format!("{art}/model_{size}.eqw"))?;
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    let base_ppl = perplexity(&model, &valid, 128, 4);
+    println!("model {size}: base ppl {base_ppl:.3}");
+    println!("{:>10} {:>10} {:>10} {:>10} {:>10}", "lambda", "bits", "ppl", "KiB", "sparsity");
+    for lam in [0.01f64, 0.1, 0.5, 2.0, 8.0, 30.0, 100.0, 300.0, 1000.0] {
+        let (cm, rep) = compress_model(&model, &CompressOpts { lam, ..Default::default() })?;
+        let ppl = perplexity(&cm.to_model()?, &valid, 128, 4);
+        let kib = rep.effective_bits_per_param / 8.0 * rep.params_compressed as f64 / 1024.0;
+        println!(
+            "{lam:>10.2} {:>10.2} {ppl:>10.3} {kib:>10.1} {:>10.3}",
+            rep.effective_bits_per_param, rep.mean_sparsity
+        );
+    }
+    println!("(a smooth frontier down to ~2 bits, vs fixed-bit-width methods' discrete steps)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: compress a trained checkpoint to ~3 effective bits per
+//! parameter, data-free, and measure the quality impact.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! (run `make artifacts` first to train the small checkpoints)
+
+use entquant::eval::perplexity;
+use entquant::model::load_eqw;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn main() -> anyhow::Result<()> {
+    let art = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{art}/model_S.eqw"))?;
+    println!(
+        "loaded model S: {} params ({} blocks, d_model {})",
+        model.config.params(),
+        model.config.n_layers,
+        model.config.d_model
+    );
+
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    let base_ppl = perplexity(&model, &valid, 128, 4);
+    println!("base perplexity: {base_ppl:.3}");
+
+    // Algorithm 1, end to end: AbsMax init -> L-BFGS entropy optimization
+    // -> Float8 quantization -> block-joint rANS.
+    let (compressed, report) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )?;
+    println!(
+        "compressed: lambda={:.3}, entropy={:.2} bits/param, effective={:.2} bits/param,\n\
+         distortion={:.4}, sparsity={:.3}, wall={:.1}s",
+        report.lam,
+        report.mean_entropy_bits,
+        report.effective_bits_per_param,
+        report.total_distortion,
+        report.mean_sparsity,
+        report.wall_s
+    );
+
+    let out = format!("{art}/quickstart_S.eqz");
+    compressed.save(&out)?;
+    println!(
+        "wrote {out} ({:.1} KiB vs {:.1} KiB bf16 linears)",
+        std::fs::metadata(&out)?.len() as f64 / 1024.0,
+        (model.linear_params() * 2) as f64 / 1024.0
+    );
+
+    let ppl = perplexity(&compressed.to_model()?, &valid, 128, 4);
+    println!("compressed perplexity: {ppl:.3} (base {base_ppl:.3})");
+    Ok(())
+}

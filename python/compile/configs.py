@@ -1,0 +1,55 @@
+"""Model-size configurations shared across the compile path.
+
+Three decoder-only byte-level transformers stand in for the paper's
+LLaMA 7B/13B/70B ladder (see DESIGN.md §2 for the substitution argument).
+The serving artifacts (PJRT-loaded HLO) are exported for SERVE_SIZE only;
+offline evaluation runs through the rust f32 reference forward for all
+sizes.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_ctx: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def params(self) -> int:
+        """Total parameter count (embeddings + blocks + head + norms)."""
+        d, f = self.d_model, self.d_ff
+        per_block = 4 * d * d + 3 * d * f + 2 * d  # attn + swiglu + 2 rmsnorm
+        return self.vocab * d * 2 + self.n_layers * per_block + d
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+# The S/M/L ladder. d_ff is the SwiGLU inner width (~2.7x d_model like
+# LLaMA's 8/3 rule, rounded to a multiple of 16 for clean tiling).
+CONFIGS = {
+    "S": ModelConfig("S", vocab=256, d_model=128, n_layers=4, n_heads=4, d_ff=352, max_ctx=256),
+    "M": ModelConfig("M", vocab=256, d_model=192, n_layers=6, n_heads=6, d_ff=512, max_ctx=256),
+    "L": ModelConfig("L", vocab=256, d_model=256, n_layers=8, n_heads=8, d_ff=688, max_ctx=256),
+}
+
+# Size whose serving artifacts (per-block prefill/decode HLO) are exported.
+SERVE_SIZE = "M"
+
+# Fixed-shape serving slots: the dynamic batcher packs requests into these.
+PREFILL_SLOTS = [(1, 128), (4, 128)]  # (batch, seq)
+DECODE_SLOTS = [(1, 256), (4, 256)]  # (batch, max_ctx)
+
+# Names of the quantized linear weights inside one transformer block, in
+# the canonical serialization order shared with the rust side.
+BLOCK_LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]

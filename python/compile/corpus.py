@@ -1,0 +1,220 @@
+"""Synthetic byte-level corpus + evaluation-task generator.
+
+Stands in for the paper's C4/WikiText-2 (perplexity) and the 8-task
+LM-Eval zero-shot suite (accuracy) — see DESIGN.md §2.  Everything is
+deterministic under a seed and written into artifacts/ at build time, so
+the rust eval harness only ever *reads* data (python never on the request
+path).
+
+The language is a small templated grammar with enough structure that a
+few hundred training steps produce a model whose weight matrices carry
+realistic heavy-tailed statistics, and whose behaviour degrades
+measurably (but gracefully) under compression:
+
+  * declarative sentences:   "the brave fox guards the old tower ."
+  * arithmetic facts:        "2 + 5 = 7 ."
+  * key-value recall:        "set k to m . recall k gives m ."
+  * copy/repeat patterns:    "say abc again abc ."
+  * comparisons:             "9 is more than 3 ."
+
+The eight zero-shot tasks mirror the LM-Eval harness mechanics exactly:
+each item is a context plus N candidate continuations scored by model
+log-likelihood (length-normalized), accuracy = argmax == gold.
+"""
+
+import json
+import random
+
+ADJS = ["brave", "old", "tiny", "green", "quiet", "swift", "grim", "pale"]
+NOUNS = ["fox", "tower", "river", "stone", "crow", "lamp", "gate", "ship"]
+VERBS = ["guards", "finds", "breaks", "lifts", "hides", "moves", "holds", "sees"]
+KEYS = list("kqzjxv")
+VALS = list("mwpgbt")
+
+INSTR_PREFIX = "Q: "
+INSTR_INFIX = " A: "
+
+
+def _sentence(rng: random.Random) -> str:
+    kind = rng.randrange(10)
+    if kind < 4:
+        return (
+            f"the {rng.choice(ADJS)} {rng.choice(NOUNS)} {rng.choice(VERBS)} "
+            f"the {rng.choice(ADJS)} {rng.choice(NOUNS)} ."
+        )
+    if kind < 6:
+        a, b = rng.randrange(10), rng.randrange(10)
+        return f"{a} + {b} = {a + b} ."
+    if kind < 8:
+        k, v = rng.choice(KEYS), rng.choice(VALS)
+        return f"set {k} to {v} . recall {k} gives {v} ."
+    if kind < 9:
+        word = "".join(rng.choice("abcdefgh") for _ in range(3))
+        return f"say {word} again {word} ."
+    a, b = rng.randrange(10), rng.randrange(10)
+    rel = "more" if a > b else "less" if a < b else "same"
+    if rel == "same":
+        return f"{a} is the same as {b} ."
+    return f"{a} is {rel} than {b} ."
+
+
+def generate_text(n_sentences: int, seed: int) -> bytes:
+    rng = random.Random(seed)
+    parts = [_sentence(rng) for _ in range(n_sentences)]
+    return (" ".join(parts) + " ").encode("ascii")
+
+
+def _instruct_sample(rng: random.Random) -> str:
+    kind = rng.randrange(3)
+    if kind == 0:
+        a, b = rng.randrange(10), rng.randrange(10)
+        return f"{INSTR_PREFIX}what is {a} + {b} ?{INSTR_INFIX}{a + b} ."
+    if kind == 1:
+        k, v = rng.choice(KEYS), rng.choice(VALS)
+        return f"{INSTR_PREFIX}set {k} to {v} . what is {k} ?{INSTR_INFIX}{v} ."
+    word = "".join(rng.choice("abcdefgh") for _ in range(3))
+    return f"{INSTR_PREFIX}repeat {word} .{INSTR_INFIX}{word} ."
+
+
+def generate_instruct_text(n_samples: int, seed: int) -> bytes:
+    rng = random.Random(seed)
+    return (" ".join(_instruct_sample(rng) for _ in range(n_samples)) + " ").encode("ascii")
+
+
+# ---------------------------------------------------------------------------
+# zero-shot tasks (the LM-Eval analogue)
+
+
+def _mc(context: str, gold: str, distractors: list) -> dict:
+    options = [gold] + distractors
+    return {"context": context, "options": options, "answer": 0}
+
+
+def _task_noun_cloze(rng):
+    a1, n1, v = rng.choice(ADJS), rng.choice(NOUNS), rng.choice(VERBS)
+    a2, n2 = rng.choice(ADJS), rng.choice(NOUNS)
+    ctx = f"the {a1} {n1} {v} the {a2}"
+    bad = rng.sample([w for w in VERBS if w != v], 3)  # verbs are wrong POS here
+    return _mc(ctx, f" {n2} .", [f" {w} ." for w in bad])
+
+
+def _task_arith(rng):
+    a, b = rng.randrange(10), rng.randrange(10)
+    ctx = f"{a} + {b} ="
+    wrong = rng.sample([x for x in range(19) if x != a + b], 3)
+    return _mc(ctx, f" {a + b} .", [f" {x} ." for x in wrong])
+
+
+def _task_recall(rng):
+    k, v = rng.choice(KEYS), rng.choice(VALS)
+    ctx = f"set {k} to {v} . recall {k} gives"
+    bad = rng.sample([x for x in VALS if x != v], 3)
+    return _mc(ctx, f" {v} .", [f" {x} ." for x in bad])
+
+
+def _task_copy(rng):
+    word = "".join(rng.choice("abcdefgh") for _ in range(3))
+    ctx = f"say {word} again"
+    bad = ["".join(rng.choice("abcdefgh") for _ in range(3)) for _ in range(3)]
+    return _mc(ctx, f" {word} .", [f" {b} ." for b in bad])
+
+
+def _task_compare(rng):
+    a, b = rng.randrange(10), rng.randrange(10)
+    while a == b:
+        b = rng.randrange(10)
+    rel = "more" if a > b else "less"
+    anti = "less" if a > b else "more"
+    ctx = f"{a} is"
+    return _mc(ctx, f" {rel} than {b} .", [f" {anti} than {b} ."])
+
+
+def _task_article(rng):
+    # "the X Y" bigram grammaticality: gold keeps adj-noun order
+    a, n = rng.choice(ADJS), rng.choice(NOUNS)
+    ctx = "the"
+    return _mc(ctx, f" {a} {n} ", [f" {n} {a} "])
+
+
+def _task_sum_carry(rng):
+    a = rng.randrange(5, 10)
+    b = rng.randrange(10 - a, 10)  # force sum >= 10 (two-digit answer)
+    ctx = f"{a} + {b} ="
+    wrong = rng.sample([x for x in range(10, 19) if x != a + b], 3)
+    return _mc(ctx, f" {a + b} .", [f" {x} ." for x in wrong])
+
+
+def _task_period(rng):
+    # sentence termination: after "the ADJ NOUN VERB the ADJ NOUN" comes "."
+    s = (
+        f"the {rng.choice(ADJS)} {rng.choice(NOUNS)} {rng.choice(VERBS)} "
+        f"the {rng.choice(ADJS)} {rng.choice(NOUNS)}"
+    )
+    return _mc(s, " .", [" the", " +"])
+
+
+TASKS = {
+    "noun_cloze": _task_noun_cloze,
+    "arith": _task_arith,
+    "recall": _task_recall,
+    "copy": _task_copy,
+    "compare": _task_compare,
+    "article": _task_article,
+    "sum_carry": _task_sum_carry,
+    "period": _task_period,
+}
+
+# harder, instruction-format tasks (the GSM8K/IFEval analogue; Figure 1)
+def _task_instr_arith(rng):
+    a, b = rng.randrange(10), rng.randrange(10)
+    ctx = f"{INSTR_PREFIX}what is {a} + {b} ?{INSTR_INFIX.rstrip()}"
+    wrong = rng.sample([x for x in range(19) if x != a + b], 3)
+    return _mc(ctx, f" {a + b} .", [f" {x} ." for x in wrong])
+
+
+def _task_instr_recall(rng):
+    k, v = rng.choice(KEYS), rng.choice(VALS)
+    ctx = f"{INSTR_PREFIX}set {k} to {v} . what is {k} ?{INSTR_INFIX.rstrip()}"
+    bad = rng.sample([x for x in VALS if x != v], 3)
+    return _mc(ctx, f" {v} .", [f" {x} ." for x in bad])
+
+
+def _task_instr_repeat(rng):
+    word = "".join(rng.choice("abcdefgh") for _ in range(3))
+    ctx = f"{INSTR_PREFIX}repeat {word} .{INSTR_INFIX.rstrip()}"
+    bad = ["".join(rng.choice("abcdefgh") for _ in range(3)) for _ in range(3)]
+    return _mc(ctx, f" {word} .", [f" {b} ." for b in bad])
+
+
+INSTRUCT_TASKS = {
+    "instr_arith": _task_instr_arith,
+    "instr_recall": _task_instr_recall,
+    "instr_repeat": _task_instr_repeat,
+}
+
+
+def generate_tasks(n_items: int, seed: int, suite: str = "base") -> dict:
+    """suite: "base" (8 LM-Eval-style tasks) or "instruct" (Figure 1)."""
+    table = TASKS if suite == "base" else INSTRUCT_TASKS
+    out = {}
+    for i, (name, gen) in enumerate(sorted(table.items())):
+        rng = random.Random(seed * 1000 + i)
+        out[name] = [gen(rng) for _ in range(n_items)]
+    return out
+
+
+def write_all(outdir: str, seed: int = 7, n_train_sentences: int = 60000,
+              n_valid_sentences: int = 4000, n_task_items: int = 200) -> None:
+    import os
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(f"{outdir}/train.bin", "wb") as f:
+        f.write(generate_text(n_train_sentences, seed))
+    with open(f"{outdir}/valid.bin", "wb") as f:
+        f.write(generate_text(n_valid_sentences, seed + 1))
+    with open(f"{outdir}/instruct_train.bin", "wb") as f:
+        f.write(generate_instruct_text(8000, seed + 2))
+    with open(f"{outdir}/tasks_base.json", "w") as f:
+        json.dump(generate_tasks(n_task_items, seed + 3, "base"), f)
+    with open(f"{outdir}/tasks_instruct.json", "w") as f:
+        json.dump(generate_tasks(n_task_items, seed + 4, "instruct"), f)

@@ -1,0 +1,86 @@
+"""The .eqw weight-container format shared with the rust side.
+
+Layout (little endian):
+    magic   b"EQW1"
+    u32     header_len (bytes of UTF-8 JSON)
+    bytes   JSON header:
+              { "config": {...ModelConfig...},
+                "tensors": [ {"name": str, "shape": [..], "dtype": "f32",
+                               "offset": int, "nbytes": int}, ... ],
+                "meta": {...free-form (train log summary etc.)...} }
+    bytes   raw tensor data, concatenated, 16-byte aligned per tensor
+
+Tensor naming convention (canonical order, shared with rust/src/model):
+    embed                         [V, D]
+    blocks.{i}.{wq|wk|wv|wo|w_gate|w_up|w_down}
+    blocks.{i}.{norm_attn|norm_mlp}
+    norm_final                    [D]
+    head                          [V, D]
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"EQW1"
+ALIGN = 16
+
+
+def write_eqw(path: str, config: dict, tensors: "list[tuple[str, np.ndarray]]",
+              meta: dict | None = None) -> None:
+    records = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors:
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        pad = (-offset) % ALIGN
+        offset += pad
+        blobs.append(b"\x00" * pad)
+        records.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "offset": offset,
+                "nbytes": arr.nbytes,
+            }
+        )
+        blobs.append(arr.tobytes())
+        offset += arr.nbytes
+    header = json.dumps(
+        {"config": config, "tensors": records, "meta": meta or {}}
+    ).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        f.write(b"".join(blobs))
+
+
+def read_eqw(path: str):
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        data = f.read()
+    tensors = {}
+    for rec in header["tensors"]:
+        raw = data[rec["offset"] : rec["offset"] + rec["nbytes"]]
+        tensors[rec["name"]] = np.frombuffer(raw, dtype=np.float32).reshape(rec["shape"])
+    return header, tensors
+
+
+def weights_to_tensor_list(weights, cfg) -> list:
+    """Flatten a model.Weights pytree into the canonical (name, array) list."""
+    import numpy as np
+
+    out = [("embed", np.asarray(weights.embed))]
+    for i, bw in enumerate(weights.blocks):
+        for field in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                      "norm_attn", "norm_mlp"):
+            out.append((f"blocks.{i}.{field}", np.asarray(getattr(bw, field))))
+    out.append(("norm_final", np.asarray(weights.norm_final)))
+    out.append(("head", np.asarray(weights.head)))
+    return out

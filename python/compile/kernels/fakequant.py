@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: quantize-dequantize ("fake quant") onto the Float8
+E4M3 / Int8 grids with per-output-channel scales.
+
+This is the compute hot-spot of the *compression* path: the EntQuant
+rate-distortion objective (paper eq. 3) evaluates
+
+    W_q = clamp(round_gamma(W / s), -Qmax, Qmax)        (codes)
+    What = s * W_q                                      (dequant)
+
+once per L-BFGS iteration for every layer.  The kernel fuses the divide,
+grid rounding, clamp and rescale in one VMEM pass over row-tiles of W
+(one row = one output channel = one scale), so W streams HBM->VMEM once.
+
+Grid rounding:
+  * float8: XLA's convert-to-f8e4m3fn (round-to-nearest-even, saturating
+    to +-448; e4m3fn has no inf).  Signed zeros are resolved by the
+    round-trip (paper §A.1: "we resolve signed zeros").
+  * int8:   round-half-away-from-zero, clamp to +-127.
+
+interpret=True as everywhere (see qmatmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F8_MAX = 448.0  # largest finite e4m3fn magnitude
+I8_MAX = 127.0
+
+BR = 8  # rows (output channels) per program instance
+
+
+def _round_f8(u: jax.Array) -> jax.Array:
+    u = jnp.clip(u, -F8_MAX, F8_MAX)
+    return u.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def _round_i8(u: jax.Array) -> jax.Array:
+    # round half away from zero, matching the rust symmetric quantizer
+    r = jnp.sign(u) * jnp.floor(jnp.abs(u) + 0.5)
+    return jnp.clip(r, -I8_MAX, I8_MAX)
+
+
+def _fakequant_kernel(w_ref, s_ref, codes_ref, what_ref, *, fmt: str):
+    w = w_ref[...]
+    s = s_ref[...][:, None]
+    safe = jnp.where(s == 0.0, 1.0, s)
+    u = w / safe
+    q = _round_f8(u) if fmt == "f8" else _round_i8(u)
+    q = jnp.where(s == 0.0, 0.0, q)
+    codes_ref[...] = q
+    what_ref[...] = q * s
+
+
+def fakequant(w: jax.Array, s: jax.Array, fmt: str = "f8"):
+    """Returns (codes, what): the grid codes and the dequantized estimate.
+
+    w: [N, K] weight matrix (row = output channel), s: [N] scales.
+    """
+    assert fmt in ("f8", "i8")
+    n, k = w.shape
+    assert s.shape == (n,)
+    br = n
+    for b in range(min(n, BR), 0, -1):
+        if n % b == 0:
+            br = b
+            break
+
+    out_shape = [
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+    ]
+    codes, what = pl.pallas_call(
+        functools.partial(_fakequant_kernel, fmt=fmt),
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(w.astype(jnp.float32), s.astype(jnp.float32))
+    return codes, what

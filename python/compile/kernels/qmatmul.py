@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: fused channel-wise dequantization + matmul.
+
+The paper's inference hot path is the Marlin fused dequant-GEMM (CUDA).
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of warp-level
+shuffles we tile the GEMM for the MXU systolic array with BlockSpec and
+fuse the per-output-channel dequantization into the epilogue of the
+K-reduction:
+
+    y[m, n] = ( sum_k  x[m, k] * wq[n, k] ) * s[n]
+
+where `wq` holds the *decoded symbol values* (Float8/Int8 grid points
+materialized as f32 by the rust-side ANS decode) and `s` is the
+per-output-channel scale.  Because `s` depends only on the output channel
+it commutes with the K-sum, so the multiply happens once per output tile
+rather than once per weight element — the same trick Marlin plays in its
+epilogue.
+
+The HBM<->VMEM schedule is expressed by the BlockSpec index maps: each
+(i, j) program instance streams K-tiles of x and wq through VMEM and
+accumulates into the output tile, which stays resident in VMEM across the
+K-loop (grid is (M/bm, N/bn, K/bk), K innermost).
+
+Pallas runs with interpret=True throughout: the CPU PJRT plugin cannot
+execute Mosaic custom-calls; the real-TPU VMEM/MXU figures are estimated
+in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes, MXU-shaped. Clamped to the actual dims for small operands.
+BM, BN, BK = 128, 128, 128
+
+
+def _qmatmul_kernel(x_ref, wq_ref, s_ref, o_ref, *, n_k: int):
+    """One (i, j, k) program instance.
+
+    x_ref:  (bm, bk) VMEM tile of activations
+    wq_ref: (bn, bk) VMEM tile of quantized-symbol values
+    s_ref:  (bn,)    per-output-channel scales for this j-tile
+    o_ref:  (bm, bn) output tile, resident across the K-loop
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction for this K-tile; f32 accumulate.
+    acc = jnp.dot(x_ref[...], wq_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    # Dequant epilogue: apply the channel scale once, after the last K-tile.
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * s_ref[...][None, :]
+
+
+def _block(dim: int, tile: int) -> int:
+    """Largest divisor of `dim` that is <= tile (keeps grids exact for the
+    non-power-of-two widths of the S/M/L ladder, e.g. 192 or 688)."""
+    for b in range(min(dim, tile), 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=())
+def qmatmul(x: jax.Array, wq: jax.Array, s: jax.Array) -> jax.Array:
+    """y = (x @ wq.T) * s  with x:[M,K], wq:[N,K], s:[N] -> y:[M,N].
+
+    Shapes must be multiples of the clamped tile sizes (the serving
+    configs guarantee this; tests sweep tile-aligned shapes).
+    """
+    m, k = x.shape
+    n, k2 = wq.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    assert s.shape == (n,)
+    bm, bn, bk = _block(m, BM), _block(n, BN), _block(k, BK)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), wq.astype(jnp.float32), s.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int) -> int:
+    """Estimated per-core VMEM residency of one program instance (f32)."""
+    bm, bn, bk = _block(m, BM), _block(n, BN), _block(k, BK)
+    return 4 * (bm * bk + bn * bk + bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int) -> float:
+    """Fraction of MXU 128x128 tile lanes occupied by the chosen blocks."""
+    bm, bn = _block(m, BM), _block(n, BN)
+    return (bm / 128.0) * (bn / 128.0)

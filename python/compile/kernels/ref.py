@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+
+F8_MAX = 448.0
+I8_MAX = 127.0
+
+
+def qmatmul_ref(x: jax.Array, wq: jax.Array, s: jax.Array) -> jax.Array:
+    """y = (x @ wq.T) * s."""
+    return (
+        jnp.dot(
+            x.astype(jnp.float32),
+            wq.astype(jnp.float32).T,
+            preferred_element_type=jnp.float32,
+        )
+        * s.astype(jnp.float32)[None, :]
+    )
+
+
+def round_f8_ref(u: jax.Array) -> jax.Array:
+    u = jnp.clip(u, -F8_MAX, F8_MAX)
+    return u.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def round_i8_ref(u: jax.Array) -> jax.Array:
+    r = jnp.sign(u) * jnp.floor(jnp.abs(u) + 0.5)
+    return jnp.clip(r, -I8_MAX, I8_MAX)
+
+
+def fakequant_ref(w: jax.Array, s: jax.Array, fmt: str = "f8"):
+    w = w.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    safe = jnp.where(s == 0.0, 1.0, s)[:, None]
+    u = w / safe
+    q = round_f8_ref(u) if fmt == "f8" else round_i8_ref(u)
+    q = jnp.where(s[:, None] == 0.0, 0.0, q)
+    return q, q * s[:, None]

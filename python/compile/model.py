@@ -1,0 +1,258 @@
+"""L2: the JAX transformer (LLaMA-style decoder) whose quantized linears
+call the L1 Pallas qmatmul kernel.
+
+Two families of entry points:
+
+* training/eval path (`forward_train`) — plain f32 linears, used by
+  train.py to produce the build-time checkpoints.
+* serving path (`embed_fwd`, `block_prefill`, `block_decode`, `head_fwd`)
+  — per-transformer-block functions over *quantized* weights
+  (symbol-value codes + channel scales), AOT-lowered by aot.py into the
+  HLO artifacts the rust coordinator executes block-by-block, mirroring
+  the paper's §A.1 block-wise decode pipeline.
+
+Architecture: pre-RMSNorm, multi-head causal attention with RoPE, SwiGLU
+MLP, untied byte-level embedding + output head.  Only the 7 per-block
+linears (wq wk wv wo w_gate w_up w_down) are quantized; embeddings, head
+and norms stay high precision, matching the paper's scope ("all linear
+layers").
+"""
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, BLOCK_LINEARS
+from .kernels.qmatmul import qmatmul
+
+
+class BlockWeights(NamedTuple):
+    wq: jax.Array  # [D, D]   (rows = output channels)
+    wk: jax.Array  # [D, D]
+    wv: jax.Array  # [D, D]
+    wo: jax.Array  # [D, D]
+    w_gate: jax.Array  # [F, D]
+    w_up: jax.Array  # [F, D]
+    w_down: jax.Array  # [D, F]
+    norm_attn: jax.Array  # [D]
+    norm_mlp: jax.Array  # [D]
+
+
+class Weights(NamedTuple):
+    embed: jax.Array  # [V, D]
+    blocks: list  # [BlockWeights]
+    norm_final: jax.Array  # [D]
+    head: jax.Array  # [V, D]
+
+
+# ---------------------------------------------------------------------------
+# init / primitives
+
+
+def init_weights(cfg: ModelConfig, key: jax.Array) -> Weights:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def dense(k, out_dim, in_dim):
+        std = 1.0 / math.sqrt(in_dim)
+        return jax.random.normal(k, (out_dim, in_dim), jnp.float32) * std
+
+    blocks = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[i], 7)
+        blocks.append(
+            BlockWeights(
+                wq=dense(ks[0], d, d),
+                wk=dense(ks[1], d, d),
+                wv=dense(ks[2], d, d),
+                wo=dense(ks[3], d, d),
+                w_gate=dense(ks[4], f, d),
+                w_up=dense(ks[5], f, d),
+                w_down=dense(ks[6], d, f),
+                norm_attn=jnp.ones((d,), jnp.float32),
+                norm_mlp=jnp.ones((d,), jnp.float32),
+            )
+        )
+    embed = jax.random.normal(keys[-2], (v, d), jnp.float32) * 0.02
+    head = dense(keys[-1], v, d)
+    return Weights(embed=embed, blocks=blocks, norm_final=jnp.ones((d,), jnp.float32), head=head)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope_angles(positions: jax.Array, head_dim: int) -> tuple:
+    """positions: [...]; returns cos/sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    theta = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, H, S, hd]; cos/sin: [S, hd//2] (broadcast over B, H)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention / mlp over a generic "linear" callable
+
+
+def _attention(x, lin, cfg: ModelConfig, k_cache=None, v_cache=None, pos=None, start=None):
+    """x: [B, S, D]. If k_cache/v_cache given (decode), S == 1 and pos is
+    the write index; returns (out, new_k_cache, new_v_cache) with caches of
+    shape [B, H, C, hd]. Prefill returns caches of shape [B, H, S, hd].
+
+    `start` ([B] int32) is the left-padding boundary the dynamic batcher
+    uses: key positions < start[b] are masked out.  Left-padding keeps
+    each request's real tokens ending at the slot's last position while
+    RoPE's relative-distance property keeps attention geometry intact.
+    """
+    b, s_len, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+
+    q = lin("wq", x)  # [B, S, D]
+    k = lin("wk", x)
+    v = lin("wv", x)
+
+    def heads(t):
+        return t.reshape(b, s_len, h, hd).transpose(0, 2, 1, 3)  # [B,H,S,hd]
+
+    q, k, v = heads(q), heads(k), heads(v)
+
+    if k_cache is None:
+        positions = jnp.arange(s_len)
+        cos, sin = rope_angles(positions, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        mask = jnp.tril(jnp.ones((s_len, s_len), bool))[None, None]
+        pad = (jnp.arange(s_len)[None, :] >= start[:, None])[:, None, None, :]
+        att = jnp.where(mask & pad, att, -1e30)
+        p = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        new_k, new_v = k, v
+    else:
+        # decode step: write k/v at `pos`, attend over cache[start..pos]
+        c = k_cache.shape[2]
+        cos, sin = rope_angles(pos[None], hd)  # [1, hd//2]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        new_k = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, pos, 0))
+        new_v = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, pos, 0))
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, new_k) / math.sqrt(hd)  # [B,H,1,C]
+        idx = jnp.arange(c)[None, :]
+        valid = (idx <= pos) & (idx >= start[:, None])
+        att = jnp.where(valid[:, None, None, :], att, -1e30)
+        p = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, new_v)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s_len, d)
+    return lin("wo", out), new_k, new_v
+
+
+def _mlp(x, lin):
+    return lin("w_down", jax.nn.silu(lin("w_gate", x)) * lin("w_up", x))
+
+
+def _block(x, bw: BlockWeights, lin, cfg, k_cache=None, v_cache=None, pos=None, start=None):
+    att, nk, nv = _attention(rmsnorm(x, bw.norm_attn), lin, cfg, k_cache, v_cache, pos, start)
+    x = x + att
+    x = x + _mlp(rmsnorm(x, bw.norm_mlp), lin)
+    return x, nk, nv
+
+
+# ---------------------------------------------------------------------------
+# training path: plain f32 linears
+
+
+def _f32_lin(bw: BlockWeights):
+    def lin(name, x):
+        w = getattr(bw, name)
+        return jnp.einsum("bsd,nd->bsn", x, w)
+
+    return lin
+
+
+def forward_train(weights: Weights, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens: [B, S] int32 -> logits [B, S, V]."""
+    x = weights.embed[tokens]
+    for bw in weights.blocks:
+        x, _, _ = _block(x, bw, _f32_lin(bw), cfg)
+    x = rmsnorm(x, weights.norm_final)
+    return jnp.einsum("bsd,vd->bsv", x, weights.head)
+
+
+def loss_fn(weights: Weights, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Next-token cross-entropy over [B, S]."""
+    logits = forward_train(weights, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# serving path: quantized linears through the Pallas kernel
+#
+# Weights arrive as (codes, scale) pairs: codes are the decoded symbol
+# values (f32 materialization of the Float8/Int8 grid points produced by
+# the rust ANS decode), scale is per output channel.
+
+
+def _q_lin(qw: dict):
+    def lin(name, x):
+        codes, scale = qw[name]
+        b, s_len, d = x.shape
+        y = qmatmul(x.reshape(b * s_len, d), codes, scale)
+        return y.reshape(b, s_len, codes.shape[0])
+
+    return lin
+
+
+class QBlockParams(NamedTuple):
+    """Flat, ordered parameter list for one quantized block (serving)."""
+
+    codes: list  # 7 arrays, order BLOCK_LINEARS
+    scales: list  # 7 arrays
+    norm_attn: jax.Array
+    norm_mlp: jax.Array
+
+
+def _qw_dict(codes, scales):
+    return {n: (c, s) for n, c, s in zip(BLOCK_LINEARS, codes, scales)}
+
+
+def embed_fwd(tokens: jax.Array, embed: jax.Array) -> jax.Array:
+    """tokens [B, S] -> x [B, S, D]."""
+    return embed[tokens]
+
+
+def head_fwd(x: jax.Array, norm_final: jax.Array, head: jax.Array) -> jax.Array:
+    """x [B, S, D] -> logits [B, S, V] (head stays f32)."""
+    x = rmsnorm(x, norm_final)
+    return jnp.einsum("bsd,vd->bsv", x, head)
+
+
+def block_prefill(x, codes, scales, norm_attn, norm_mlp, start, cfg: ModelConfig):
+    """x [B, S, D], start [B] i32 -> (x', k [B,H,S,hd], v [B,H,S,hd])."""
+    bw = BlockWeights(*([None] * 7), norm_attn=norm_attn, norm_mlp=norm_mlp)
+    lin = _q_lin(_qw_dict(codes, scales))
+    return _block(x, bw, lin, cfg, start=start)
+
+
+def block_decode(x, codes, scales, norm_attn, norm_mlp, k_cache, v_cache, pos, start,
+                 cfg: ModelConfig):
+    """x [B, 1, D], caches [B, H, C, hd], pos scalar i32, start [B] i32."""
+    bw = BlockWeights(*([None] * 7), norm_attn=norm_attn, norm_mlp=norm_mlp)
+    lin = _q_lin(_qw_dict(codes, scales))
+    return _block(x, bw, lin, cfg, k_cache=k_cache, v_cache=v_cache, pos=pos, start=start)

@@ -1,0 +1,94 @@
+"""L2: the EntQuant rate-distortion objective (paper eq. 3) with a
+straight-through estimator through the quantizer, built on the L1 Pallas
+fakequant kernel so the AOT-lowered HLO contains the kernel.
+
+    objective(s; W, lam) = ||W - What||_1 / ||W||_1  +  lam * mean(|W_q|)
+
+* d is the paper's relative entry-wise l1 distortion.
+* R is the paper's entry-wise l1 norm of the quantized codes; we take the
+  *mean* rather than the raw sum so the lam <-> target-entropy mapping is
+  dimension-free (this is what makes Figure A.1's clustering
+  model-independent; the paper normalizes implicitly via its lam grid).
+
+STE (Bengio et al. 2013): the rounding step q(u) is treated as identity
+in the backward pass (pass-through, including through the clamp — noted
+in DESIGN.md).  Analytic gradients:
+
+    codes = q(W/s):    d codes / d s = -W / s^2
+    What  = s*codes:   d What  / d s = codes - W/s
+
+aot.py lowers `rd_value_and_grad` per weight shape so the rust L-BFGS can
+optionally evaluate the objective through PJRT; the rust-native objective
+(rust/src/rd/objective.rs) implements identical semantics and is
+cross-checked against fixtures dumped by aot.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fakequant import fakequant
+from .kernels.ref import fakequant_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fq_ste(w, s, fmt: str = "f8", use_kernel: bool = True):
+    """(codes, what) with straight-through gradients."""
+    f = fakequant if use_kernel else fakequant_ref
+    return f(w, s, fmt)
+
+
+def _fq_fwd(w, s, fmt, use_kernel):
+    codes, what = fq_ste(w, s, fmt, use_kernel)
+    return (codes, what), (w, s, codes)
+
+
+def _fq_bwd(fmt, use_kernel, res, grads):
+    """Clipped STE: pass-through across the *rounding* only.  Inside the
+    clamp range q(u) ~ u; where |u| > Qmax the code is pinned at +-Qmax,
+    so d codes/d· = 0 and d what/d s = codes.  (Plain pass-through
+    through the clamp is the classic failure mode: it keeps pushing s
+    down even when every symbol is saturated.)"""
+    qmax = 448.0 if fmt == "f8" else 127.0
+    w, s, codes = res
+    g_codes, g_what = grads
+    safe = jnp.where(s == 0.0, 1.0, s)[:, None]
+    u = w / safe
+    inside = (jnp.abs(u) <= qmax).astype(w.dtype)
+    grad_w = (g_codes / safe + g_what) * inside
+    grad_s_mat = inside * (g_codes * (-u / safe) + g_what * (codes - u)) \
+        + (1.0 - inside) * g_what * codes
+    grad_s = jnp.sum(grad_s_mat, axis=1)
+    return grad_w, grad_s
+
+
+fq_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def rd_objective(s, w, lam, fmt: str = "f8", use_kernel: bool = True):
+    """Scalar objective; differentiable w.r.t. the scale vector s."""
+    codes, what = fq_ste(w, s, fmt, use_kernel)
+    d = jnp.sum(jnp.abs(w - what)) / (jnp.sum(jnp.abs(w)) + 1e-12)
+    r = jnp.mean(jnp.abs(codes))
+    return d + lam * r
+
+
+def rd_value_and_grad(s, w, lam, fmt: str = "f8", use_kernel: bool = True):
+    """(value, grad_s) — the artifact aot.py exports per weight shape."""
+    return jax.value_and_grad(rd_objective)(s, w, lam, fmt, use_kernel)
+
+
+def absmax_init(w: jax.Array, fmt: str = "f8") -> jax.Array:
+    """Paper eq. (1): s_j = max|W_j| / Qmax per output channel."""
+    qmax = 448.0 if fmt == "f8" else 127.0
+    return jnp.max(jnp.abs(w), axis=1) / qmax
+
+
+def empirical_entropy_bits(codes: jax.Array) -> float:
+    """Paper eq. (2): empirical entropy of the code symbols, bits/param."""
+    import numpy as np
+
+    vals, counts = np.unique(np.asarray(codes), return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum())

@@ -1,0 +1,110 @@
+"""Build-time training of the S/M/L checkpoints on the synthetic corpus.
+
+This is the "load a small real model" half of the end-to-end mandate:
+random Gaussian weights have none of the heavy-tailed, outlier-bearing
+structure the paper's entropy argument relies on, so we actually *train*
+the substitute models (hand-rolled Adam; optax is not available in this
+image).  Loss curves are logged to artifacts/train_log_{size}.json and
+summarized in EXPERIMENTS.md.
+
+The "instruct" variant fine-tunes the base checkpoint on the
+instruction-formatted split (the paper's instruction-tuned-model
+scenario, Figure 1 / Table E.1).
+"""
+
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import CONFIGS, ModelConfig
+from .eqw_io import weights_to_tensor_list, write_eqw
+from .model import Weights, init_weights, loss_fn
+
+STEPS = {"S": 400, "M": 350, "L": 300}
+INSTRUCT_STEPS = 150
+BATCH = 16
+SEQ = 128
+LR = 3e-3
+
+
+def _adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return z, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _train_step(weights, m, v, tokens, step, cfg: ModelConfig):
+    loss, grads = jax.value_and_grad(loss_fn)(weights, tokens, cfg)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    t = step + 1
+    lr_t = LR * jnp.sqrt(1 - b2**t) / (1 - b1**t)
+    # cosine decay to 10%
+    total = 500.0
+    lr_t = lr_t * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(t / total, 1.0))))
+    weights = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr_t * mm / (jnp.sqrt(vv) + eps), weights, m, v
+    )
+    return weights, m, v, loss
+
+
+def _batches(data: np.ndarray, rng: np.random.Generator):
+    n = len(data) - SEQ - 1
+    while True:
+        idx = rng.integers(0, n, size=BATCH)
+        yield np.stack([data[i : i + SEQ + 1] for i in idx]).astype(np.int32)
+
+
+def train_model(cfg: ModelConfig, corpus: bytes, steps: int, seed: int = 0,
+                init: Weights | None = None, log_path: str | None = None) -> Weights:
+    data = np.frombuffer(corpus, dtype=np.uint8)
+    weights = init if init is not None else init_weights(cfg, jax.random.PRNGKey(seed))
+    m, v = _adam_init(weights)
+    gen = _batches(data, np.random.default_rng(seed + 1))
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens = jnp.asarray(next(gen))
+        weights, m, v, loss = _train_step(weights, m, v, tokens, step, cfg)
+        if step % 10 == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+    wall = time.time() - t0
+    if log_path:
+        with open(log_path, "w") as f:
+            json.dump({"config": cfg.name, "steps": steps, "wall_s": wall, "log": log}, f)
+    print(f"  [{cfg.name}] {steps} steps, loss {log[0]['loss']:.3f} -> "
+          f"{log[-1]['loss']:.3f}, {wall:.0f}s")
+    return weights
+
+
+def train_all(outdir: str, corpus_dir: str, sizes=("S", "M", "L"),
+              with_instruct: bool = True) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    with open(f"{corpus_dir}/train.bin", "rb") as f:
+        corpus = f.read()
+    with open(f"{corpus_dir}/instruct_train.bin", "rb") as f:
+        instruct = f.read()
+
+    for size in sizes:
+        cfg = CONFIGS[size]
+        path = f"{outdir}/model_{size}.eqw"
+        if os.path.exists(path):
+            print(f"  [{size}] exists, skipping")
+            continue
+        w = train_model(cfg, corpus, STEPS[size], seed=42,
+                        log_path=f"{outdir}/train_log_{size}.json")
+        write_eqw(path, cfg.to_json(), weights_to_tensor_list(w, cfg),
+                  meta={"trained_steps": STEPS[size]})
+        if with_instruct and size == "M":
+            ipath = f"{outdir}/model_{size}_instruct.eqw"
+            wi = train_model(cfg, instruct, INSTRUCT_STEPS, seed=43, init=w,
+                             log_path=f"{outdir}/train_log_{size}_instruct.json")
+            write_eqw(ipath, cfg.to_json(), weights_to_tensor_list(wi, cfg),
+                      meta={"trained_steps": STEPS[size] + INSTRUCT_STEPS,
+                            "instruct": True})

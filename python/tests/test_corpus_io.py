@@ -1,0 +1,75 @@
+# pytest: corpus determinism + .eqw container round-trip + HLO text export.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.eqw_io import write_eqw, read_eqw, weights_to_tensor_list
+from compile.configs import CONFIGS, ModelConfig
+from compile.model import init_weights
+
+
+def test_corpus_deterministic():
+    a = corpus.generate_text(100, seed=3)
+    b = corpus.generate_text(100, seed=3)
+    assert a == b
+    assert a != corpus.generate_text(100, seed=4)
+    assert all(32 <= c < 127 for c in a), "printable ascii only"
+
+
+def test_tasks_wellformed():
+    tasks = corpus.generate_tasks(20, seed=1, suite="base")
+    assert len(tasks) == 8, "the LM-Eval analogue has 8 tasks"
+    for name, items in tasks.items():
+        assert len(items) == 20
+        for it in items:
+            assert it["answer"] == 0
+            assert len(it["options"]) >= 2
+            assert len(set(it["options"])) == len(it["options"]), (name, it)
+
+
+def test_instruct_tasks_wellformed():
+    tasks = corpus.generate_tasks(10, seed=2, suite="instruct")
+    assert len(tasks) == 3
+    for items in tasks.values():
+        for it in items:
+            assert it["context"].startswith(corpus.INSTR_PREFIX)
+
+
+def test_task_options_distinguishable_by_bytes():
+    tasks = corpus.generate_tasks(50, seed=5, suite="base")
+    for items in tasks.values():
+        for it in items:
+            gold = it["options"][0]
+            assert all(gold != o for o in it["options"][1:])
+
+
+def test_eqw_roundtrip(tmp_path):
+    cfg = ModelConfig("T", vocab=32, d_model=16, n_layers=1, n_heads=2, d_ff=24, max_ctx=16)
+    w = init_weights(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "t.eqw")
+    write_eqw(path, cfg.to_json(), weights_to_tensor_list(w, cfg), meta={"x": 1})
+    header, tensors = read_eqw(path)
+    assert header["config"]["d_model"] == 16
+    assert header["meta"]["x"] == 1
+    np.testing.assert_array_equal(tensors["embed"], np.asarray(w.embed))
+    np.testing.assert_array_equal(tensors["blocks.0.w_gate"], np.asarray(w.blocks[0].w_gate))
+    # alignment: every offset is 16-byte aligned
+    for rec in header["tensors"]:
+        assert rec["offset"] % 16 == 0
+
+
+def test_hlo_text_export_parses():
+    """to_hlo_text output must contain an ENTRY computation and the right
+    parameter count — the minimal structural contract the rust loader needs."""
+    from compile.aot import to_hlo_text
+
+    f = lambda a, b: (jnp.dot(a, b) + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert "ENTRY" in text
+    assert text.count("parameter(") == 2

@@ -1,0 +1,133 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul, vmem_footprint_bytes, mxu_utilization_estimate
+from compile.kernels.fakequant import fakequant, F8_MAX, I8_MAX
+from compile.kernels.ref import qmatmul_ref, fakequant_ref, round_f8_ref, round_i8_ref
+
+DIMS = st.sampled_from([1, 2, 4, 8, 16, 24, 128, 192])
+SMALL_DIMS = st.sampled_from([1, 3, 8, 16, 48])
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- qmatmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, k=SMALL_DIMS, seed=st.integers(0, 2**16))
+def test_qmatmul_matches_ref(m, n, k, seed):
+    x = _rand(seed, (m, k))
+    wq = _rand(seed + 1, (n, k), 3.0)
+    s = jnp.abs(_rand(seed + 2, (n,))) + 1e-3
+    got = qmatmul(x, wq, s)
+    want = qmatmul_ref(x, wq, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_serving_shapes():
+    # the exact shapes the serving artifacts use (M config)
+    for (m, n, k) in [(512, 192, 192), (512, 512, 192), (512, 192, 512),
+                      (4, 192, 192), (1, 512, 192)]:
+        x = _rand(0, (m, k))
+        wq = _rand(1, (n, k))
+        s = jnp.ones((n,))
+        np.testing.assert_allclose(np.asarray(qmatmul(x, wq, s)),
+                                   np.asarray(qmatmul_ref(x, wq, s)),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_zero_scale_rows_are_zero():
+    x = _rand(3, (8, 16))
+    wq = _rand(4, (8, 16))
+    s = jnp.asarray([0.0, 1.0] * 4)
+    y = np.asarray(qmatmul(x, wq, s))
+    assert np.all(y[:, 0::2] == 0.0)
+
+
+def test_qmatmul_bf16_inputs_upcast():
+    x = _rand(5, (8, 16)).astype(jnp.bfloat16)
+    wq = _rand(6, (8, 16))
+    s = jnp.ones((8,))
+    got = qmatmul(x, wq, s)
+    want = qmatmul_ref(x, wq, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=1e-1)
+
+
+def test_vmem_estimates_positive_and_bounded():
+    b = vmem_footprint_bytes(512, 512, 512)
+    assert 0 < b <= 16 * 2**20, "tile set must fit VMEM"
+    assert 0 < mxu_utilization_estimate(512, 512, 512) <= 1.0
+    assert mxu_utilization_estimate(1, 192, 192) < 0.1  # decode underfills MXU
+
+
+# -------------------------------------------------------------- fakequant
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([1, 2, 8, 24, 64]), k=SMALL_DIMS,
+       seed=st.integers(0, 2**16), fmt=st.sampled_from(["f8", "i8"]),
+       logscale=st.floats(-3, 3))
+def test_fakequant_matches_ref(n, k, seed, fmt, logscale):
+    w = _rand(seed, (n, k), float(np.exp(logscale)))
+    s = jnp.abs(_rand(seed + 1, (n,))) * 0.1 + 1e-3
+    c1, h1 = fakequant(w, s, fmt)
+    c2, h2 = fakequant_ref(w, s, fmt)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+def test_fakequant_zero_scale_gives_zero():
+    w = _rand(7, (4, 8))
+    s = jnp.zeros((4,))
+    c, h = fakequant(w, s, "f8")
+    assert np.all(np.asarray(c) == 0) and np.all(np.asarray(h) == 0)
+
+
+def test_fakequant_f8_saturates():
+    w = jnp.full((1, 4), 1e6)
+    s = jnp.ones((1,))
+    c, _ = fakequant(w, s, "f8")
+    assert np.all(np.asarray(c) == F8_MAX)
+
+
+def test_fakequant_i8_saturates():
+    w = jnp.full((1, 4), -1e6)
+    s = jnp.ones((1,))
+    c, _ = fakequant(w, s, "i8")
+    assert np.all(np.asarray(c) == -I8_MAX)
+
+
+def test_round_i8_half_away_from_zero():
+    u = jnp.asarray([0.5, -0.5, 1.5, -1.5, 2.4999])
+    r = np.asarray(round_i8_ref(u))
+    np.testing.assert_array_equal(r, [1.0, -1.0, 2.0, -2.0, 2.0])
+
+
+def test_round_f8_is_idempotent_on_grid():
+    # every representable magnitude should round to itself
+    import ml_dtypes
+
+    grid = np.arange(256, dtype=np.uint8).view(ml_dtypes.float8_e4m3fn).astype(np.float32)
+    grid = grid[np.isfinite(grid)]
+    r = np.asarray(round_f8_ref(jnp.asarray(grid)))
+    np.testing.assert_array_equal(r, grid)
+
+
+def test_codes_are_representable_f8_values():
+    import ml_dtypes
+
+    w = _rand(9, (16, 32), 5.0)
+    s = jnp.abs(_rand(10, (16,))) + 0.01
+    c, _ = fakequant(w, s, "f8")
+    grid = set(np.arange(256, dtype=np.uint8).view(ml_dtypes.float8_e4m3fn)
+               .astype(np.float32)[np.isfinite(np.arange(256, dtype=np.uint8)
+               .view(ml_dtypes.float8_e4m3fn).astype(np.float32))].tolist())
+    grid.add(0.0)  # signed zero resolved
+    assert set(np.asarray(c).ravel().tolist()) <= grid

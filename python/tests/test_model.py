@@ -1,0 +1,135 @@
+# pytest: L2 model — shapes, prefill/decode equivalence, quantized path.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS, ModelConfig, BLOCK_LINEARS
+from compile import rd
+from compile.kernels.ref import fakequant_ref
+from compile.model import (
+    init_weights, forward_train, loss_fn, embed_fwd, head_fwd,
+    block_prefill, block_decode, rmsnorm, rope_angles, apply_rope,
+)
+
+# vocab must cover printable ascii (the corpus is bytes 32..126)
+TINY = ModelConfig("T", vocab=128, d_model=32, n_layers=2, n_heads=2, d_ff=48, max_ctx=32)
+
+
+def _qparams(bw, fmt="f8"):
+    codes, scales = [], []
+    for n in BLOCK_LINEARS:
+        W = getattr(bw, n)
+        s = rd.absmax_init(W, fmt)
+        c, _ = fakequant_ref(W, s, fmt)
+        codes.append(c)
+        scales.append(s)
+    return codes, scales
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return init_weights(TINY, jax.random.PRNGKey(0))
+
+
+def test_shapes_and_param_count(tiny):
+    toks = jnp.zeros((3, 7), jnp.int32)
+    logits = forward_train(tiny, toks, TINY)
+    assert logits.shape == (3, 7, 128)
+    n = sum(np.prod(np.asarray(getattr(bw, f)).shape)
+            for bw in tiny.blocks
+            for f in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                      "norm_attn", "norm_mlp"))
+    n += np.asarray(tiny.embed).size + np.asarray(tiny.head).size + 32
+    assert n == TINY.params()
+
+
+def test_loss_is_finite_and_reasonable(tiny):
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (4, 16)), jnp.int32)
+    loss = float(loss_fn(tiny, toks, TINY))
+    assert np.isfinite(loss)
+    assert abs(loss - np.log(128)) < 1.5  # ~uniform at init
+
+
+def test_causality(tiny):
+    """Changing a future token must not affect past logits."""
+    rng = np.random.default_rng(1)
+    t1 = rng.integers(0, 128, (1, 12)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % 128
+    l1 = forward_train(tiny, jnp.asarray(t1), TINY)
+    l2 = forward_train(tiny, jnp.asarray(t2), TINY)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_serving_path_matches_train_path(tiny):
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, 128, (2, 8)), jnp.int32)
+    want = forward_train(tiny, toks, TINY)
+    x = embed_fwd(toks, tiny.embed)
+    for bw in tiny.blocks:
+        codes, scales = _qparams(bw)
+        x, _, _ = block_prefill(x, codes, scales, bw.norm_attn, bw.norm_mlp,
+                                jnp.zeros((x.shape[0],), jnp.int32), TINY)
+    got = head_fwd(x, tiny.norm_final, tiny.head)
+    # only f8-absmax quantization error: logits stay highly correlated and
+    # the error is small relative to the logit spread
+    g, t = np.asarray(got).ravel(), np.asarray(want).ravel()
+    corr = np.corrcoef(g, t)[0, 1]
+    assert corr > 0.99, corr
+    assert float(np.max(np.abs(g - t))) < 5 * float(np.std(t))
+
+
+def test_decode_matches_prefill(tiny):
+    B, S, C = 2, 9, 16
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, 128, (B, S)), jnp.int32)
+    qp = [_qparams(bw) for bw in tiny.blocks]
+
+    x = embed_fwd(toks, tiny.embed)
+    for (codes, scales), bw in zip(qp, tiny.blocks):
+        x, _, _ = block_prefill(x, codes, scales, bw.norm_attn, bw.norm_mlp,
+                                jnp.zeros((x.shape[0],), jnp.int32), TINY)
+    want = head_fwd(x, tiny.norm_final, tiny.head)[:, -1]
+
+    x_all = embed_fwd(toks, tiny.embed)
+    caches = [[jnp.zeros((B, TINY.n_heads, C, TINY.head_dim))] * 2 for _ in tiny.blocks]
+    for pos in range(S):
+        x = x_all[:, pos : pos + 1]
+        for li, ((codes, scales), bw) in enumerate(zip(qp, tiny.blocks)):
+            x, k, v = block_decode(x, codes, scales, bw.norm_attn, bw.norm_mlp,
+                                   caches[li][0], caches[li][1],
+                                   jnp.asarray(pos, jnp.int32),
+                                   jnp.zeros((B,), jnp.int32), TINY)
+            caches[li] = [k, v]
+    got = head_fwd(x, tiny.norm_final, tiny.head)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(5, 8)), jnp.float32)
+    y = np.asarray(rmsnorm(x, jnp.ones((8,))))
+    np.testing.assert_allclose((y**2).mean(axis=-1), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    hd = 8
+    cos, sin = rope_angles(jnp.arange(4), hd)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(1, 1, 4, hd)), jnp.float32)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(y[0, 0, 0]), np.asarray(x[0, 0, 0]), rtol=1e-6)
+
+
+def test_training_reduces_loss():
+    from compile.train import train_model
+    from compile.corpus import generate_text
+
+    corpus = generate_text(2000, seed=11)
+    w0 = init_weights(TINY, jax.random.PRNGKey(1))
+    data = jnp.asarray(np.frombuffer(corpus[:2000], np.uint8)[None, :129].astype(np.int32))
+    before = float(loss_fn(w0, data, TINY))
+    w1 = train_model(TINY, corpus, steps=30, seed=5)
+    after = float(loss_fn(w1, data, TINY))
+    assert after < before - 0.5, (before, after)

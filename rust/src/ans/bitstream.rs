@@ -1,0 +1,267 @@
+//! Chunked ANS bitstream container — the `z` of paper Algorithms 1/2.
+//!
+//! Mirrors the nvCOMP framing the paper uses (§A.1): symbols are split
+//! into 256 KiB chunks, each encoded independently against a *single*
+//! per-bitstream frequency table, so chunks decode in parallel (nvCOMP
+//! parallelizes across GPU blocks; we use a thread pool / scalar loop).
+//!
+//! Wire layout (little endian):
+//!   magic  b"EQZB"
+//!   u32    n_symbols_total
+//!   u32    chunk_size (symbols per chunk)
+//!   u32    n_chunks
+//!   [u32]  compressed byte length per chunk
+//!   512B   frequency table
+//!   bytes  chunk payloads, concatenated
+
+use super::rans::{decode_chunk, encode_chunk, FreqTable};
+
+pub const DEFAULT_CHUNK: usize = 256 * 1024; // symbols per chunk (paper §A.1)
+const MAGIC: &[u8; 4] = b"EQZB";
+
+#[derive(Clone)]
+pub struct Bitstream {
+    pub n_symbols: usize,
+    pub chunk_size: usize,
+    pub chunk_lens: Vec<u32>,
+    pub table: FreqTable,
+    pub payload: Vec<u8>,
+}
+
+impl Bitstream {
+    /// Encode `symbols` into a chunked bitstream.
+    pub fn encode(symbols: &[u8], chunk_size: usize) -> Self {
+        assert!(chunk_size > 0);
+        let table = FreqTable::from_data(symbols);
+        Self::encode_with_table(symbols, chunk_size, table)
+    }
+
+    pub fn encode_with_table(symbols: &[u8], chunk_size: usize, table: FreqTable) -> Self {
+        let mut chunk_lens = Vec::new();
+        let mut payload = Vec::new();
+        if symbols.is_empty() {
+            return Bitstream { n_symbols: 0, chunk_size, chunk_lens, table, payload };
+        }
+        for chunk in symbols.chunks(chunk_size) {
+            let enc = encode_chunk(chunk, &table);
+            chunk_lens.push(enc.len() as u32);
+            payload.extend_from_slice(&enc);
+        }
+        Bitstream { n_symbols: symbols.len(), chunk_size, chunk_lens, table, payload }
+    }
+
+    /// Decode the whole stream (scalar path).
+    pub fn decode(&self) -> Result<Vec<u8>, String> {
+        let mut out = Vec::with_capacity(self.n_symbols);
+        let mut off = 0usize;
+        let mut remaining = self.n_symbols;
+        for &len in &self.chunk_lens {
+            let n = remaining.min(self.chunk_size);
+            let chunk = &self.payload[off..off + len as usize];
+            out.extend_from_slice(&decode_chunk(chunk, n, &self.table)?);
+            off += len as usize;
+            remaining -= n;
+        }
+        Ok(out)
+    }
+
+    /// Decode into a caller-provided buffer (the serving double-buffer
+    /// path: no allocation on the request path).  Chunks decode across
+    /// `threads` OS threads when the stream is large enough.
+    pub fn decode_into(&self, out: &mut [u8], threads: usize) -> Result<(), String> {
+        assert_eq!(out.len(), self.n_symbols, "output buffer size mismatch");
+        if self.n_symbols == 0 {
+            return Ok(());
+        }
+        // precompute (payload range, out range) per chunk
+        let mut jobs = Vec::with_capacity(self.chunk_lens.len());
+        let mut off = 0usize;
+        for (i, &len) in self.chunk_lens.iter().enumerate() {
+            let start = i * self.chunk_size;
+            let n = (self.n_symbols - start).min(self.chunk_size);
+            jobs.push((off, len as usize, start, n));
+            off += len as usize;
+        }
+        if threads <= 1 || jobs.len() == 1 {
+            for &(poff, plen, start, n) in &jobs {
+                let dec = decode_chunk(&self.payload[poff..poff + plen], n, &self.table)?;
+                out[start..start + n].copy_from_slice(&dec);
+            }
+            return Ok(());
+        }
+        // split output into disjoint chunk-aligned slices for the threads
+        let errs: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let mut out_slices: Vec<Option<&mut [u8]>> = Vec::with_capacity(jobs.len());
+        {
+            let mut rest = out;
+            for (i, &(_, _, start, n)) in jobs.iter().enumerate() {
+                let rel = start - (jobs[..i].iter().map(|j| j.3).sum::<usize>());
+                debug_assert_eq!(rel, 0);
+                let (head, tail) = rest.split_at_mut(n);
+                out_slices.push(Some(head));
+                rest = tail;
+            }
+        }
+        let slices = std::sync::Mutex::new(out_slices);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(jobs.len()) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let (poff, plen, _, n) = jobs[i];
+                    let slice = slices.lock().unwrap()[i].take().unwrap();
+                    match decode_chunk(&self.payload[poff..poff + plen], n, &self.table) {
+                        Ok(dec) => slice.copy_from_slice(&dec),
+                        Err(e) => errs.lock().unwrap().push(e),
+                    }
+                });
+            }
+        });
+        let errs = errs.into_inner().unwrap();
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Total serialized size in bytes (storage accounting for the
+    /// effective-bits-per-parameter numbers in every table).
+    pub fn serialized_len(&self) -> usize {
+        4 + 4 + 4 + 4 + 4 * self.chunk_lens.len() + FreqTable::serialized_len() + self.payload.len()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.n_symbols as u32).to_le_bytes());
+        out.extend_from_slice(&(self.chunk_size as u32).to_le_bytes());
+        out.extend_from_slice(&(self.chunk_lens.len() as u32).to_le_bytes());
+        for &l in &self.chunk_lens {
+            out.extend_from_slice(&l.to_le_bytes());
+        }
+        self.table.serialize_into(&mut out);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<(Self, usize), String> {
+        if bytes.len() < 16 || &bytes[..4] != MAGIC {
+            return Err("bad bitstream magic".into());
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let n_symbols = rd_u32(4) as usize;
+        let chunk_size = rd_u32(8) as usize;
+        let n_chunks = rd_u32(12) as usize;
+        let mut off = 16;
+        if bytes.len() < off + 4 * n_chunks + 512 {
+            return Err("bitstream truncated (header)".into());
+        }
+        let mut chunk_lens = Vec::with_capacity(n_chunks);
+        for i in 0..n_chunks {
+            chunk_lens.push(rd_u32(off + 4 * i));
+        }
+        off += 4 * n_chunks;
+        let table = FreqTable::deserialize(&bytes[off..off + 512])?;
+        off += 512;
+        let total: usize = chunk_lens.iter().map(|&l| l as usize).sum();
+        if bytes.len() < off + total {
+            return Err("bitstream truncated (payload)".into());
+        }
+        let payload = bytes[off..off + total].to_vec();
+        Ok((
+            Bitstream { n_symbols, chunk_size, chunk_lens, table, payload },
+            off + total,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn data(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| ((rng.normal().abs() * 6.0) as usize).min(255) as u8).collect()
+    }
+
+    #[test]
+    fn roundtrip_multi_chunk() {
+        let d = data(10_000, 1);
+        let bs = Bitstream::encode(&d, 1024);
+        assert_eq!(bs.chunk_lens.len(), 10);
+        assert_eq!(bs.decode().unwrap(), d);
+    }
+
+    #[test]
+    fn roundtrip_odd_tail() {
+        let d = data(2500, 2);
+        let bs = Bitstream::encode(&d, 1000);
+        assert_eq!(bs.chunk_lens.len(), 3);
+        assert_eq!(bs.decode().unwrap(), d);
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let d = data(50_000, 3);
+        let bs = Bitstream::encode(&d, 4096);
+        let mut buf = vec![0u8; d.len()];
+        bs.decode_into(&mut buf, 1).unwrap();
+        assert_eq!(buf, d);
+        let mut buf2 = vec![0u8; d.len()];
+        bs.decode_into(&mut buf2, 4).unwrap();
+        assert_eq!(buf2, d);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let d = data(5000, 4);
+        let bs = Bitstream::encode(&d, 700);
+        let ser = bs.serialize();
+        assert_eq!(ser.len(), bs.serialized_len());
+        let (bs2, consumed) = Bitstream::deserialize(&ser).unwrap();
+        assert_eq!(consumed, ser.len());
+        assert_eq!(bs2.decode().unwrap(), d);
+    }
+
+    #[test]
+    fn serialize_with_trailing_data() {
+        let d = data(100, 5);
+        let bs = Bitstream::encode(&d, 64);
+        let mut ser = bs.serialize();
+        let len = ser.len();
+        ser.extend_from_slice(b"trailing");
+        let (bs2, consumed) = Bitstream::deserialize(&ser).unwrap();
+        assert_eq!(consumed, len);
+        assert_eq!(bs2.decode().unwrap(), d);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let bs = Bitstream::encode(&[], 128);
+        assert_eq!(bs.decode().unwrap(), Vec::<u8>::new());
+        let (bs2, _) = Bitstream::deserialize(&bs.serialize()).unwrap();
+        assert_eq!(bs2.n_symbols, 0);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let d = data(100, 6);
+        let mut ser = Bitstream::encode(&d, 64).serialize();
+        ser[0] = b'X';
+        assert!(Bitstream::deserialize(&ser).is_err());
+    }
+
+    #[test]
+    fn effective_bits_match_entropy() {
+        let d = data(300_000, 7);
+        let h = crate::entropy::entropy_of(&d);
+        let bs = Bitstream::encode(&d, DEFAULT_CHUNK);
+        let bits = bs.serialized_len() as f64 * 8.0 / d.len() as f64;
+        assert!(bits < h + 0.1, "bits={bits} H={h}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Canonical Huffman coder — the classical baseline (Han et al. 2016
+//! used Huffman in Deep Compression).  Exists to demonstrate the paper's
+//! §2.1 point: Huffman needs >= 1 bit/symbol and loses to ANS exactly in
+//! the low-entropy regime EntQuant creates.
+
+use crate::entropy::histogram;
+
+/// Code lengths per symbol via package-merge-free heap Huffman, capped
+/// implicitly by the alphabet size (256 -> max depth 255 < u8 fits).
+fn code_lengths(hist: &[u64; 256]) -> [u8; 256] {
+    #[derive(PartialEq, Eq)]
+    struct Node {
+        weight: u64,
+        idx: usize,
+    }
+    impl Ord for Node {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // min-heap via reverse
+            other.weight.cmp(&self.weight).then(other.idx.cmp(&self.idx))
+        }
+    }
+    impl PartialOrd for Node {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let mut lens = [0u8; 256];
+    let present: Vec<usize> = (0..256).filter(|&i| hist[i] > 0).collect();
+    if present.is_empty() {
+        return lens;
+    }
+    if present.len() == 1 {
+        lens[present[0]] = 1;
+        return lens;
+    }
+    // internal tree as parent pointers
+    let mut parent: Vec<usize> = vec![usize::MAX; 512];
+    let mut heap = std::collections::BinaryHeap::new();
+    for (node_idx, &sym) in present.iter().enumerate() {
+        heap.push(Node { weight: hist[sym], idx: node_idx });
+    }
+    let mut next = present.len();
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.idx] = next;
+        parent[b.idx] = next;
+        heap.push(Node { weight: a.weight + b.weight, idx: next });
+        next += 1;
+    }
+    for (node_idx, &sym) in present.iter().enumerate() {
+        let mut d = 0u8;
+        let mut p = node_idx;
+        while parent[p] != usize::MAX {
+            p = parent[p];
+            d += 1;
+        }
+        lens[sym] = d;
+    }
+    lens
+}
+
+/// Canonical codes from lengths (shorter codes first, then by symbol).
+fn canonical_codes(lens: &[u8; 256]) -> [(u32, u8); 256] {
+    let mut order: Vec<usize> = (0..256).filter(|&i| lens[i] > 0).collect();
+    order.sort_by_key(|&i| (lens[i], i));
+    let mut codes = [(0u32, 0u8); 256];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &sym in &order {
+        code <<= lens[sym] - prev_len;
+        codes[sym] = (code, lens[sym]);
+        prev_len = lens[sym];
+        code += 1;
+    }
+    codes
+}
+
+pub struct Huffman {
+    pub lens: [u8; 256],
+    codes: [(u32, u8); 256],
+}
+
+impl Huffman {
+    pub fn from_data(data: &[u8]) -> Self {
+        let lens = code_lengths(&histogram(data));
+        let codes = canonical_codes(&lens);
+        Huffman { lens, codes }
+    }
+
+    /// Encode; returns (bits, packed bytes).
+    pub fn encode(&self, data: &[u8]) -> (usize, Vec<u8>) {
+        let mut out = Vec::new();
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        let mut total = 0usize;
+        for &b in data {
+            let (code, len) = self.codes[b as usize];
+            debug_assert!(len > 0, "symbol {b} missing");
+            acc = (acc << len) | code as u64;
+            nbits += len as u32;
+            total += len as usize;
+            while nbits >= 8 {
+                nbits -= 8;
+                out.push((acc >> nbits) as u8);
+            }
+        }
+        if nbits > 0 {
+            out.push((acc << (8 - nbits)) as u8);
+        }
+        (total, out)
+    }
+
+    pub fn decode(&self, packed: &[u8], n_symbols: usize) -> Vec<u8> {
+        // simple bit-by-bit canonical walk (baseline only; not hot path)
+        let mut by_len: Vec<Vec<(u32, u8)>> = vec![Vec::new(); 33];
+        for sym in 0..256usize {
+            let (code, len) = self.codes[sym];
+            if len > 0 {
+                by_len[len as usize].push((code, sym as u8));
+            }
+        }
+        let mut out = Vec::with_capacity(n_symbols);
+        let mut code = 0u32;
+        let mut len = 0usize;
+        let mut bit_idx = 0usize;
+        while out.len() < n_symbols {
+            let byte = packed[bit_idx / 8];
+            let bit = (byte >> (7 - bit_idx % 8)) & 1;
+            bit_idx += 1;
+            code = (code << 1) | bit as u32;
+            len += 1;
+            if let Some(&(_, sym)) = by_len[len].iter().find(|&&(c, _)| c == code) {
+                out.push(sym);
+                code = 0;
+                len = 0;
+            }
+        }
+        out
+    }
+
+    /// Average code length in bits/symbol over `data`.
+    pub fn mean_bits(&self, data: &[u8]) -> f64 {
+        let total: usize = data.iter().map(|&b| self.lens[b as usize] as usize).sum();
+        total as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::entropy_of;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let data = b"abracadabra abracadabra".to_vec();
+        let h = Huffman::from_data(&data);
+        let (_, packed) = h.encode(&data);
+        assert_eq!(h.decode(&packed, data.len()), data);
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let mut rng = Rng::new(5);
+        let data: Vec<u8> = (0..3000)
+            .map(|_| ((rng.normal().abs() * 15.0) as usize).min(255) as u8)
+            .collect();
+        let h = Huffman::from_data(&data);
+        let kraft: f64 = h.lens.iter().filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-12, "{kraft}");
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        let mut rng = Rng::new(6);
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| ((rng.normal().abs() * 10.0) as usize).min(255) as u8)
+            .collect();
+        let h = Huffman::from_data(&data);
+        let mb = h.mean_bits(&data);
+        let ent = entropy_of(&data);
+        assert!(mb >= ent - 1e-9 && mb <= ent + 1.0, "mb={mb} H={ent}");
+    }
+
+    #[test]
+    fn huffman_floor_is_one_bit_but_ans_is_not() {
+        // the paper's motivating comparison: H(X) << 1
+        let mut data = vec![0u8; 50_000];
+        for i in 0..500 {
+            data[i * 100] = 1;
+        }
+        let ent = entropy_of(&data);
+        assert!(ent < 0.1);
+        let h = Huffman::from_data(&data);
+        assert!(h.mean_bits(&data) >= 1.0, "Huffman cannot go below 1 bit/sym");
+        let bs = crate::ans::Bitstream::encode(&data, 1 << 18);
+        let ans_bits = bs.payload.len() as f64 * 8.0 / data.len() as f64;
+        assert!(ans_bits < 0.2, "ANS beats the Huffman floor: {ans_bits}");
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let data = vec![9u8; 100];
+        let h = Huffman::from_data(&data);
+        let (bits, packed) = h.encode(&data);
+        assert_eq!(bits, 100);
+        assert_eq!(h.decode(&packed, 100), data);
+    }
+}

@@ -1,0 +1,11 @@
+//! Lossless entropy-coding substrate: from-scratch rANS (the paper's
+//! nvCOMP analogue), chunked bitstream framing, and a canonical Huffman
+//! baseline.
+
+pub mod bitstream;
+pub mod huffman;
+pub mod rans;
+
+pub use bitstream::{Bitstream, DEFAULT_CHUNK};
+pub use huffman::Huffman;
+pub use rans::{FreqTable, N_STREAMS, PROB_BITS};

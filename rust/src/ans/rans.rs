@@ -1,0 +1,315 @@
+//! From-scratch rANS (range Asymmetric Numeral Systems, Duda 2013) —
+//! the CPU analogue of the paper's nvCOMP GPU coder.
+//!
+//! Variant: 32-bit state, byte renormalization, 12-bit probability
+//! resolution (M = 4096), N-way interleaved streams inside each chunk.
+//! nvCOMP parallelizes across GPU blocks; we parallelize across 256 KiB
+//! chunks (see `bitstream.rs`) and across the interleaved streams within
+//! a chunk (instruction-level parallelism: the states carry no
+//! dependency on each other, so the decoder sustains multiple symbol
+//! decodes in flight per cycle).
+//!
+//! Invariants (checked by the proptest-style round-trip tests):
+//!   * encode(decode(x)) == x for any byte sequence and any table built
+//!     from its histogram
+//!   * compressed size ~= cross_entropy(data, table) + O(streams) bytes
+
+use crate::entropy::{histogram, normalize_freqs};
+
+pub const PROB_BITS: u32 = 12;
+pub const PROB_SCALE: u32 = 1 << PROB_BITS;
+/// Lower bound of the normalized state interval.
+const RANS_L: u32 = 1 << 23;
+/// Number of interleaved states per chunk.
+pub const N_STREAMS: usize = 4;
+
+/// One decode-table entry: everything the inner loop needs for a slot in
+/// a single 8-byte load (§Perf L3: replaces three dependent lookups).
+#[derive(Clone, Copy)]
+pub struct SlotEntry {
+    pub sym: u8,
+    pub freq: u16,
+    pub cum: u16,
+}
+
+/// Frequency table + cumulative + slot->symbol lookup (the bitstream
+/// "metadata" of paper Algorithm 1).
+#[derive(Clone)]
+pub struct FreqTable {
+    pub freq: [u32; 256],
+    pub cum: [u32; 257],
+    /// 2^PROB_BITS packed entries (decode fast path).
+    slots: Vec<SlotEntry>,
+}
+
+impl FreqTable {
+    pub fn from_freqs(freq: [u32; 256]) -> Self {
+        let mut cum = [0u32; 257];
+        for i in 0..256 {
+            cum[i + 1] = cum[i] + freq[i];
+        }
+        assert_eq!(cum[256], PROB_SCALE, "frequencies must sum to 2^PROB_BITS");
+        let mut slots = vec![SlotEntry { sym: 0, freq: 0, cum: 0 }; PROB_SCALE as usize];
+        for sym in 0..256 {
+            for slot in cum[sym]..cum[sym + 1] {
+                slots[slot as usize] =
+                    SlotEntry { sym: sym as u8, freq: freq[sym] as u16, cum: cum[sym] as u16 };
+            }
+        }
+        FreqTable { freq, cum, slots }
+    }
+
+    pub fn from_data(data: &[u8]) -> Self {
+        if data.is_empty() {
+            // degenerate table for empty streams: all mass on symbol 0
+            let mut freq = [0u32; 256];
+            freq[0] = PROB_SCALE;
+            return Self::from_freqs(freq);
+        }
+        Self::from_freqs(normalize_freqs(&histogram(data), PROB_BITS))
+    }
+
+    #[inline]
+    pub fn sym_at(&self, slot: u32) -> u8 {
+        self.slots[slot as usize].sym
+    }
+
+    /// Serialized size (the per-bitstream metadata overhead): freqs are
+    /// stored as 256 x u16.
+    pub fn serialized_len() -> usize {
+        512
+    }
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        for &f in &self.freq {
+            out.extend_from_slice(&(f as u16).to_le_bytes());
+        }
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < 512 {
+            return Err("freq table truncated".into());
+        }
+        let mut freq = [0u32; 256];
+        let mut total = 0u64;
+        for i in 0..256 {
+            freq[i] = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]) as u32;
+            total += freq[i] as u64;
+        }
+        // u16 can't hold 4096? it can (4096 < 65536); but a single symbol
+        // with freq 4096 is representable, fine.
+        if total != PROB_SCALE as u64 {
+            return Err(format!("freq table sums to {total}, want {PROB_SCALE}"));
+        }
+        Ok(Self::from_freqs(freq))
+    }
+}
+
+/// Encode one chunk of symbols with N interleaved rANS states.
+/// Returns the compressed payload (head: 4 x u32 final states, then the
+/// byte stream in *decode order*).
+pub fn encode_chunk(symbols: &[u8], table: &FreqTable) -> Vec<u8> {
+    // rANS encodes in reverse; stream i owns symbols[i], symbols[i+N], ...
+    let mut states = [RANS_L; N_STREAMS];
+    let mut out: Vec<u8> = Vec::with_capacity(symbols.len() / 2 + 16);
+
+    // walk symbols backwards, rotating across streams so the decoder
+    // (walking forwards) touches streams round-robin
+    for (idx, &sym) in symbols.iter().enumerate().rev() {
+        let st = idx % N_STREAMS;
+        let f = table.freq[sym as usize];
+        debug_assert!(f > 0, "symbol {sym} not in table");
+        let mut x = states[st];
+        // renormalize: emit low bytes while x too large for this freq
+        let x_max = ((RANS_L >> PROB_BITS) << 8) * f;
+        while x >= x_max {
+            out.push((x & 0xFF) as u8);
+            x >>= 8;
+        }
+        states[st] = ((x / f) << PROB_BITS) + (x % f) + table.cum[sym as usize];
+    }
+
+    // header: final states (decoder's initial states), then bytes reversed
+    let mut payload = Vec::with_capacity(out.len() + 16);
+    for st in states {
+        payload.extend_from_slice(&st.to_le_bytes());
+    }
+    payload.extend(out.iter().rev());
+    payload
+}
+
+/// Decode `n_symbols` from one chunk payload.
+///
+/// §Perf L3: the inner loop is unrolled over the 4 interleaved states
+/// (no per-symbol modulo, 4 independent dependency chains in flight) and
+/// each symbol costs a single packed SlotEntry load.  Byte pulls stay in
+/// exact program order so the stream layout matches the encoder.
+pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Result<Vec<u8>, String> {
+    if payload.len() < 16 {
+        return Err("chunk payload too short".into());
+    }
+    let mut states = [0u32; N_STREAMS];
+    for (i, st) in states.iter_mut().enumerate() {
+        *st = u32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
+    }
+    let inp = &payload[16..];
+    let mut ip = 0usize;
+    let mut out = vec![0u8; n_symbols];
+
+    let mask = PROB_SCALE - 1;
+    let slots = &table.slots[..];
+
+    macro_rules! step {
+        ($x:expr, $slot_out:expr) => {{
+            let slot = $x & mask;
+            let e = slots[slot as usize];
+            $slot_out = e.sym;
+            let mut x = (e.freq as u32) * ($x >> PROB_BITS) + slot - e.cum as u32;
+            while x < RANS_L {
+                let b = *inp.get(ip).ok_or("rans: input exhausted")?;
+                ip += 1;
+                x = (x << 8) | b as u32;
+            }
+            $x = x;
+        }};
+    }
+
+    let n4 = n_symbols - n_symbols % N_STREAMS;
+    let [mut x0, mut x1, mut x2, mut x3] = states;
+    let mut idx = 0usize;
+    while idx < n4 {
+        step!(x0, out[idx]);
+        step!(x1, out[idx + 1]);
+        step!(x2, out[idx + 2]);
+        step!(x3, out[idx + 3]);
+        idx += 4;
+    }
+    let mut tail_states = [x0, x1, x2, x3];
+    for idx in n4..n_symbols {
+        step!(tail_states[idx % N_STREAMS], out[idx]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::{cross_entropy_bits, entropy_of, histogram};
+    use crate::tensor::Rng;
+
+    fn skewed_data(n: usize, spread: f64, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| ((rng.normal().abs() * spread) as usize).min(255) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let data = b"hello hello hello world".to_vec();
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+        assert_eq!(decode_chunk(&enc, data.len(), &t).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_empty_and_single() {
+        let data = vec![42u8];
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+        assert_eq!(decode_chunk(&enc, 1, &t).unwrap(), data);
+
+        let empty: Vec<u8> = vec![];
+        let t = FreqTable::from_data(&[1, 2, 3]);
+        let enc = encode_chunk(&empty, &t);
+        assert_eq!(decode_chunk(&enc, 0, &t).unwrap(), empty);
+    }
+
+    #[test]
+    fn roundtrip_property_sweep() {
+        // proptest-style sweep: sizes x skews x seeds
+        for &n in &[2usize, 3, 5, 17, 100, 1000, 10_000] {
+            for &spread in &[0.5f64, 3.0, 40.0] {
+                for seed in 1..4u64 {
+                    let data = skewed_data(n, spread, seed * 7 + n as u64);
+                    let t = FreqTable::from_data(&data);
+                    let enc = encode_chunk(&data, &t);
+                    let dec = decode_chunk(&enc, n, &t).unwrap();
+                    assert_eq!(dec, data, "n={n} spread={spread} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_uniform_random() {
+        let mut rng = Rng::new(77);
+        let data: Vec<u8> = (0..50_000).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+        assert_eq!(decode_chunk(&enc, data.len(), &t).unwrap(), data);
+        // incompressible: size ~ n + header
+        assert!(enc.len() as f64 > data.len() as f64 * 0.98);
+    }
+
+    #[test]
+    fn compression_approaches_entropy() {
+        for spread in [1.0f64, 5.0, 30.0] {
+            let data = skewed_data(200_000, spread, 5);
+            let h = entropy_of(&data);
+            let t = FreqTable::from_data(&data);
+            let enc = encode_chunk(&data, &t);
+            let bits_per_sym = enc.len() as f64 * 8.0 / data.len() as f64;
+            let ce = cross_entropy_bits(&histogram(&data), &t.freq, PROB_BITS);
+            assert!(bits_per_sym <= ce + 0.02, "spread={spread}: {bits_per_sym} vs ce {ce}");
+            assert!(bits_per_sym >= h - 0.01, "below entropy?! {bits_per_sym} vs {h}");
+        }
+    }
+
+    #[test]
+    fn sub_one_bit_regime() {
+        // H < 1: the regime where Huffman is stuck at 1 bit/sym but ANS
+        // is not (paper §2.1 "Entropy Coding")
+        let mut data = vec![0u8; 100_000];
+        for i in 0..2000 {
+            data[i * 50] = 1 + (i % 5) as u8;
+        }
+        let h = entropy_of(&data);
+        assert!(h < 0.3, "{h}");
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+        let bps = enc.len() as f64 * 8.0 / data.len() as f64;
+        assert!(bps < 0.35, "ANS must beat 1 bit/sym: got {bps} at H={h}");
+    }
+
+    #[test]
+    fn table_serialization_roundtrip() {
+        let data = skewed_data(10_000, 10.0, 11);
+        let t = FreqTable::from_data(&data);
+        let mut buf = Vec::new();
+        t.serialize_into(&mut buf);
+        assert_eq!(buf.len(), FreqTable::serialized_len());
+        let t2 = FreqTable::deserialize(&buf).unwrap();
+        assert_eq!(t.freq, t2.freq);
+        let enc = encode_chunk(&data, &t);
+        assert_eq!(decode_chunk(&enc, data.len(), &t2).unwrap(), data);
+    }
+
+    #[test]
+    fn table_rejects_bad_sum() {
+        let mut buf = vec![0u8; 512];
+        buf[0] = 1; // freq[0] = 1, total = 1 != 4096
+        assert!(FreqTable::deserialize(&buf).is_err());
+    }
+
+    #[test]
+    fn decode_with_truncated_payload_errors() {
+        let data = skewed_data(1000, 2.0, 13);
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+        let cut = &enc[..enc.len() / 2];
+        // must error, not panic (decoder pulls more bytes than available)
+        assert!(decode_chunk(cut, data.len(), &t).is_err());
+        assert!(decode_chunk(&enc[..8], data.len(), &t).is_err());
+    }
+}

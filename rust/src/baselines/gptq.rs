@@ -1,0 +1,261 @@
+//! GPTQ (Frantar et al. 2023) — the calibration-based comparison method
+//! of paper Table 3/D.1.  *Not* data-free: it needs activations.
+//!
+//! Per layer with inputs X:  H = 2 X^T X + eps*I.  Columns are quantized
+//! in order; the rounding error of column j is propagated into the not-
+//! yet-quantized columns via the Cholesky factorization of H^{-1}
+//! (OBS update), per output row.  Grid: symmetric b-bit, group-wise
+//! scales recomputed along the column walk (g=128 default).
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct GptqOpts {
+    pub bits: u32,
+    pub group: usize,
+    /// Hessian damping as a fraction of mean diagonal.
+    pub damp: f32,
+}
+
+impl GptqOpts {
+    pub fn new(bits: u32, group: usize) -> Self {
+        GptqOpts { bits, group, damp: 0.01 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GptqResult {
+    pub what: Mat,
+    pub bits_per_param: f64,
+}
+
+/// Cholesky decomposition of a symmetric positive-definite matrix
+/// (lower triangular L with A = L L^T), in place on a dense buffer.
+fn cholesky(a: &mut Vec<f64>, n: usize) -> Result<(), String> {
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 {
+            return Err(format!("not SPD at {j} (d={d})"));
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in j + 1..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / d;
+        }
+    }
+    // zero the upper triangle for cleanliness
+    for i in 0..n {
+        for j in i + 1..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Invert an SPD matrix via its Cholesky factor.
+fn spd_inverse(a: &[f32], n: usize, damp: f32) -> Result<Vec<f64>, String> {
+    let mut m: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    // damping
+    let mean_diag: f64 = (0..n).map(|i| m[i * n + i]).sum::<f64>() / n as f64;
+    let eps = (damp as f64) * mean_diag.max(1e-12);
+    for i in 0..n {
+        m[i * n + i] += eps;
+    }
+    cholesky(&mut m, n)?;
+    // solve L L^T X = I column by column
+    let mut inv = vec![0.0f64; n * n];
+    let mut col = vec![0.0f64; n];
+    for c in 0..n {
+        // forward solve L y = e_c
+        for i in 0..n {
+            let mut v = if i == c { 1.0 } else { 0.0 };
+            for k in 0..i {
+                v -= m[i * n + k] * col[k];
+            }
+            col[i] = v / m[i * n + i];
+        }
+        // back solve L^T x = y
+        for i in (0..n).rev() {
+            let mut v = col[i];
+            for k in i + 1..n {
+                v -= m[k * n + i] * inv[k * n + c];
+            }
+            inv[i * n + c] = v / m[i * n + i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Quantize one weight matrix given its calibration inputs `x` ([S, K]).
+pub fn quantize_gptq(w: &Mat, x: &Mat, opts: &GptqOpts) -> Result<GptqResult, String> {
+    let k = w.cols;
+    assert_eq!(x.cols, k, "calibration inputs mismatch");
+    let qmax = ((1u32 << (opts.bits - 1)) - 1) as f32;
+
+    // H = 2 X^T X (the factor 2 cancels in the update; keep for fidelity)
+    let mut h = vec![0.0f32; k * k];
+    for s in 0..x.rows {
+        let xs = x.row(s);
+        for i in 0..k {
+            let xi = 2.0 * xs[i];
+            for j in i..k {
+                h[i * k + j] += xi * xs[j];
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            h[i * k + j] = h[j * k + i];
+        }
+    }
+    let hinv = spd_inverse(&h, k, opts.damp)?;
+    // Cholesky of H^{-1}: the OBS update uses its upper factor; we use
+    // hinv directly in the classic sequential form:
+    //   err_j = (w_j - q_j) / Hinv[j,j];  w_l -= err_j * Hinv[j,l] (l > j)
+    let mut what = Mat::zeros(w.rows, w.cols);
+    let mut wrow: Vec<f32> = vec![0.0; k];
+    for r in 0..w.rows {
+        wrow.copy_from_slice(w.row(r));
+        let out = what.row_mut(r);
+        let mut scale = 0.0f32;
+        for j in 0..k {
+            if j % opts.group == 0 {
+                // group scale from the *current* (error-compensated) values
+                let g1 = (j + opts.group).min(k);
+                let amax = wrow[j..g1].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                scale = if amax == 0.0 { 1.0 } else { amax / qmax };
+            }
+            let q = (wrow[j] / scale).round().clamp(-qmax, qmax) * scale;
+            out[j] = q;
+            let err = (wrow[j] - q) / hinv[j * k + j] as f32;
+            for l in j + 1..k {
+                wrow[l] -= err * hinv[j * k + l] as f32;
+            }
+        }
+    }
+    let n_groups = w.rows * w.cols.div_ceil(opts.group);
+    let bits_per_param = opts.bits as f64 + 16.0 * n_groups as f64 / (w.rows * w.cols) as f64;
+    Ok(GptqResult { what, bits_per_param })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::quantize_rtn;
+    use crate::tensor::Rng;
+
+    fn randmat(rows: usize, cols: usize, seed: u64, heavy: bool) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| {
+                    let v = rng.normal();
+                    (if heavy { v * (rng.normal() * 0.5).exp() } else { v }) as f32
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let n = 4;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        cholesky(&mut a, n).unwrap();
+        for i in 0..n {
+            assert!((a[i * n + i] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let n = 6;
+        let x = randmat(20, n, 1, false);
+        let mut h = vec![0.0f32; n * n];
+        for s in 0..20 {
+            for i in 0..n {
+                for j in 0..n {
+                    h[i * n + j] += x.at(s, i) * x.at(s, j);
+                }
+            }
+        }
+        for i in 0..n {
+            h[i * n + i] += 0.5;
+        }
+        let inv = spd_inverse(&h, n, 0.0).unwrap();
+        // H * Hinv ~ I
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = 0.0f64;
+                for t in 0..n {
+                    v += h[i * n + t] as f64 * inv[t * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-3, "({i},{j}) {v}");
+            }
+        }
+    }
+
+    /// GPTQ's whole point: on the calibration distribution its layer
+    /// *output* error is lower than RTN's, even if weight error is not.
+    #[test]
+    fn output_error_beats_rtn() {
+        let w = randmat(16, 64, 2, true);
+        // correlated inputs (realistic activations)
+        let base = randmat(96, 64, 3, false);
+        let mut x = base.clone();
+        for r in 0..x.rows {
+            for c in 1..x.cols {
+                x.data[r * 64 + c] = 0.6 * x.data[r * 64 + c - 1] + 0.4 * base.data[r * 64 + c];
+            }
+        }
+        let g = quantize_gptq(&w, &x, &GptqOpts::new(3, 64)).unwrap();
+        let rt = quantize_rtn(&w, 3, 64);
+        let out_err = |what: &Mat| {
+            let y = w.matmul_t(&x);
+            let yq = what.matmul_t(&x);
+            let mut e = 0.0f64;
+            for i in 0..y.data.len() {
+                e += ((y.data[i] - yq.data[i]) as f64).powi(2);
+            }
+            e
+        };
+        let eg = out_err(&g.what);
+        let er = out_err(&rt.what);
+        assert!(eg < er, "gptq {eg} vs rtn {er}");
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let w = randmat(8, 32, 5, false);
+        let x = randmat(64, 32, 6, false);
+        let g = quantize_gptq(&w, &x, &GptqOpts::new(8, 32)).unwrap();
+        let d = crate::quant::rel_l1_distortion(&w, &g.what);
+        assert!(d < 0.02, "{d}");
+    }
+
+    #[test]
+    fn degenerate_calibration_still_works() {
+        // rank-deficient X: damping must keep H invertible
+        let w = randmat(4, 16, 7, false);
+        let mut x = Mat::zeros(8, 16);
+        for r in 0..8 {
+            for c in 0..16 {
+                *x.at_mut(r, c) = (r as f32 + 1.0) * 0.1; // rank 1
+            }
+        }
+        let g = quantize_gptq(&w, &x, &GptqOpts::new(4, 16)).unwrap();
+        assert!(g.what.data.iter().all(|v| v.is_finite()));
+    }
+}

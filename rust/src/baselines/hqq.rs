@@ -1,0 +1,187 @@
+//! HQQ — Half-Quadratic Quantization (Badri & Shaji 2023), the paper's
+//! main data-free competitor (Table 2).
+//!
+//! Asymmetric b-bit grid per group with a *float* zero point, fitted by
+//! half-quadratic alternating optimization of  ||W - D(Q(W))||_p^p with
+//! p < 1 (robust to outliers):
+//!
+//!   Q(w) = clamp(round(w/s + z), 0, 2^b - 1)       (quant)
+//!   D(q) = s * (q - z)                             (dequant)
+//!   repeat:  e   <- shrink_lp(W - D(Q(W)), beta, p)
+//!            z   <- mean_g( Q(W) - (W - e)/s )
+//!
+//! `shrink_lp` is the generalized soft-threshold of the l_p prox.
+//! Storage: b bits/weight + BF16 scale + BF16 zero per group.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct HqqOpts {
+    pub bits: u32,
+    pub group: usize,
+    pub iters: usize,
+    pub p: f32,
+    pub beta0: f32,
+    pub kappa: f32,
+}
+
+impl HqqOpts {
+    pub fn new(bits: u32, group: usize) -> Self {
+        HqqOpts { bits, group, iters: 20, p: 0.7, beta0: 10.0, kappa: 1.01 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HqqResult {
+    pub what: Mat,
+    pub bits_per_param: f64,
+}
+
+/// Generalized soft-thresholding: prox of (1/beta)|.|^p at x.
+#[inline]
+fn shrink_lp(x: f32, beta: f32, p: f32) -> f32 {
+    // for p < 1 the standard approximation: sign(x) * max(0, |x| - |x|^(p-1)/beta)
+    let a = x.abs();
+    if a < 1e-12 {
+        return 0.0;
+    }
+    let t = a - a.powf(p - 1.0) / beta;
+    if t > 0.0 {
+        x.signum() * t
+    } else {
+        0.0
+    }
+}
+
+pub fn quantize_hqq(w: &Mat, opts: &HqqOpts) -> HqqResult {
+    let qmax = ((1u32 << opts.bits) - 1) as f32;
+    let mut what = Mat::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let out = what.row_mut(r);
+        for g0 in (0..w.cols).step_by(opts.group) {
+            let g1 = (g0 + opts.group).min(w.cols);
+            let grp = &row[g0..g1];
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in grp {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if hi - lo < 1e-12 {
+                for c in g0..g1 {
+                    out[c] = row[c];
+                }
+                continue;
+            }
+            let s = (hi - lo) / qmax;
+            let mut z = -lo / s; // float zero point (HQQ keeps it fp)
+            let mut beta = opts.beta0;
+            let n = grp.len() as f32;
+            let mut q: Vec<f32> = vec![0.0; grp.len()];
+            for _ in 0..opts.iters {
+                for (i, &x) in grp.iter().enumerate() {
+                    q[i] = (x / s + z).round().clamp(0.0, qmax);
+                }
+                // e = shrink(W - D(Q))
+                // z update: mean(Q - (W - e)/s)
+                let mut zsum = 0.0f32;
+                for (i, &x) in grp.iter().enumerate() {
+                    let d = s * (q[i] - z);
+                    let e = shrink_lp(x - d, beta, opts.p);
+                    zsum += q[i] - (x - e) / s;
+                }
+                z = zsum / n;
+                beta *= opts.kappa;
+            }
+            for c in g0..g1 {
+                let qi = (row[c] / s + z).round().clamp(0.0, qmax);
+                out[c] = s * (qi - z);
+            }
+        }
+    }
+    let n_groups = w.rows * w.cols.div_ceil(opts.group);
+    let bits_per_param =
+        opts.bits as f64 + 32.0 * n_groups as f64 / (w.rows * w.cols) as f64;
+    HqqResult { what, bits_per_param }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::rtn::quantize_rtn;
+    use crate::quant::rel_l1_distortion;
+    use crate::tensor::Rng;
+
+    fn heavy(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.normal() * (rng.normal() * 0.7).exp()) as f32)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn shrink_is_odd_and_contracting() {
+        for x in [-3.0f32, -0.5, 0.5, 3.0] {
+            let y = shrink_lp(x, 5.0, 0.7);
+            assert!(y.abs() <= x.abs(), "contraction");
+            assert_eq!(y, -shrink_lp(-x, 5.0, 0.7), "odd function");
+        }
+        assert_eq!(shrink_lp(0.0, 5.0, 0.7), 0.0);
+        // small values are thresholded to exactly zero
+        assert_eq!(shrink_lp(0.01, 1.0, 0.7), 0.0);
+    }
+
+    #[test]
+    fn beats_rtn_on_heavy_tails_at_4bit() {
+        // HQQ's claim: robust l_p fitting beats absmax RTN under outliers
+        let w = heavy(16, 256, 1);
+        let h = quantize_hqq(&w, &HqqOpts::new(4, 64));
+        let r = quantize_rtn(&w, 4, 64);
+        let dh = rel_l1_distortion(&w, &h.what);
+        let dr = rel_l1_distortion(&w, &r.what);
+        assert!(dh < dr, "hqq {dh} vs rtn {dr}");
+    }
+
+    #[test]
+    fn distortion_grows_as_bits_shrink() {
+        let w = heavy(8, 128, 2);
+        let mut prev = 0.0f64;
+        for bits in [4u32, 3, 2] {
+            let h = quantize_hqq(&w, &HqqOpts::new(bits, 64));
+            let d = rel_l1_distortion(&w, &h.what);
+            assert!(d > prev, "bits={bits}");
+            prev = d;
+        }
+        // 2-bit group-64 should be *bad* — the collapse Table 2 shows
+        assert!(prev > 0.2, "2-bit HQQ distortion suspiciously low: {prev}");
+    }
+
+    #[test]
+    fn small_groups_help_2bit() {
+        let w = heavy(8, 128, 3);
+        let g16 = quantize_hqq(&w, &HqqOpts::new(2, 16));
+        let g64 = quantize_hqq(&w, &HqqOpts::new(2, 64));
+        assert!(rel_l1_distortion(&w, &g16.what) < rel_l1_distortion(&w, &g64.what));
+        assert!(g16.bits_per_param > g64.bits_per_param);
+    }
+
+    #[test]
+    fn bits_accounting_includes_zero_point() {
+        let w = heavy(4, 128, 4);
+        let h = quantize_hqq(&w, &HqqOpts::new(3, 64));
+        assert!((h.bits_per_param - (3.0 + 32.0 / 64.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_group_passthrough() {
+        let w = Mat::from_vec(1, 8, vec![2.5; 8]);
+        let h = quantize_hqq(&w, &HqqOpts::new(2, 8));
+        for &v in &h.what.data {
+            assert!((v - 2.5).abs() < 1e-6);
+        }
+    }
+}

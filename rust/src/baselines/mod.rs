@@ -1,0 +1,178 @@
+//! Comparison methods (paper Tables 2/3/D.1/G.1): data-free RTN, NF4 and
+//! HQQ, plus calibration-based GPTQ — each applied model-wide through a
+//! single `Method` interface so the bench harness treats every method
+//! uniformly.
+
+pub mod gptq;
+pub mod hqq;
+pub mod nf4;
+pub mod rtn;
+
+use crate::model::{Forward, Model, BLOCK_LINEARS};
+use crate::quant::{absmax_scales, quantize, Format};
+use crate::tensor::Mat;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// Lossless-coded Float8/Int8 at AbsMax (the paper's "Float8" row,
+    /// ~6.5 effective bits after ANS).
+    Float8Absmax { fmt: Format },
+    Rtn { bits: u32, group: usize },
+    Nf4 { group: usize },
+    Hqq { bits: u32, group: usize },
+    /// calibration-based; quantizes with error compensation from a
+    /// Hessian built on `calib_tokens`
+    Gptq { bits: u32, group: usize },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Float8Absmax { fmt } => format!("{}-absmax", fmt.name()),
+            Method::Rtn { bits, group } => format!("rtn-{bits}b-g{group}"),
+            Method::Nf4 { group } => format!("nf4-g{group}"),
+            Method::Hqq { bits, group } => format!("hqq-{bits}b-g{group}"),
+            Method::Gptq { bits, group } => format!("gptq-{bits}b-g{group}"),
+        }
+    }
+}
+
+pub struct BaselineModel {
+    pub model: Model,
+    /// effective storage bits per linear parameter
+    pub bits_per_param: f64,
+    pub wall_s: f64,
+}
+
+/// Apply a baseline method to every quantizable linear of `model`,
+/// returning the dequantized model for evaluation plus the storage rate.
+/// `calib_tokens` is only consumed by GPTQ.
+pub fn apply(model: &Model, method: &Method, calib_tokens: Option<&[u8]>) -> Result<BaselineModel> {
+    let t0 = std::time::Instant::now();
+    let mut out = model.clone();
+    let mut bits_weighted = 0.0f64;
+    let mut params = 0usize;
+
+    match method {
+        Method::Gptq { bits, group } => {
+            let toks = calib_tokens.ok_or_else(|| anyhow::anyhow!("GPTQ needs calibration data"))?;
+            let fwd = Forward::new(model);
+            let captures = fwd.capture_linear_inputs(toks);
+            for (b, cap) in captures.iter().enumerate() {
+                let (attn_in, attn_ctx, mlp_in, mlp_hidden) = cap;
+                for &name in BLOCK_LINEARS.iter() {
+                    let x: &Mat = match name {
+                        "wq" | "wk" | "wv" => attn_in,
+                        "wo" => attn_ctx,
+                        "w_gate" | "w_up" => mlp_in,
+                        "w_down" => mlp_hidden,
+                        _ => unreachable!(),
+                    };
+                    let w = model.blocks[b].linear(name);
+                    let r = gptq::quantize_gptq(w, x, &gptq::GptqOpts::new(*bits, *group))
+                        .map_err(|e| anyhow::anyhow!("gptq blocks.{b}.{name}: {e}"))?;
+                    bits_weighted += r.bits_per_param * w.data.len() as f64;
+                    params += w.data.len();
+                    *out.blocks[b].linear_mut(name) = r.what;
+                }
+            }
+        }
+        _ => {
+            for b in 0..model.blocks.len() {
+                for &name in BLOCK_LINEARS.iter() {
+                    let w = model.blocks[b].linear(name);
+                    let (what, bpp) = match method {
+                        Method::Float8Absmax { fmt } => {
+                            let s = absmax_scales(w, *fmt);
+                            let q = quantize(w, &s, *fmt);
+                            // effective bits after lossless coding of the
+                            // 8-bit symbols (the paper's ~6.5-bit Float8 row)
+                            let h = crate::entropy::entropy_of(&q.symbols);
+                            let scale_bits = 16.0 * w.rows as f64 / w.data.len() as f64;
+                            (q.dequantize(), h + scale_bits)
+                        }
+                        Method::Rtn { bits, group } => {
+                            let r = rtn::quantize_rtn(w, *bits, *group);
+                            (r.what, r.bits_per_param)
+                        }
+                        Method::Nf4 { group } => {
+                            let r = nf4::quantize_nf4(w, *group);
+                            (r.what, r.bits_per_param)
+                        }
+                        Method::Hqq { bits, group } => {
+                            let r = hqq::quantize_hqq(w, &hqq::HqqOpts::new(*bits, *group));
+                            (r.what, r.bits_per_param)
+                        }
+                        Method::Gptq { .. } => unreachable!(),
+                    };
+                    bits_weighted += bpp * w.data.len() as f64;
+                    params += w.data.len();
+                    *out.blocks[b].linear_mut(name) = what;
+                }
+            }
+        }
+    }
+
+    Ok(BaselineModel {
+        model: out,
+        bits_per_param: bits_weighted / params as f64,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loader::synthetic_model;
+    use crate::model::Config;
+
+    fn tiny() -> Model {
+        synthetic_model(
+            Config { name: "T".into(), vocab: 96, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_ctx: 64 },
+            21,
+        )
+    }
+
+    #[test]
+    fn all_methods_apply() {
+        let m = tiny();
+        let calib: Vec<u8> = (0..48u8).map(|i| i % 96).collect();
+        for method in [
+            Method::Float8Absmax { fmt: Format::F8E4M3 },
+            Method::Rtn { bits: 4, group: 16 },
+            Method::Nf4 { group: 16 },
+            Method::Hqq { bits: 4, group: 16 },
+            Method::Gptq { bits: 4, group: 16 },
+        ] {
+            let r = apply(&m, &method, Some(&calib)).unwrap();
+            assert!(r.bits_per_param > 2.0 && r.bits_per_param < 9.0, "{method:?}: {}", r.bits_per_param);
+            // quantized model must stay finite
+            let f = Forward::new(&r.model);
+            let logits = f.logits(&[1, 2, 3]);
+            assert!(logits.data.iter().all(|v| v.is_finite()), "{method:?}");
+        }
+    }
+
+    #[test]
+    fn gptq_without_calibration_errors() {
+        let m = tiny();
+        assert!(apply(&m, &Method::Gptq { bits: 4, group: 16 }, None).is_err());
+    }
+
+    #[test]
+    fn method_names_distinct() {
+        use std::collections::BTreeSet;
+        let names: BTreeSet<String> = [
+            Method::Float8Absmax { fmt: Format::F8E4M3 },
+            Method::Rtn { bits: 4, group: 64 },
+            Method::Nf4 { group: 64 },
+            Method::Hqq { bits: 2, group: 64 },
+            Method::Gptq { bits: 2, group: 128 },
+        ]
+        .iter()
+        .map(|m| m.name())
+        .collect();
+        assert_eq!(names.len(), 5);
+    }
+}

@@ -1,0 +1,98 @@
+//! Round-to-nearest (RTN) group-wise baseline — the simplest data-free
+//! quantizer the paper references, and the primitive GPTQ builds on.
+//!
+//! Symmetric b-bit integer grid per group of `group` consecutive
+//! in-channel weights: s = absmax / (2^(b-1) - 1),  q = round(w/s).
+//! Storage: b bits/weight + one BF16 scale per group.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct RtnResult {
+    pub what: Mat,
+    pub bits_per_param: f64,
+}
+
+pub fn quantize_rtn(w: &Mat, bits: u32, group: usize) -> RtnResult {
+    assert!((2..=8).contains(&bits));
+    let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+    let mut what = Mat::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        let out = what.row_mut(r);
+        for g0 in (0..w.cols).step_by(group) {
+            let g1 = (g0 + group).min(w.cols);
+            let amax = row[g0..g1].iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            if amax == 0.0 {
+                continue;
+            }
+            let s = amax / qmax;
+            for c in g0..g1 {
+                let q = (row[c] / s).round().clamp(-qmax, qmax);
+                out[c] = q * s;
+            }
+        }
+    }
+    let n_groups = w.rows * w.cols.div_ceil(group);
+    let bits_per_param = bits as f64 + 16.0 * n_groups as f64 / (w.rows * w.cols) as f64;
+    RtnResult { what, bits_per_param }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rel_l1_distortion;
+    use crate::tensor::Rng;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = randmat(8, 128, 1);
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let r = quantize_rtn(&w, bits, 64);
+            let d = rel_l1_distortion(&w, &r.what);
+            assert!(d < prev, "bits={bits}: {d} >= {prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn smaller_groups_less_error_more_bits() {
+        let w = randmat(8, 128, 2);
+        let a = quantize_rtn(&w, 3, 32);
+        let b = quantize_rtn(&w, 3, 128);
+        assert!(rel_l1_distortion(&w, &a.what) <= rel_l1_distortion(&w, &b.what));
+        assert!(a.bits_per_param > b.bits_per_param);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let w = randmat(4, 128, 3);
+        let r = quantize_rtn(&w, 4, 64);
+        assert!((r.bits_per_param - (4.0 + 16.0 / 64.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn values_on_grid() {
+        let w = randmat(2, 64, 4);
+        let r = quantize_rtn(&w, 2, 64);
+        // 2-bit symmetric: q in {-1, 0, 1} per group -> |values| in {0, s}
+        for row in 0..2 {
+            use std::collections::BTreeSet;
+            let set: BTreeSet<u32> = r.what.row(row).iter().map(|v| v.abs().to_bits()).collect();
+            assert!(set.len() <= 2, "{set:?}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_stays_zero() {
+        let w = Mat::zeros(3, 16);
+        let r = quantize_rtn(&w, 4, 8);
+        assert!(r.what.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Dynamic batcher: packs FCFS requests into the fixed-shape slots the
+//! AOT artifacts were compiled for (vLLM-style slot packing, DESIGN.md
+//! §5).  Prompts are LEFT-padded so every request's last real token sits
+//! at the slot's final position; the per-request `start` index rides
+//! along and masks padding out of attention inside the HLO.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (batch, seq) slot this batch is padded to
+    pub slot: (usize, usize),
+    pub requests: Vec<Request>,
+    /// flattened [slot.0 x slot.1] token grid, left-padded with PAD
+    pub tokens: Vec<u8>,
+    /// first real-token index per lane (lanes beyond requests.len() are
+    /// fully padded with start == seq, masking the whole lane out)
+    pub starts: Vec<i32>,
+}
+
+pub const PAD: u8 = b' ';
+
+/// Pack requests into batches.  Slots must be sorted by batch size
+/// ascending; all slots share the same seq in the shipped config but
+/// mixed seqs are handled (smallest seq >= longest prompt in the group,
+/// falling back to truncating the prompt's head — oldest context first,
+/// like a sliding window).
+pub fn pack(requests: &[Request], slots: &[(usize, usize)]) -> Vec<Batch> {
+    assert!(!slots.is_empty());
+    let max_b = slots.iter().map(|s| s.0).max().unwrap();
+    let mut batches = Vec::new();
+    for group in requests.chunks(max_b) {
+        // smallest slot that fits the group size
+        let slot = *slots
+            .iter()
+            .filter(|(b, _)| *b >= group.len())
+            .min_by_key(|(b, s)| (*b, *s))
+            .unwrap_or(slots.last().unwrap());
+        let (b, s) = slot;
+        let mut tokens = vec![PAD; b * s];
+        let mut starts = vec![s as i32; b];
+        for (lane, req) in group.iter().enumerate() {
+            // truncate from the head if the prompt exceeds the slot
+            let p = if req.prompt.len() > s { &req.prompt[req.prompt.len() - s..] } else { &req.prompt[..] };
+            let start = s - p.len();
+            starts[lane] = start as i32;
+            tokens[lane * s + start..(lane + 1) * s].copy_from_slice(p);
+        }
+        batches.push(Batch { slot, requests: group.to_vec(), tokens, starts });
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, prompt: (0..len).map(|i| (40 + (i % 40)) as u8).collect(), max_new_tokens: 8 }
+    }
+
+    const SLOTS: &[(usize, usize)] = &[(1, 128), (4, 128)];
+
+    #[test]
+    fn single_request_uses_smallest_slot() {
+        let b = pack(&[req(1, 10)], SLOTS);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].slot, (1, 128));
+        assert_eq!(b[0].starts[0], 118);
+    }
+
+    #[test]
+    fn five_requests_split_4_plus_1() {
+        let reqs: Vec<Request> = (0..5).map(|i| req(i, 20 + i as usize)).collect();
+        let b = pack(&reqs, SLOTS);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].slot, (4, 128));
+        assert_eq!(b[0].requests.len(), 4);
+        assert_eq!(b[1].slot, (1, 128));
+        assert_eq!(b[1].requests.len(), 1);
+    }
+
+    #[test]
+    fn order_preserved_and_exactly_once() {
+        let reqs: Vec<Request> = (0..11).map(|i| req(i, 5 + (i as usize * 13) % 100)).collect();
+        let batches = pack(&reqs, SLOTS);
+        let flat: Vec<u64> = batches.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(flat, (0..11).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn padding_invariants_random_sweep() {
+        // proptest-style: random request sets; all invariants hold
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let n = 1 + rng.below(9);
+            let reqs: Vec<Request> = (0..n as u64).map(|i| req(i, 1 + rng.below(140))).collect();
+            for batch in pack(&reqs, SLOTS) {
+                let (b, s) = batch.slot;
+                assert!(batch.requests.len() <= b);
+                for (lane, r) in batch.requests.iter().enumerate() {
+                    let start = batch.starts[lane] as usize;
+                    let expect_len = r.prompt.len().min(s);
+                    assert_eq!(s - start, expect_len, "lane {lane}");
+                    // bytes before start are PAD
+                    assert!(batch.tokens[lane * s..lane * s + start].iter().all(|&t| t == PAD));
+                    // real suffix matches the (possibly truncated) prompt
+                    let p = &r.prompt[r.prompt.len() - expect_len..];
+                    assert_eq!(&batch.tokens[lane * s + start..(lane + 1) * s], p);
+                }
+                // unused lanes fully masked
+                for lane in batch.requests.len()..b {
+                    assert_eq!(batch.starts[lane], s as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_prompt_keeps_most_recent_tokens() {
+        let r = req(1, 300);
+        let b = pack(&[r.clone()], SLOTS);
+        assert_eq!(b[0].starts[0], 0);
+        assert_eq!(&b[0].tokens[..], &r.prompt[300 - 128..]);
+    }
+}

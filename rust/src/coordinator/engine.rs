@@ -1,0 +1,463 @@
+//! The serving engine — paper Algorithm 2 embedded in a block-wise
+//! decode-ahead pipeline (§A.1):
+//!
+//!   weights live in memory as per-block ANS bitstreams; a decoder
+//!   thread inflates block i+1's symbols into one of two reusable code
+//!   buffers while the PJRT executable runs block i.  Individual layers
+//!   are views into the block buffer (no copies).  After the block's
+//!   forward completes the buffer is recycled — exactly the paper's
+//!   double-buffer scheme, with a thread standing in for the GPU's
+//!   async decompression stream.
+//!
+//! Weight residency modes (Figure 5's comparison set):
+//!   * Bf16Resident — all weights dequantized f32 and resident (baseline)
+//!   * F8Resident   — codes+scales resident, no ANS on the hot path
+//!                    (the paper's "Float8" Marlin row)
+//!   * EntQuant     — bitstreams resident, ANS decode on the fly
+//!   * DiskOffload  — weights read from disk per block (the paper's
+//!                    "CPU offload" reference point)
+
+use super::batcher::Batch;
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::store::container::CompressedModel;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    Bf16Resident,
+    F8Resident,
+    EntQuant,
+    DiskOffload,
+}
+
+/// Precomputed per-block constant tensors (scales + norms).
+struct BlockConsts {
+    scales: Vec<HostTensor>,
+    norm_attn: HostTensor,
+    norm_mlp: HostTensor,
+}
+
+pub struct EngineOpts {
+    pub residency: Residency,
+    /// overlap ANS decode of block i+1 with compute of block i
+    pub pipeline: bool,
+    pub decode_threads: usize,
+    /// scratch dir for DiskOffload mode
+    pub offload_dir: Option<String>,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { residency: Residency::EntQuant, pipeline: true, decode_threads: 1, offload_dir: None }
+    }
+}
+
+pub struct Metrics {
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub decode_tokens: usize,
+    pub ans_decode_ms: f64,
+    pub exec_ms: f64,
+    pub ttft_ms: f64,
+}
+
+impl Metrics {
+    pub fn tokens_per_s_decode(&self, batch: usize) -> f64 {
+        (self.decode_tokens * batch) as f64 / (self.decode_ms / 1e3)
+    }
+}
+
+pub struct ServingEngine {
+    rt: Runtime,
+    cm: Arc<CompressedModel>,
+    consts: Vec<BlockConsts>,
+    embed: HostTensor,
+    head: HostTensor,
+    norm_final: HostTensor,
+    /// resident code tensors (F8Resident / Bf16Resident modes)
+    resident_codes: Option<Vec<Vec<HostTensor>>>,
+    opts: EngineOpts,
+    value_table: [f32; 256],
+    offload_paths: Vec<String>,
+}
+
+impl ServingEngine {
+    pub fn new(rt: Runtime, cm: CompressedModel, opts: EngineOpts) -> Result<Self> {
+        let cfg = &rt.manifest.config;
+        anyhow::ensure!(
+            cm.config.d_model == cfg.d_model && cm.config.n_layers == cfg.n_layers,
+            "compressed model does not match serving artifacts ({} vs {})",
+            cm.config.name,
+            cfg.name
+        );
+        let value_table = cm.fmt.value_table();
+        let mut consts = Vec::with_capacity(cm.blocks.len());
+        for cb in &cm.blocks {
+            let scales = cb
+                .layers
+                .iter()
+                .map(|l| HostTensor::f32(l.scales.clone(), &[l.rows]))
+                .collect();
+            consts.push(BlockConsts {
+                scales,
+                norm_attn: HostTensor::f32(cb.norm_attn.clone(), &[cb.norm_attn.len()]),
+                norm_mlp: HostTensor::f32(cb.norm_mlp.clone(), &[cb.norm_mlp.len()]),
+            });
+        }
+        let embed = HostTensor::f32(cm.embed.data.clone(), &[cm.embed.rows, cm.embed.cols]);
+        let head = HostTensor::f32(cm.head.data.clone(), &[cm.head.rows, cm.head.cols]);
+        let norm_final = HostTensor::f32(cm.norm_final.clone(), &[cm.norm_final.len()]);
+
+        let cm = Arc::new(cm);
+        let mut engine = ServingEngine {
+            rt,
+            cm,
+            consts,
+            embed,
+            head,
+            norm_final,
+            resident_codes: None,
+            opts,
+            value_table,
+            offload_paths: Vec::new(),
+        };
+        match engine.opts.residency {
+            Residency::Bf16Resident | Residency::F8Resident => {
+                // decode once at load time; codes stay resident
+                let mut all = Vec::new();
+                for b in 0..engine.cm.blocks.len() {
+                    all.push(engine.decode_block_codes(b)?);
+                }
+                engine.resident_codes = Some(all);
+            }
+            Residency::DiskOffload => {
+                let dir = engine
+                    .opts
+                    .offload_dir
+                    .clone()
+                    .unwrap_or_else(|| std::env::temp_dir().join("eq_offload").to_string_lossy().into_owned());
+                std::fs::create_dir_all(&dir)?;
+                for b in 0..engine.cm.blocks.len() {
+                    let codes = engine.decode_block_codes(b)?;
+                    let path = format!("{dir}/block_{b}.f32");
+                    let mut bytes = Vec::new();
+                    for t in &codes {
+                        for &v in t.as_f32() {
+                            bytes.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                    std::fs::write(&path, bytes)?;
+                    engine.offload_paths.push(path);
+                }
+            }
+            Residency::EntQuant => {}
+        }
+        Ok(engine)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn compressed(&self) -> &CompressedModel {
+        &self.cm
+    }
+
+    /// ANS-decode one block and expand symbols to f32 code tensors.
+    fn decode_block_codes(&self, b: usize) -> Result<Vec<HostTensor>> {
+        let cb = &self.cm.blocks[b];
+        let mut sym = vec![0u8; cb.n_symbols()];
+        self.cm.decode_block_into(b, &mut sym, self.opts.decode_threads)?;
+        let mut out = Vec::with_capacity(cb.layers.len());
+        for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
+            let data: Vec<f32> = sym[off..off + n].iter().map(|&s| self.value_table[s as usize]).collect();
+            out.push(HostTensor::f32(data, &[l.rows, l.cols]));
+        }
+        Ok(out)
+    }
+
+    fn offload_block_codes(&self, b: usize) -> Result<Vec<HostTensor>> {
+        let bytes = std::fs::read(&self.offload_paths[b])?;
+        let cb = &self.cm.blocks[b];
+        let mut out = Vec::with_capacity(cb.layers.len());
+        let mut off = 0usize;
+        for l in &cb.layers {
+            let n = l.rows * l.cols;
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let o = off + 4 * i;
+                data.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+            }
+            off += 4 * n;
+            out.push(HostTensor::f32(data, &[l.rows, l.cols]));
+        }
+        Ok(out)
+    }
+
+    /// Fetch block codes according to the residency mode.
+    fn fetch_block(&self, b: usize) -> Result<(Vec<HostTensor>, f64)> {
+        let t0 = std::time::Instant::now();
+        let codes = match self.opts.residency {
+            Residency::Bf16Resident | Residency::F8Resident => {
+                self.resident_codes.as_ref().unwrap()[b].clone()
+            }
+            Residency::EntQuant => self.decode_block_codes(b)?,
+            Residency::DiskOffload => self.offload_block_codes(b)?,
+        };
+        Ok((codes, t0.elapsed().as_secs_f64() * 1e3))
+    }
+
+    /// Run all blocks of one phase with the decode-ahead pipeline.
+    /// `run_block(b, codes) -> Result<()>` mutates the caller's state.
+    fn run_pipelined<F>(&self, ans_ms: &mut f64, mut run_block: F) -> Result<()>
+    where
+        F: FnMut(usize, &[HostTensor]) -> Result<()>,
+    {
+        let n = self.cm.blocks.len();
+        if !self.opts.pipeline || self.opts.residency != Residency::EntQuant {
+            for b in 0..n {
+                let (codes, ms) = self.fetch_block(b)?;
+                *ans_ms += ms;
+                run_block(b, &codes)?;
+            }
+            return Ok(());
+        }
+        // decode-ahead: a scoped worker decodes block b+1 while the main
+        // thread executes block b (paper A.1 double buffering)
+        let cm = Arc::clone(&self.cm);
+        let table = self.value_table;
+        let threads = self.opts.decode_threads;
+        std::thread::scope(|scope| -> Result<()> {
+            let (req_tx, req_rx) = mpsc::channel::<usize>();
+            let (res_tx, res_rx) = mpsc::channel::<Result<(usize, Vec<HostTensor>, f64), String>>();
+            let cm2 = Arc::clone(&cm);
+            scope.spawn(move || {
+                while let Ok(b) = req_rx.recv() {
+                    let t0 = std::time::Instant::now();
+                    let cb = &cm2.blocks[b];
+                    let mut sym = vec![0u8; cb.n_symbols()];
+                    let r = cm2.decode_block_into(b, &mut sym, threads).map_err(|e| e.to_string()).map(|()| {
+                        let mut out = Vec::with_capacity(cb.layers.len());
+                        for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
+                            let data: Vec<f32> =
+                                sym[off..off + n].iter().map(|&s| table[s as usize]).collect();
+                            out.push(HostTensor::f32(data, &[l.rows, l.cols]));
+                        }
+                        (b, out, t0.elapsed().as_secs_f64() * 1e3)
+                    });
+                    if res_tx.send(r).is_err() {
+                        break;
+                    }
+                }
+            });
+            req_tx.send(0).unwrap();
+            for b in 0..n {
+                let (bb, codes, ms) = res_rx
+                    .recv()
+                    .map_err(|e| anyhow!("decode pipeline: {e}"))?
+                    .map_err(|e| anyhow!("decode pipeline: {e}"))?;
+                debug_assert_eq!(bb, b);
+                *ans_ms += ms; // decode wall (overlapped with prior exec)
+                if b + 1 < n {
+                    req_tx.send(b + 1).unwrap();
+                }
+                run_block(b, &codes)?;
+            }
+            drop(req_tx);
+            Ok(())
+        })
+    }
+
+    fn block_inputs(
+        &self,
+        b: usize,
+        x: HostTensor,
+        codes: &[HostTensor],
+        extra: Vec<HostTensor>,
+    ) -> Vec<HostTensor> {
+        let mut inputs = Vec::with_capacity(1 + 7 + 7 + 2 + extra.len());
+        inputs.push(x);
+        inputs.extend(codes.iter().cloned());
+        inputs.extend(self.consts[b].scales.iter().cloned());
+        inputs.push(self.consts[b].norm_attn.clone());
+        inputs.push(self.consts[b].norm_mlp.clone());
+        inputs.extend(extra);
+        inputs
+    }
+
+    /// Prefill one packed batch: returns (full logits [B,S,V], caches).
+    pub fn prefill(&self, batch: &Batch, metrics: &mut Metrics) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
+        let (b, s) = batch.slot;
+        let cfg = &self.rt.manifest.config;
+        let t0 = std::time::Instant::now();
+        let tokens = HostTensor::i32(batch.tokens.iter().map(|&t| t as i32).collect(), &[b, s]);
+        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
+        let mut x = self
+            .rt
+            .call(&format!("embed_p_b{b}_s{s}"), &[tokens, self.embed.clone()])?
+            .remove(0);
+        let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(cfg.n_layers);
+        let exec_name = format!("block_p_b{b}_s{s}");
+        let mut ans_ms = 0.0;
+        self.run_pipelined(&mut ans_ms, |blk, codes| {
+            let t1 = std::time::Instant::now();
+            let inputs = self.block_inputs(blk, x.clone(), codes, vec![starts.clone()]);
+            let mut out = self.rt.call(&exec_name, &inputs)?;
+            x = out.remove(0);
+            let k = out.remove(0);
+            let v = out.remove(0);
+            caches.push((k, v));
+            metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
+            Ok(())
+        })?;
+        metrics.ans_decode_ms += ans_ms;
+        let logits = self
+            .rt
+            .call(&format!("head_p_b{b}_s{s}"), &[x, self.norm_final.clone(), self.head.clone()])?
+            .remove(0);
+        metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok((logits, caches))
+    }
+
+    /// Greedy-generate `max_new` tokens for a packed batch.
+    pub fn generate(&self, batch: &Batch, max_new: usize) -> Result<(Vec<Vec<u8>>, Metrics)> {
+        let (b, s) = batch.slot;
+        let cfg = &self.rt.manifest.config;
+        let (_, ctx) = *self
+            .rt
+            .manifest
+            .decode_slots
+            .iter()
+            .find(|(db, _)| *db == b)
+            .ok_or_else(|| anyhow!("no decode slot for batch {b}"))?;
+        let mut metrics = Metrics {
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            decode_tokens: 0,
+            ans_decode_ms: 0.0,
+            exec_ms: 0.0,
+            ttft_ms: 0.0,
+        };
+        let t_start = std::time::Instant::now();
+        let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
+        metrics.ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+
+        // expand prefill caches [B,H,S,hd] into decode caches [B,H,C,hd]
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let mut caches: Vec<(HostTensor, HostTensor)> = prefill_caches
+            .into_iter()
+            .map(|(k, v)| {
+                let expand = |t: &HostTensor| {
+                    let src = t.as_f32();
+                    let mut dst = vec![0.0f32; b * h * ctx * hd];
+                    for bi in 0..b {
+                        for hi in 0..h {
+                            for si in 0..s {
+                                let so = ((bi * h + hi) * s + si) * hd;
+                                let d0 = ((bi * h + hi) * ctx + si) * hd;
+                                dst[d0..d0 + hd].copy_from_slice(&src[so..so + hd]);
+                            }
+                        }
+                    }
+                    HostTensor::f32(dst, &[b, h, ctx, hd])
+                };
+                (expand(&k), expand(&v))
+            })
+            .collect();
+
+        // greedy pick from the last prefill position
+        let vsize = cfg.vocab;
+        let lf = logits.as_f32();
+        let mut next: Vec<i32> = (0..b)
+            .map(|bi| {
+                let row = &lf[(bi * s + (s - 1)) * vsize..(bi * s + s) * vsize];
+                argmax(row) as i32
+            })
+            .collect();
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); batch.requests.len()];
+        for (bi, o) in outputs.iter_mut().enumerate() {
+            o.push(next[bi] as u8);
+        }
+
+        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
+        let embed_name = format!("embed_d_b{b}");
+        let block_name = format!("block_d_b{b}_c{ctx}");
+        let head_name = format!("head_d_b{b}");
+        let t_dec = std::time::Instant::now();
+        for step in 0..max_new.saturating_sub(1) {
+            let pos = (s + step) as i32;
+            if pos as usize >= ctx {
+                break;
+            }
+            let toks = HostTensor::i32(next.clone(), &[b, 1]);
+            let mut x = self.rt.call(&embed_name, &[toks, self.embed.clone()])?.remove(0);
+            let mut ans_ms = 0.0;
+            let caches_ref = &mut caches;
+            let rt = &self.rt;
+            let consts = &self.consts;
+            {
+                let x_cell = std::cell::RefCell::new(&mut x);
+                self.run_pipelined(&mut ans_ms, |blk, codes| {
+                    let t1 = std::time::Instant::now();
+                    let (kc, vc) = caches_ref[blk].clone();
+                    let mut inputs = Vec::with_capacity(21);
+                    inputs.push((*x_cell.borrow()).clone());
+                    inputs.extend(codes.iter().cloned());
+                    inputs.extend(consts[blk].scales.iter().cloned());
+                    inputs.push(consts[blk].norm_attn.clone());
+                    inputs.push(consts[blk].norm_mlp.clone());
+                    inputs.push(kc);
+                    inputs.push(vc);
+                    inputs.push(HostTensor::scalar_i32(pos));
+                    inputs.push(starts.clone());
+                    let mut out = rt.call(&block_name, &inputs)?;
+                    **x_cell.borrow_mut() = out.remove(0);
+                    caches_ref[blk] = (out.remove(0), out.remove(0));
+                    metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
+                    Ok(())
+                })?;
+            }
+            metrics.ans_decode_ms += ans_ms;
+            let logits = self
+                .rt
+                .call(&head_name, &[x, self.norm_final.clone(), self.head.clone()])?
+                .remove(0);
+            let lf = logits.as_f32();
+            for bi in 0..b {
+                next[bi] = argmax(&lf[bi * vsize..(bi + 1) * vsize]) as i32;
+            }
+            for (bi, o) in outputs.iter_mut().enumerate() {
+                o.push(next[bi] as u8);
+            }
+            metrics.decode_tokens += 1;
+        }
+        metrics.decode_ms = t_dec.elapsed().as_secs_f64() * 1e3;
+        Ok((outputs, metrics))
+    }
+
+    /// Approximate resident weight bytes for this residency mode (the
+    /// Figure F.3 peak-memory series).
+    pub fn resident_weight_bytes(&self) -> usize {
+        let linear_f32: usize = self.cm.blocks.iter().map(|b| b.n_symbols() * 4).sum();
+        let streams: usize = self.cm.blocks.iter().map(|b| b.bitstream.serialized_len()).sum();
+        let buffer = self.cm.blocks.iter().map(|b| b.n_symbols() * 4).max().unwrap_or(0);
+        match self.opts.residency {
+            Residency::Bf16Resident | Residency::F8Resident => linear_f32,
+            Residency::EntQuant => streams + 2 * buffer, // bitstreams + double buffer
+            Residency::DiskOffload => buffer,
+        }
+    }
+}
+
+fn argmax(x: &[f32]) -> usize {
+    let mut best = 0usize;
+    for i in 1..x.len() {
+        if x[i] > x[best] {
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,9 @@
+//! L3 serving engine — the coordination layer of the three-layer stack:
+//! request batching, block-wise ANS decode-ahead pipeline, and PJRT
+//! execution of the AOT artifacts.  Python never runs here.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{pack, Batch, Request};
+pub use engine::{EngineOpts, Metrics, Residency, ServingEngine};

@@ -1,0 +1,209 @@
+//! Empirical entropy, histograms and frequency-table normalization —
+//! the information-theoretic substrate under both the EntQuant objective
+//! (paper eq. 2) and the rANS coder's metadata.
+
+/// Byte histogram.
+pub fn histogram(symbols: &[u8]) -> [u64; 256] {
+    // Four sub-histograms break the store-to-load dependency chain on the
+    // counter increments (§Perf L3).
+    let mut h = [[0u64; 256]; 4];
+    let mut chunks = symbols.chunks_exact(4);
+    for c in chunks.by_ref() {
+        h[0][c[0] as usize] += 1;
+        h[1][c[1] as usize] += 1;
+        h[2][c[2] as usize] += 1;
+        h[3][c[3] as usize] += 1;
+    }
+    for &b in chunks.remainder() {
+        h[0][b as usize] += 1;
+    }
+    let mut out = [0u64; 256];
+    for i in 0..256 {
+        out[i] = h[0][i] + h[1][i] + h[2][i] + h[3][i];
+    }
+    out
+}
+
+/// Empirical Shannon entropy in bits/symbol (paper eq. 2).
+pub fn entropy_bits(hist: &[u64; 256]) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    let mut h = 0.0;
+    for &c in hist {
+        if c > 0 {
+            let p = c as f64 / t;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+pub fn entropy_of(symbols: &[u8]) -> f64 {
+    entropy_bits(&histogram(symbols))
+}
+
+/// Number of distinct symbols present.
+pub fn unique_symbols(hist: &[u64; 256]) -> usize {
+    hist.iter().filter(|&&c| c > 0).count()
+}
+
+/// Cross entropy of data under a (normalized) frequency model — the
+/// achievable bits/symbol of an entropy coder driven by `freq` (which
+/// sums to 2^prob_bits).  Equals `entropy_bits` when the model is exact.
+pub fn cross_entropy_bits(hist: &[u64; 256], freq: &[u32; 256], prob_bits: u32) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let m = (1u64 << prob_bits) as f64;
+    let mut bits = 0.0;
+    for i in 0..256 {
+        if hist[i] > 0 {
+            assert!(freq[i] > 0, "model assigns zero to present symbol {i}");
+            bits += hist[i] as f64 * (m / freq[i] as f64).log2();
+        }
+    }
+    bits / total as f64
+}
+
+/// Normalize a histogram to integer frequencies summing to exactly
+/// 2^prob_bits with every present symbol >= 1 (the rANS invariant).
+/// Largest-remainder method with correction applied to the heaviest
+/// symbols (keeps the KL penalty of rounding minimal).
+pub fn normalize_freqs(hist: &[u64; 256], prob_bits: u32) -> [u32; 256] {
+    let target = 1u32 << prob_bits;
+    let total: u64 = hist.iter().sum();
+    assert!(total > 0, "cannot normalize empty histogram");
+    let present = hist.iter().filter(|&&c| c > 0).count() as u32;
+    assert!(present <= target, "alphabet larger than 2^prob_bits");
+
+    let mut freq = [0u32; 256];
+    let mut assigned: u32 = 0;
+    // first pass: proportional share, floored, min 1 for present symbols
+    let mut rema: Vec<(f64, usize)> = Vec::with_capacity(present as usize);
+    for i in 0..256 {
+        if hist[i] == 0 {
+            continue;
+        }
+        let exact = hist[i] as f64 * target as f64 / total as f64;
+        let f = (exact.floor() as u32).max(1);
+        freq[i] = f;
+        assigned += f;
+        rema.push((exact - f as f64, i));
+    }
+    // distribute the remaining mass to the largest remainders
+    if assigned < target {
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut left = target - assigned;
+        let mut idx = 0;
+        while left > 0 {
+            let (_, i) = rema[idx % rema.len()];
+            freq[i] += 1;
+            left -= 1;
+            idx += 1;
+        }
+    } else if assigned > target {
+        // floors + min-1 overflowed: take back from the heaviest symbols
+        let mut over = assigned - target;
+        let mut order: Vec<usize> = (0..256).filter(|&i| freq[i] > 0).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(freq[i]));
+        let mut idx = 0;
+        while over > 0 {
+            let i = order[idx % order.len()];
+            if freq[i] > 1 {
+                freq[i] -= 1;
+                over -= 1;
+            }
+            idx += 1;
+        }
+    }
+    debug_assert_eq!(freq.iter().map(|&f| f as u64).sum::<u64>(), target as u64);
+    freq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0, 0, 1, 255, 255, 255, 7]);
+        assert_eq!(h[0], 2);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[255], 3);
+        assert_eq!(h[7], 1);
+        assert_eq!(h.iter().sum::<u64>(), 7);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        assert_eq!(entropy_of(&[5u8; 100]), 0.0);
+        let uniform: Vec<u8> = (0..=255u8).collect();
+        assert!((entropy_of(&uniform) - 8.0).abs() < 1e-12);
+        assert_eq!(entropy_of(&[]), 0.0);
+    }
+
+    #[test]
+    fn entropy_two_symbols() {
+        let data: Vec<u8> = (0..100).map(|i| if i < 25 { 0 } else { 1 }).collect();
+        let want = -(0.25f64.log2() * 0.25 + 0.75f64.log2() * 0.75);
+        assert!((entropy_of(&data) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_sums_to_target_and_covers_present() {
+        let mut rng = Rng::new(9);
+        for prob_bits in [10u32, 12, 14] {
+            let data: Vec<u8> = (0..5000)
+                .map(|_| ((rng.normal().abs() * 20.0) as usize).min(255) as u8)
+                .collect();
+            let h = histogram(&data);
+            let f = normalize_freqs(&h, prob_bits);
+            assert_eq!(f.iter().map(|&x| x as u64).sum::<u64>(), 1u64 << prob_bits);
+            for i in 0..256 {
+                if h[i] > 0 {
+                    assert!(f[i] >= 1);
+                } else {
+                    assert_eq!(f[i], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_handles_many_rare_symbols() {
+        // 200 symbols each appearing once + one dominant symbol, small table
+        let mut data = vec![7u8; 100_000];
+        for i in 0..200 {
+            data.push(i as u8);
+        }
+        let h = histogram(&data);
+        let f = normalize_freqs(&h, 10); // only 1024 slots for 201 symbols
+        assert_eq!(f.iter().map(|&x| x as u64).sum::<u64>(), 1024);
+        assert!(f[7] > 700);
+    }
+
+    #[test]
+    fn cross_entropy_at_least_entropy() {
+        let mut rng = Rng::new(3);
+        let data: Vec<u8> = (0..4000)
+            .map(|_| ((rng.normal().abs() * 8.0) as usize).min(255) as u8)
+            .collect();
+        let h = histogram(&data);
+        let f = normalize_freqs(&h, 12);
+        let he = entropy_bits(&h);
+        let ce = cross_entropy_bits(&h, &f, 12);
+        assert!(ce >= he - 1e-9, "ce={ce} h={he}");
+        assert!(ce < he + 0.05, "normalization penalty too large: {ce} vs {he}");
+    }
+
+    #[test]
+    fn unique_count() {
+        let h = histogram(&[1, 1, 2, 3]);
+        assert_eq!(unique_symbols(&h), 3);
+    }
+}

@@ -1,0 +1,179 @@
+//! Evaluation harness — the LM-Eval / perplexity analogue (DESIGN.md §2).
+//!
+//! * `perplexity`: windowed next-token perplexity over a byte corpus
+//!   (C4/WikiText-2 stand-in: artifacts/corpus/valid.bin).
+//! * `TaskSuite`: multiple-choice suites scored by length-normalized
+//!   continuation log-likelihood — mechanically identical to the
+//!   EleutherAI harness's acc metric on the 8 zero-shot tasks.
+
+use crate::model::{ActQuant, Forward, Model};
+use crate::store::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+
+/// Windowed perplexity (base e -> reported as exp(mean nll)).
+pub fn perplexity(model: &Model, data: &[u8], window: usize, max_windows: usize) -> f64 {
+    perplexity_aq(model, data, window, max_windows, ActQuant::None)
+}
+
+pub fn perplexity_aq(
+    model: &Model,
+    data: &[u8],
+    window: usize,
+    max_windows: usize,
+    aq: ActQuant,
+) -> f64 {
+    let fwd = Forward::with_act_quant(model, aq);
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    let mut start = 0usize;
+    while start + window + 1 <= data.len() && n < max_windows {
+        total += fwd.nll(&data[start..start + window + 1]);
+        n += 1;
+        start += window;
+    }
+    assert!(n > 0, "corpus too short for window {window}");
+    (total / n as f64).exp()
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub context: Vec<u8>,
+    pub options: Vec<Vec<u8>>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    /// task name -> items
+    pub tasks: Vec<(String, Vec<TaskItem>)>,
+}
+
+impl TaskSuite {
+    /// Load a suite from the corpus generator's JSON format.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("task json: {e}"))?;
+        let obj = v.as_object().ok_or(anyhow!("suite must be an object"))?;
+        let mut tasks = Vec::new();
+        for (name, items) in obj {
+            let mut out = Vec::new();
+            for it in items.as_array().ok_or(anyhow!("items"))? {
+                let ctx = it.get("context").and_then(Value::as_str).ok_or(anyhow!("context"))?;
+                let ans = it.get("answer").and_then(Value::as_usize).ok_or(anyhow!("answer"))?;
+                let opts = it
+                    .get("options")
+                    .and_then(Value::as_array)
+                    .ok_or(anyhow!("options"))?
+                    .iter()
+                    .map(|o| o.as_str().map(|s| s.as_bytes().to_vec()))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or(anyhow!("option strings"))?;
+                out.push(TaskItem { context: ctx.as_bytes().to_vec(), options: opts, answer: ans });
+            }
+            tasks.push((name.clone(), out));
+        }
+        Ok(TaskSuite { tasks })
+    }
+
+    /// Evaluate: returns (per-task accuracy, macro average).
+    pub fn evaluate(&self, model: &Model, max_items: usize) -> (Vec<(String, f64)>, f64) {
+        let fwd = Forward::new(model);
+        let mut per_task = Vec::new();
+        for (name, items) in &self.tasks {
+            let mut correct = 0usize;
+            let take = items.len().min(max_items);
+            for it in &items[..take] {
+                // length-normalized continuation log-likelihood (LM-Eval acc)
+                let mut best = (f64::NEG_INFINITY, 0usize);
+                for (oi, opt) in it.options.iter().enumerate() {
+                    let ll = fwd.continuation_loglik(&it.context, opt) / opt.len() as f64;
+                    if ll > best.0 {
+                        best = (ll, oi);
+                    }
+                }
+                if best.1 == it.answer {
+                    correct += 1;
+                }
+            }
+            per_task.push((name.clone(), correct as f64 / take as f64));
+        }
+        let avg = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len() as f64;
+        (per_task, avg)
+    }
+}
+
+/// Chance-level accuracy of a suite (for collapse detection in tables).
+pub fn chance_accuracy(suite: &TaskSuite) -> f64 {
+    let per: Vec<f64> = suite
+        .tasks
+        .iter()
+        .map(|(_, items)| {
+            items.iter().map(|it| 1.0 / it.options.len() as f64).sum::<f64>() / items.len() as f64
+        })
+        .collect();
+    per.iter().sum::<f64>() / per.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loader::synthetic_model;
+    use crate::model::Config;
+
+    fn tiny() -> Model {
+        synthetic_model(
+            Config { name: "T".into(), vocab: 128, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_ctx: 64 },
+            31,
+        )
+    }
+
+    #[test]
+    fn parse_suite() {
+        let text = r#"{"arith": [{"context": "1 + 1 =", "options": [" 2 .", " 3 ."], "answer": 0}]}"#;
+        let suite = TaskSuite::parse(text).unwrap();
+        assert_eq!(suite.tasks.len(), 1);
+        assert_eq!(suite.tasks[0].1[0].options.len(), 2);
+        assert!((chance_accuracy(&suite) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let m = tiny();
+        let text = r#"{"t": [
+            {"context": "ab", "options": ["cd", "ef", "gh", "ij"], "answer": 0},
+            {"context": "xy", "options": ["cd", "ef", "gh", "ij"], "answer": 1},
+            {"context": "qr", "options": ["cd", "ef", "gh", "ij"], "answer": 2},
+            {"context": "mn", "options": ["cd", "ef", "gh", "ij"], "answer": 3}
+        ]}"#;
+        let suite = TaskSuite::parse(text).unwrap();
+        let (_, avg) = suite.evaluate(&m, 100);
+        // a random model has no systematic preference for the gold index
+        assert!(avg <= 0.75, "{avg}");
+    }
+
+    #[test]
+    fn perplexity_near_vocab_at_random_init() {
+        let m = tiny();
+        let data: Vec<u8> = (0..600).map(|i| (i * 13 % 128) as u8).collect();
+        let ppl = perplexity(&m, &data, 32, 4);
+        assert!(ppl > 30.0 && ppl < 400.0, "{ppl}");
+    }
+
+    #[test]
+    fn loads_real_suite_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/corpus/tasks_base.json");
+        if !std::path::Path::new(path).exists() {
+            eprintln!("suite missing; run `make artifacts` (skipping)");
+            return;
+        }
+        let suite = TaskSuite::load(path).unwrap();
+        assert_eq!(suite.tasks.len(), 8, "the LM-Eval analogue has 8 tasks");
+        for (name, items) in &suite.tasks {
+            assert!(!items.is_empty(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! EntQuant — entropy coding enables data-free model compression.
+//!
+//! Reproduction of Putzky, Genzel, et al. (2026).  See DESIGN.md for the
+//! system inventory and README.md for the quickstart.
+//!
+//! Layer map (DESIGN.md §1):
+//! * `quant`, `entropy`, `ans`, `rd` — the compression core (Algorithms 1/2)
+//! * `model`, `store`, `baselines`, `eval` — substrates: transformer,
+//!   container format, comparison methods, evaluation harness
+//! * `runtime`, `coordinator` — the L3 serving engine over PJRT
+//!   executables compiled from the JAX/Pallas layers
+
+pub mod ans;
+pub mod baselines;
+pub mod coordinator;
+pub mod entropy;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod rd;
+pub mod runtime;
+pub mod store;
+pub mod tensor;
+
+/// Repo-relative artifacts directory (overridable for tests).
+pub fn artifacts_dir() -> String {
+    std::env::var("ENTQUANT_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}

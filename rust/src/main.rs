@@ -1,0 +1,189 @@
+//! entquant CLI — compress, evaluate, serve, and regenerate every table
+//! and figure of the paper.  `entquant help` lists subcommands.
+
+use anyhow::{anyhow, bail, Result};
+
+use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::eval::{perplexity, TaskSuite};
+use entquant::model::load_eqw;
+use entquant::quant::Format;
+use entquant::runtime::Runtime;
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+mod tables;
+
+fn usage() -> ! {
+    eprintln!(
+        "entquant <command> [args]\n\
+         commands:\n\
+           compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P]\n\
+           eval     --model <size|path> [--compressed P] [--windows N]\n\
+           serve    --compressed P [--prompts N] [--max-new N] [--residency MODE]\n\
+           table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
+           ablate-blockwise | report-all"
+    );
+    std::process::exit(2);
+}
+
+fn arg_val(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn model_path(spec: &str) -> String {
+    if spec.contains('/') || spec.ends_with(".eqw") {
+        spec.to_string()
+    } else {
+        format!("{}/model_{spec}.eqw", entquant::artifacts_dir())
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "compress" => cmd_compress(&args[1..]),
+        "eval" => cmd_eval(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(),
+        "fig1" => tables::fig1(),
+        "fig4" => tables::fig4(),
+        "fig5" => tables::fig5(),
+        "fig6" => tables::fig6(),
+        "figA1" => tables::fig_a1(),
+        "figB1" => tables::fig_b1(),
+        "ablate-blockwise" => tables::ablate_blockwise(),
+        "report-all" => {
+            tables::table1()?;
+            tables::table2()?;
+            tables::table3()?;
+            tables::table4()?;
+            tables::fig1()?;
+            tables::fig4()?;
+            tables::fig6()?;
+            tables::fig_a1()?;
+            tables::fig_b1()?;
+            tables::fig5()?;
+            tables::ablate_blockwise()
+        }
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown command {other}");
+            usage()
+        }
+    }
+}
+
+fn cmd_compress(args: &[String]) -> Result<()> {
+    let spec = arg_val(args, "--model").ok_or(anyhow!("--model required"))?;
+    let model = load_eqw(&model_path(&spec))?;
+    let fmt = match arg_val(args, "--fmt").as_deref() {
+        None | Some("f8") => Format::F8E4M3,
+        Some("i8") => Format::Int8,
+        Some(f) => bail!("bad fmt {f}"),
+    };
+    let mut opts = CompressOpts { fmt, ..Default::default() };
+    if let Some(b) = arg_val(args, "--bits") {
+        opts.target_bits = Some(b.parse()?);
+    } else if let Some(l) = arg_val(args, "--lam") {
+        opts.lam = l.parse()?;
+    }
+    if let Some(th) = arg_val(args, "--sw") {
+        opts.superweight_threshold = Some(th.parse()?);
+    }
+    let (cm, rep) = compress_model(&model, &opts)?;
+    let out = arg_val(args, "--out")
+        .unwrap_or_else(|| format!("{}/compressed_{spec}.eqz", entquant::artifacts_dir()));
+    cm.save(&out)?;
+    println!(
+        "compressed {} ({} params) in {:.1}s\n  lam={:.4}  entropy={:.2} bits/param  effective={:.2} bits/param\n  distortion={:.4}  sparsity={:.3}  excluded_blocks={:?}\n  wrote {}",
+        spec,
+        rep.params_compressed,
+        rep.wall_s,
+        rep.lam,
+        rep.mean_entropy_bits,
+        rep.effective_bits_per_param,
+        rep.total_distortion,
+        rep.mean_sparsity,
+        rep.excluded_blocks,
+        out
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let art = entquant::artifacts_dir();
+    let model = if let Some(p) = arg_val(args, "--compressed") {
+        CompressedModel::load(&p)?.to_model()?
+    } else {
+        let spec = arg_val(args, "--model").ok_or(anyhow!("--model or --compressed required"))?;
+        load_eqw(&model_path(&spec))?
+    };
+    let windows: usize = arg_val(args, "--windows").map(|w| w.parse()).transpose()?.unwrap_or(8);
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    let ppl = perplexity(&model, &valid, 128, windows);
+    let suite = TaskSuite::load(&format!("{art}/corpus/tasks_base.json"))?;
+    let (per_task, avg) = suite.evaluate(&model, 25);
+    println!("perplexity (C4-analogue, {windows} windows x 128): {ppl:.3}");
+    for (name, acc) in &per_task {
+        println!("  {name:<12} acc {:.1}%", acc * 100.0);
+    }
+    println!("  zero-shot avg: {:.1}%", avg * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let art = entquant::artifacts_dir();
+    let path = arg_val(args, "--compressed").ok_or(anyhow!("--compressed required"))?;
+    let cm = CompressedModel::load(&path)?;
+    let residency = match arg_val(args, "--residency").as_deref() {
+        None | Some("entquant") => Residency::EntQuant,
+        Some("bf16") => Residency::Bf16Resident,
+        Some("f8") => Residency::F8Resident,
+        Some("offload") => Residency::DiskOffload,
+        Some(r) => bail!("bad residency {r}"),
+    };
+    let rt = Runtime::new(&art)?;
+    let engine = ServingEngine::new(rt, cm, EngineOpts { residency, ..Default::default() })?;
+    let n_prompts: usize = arg_val(args, "--prompts").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let max_new: usize = arg_val(args, "--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
+
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    let requests: Vec<Request> = (0..n_prompts)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: valid[i * 100..i * 100 + 48].to_vec(),
+            max_new_tokens: max_new,
+        })
+        .collect();
+    let slots = engine.runtime().manifest.prefill_slots.clone();
+    println!("serving {} requests ({:?} residency) ...", requests.len(), residency);
+    let mut total_tokens = 0usize;
+    let t0 = std::time::Instant::now();
+    for batch in pack(&requests, &slots) {
+        let (outputs, m) = engine.generate(&batch, max_new)?;
+        for (r, out) in batch.requests.iter().zip(&outputs) {
+            let text: String = out.iter().map(|&b| b as char).collect();
+            println!("  req {}: {:?}", r.id, text);
+            total_tokens += out.len();
+        }
+        println!(
+            "  batch {:?}: ttft {:.0} ms, decode {:.1} tok/s/lane, ans {:.0} ms, exec {:.0} ms",
+            batch.slot,
+            m.ttft_ms,
+            m.decode_tokens as f64 / (m.decode_ms / 1e3),
+            m.ans_decode_ms,
+            m.exec_ms
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "total: {total_tokens} tokens in {wall:.2}s ({:.1} tok/s), resident weight bytes: {}",
+        total_tokens as f64 / wall,
+        engine.resident_weight_bytes()
+    );
+    Ok(())
+}

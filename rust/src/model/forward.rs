@@ -1,0 +1,442 @@
+//! f32 reference forward pass — numerically mirrors
+//! python/compile/model.py::forward_train (RMSNorm, RoPE, causal MHA,
+//! SwiGLU).  Used for offline evaluation of every quantization method;
+//! optional dynamic activation quantization implements the paper's W8A8
+//! configuration (Table 4).
+
+use super::{BlockWeights, Config, Model};
+use crate::quant::Format;
+use crate::tensor::{dot, log_softmax, rmsnorm, softmax_inplace, Mat};
+
+/// Dynamic (per-token) activation quantization mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ActQuant {
+    None,
+    /// quantize-dequantize activations per token before every linear
+    Dynamic(Format),
+}
+
+pub struct Forward<'a> {
+    pub model: &'a Model,
+    pub act_quant: ActQuant,
+}
+
+impl<'a> Forward<'a> {
+    pub fn new(model: &'a Model) -> Self {
+        Forward { model, act_quant: ActQuant::None }
+    }
+
+    pub fn with_act_quant(model: &'a Model, aq: ActQuant) -> Self {
+        Forward { model, act_quant: aq }
+    }
+
+    fn maybe_quant_acts(&self, x: &mut Mat) {
+        if let ActQuant::Dynamic(fmt) = self.act_quant {
+            for r in 0..x.rows {
+                let row = x.row_mut(r);
+                let amax = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                if amax == 0.0 {
+                    continue;
+                }
+                let s = amax / fmt.qmax();
+                for v in row.iter_mut() {
+                    *v = fmt.round((*v / s).clamp(-fmt.qmax(), fmt.qmax())) * s;
+                }
+            }
+        }
+    }
+
+    fn linear(&self, w: &Mat, x: &Mat) -> Mat {
+        let mut xq = x.clone();
+        self.maybe_quant_acts(&mut xq);
+        w.matmul_t(&xq)
+    }
+
+    /// Full-sequence forward: tokens -> logits [S, V].
+    pub fn logits(&self, tokens: &[u8]) -> Mat {
+        let cfg = &self.model.config;
+        let s_len = tokens.len();
+        let d = cfg.d_model;
+        let mut x = Mat::zeros(s_len, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.model.embed.row(t as usize));
+        }
+        for bw in &self.model.blocks {
+            x = self.block(&x, bw, cfg);
+        }
+        // final norm + head
+        let mut xn = Mat::zeros(s_len, d);
+        for i in 0..s_len {
+            rmsnorm(x.row(i), &self.model.norm_final, xn.row_mut(i));
+        }
+        self.model.head.matmul_t(&xn)
+    }
+
+    fn block(&self, x: &Mat, bw: &BlockWeights, cfg: &Config) -> Mat {
+        let (s_len, d) = (x.rows, x.cols);
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+
+        // attention over pre-norm
+        let mut xn = Mat::zeros(s_len, d);
+        for i in 0..s_len {
+            rmsnorm(x.row(i), &bw.norm_attn, xn.row_mut(i));
+        }
+        let mut q = self.linear(&bw.wq, &xn);
+        let mut k = self.linear(&bw.wk, &xn);
+        let v = self.linear(&bw.wv, &xn);
+        apply_rope_seq(&mut q, h, hd);
+        apply_rope_seq(&mut k, h, hd);
+
+        let mut ctx = Mat::zeros(s_len, d);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut att = vec![0.0f32; s_len];
+        for head in 0..h {
+            let off = head * hd;
+            for i in 0..s_len {
+                let qi = &q.row(i)[off..off + hd];
+                for j in 0..=i {
+                    att[j] = dot(qi, &k.row(j)[off..off + hd]) * scale;
+                }
+                softmax_inplace(&mut att[..=i]);
+                let out = &mut ctx.row_mut(i)[off..off + hd];
+                for j in 0..=i {
+                    let vj = &v.row(j)[off..off + hd];
+                    let p = att[j];
+                    for t in 0..hd {
+                        out[t] += p * vj[t];
+                    }
+                }
+            }
+        }
+        let att_out = self.linear(&bw.wo, &ctx);
+        let mut x1 = x.clone();
+        for i in 0..x1.data.len() {
+            x1.data[i] += att_out.data[i];
+        }
+
+        // MLP over pre-norm
+        let mut xn2 = Mat::zeros(s_len, d);
+        for i in 0..s_len {
+            rmsnorm(x1.row(i), &bw.norm_mlp, xn2.row_mut(i));
+        }
+        let gate = self.linear(&bw.w_gate, &xn2);
+        let up = self.linear(&bw.w_up, &xn2);
+        let mut hmat = Mat::zeros(s_len, cfg.d_ff);
+        for i in 0..hmat.data.len() {
+            hmat.data[i] = silu(gate.data[i]) * up.data[i];
+        }
+        let down = self.linear(&bw.w_down, &hmat);
+        for i in 0..x1.data.len() {
+            x1.data[i] += down.data[i];
+        }
+        x1
+    }
+
+    /// Mean next-token NLL (nats) over a token window.
+    pub fn nll(&self, tokens: &[u8]) -> f64 {
+        assert!(tokens.len() >= 2);
+        let logits = self.logits(&tokens[..tokens.len() - 1]);
+        let mut total = 0.0f64;
+        for i in 0..logits.rows {
+            let lp = log_softmax(logits.row(i));
+            total -= lp[tokens[i + 1] as usize] as f64;
+        }
+        total / logits.rows as f64
+    }
+
+    /// Sum log-likelihood of `continuation` given `context` (LM-Eval
+    /// style continuation scoring; length-normalized by the caller).
+    pub fn continuation_loglik(&self, context: &[u8], continuation: &[u8]) -> f64 {
+        let mut full = context.to_vec();
+        full.extend_from_slice(continuation);
+        let logits = self.logits(&full[..full.len() - 1]);
+        let mut ll = 0.0f64;
+        let start = context.len() - 1; // logits[i] predicts full[i+1]
+        for i in start..logits.rows {
+            let lp = log_softmax(logits.row(i));
+            ll += lp[full[i + 1] as usize] as f64;
+        }
+        ll
+    }
+
+    /// Capture the inputs seen by every linear of every block on a
+    /// calibration sequence — the data GPTQ's Hessians are built from.
+    /// Returns per block: (attn_in [S,D], attn_ctx [S,D], mlp_in [S,D],
+    /// mlp_hidden [S,F]).
+    pub fn capture_linear_inputs(&self, tokens: &[u8]) -> Vec<(Mat, Mat, Mat, Mat)> {
+        let cfg = &self.model.config;
+        let s_len = tokens.len();
+        let d = cfg.d_model;
+        let mut x = Mat::zeros(s_len, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.model.embed.row(t as usize));
+        }
+        let mut captures = Vec::with_capacity(self.model.blocks.len());
+        for bw in &self.model.blocks {
+            let mut xn = Mat::zeros(s_len, d);
+            for i in 0..s_len {
+                rmsnorm(x.row(i), &bw.norm_attn, xn.row_mut(i));
+            }
+            // attention context (input to wo)
+            let ctx = {
+                let (h, hd) = (cfg.n_heads, cfg.head_dim());
+                let mut q = self.linear(&bw.wq, &xn);
+                let mut k = self.linear(&bw.wk, &xn);
+                let v = self.linear(&bw.wv, &xn);
+                apply_rope_seq(&mut q, h, hd);
+                apply_rope_seq(&mut k, h, hd);
+                let mut ctx = Mat::zeros(s_len, d);
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut att = vec![0.0f32; s_len];
+                for head in 0..h {
+                    let off = head * hd;
+                    for i in 0..s_len {
+                        let qi = &q.row(i)[off..off + hd];
+                        for j in 0..=i {
+                            att[j] = dot(qi, &k.row(j)[off..off + hd]) * scale;
+                        }
+                        softmax_inplace(&mut att[..=i]);
+                        let out = &mut ctx.row_mut(i)[off..off + hd];
+                        for j in 0..=i {
+                            let vj = &v.row(j)[off..off + hd];
+                            let p = att[j];
+                            for t in 0..hd {
+                                out[t] += p * vj[t];
+                            }
+                        }
+                    }
+                }
+                ctx
+            };
+            let att_out = self.linear(&bw.wo, &ctx);
+            let mut x1 = x.clone();
+            for i in 0..x1.data.len() {
+                x1.data[i] += att_out.data[i];
+            }
+            let mut xn2 = Mat::zeros(s_len, d);
+            for i in 0..s_len {
+                rmsnorm(x1.row(i), &bw.norm_mlp, xn2.row_mut(i));
+            }
+            let gate = self.linear(&bw.w_gate, &xn2);
+            let up = self.linear(&bw.w_up, &xn2);
+            let mut hmat = Mat::zeros(s_len, cfg.d_ff);
+            for i in 0..hmat.data.len() {
+                hmat.data[i] = silu(gate.data[i]) * up.data[i];
+            }
+            let down = self.linear(&bw.w_down, &hmat);
+            for i in 0..x1.data.len() {
+                x1.data[i] += down.data[i];
+            }
+            captures.push((xn, ctx, xn2, hmat));
+            x = x1;
+        }
+        captures
+    }
+
+    /// Record the max-|activation| entering each block's w_down — the
+    /// probe the super-weight detector uses (Yu et al. 2024).
+    pub fn down_proj_activation_maxima(&self, tokens: &[u8]) -> Vec<f32> {
+        let cfg = &self.model.config;
+        let s_len = tokens.len();
+        let d = cfg.d_model;
+        let mut x = Mat::zeros(s_len, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.model.embed.row(t as usize));
+        }
+        let mut maxima = Vec::with_capacity(self.model.blocks.len());
+        for bw in &self.model.blocks {
+            // replicate block() but capture the MLP hidden magnitude
+            let x_next = self.block(&x, bw, cfg);
+            let mut xn2 = Mat::zeros(s_len, d);
+            // recompute the attention half to get the mlp input
+            let att_delta = {
+                let mut tmp = self.block_attention_only(&x, bw, cfg);
+                for i in 0..tmp.data.len() {
+                    tmp.data[i] += x.data[i];
+                }
+                tmp
+            };
+            for i in 0..s_len {
+                rmsnorm(att_delta.row(i), &bw.norm_mlp, xn2.row_mut(i));
+            }
+            let gate = self.linear(&bw.w_gate, &xn2);
+            let up = self.linear(&bw.w_up, &xn2);
+            let mut m = 0.0f32;
+            for i in 0..gate.data.len() {
+                m = m.max((silu(gate.data[i]) * up.data[i]).abs());
+            }
+            maxima.push(m);
+            x = x_next;
+        }
+        maxima
+    }
+
+    fn block_attention_only(&self, x: &Mat, bw: &BlockWeights, cfg: &Config) -> Mat {
+        let (s_len, d) = (x.rows, x.cols);
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let mut xn = Mat::zeros(s_len, d);
+        for i in 0..s_len {
+            rmsnorm(x.row(i), &bw.norm_attn, xn.row_mut(i));
+        }
+        let mut q = self.linear(&bw.wq, &xn);
+        let mut k = self.linear(&bw.wk, &xn);
+        let v = self.linear(&bw.wv, &xn);
+        apply_rope_seq(&mut q, h, hd);
+        apply_rope_seq(&mut k, h, hd);
+        let mut ctx = Mat::zeros(s_len, d);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut att = vec![0.0f32; s_len];
+        for head in 0..h {
+            let off = head * hd;
+            for i in 0..s_len {
+                let qi = &q.row(i)[off..off + hd];
+                for j in 0..=i {
+                    att[j] = dot(qi, &k.row(j)[off..off + hd]) * scale;
+                }
+                softmax_inplace(&mut att[..=i]);
+                let out = &mut ctx.row_mut(i)[off..off + hd];
+                for j in 0..=i {
+                    let vj = &v.row(j)[off..off + hd];
+                    let p = att[j];
+                    for t in 0..hd {
+                        out[t] += p * vj[t];
+                    }
+                }
+            }
+        }
+        self.linear(&bw.wo, &ctx)
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// RoPE over a [S, D] activation, heads laid out contiguously.
+/// Matches python: x1/x2 = halves of each head's dims; theta = pos *
+/// 10000^(-j/(hd/2)).
+fn apply_rope_seq(x: &mut Mat, n_heads: usize, hd: usize) {
+    let half = hd / 2;
+    for pos in 0..x.rows {
+        let row = x.row_mut(pos);
+        for h in 0..n_heads {
+            let off = h * hd;
+            for j in 0..half {
+                let freq = 10000f32.powf(-(j as f32) / half as f32);
+                let theta = pos as f32 * freq;
+                let (sin, cos) = theta.sin_cos();
+                let a = row[off + j];
+                let b = row[off + half + j];
+                row[off + j] = a * cos - b * sin;
+                row[off + half + j] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loader::synthetic_model;
+    use crate::model::Config;
+
+    fn tiny() -> Model {
+        synthetic_model(
+            Config { name: "T".into(), vocab: 48, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_ctx: 32 },
+            7,
+        )
+    }
+
+    #[test]
+    fn logits_shape_and_finite() {
+        let m = tiny();
+        let f = Forward::new(&m);
+        let logits = f.logits(&[1, 2, 3, 4, 5]);
+        assert_eq!(logits.rows, 5);
+        assert_eq!(logits.cols, 48);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_holds() {
+        let m = tiny();
+        let f = Forward::new(&m);
+        let l1 = f.logits(&[1, 2, 3, 4, 5]);
+        let l2 = f.logits(&[1, 2, 3, 9, 9]);
+        for i in 0..3 {
+            for j in 0..48 {
+                assert!((l1.at(i, j) - l2.at(i, j)).abs() < 1e-5, "pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nll_near_uniform_at_random_init() {
+        let m = tiny();
+        let f = Forward::new(&m);
+        let toks: Vec<u8> = (0..20).map(|i| (i * 7 % 48) as u8).collect();
+        let nll = f.nll(&toks);
+        assert!((nll - (48f64).ln()).abs() < 1.5, "{nll}");
+    }
+
+    #[test]
+    fn continuation_loglik_additive() {
+        let m = tiny();
+        let f = Forward::new(&m);
+        let ctx = [1u8, 2, 3];
+        let cont = [4u8, 5];
+        let ll = f.continuation_loglik(&ctx, &cont);
+        assert!(ll < 0.0);
+        // scoring a 1-token continuation twice = scoring 2 tokens once
+        let ll1 = f.continuation_loglik(&ctx, &[4]);
+        let ll2 = f.continuation_loglik(&[1, 2, 3, 4], &[5]);
+        assert!((ll - (ll1 + ll2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn act_quant_small_perturbation() {
+        let m = tiny();
+        let f = Forward::new(&m);
+        let fq = Forward::with_act_quant(&m, ActQuant::Dynamic(Format::F8E4M3));
+        let toks = [1u8, 5, 9, 13];
+        let l = f.logits(&toks);
+        let lq = fq.logits(&toks);
+        let mut max_rel = 0.0f32;
+        let spread = l.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for i in 0..l.data.len() {
+            max_rel = max_rel.max((l.data[i] - lq.data[i]).abs() / spread);
+        }
+        assert!(max_rel > 0.0, "activation quant must change something");
+        assert!(max_rel < 0.25, "but not catastrophically: {max_rel}");
+    }
+
+    #[test]
+    fn matches_python_fixture_if_present() {
+        let art = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let fix_path = format!("{art}/fixtures/model_fwd.json");
+        let model_path = format!("{art}/model_S.eqw");
+        if !std::path::Path::new(&fix_path).exists() {
+            eprintln!("fixture missing; run `make artifacts` (skipping)");
+            return;
+        }
+        let m = crate::model::load_eqw(&model_path).unwrap();
+        let fix = crate::store::json::parse(&std::fs::read_to_string(&fix_path).unwrap()).unwrap();
+        let tokens_rows = fix.get("tokens").unwrap().as_array().unwrap();
+        let want = fix.get("logits_sample").unwrap().as_array().unwrap();
+        let f = Forward::new(&m);
+        for (bi, row) in tokens_rows.iter().enumerate() {
+            let toks: Vec<u8> = row.f64_array().unwrap().iter().map(|&x| x as u8).collect();
+            let logits = f.logits(&toks);
+            let want_row = want[bi].f64_array().unwrap();
+            for j in 0..want_row.len() {
+                let got = logits.at(logits.rows - 1, j);
+                assert!(
+                    (got - want_row[j] as f32).abs() < 2e-2 * want_row[j].abs().max(1.0) as f32,
+                    "batch {bi} logit {j}: {got} vs {}",
+                    want_row[j]
+                );
+            }
+        }
+    }
+}

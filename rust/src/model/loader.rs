@@ -1,0 +1,259 @@
+//! .eqw checkpoint loader — the rust half of python/compile/eqw_io.py.
+//!
+//! Layout: b"EQW1" | u32 header_len | JSON header | raw f32 data.
+
+use super::{BlockWeights, Config, Model};
+use crate::store::json;
+use crate::tensor::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+pub fn load_eqw(path: &str) -> Result<Model> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse_eqw(&bytes).with_context(|| format!("parsing {path}"))
+}
+
+pub fn parse_eqw(bytes: &[u8]) -> Result<Model> {
+    if bytes.len() < 8 || &bytes[..4] != b"EQW1" {
+        bail!("bad .eqw magic");
+    }
+    let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    if bytes.len() < 8 + hlen {
+        bail!(".eqw truncated header");
+    }
+    let header = json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)
+        .map_err(|e| anyhow!("header json: {e}"))?;
+    let data = &bytes[8 + hlen..];
+
+    let config = Config::from_json(header.get("config").ok_or(anyhow!("no config"))?)
+        .map_err(|e| anyhow!(e))?;
+
+    let mut tensors: HashMap<String, Mat> = HashMap::new();
+    for rec in header.get("tensors").and_then(|t| t.as_array()).ok_or(anyhow!("no tensors"))? {
+        let name = rec.get("name").and_then(|v| v.as_str()).ok_or(anyhow!("tensor name"))?;
+        let shape: Vec<usize> = rec
+            .get("shape")
+            .and_then(|v| v.f64_array())
+            .ok_or(anyhow!("tensor shape"))?
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let offset = rec.get("offset").and_then(|v| v.as_usize()).ok_or(anyhow!("offset"))?;
+        let nbytes = rec.get("nbytes").and_then(|v| v.as_usize()).ok_or(anyhow!("nbytes"))?;
+        if offset + nbytes > data.len() {
+            bail!("tensor {name} out of bounds");
+        }
+        let n = nbytes / 4;
+        let mut vals = Vec::with_capacity(n);
+        for i in 0..n {
+            let o = offset + 4 * i;
+            vals.push(f32::from_le_bytes(data[o..o + 4].try_into().unwrap()));
+        }
+        let (rows, cols) = match shape.len() {
+            1 => (1, shape[0]),
+            2 => (shape[0], shape[1]),
+            _ => bail!("unsupported rank for {name}"),
+        };
+        tensors.insert(name.to_string(), Mat::from_vec(rows, cols, vals));
+    }
+
+    let take_mat = |t: &mut HashMap<String, Mat>, name: &str| -> Result<Mat> {
+        t.remove(name).ok_or(anyhow!("missing tensor {name}"))
+    };
+    let take_vec = |t: &mut HashMap<String, Mat>, name: &str| -> Result<Vec<f32>> {
+        Ok(take_mat(t, name)?.data)
+    };
+
+    let mut t = tensors;
+    let embed = take_mat(&mut t, "embed")?;
+    let mut blocks = Vec::with_capacity(config.n_layers);
+    for i in 0..config.n_layers {
+        let p = |f: &str| format!("blocks.{i}.{f}");
+        blocks.push(BlockWeights {
+            wq: take_mat(&mut t, &p("wq"))?,
+            wk: take_mat(&mut t, &p("wk"))?,
+            wv: take_mat(&mut t, &p("wv"))?,
+            wo: take_mat(&mut t, &p("wo"))?,
+            w_gate: take_mat(&mut t, &p("w_gate"))?,
+            w_up: take_mat(&mut t, &p("w_up"))?,
+            w_down: take_mat(&mut t, &p("w_down"))?,
+            norm_attn: take_vec(&mut t, &p("norm_attn"))?,
+            norm_mlp: take_vec(&mut t, &p("norm_mlp"))?,
+        });
+    }
+    let norm_final = take_vec(&mut t, "norm_final")?;
+    let head = take_mat(&mut t, "head")?;
+
+    // sanity: shapes must agree with the config
+    let (d, f, v) = (config.d_model, config.d_ff, config.vocab);
+    if embed.rows != v || embed.cols != d {
+        bail!("embed shape {}x{} != {v}x{d}", embed.rows, embed.cols);
+    }
+    for (i, b) in blocks.iter().enumerate() {
+        if b.wq.rows != d || b.wq.cols != d || b.w_gate.rows != f || b.w_down.cols != f {
+            bail!("block {i} shapes inconsistent with config");
+        }
+    }
+
+    Ok(Model { config, embed, blocks, norm_final, head })
+}
+
+/// Write a Model back to .eqw (used by tests and the synthetic-model
+/// generators in the bench harness).
+pub fn write_eqw(path: &str, model: &Model) -> Result<()> {
+    use json::{arr, num, obj, s, Value};
+
+    let mut records: Vec<Value> = Vec::new();
+    let mut blob: Vec<u8> = Vec::new();
+    let push = |records: &mut Vec<Value>, blob: &mut Vec<u8>, name: &str, m: &Mat, rank1: bool| {
+        while blob.len() % 16 != 0 {
+            blob.push(0);
+        }
+        let offset = blob.len();
+        for &v in &m.data {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+        let shape = if rank1 {
+            arr(vec![num(m.cols as f64)])
+        } else {
+            arr(vec![num(m.rows as f64), num(m.cols as f64)])
+        };
+        records.push(obj(vec![
+            ("name", s(name)),
+            ("shape", shape),
+            ("dtype", s("f32")),
+            ("offset", num(offset as f64)),
+            ("nbytes", num((m.data.len() * 4) as f64)),
+        ]));
+    };
+
+    push(&mut records, &mut blob, "embed", &model.embed, false);
+    for (i, b) in model.blocks.iter().enumerate() {
+        for name in super::BLOCK_LINEARS {
+            push(&mut records, &mut blob, &format!("blocks.{i}.{name}"), b.linear(name), false);
+        }
+        let na = Mat::from_vec(1, b.norm_attn.len(), b.norm_attn.clone());
+        let nm = Mat::from_vec(1, b.norm_mlp.len(), b.norm_mlp.clone());
+        push(&mut records, &mut blob, &format!("blocks.{i}.norm_attn"), &na, true);
+        push(&mut records, &mut blob, &format!("blocks.{i}.norm_mlp"), &nm, true);
+    }
+    let nf = Mat::from_vec(1, model.norm_final.len(), model.norm_final.clone());
+    push(&mut records, &mut blob, "norm_final", &nf, true);
+    push(&mut records, &mut blob, "head", &model.head, false);
+
+    let cfg = obj(vec![
+        ("name", s(&model.config.name)),
+        ("vocab", num(model.config.vocab as f64)),
+        ("d_model", num(model.config.d_model as f64)),
+        ("n_layers", num(model.config.n_layers as f64)),
+        ("n_heads", num(model.config.n_heads as f64)),
+        ("d_ff", num(model.config.d_ff as f64)),
+        ("max_ctx", num(model.config.max_ctx as f64)),
+    ]);
+    let header = json::write(&obj(vec![
+        ("config", cfg),
+        ("tensors", Value::Array(records)),
+        ("meta", obj(vec![])),
+    ]));
+    let mut out = Vec::with_capacity(8 + header.len() + blob.len());
+    out.extend_from_slice(b"EQW1");
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&blob);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Generate a small random model (tests / ablations without artifacts).
+pub fn synthetic_model(config: Config, seed: u64) -> Model {
+    use crate::tensor::Rng;
+    let mut rng = Rng::new(seed);
+    let (d, f, v) = (config.d_model, config.d_ff, config.vocab);
+    let mut dense = |rows: usize, cols: usize| {
+        let std = 1.0 / (cols as f64).sqrt();
+        Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.normal() * std * (rng.normal() * 0.5).exp()) as f32)
+                .collect(),
+        )
+    };
+    let blocks = (0..config.n_layers)
+        .map(|_| BlockWeights {
+            wq: dense(d, d),
+            wk: dense(d, d),
+            wv: dense(d, d),
+            wo: dense(d, d),
+            w_gate: dense(f, d),
+            w_up: dense(f, d),
+            w_down: dense(d, f),
+            norm_attn: vec![1.0; d],
+            norm_mlp: vec![1.0; d],
+        })
+        .collect();
+    let embed = dense(v, d);
+    let head = dense(v, d);
+    Model { config, embed, blocks, norm_final: vec![1.0; d], head }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> Config {
+        Config {
+            name: "T".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_ctx: 16,
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = synthetic_model(tiny_config(), 1);
+        let path = std::env::temp_dir().join("eq_test_roundtrip.eqw");
+        write_eqw(path.to_str().unwrap(), &m).unwrap();
+        let m2 = load_eqw(path.to_str().unwrap()).unwrap();
+        assert_eq!(m2.config, m.config);
+        assert_eq!(m2.embed, m.embed);
+        assert_eq!(m2.blocks[1].w_down, m.blocks[1].w_down);
+        assert_eq!(m2.norm_final, m.norm_final);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_eqw(b"NOPE....").is_err());
+        assert!(parse_eqw(b"EQ").is_err());
+    }
+
+    #[test]
+    fn loads_trained_checkpoint_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/model_S.eqw");
+        if !std::path::Path::new(path).exists() {
+            eprintln!("checkpoint missing; run `make artifacts` (skipping)");
+            return;
+        }
+        let m = load_eqw(path).unwrap();
+        assert_eq!(m.config.name, "S");
+        assert_eq!(m.config.d_model, 128);
+        assert_eq!(m.blocks.len(), 4);
+        assert_eq!(m.embed.rows, 256);
+        // trained weights should not be all-zero / constant
+        assert!(m.blocks[0].wq.abs_max() > 0.01);
+    }
+
+    #[test]
+    fn linear_params_accounting() {
+        let m = synthetic_model(tiny_config(), 2);
+        let d = 16usize;
+        let f = 24usize;
+        let want = 2 * (4 * d * d + 3 * d * f);
+        assert_eq!(m.linear_params(), want);
+    }
+}

@@ -1,0 +1,193 @@
+//! The transformer substrate: model config, .eqw checkpoint loader, and
+//! the f32 reference forward pass (RMSNorm + RoPE + causal MHA + SwiGLU)
+//! — numerically equivalent to python/compile/model.py (cross-checked
+//! against artifacts/fixtures/model_fwd.json).
+//!
+//! The reference forward drives offline evaluation (perplexity, zero-shot
+//! suites) for all model sizes and all quantization baselines; the
+//! serving path runs through PJRT artifacts instead (see `runtime`).
+
+pub mod forward;
+pub mod loader;
+
+pub use forward::{ActQuant, Forward};
+pub use loader::load_eqw;
+
+use crate::quant::Format;
+use crate::store::json::Value;
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_ctx: usize,
+}
+
+impl Config {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, String> {
+        let get = |k: &str| -> Result<usize, String> {
+            v.get(k).and_then(|x| x.as_usize()).ok_or(format!("config missing {k}"))
+        };
+        Ok(Config {
+            name: v.get("name").and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            max_ctx: get("max_ctx")?,
+        })
+    }
+
+    /// Parameter count (matches python ModelConfig.params()).
+    pub fn params(&self) -> usize {
+        let (d, f) = (self.d_model, self.d_ff);
+        let per_block = 4 * d * d + 3 * d * f + 2 * d;
+        self.vocab * d * 2 + self.n_layers * per_block + d
+    }
+}
+
+/// Canonical names of the 7 quantized linears per block — the
+/// serialization order shared with python (configs.BLOCK_LINEARS).
+pub const BLOCK_LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+#[derive(Clone)]
+pub struct BlockWeights {
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub w_gate: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
+    pub norm_attn: Vec<f32>,
+    pub norm_mlp: Vec<f32>,
+}
+
+impl BlockWeights {
+    pub fn linear(&self, name: &str) -> &Mat {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "w_gate" => &self.w_gate,
+            "w_up" => &self.w_up,
+            "w_down" => &self.w_down,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+
+    pub fn linear_mut(&mut self, name: &str) -> &mut Mat {
+        match name {
+            "wq" => &mut self.wq,
+            "wk" => &mut self.wk,
+            "wv" => &mut self.wv,
+            "wo" => &mut self.wo,
+            "w_gate" => &mut self.w_gate,
+            "w_up" => &mut self.w_up,
+            "w_down" => &mut self.w_down,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Model {
+    pub config: Config,
+    pub embed: Mat,
+    pub blocks: Vec<BlockWeights>,
+    pub norm_final: Vec<f32>,
+    pub head: Mat,
+}
+
+impl Model {
+    /// Storage footprint of the *quantizable* linears in parameters
+    /// (the denominator of every effective-bits-per-parameter figure).
+    pub fn linear_params(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| BLOCK_LINEARS.iter().map(move |n| b.linear(n).data.len()))
+            .sum()
+    }
+
+    /// Apply a per-layer transform to every quantizable linear.
+    pub fn map_linears<F>(&mut self, mut f: F)
+    where
+        F: FnMut(usize, &str, &mut Mat),
+    {
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            for name in BLOCK_LINEARS {
+                f(i, name, b.linear_mut(name));
+            }
+        }
+    }
+
+    /// Total bytes of a BF16 baseline (2 bytes/param, all tensors).
+    pub fn bf16_bytes(&self) -> usize {
+        2 * self.config.params()
+    }
+}
+
+/// A model whose linears have been replaced by quantized versions —
+/// the offline-eval twin of the served compressed model.
+#[derive(Clone)]
+pub struct QModel {
+    pub config: Config,
+    pub embed: Mat,
+    pub blocks: Vec<QBlock>,
+    pub norm_final: Vec<f32>,
+    pub head: Mat,
+}
+
+#[derive(Clone)]
+pub struct QBlock {
+    pub linears: Vec<crate::quant::QMat>, // order: BLOCK_LINEARS
+    pub norm_attn: Vec<f32>,
+    pub norm_mlp: Vec<f32>,
+}
+
+impl QModel {
+    /// Materialize the dequantized f32 model (offline eval path; the
+    /// serving path never materializes full weights, see coordinator).
+    pub fn dequantize(&self) -> Model {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|qb| {
+                let d = |i: usize| qb.linears[i].dequantize();
+                BlockWeights {
+                    wq: d(0),
+                    wk: d(1),
+                    wv: d(2),
+                    wo: d(3),
+                    w_gate: d(4),
+                    w_up: d(5),
+                    w_down: d(6),
+                    norm_attn: qb.norm_attn.clone(),
+                    norm_mlp: qb.norm_mlp.clone(),
+                }
+            })
+            .collect();
+        Model {
+            config: self.config.clone(),
+            embed: self.embed.clone(),
+            blocks,
+            norm_final: self.norm_final.clone(),
+            head: self.head.clone(),
+        }
+    }
+
+    pub fn fmt(&self) -> Format {
+        self.blocks[0].linears[0].fmt
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal BFloat16 codec — the storage format of the channel scales
+//! (paper §2.2: "the storage overhead of the high-precision (BFloat16)
+//! scales is negligible").  Scales are rounded to BF16 *before* the
+//! final quantization pass so the stored scales are bit-exact with the
+//! ones the codes were produced under.
+
+/// Round f32 to the nearest BF16 (round-to-nearest-even on the dropped
+/// 16 mantissa bits) and return the f32 the stored BF16 decodes to.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    decode(encode(x))
+}
+
+/// f32 -> bf16 bits (RNE).
+#[inline]
+pub fn encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // RNE: add 0x7FFF + lsb of the kept part
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    if x.is_nan() {
+        return 0x7FC0; // canonical NaN
+    }
+    (rounded >> 16) as u16
+}
+
+/// bf16 bits -> f32.
+#[inline]
+pub fn decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_bf16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn exact_on_bf16_grid() {
+        for b in [0u16, 0x3F80 /*1.0*/, 0xBF80 /*-1.0*/, 0x4000 /*2.0*/] {
+            let v = decode(b);
+            assert_eq!(encode(v), b);
+            assert_eq!(round_bf16(v), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let x = (rng.normal() * (rng.normal() * 4.0).exp()) as f32;
+            if x == 0.0 {
+                continue;
+            }
+            let r = round_bf16(x);
+            // bf16 has 8 mantissa bits -> rel err <= 2^-8
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0 + 1e-7, "{x} -> {r}");
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1 + 2^-8 is exactly between 1.0 and the next bf16; RNE keeps even
+        let x = f32::from_bits(0x3F80_8000);
+        let r = round_bf16(x);
+        assert_eq!(r, 1.0, "{r}");
+        // and the next tie rounds up to even
+        let y = f32::from_bits(0x3F81_8000);
+        assert_eq!(encode(y), 0x3F82);
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(round_bf16(0.0), 0.0);
+        assert_eq!(round_bf16(-0.0), -0.0);
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert_eq!(round_bf16(f32::INFINITY), f32::INFINITY);
+    }
+}

@@ -1,0 +1,222 @@
+//! From-scratch Float8 E4M3FN codec (the paper's default base format).
+//!
+//! Layout: 1 sign / 4 exponent (bias 7) / 3 mantissa.  "FN" = finite +
+//! NaN only: there are no infinities; `S.1111.111` is NaN and the
+//! largest finite magnitude is `S.1111.110` = 448.  Denormals use
+//! absolute spacing 2^-9 — this uniform bottom region is what makes the
+//! EntQuant entropy optimization work: large scales park most weights on
+//! a handful of denormal levels (+ zero) while outliers keep the full
+//! log-range.  Signed zero is resolved to +0 on encode (paper §A.1).
+
+/// NaN byte pattern (positive variant).
+pub const NAN_BYTE: u8 = 0x7F;
+/// Largest finite magnitude.
+pub const F8_MAX: f32 = 448.0;
+
+/// Decode one e4m3fn byte to f32.  NaN patterns map to f32::NAN.
+#[inline]
+pub fn decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = (b >> 3) & 0xF;
+    let m = (b & 7) as f32;
+    if e == 15 && b & 7 == 7 {
+        return f32::NAN;
+    }
+    let mag = if e == 0 {
+        // denormal: m * 2^-9
+        m * (1.0 / 512.0)
+    } else {
+        // normal: (8 + m) * 2^(e - 10)
+        (8.0 + m) * 2.0f32.powi(e as i32 - 10)
+    };
+    sign * mag
+}
+
+/// The 121 distinct non-negative finite values, ascending (0x00..=0x7E).
+fn positive_grid() -> &'static [f32; 127] {
+    use std::sync::OnceLock;
+    static GRID: OnceLock<[f32; 127]> = OnceLock::new();
+    GRID.get_or_init(|| {
+        let mut g = [0.0f32; 127];
+        for (i, slot) in g.iter_mut().enumerate() {
+            *slot = decode(i as u8);
+        }
+        g
+    })
+}
+
+/// Encode f32 to the nearest e4m3fn byte: round-to-nearest-even in value
+/// space, saturating at +-448, signed zero resolved to +0, NaN -> 0x7F.
+pub fn encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return NAN_BYTE;
+    }
+    let neg = x < 0.0;
+    let a = x.abs().min(F8_MAX);
+    let grid = positive_grid();
+    // binary search for the first grid value >= a
+    let mut lo = 0usize;
+    let mut hi = 126usize;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if grid[mid] < a {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    let code = if lo == 0 {
+        0
+    } else {
+        let below = grid[lo - 1];
+        let above = grid[lo];
+        let d_lo = a - below;
+        let d_hi = above - a;
+        if d_lo < d_hi {
+            lo - 1
+        } else if d_hi < d_lo {
+            lo
+        } else {
+            // tie: pick even mantissa (round-to-nearest-even)
+            if (lo - 1) & 1 == 0 {
+                lo - 1
+            } else {
+                lo
+            }
+        }
+    } as u8;
+    if code == 0 {
+        0 // resolve signed zero
+    } else if neg {
+        code | 0x80
+    } else {
+        code
+    }
+}
+
+/// Quantize-dequantize onto the f8 grid (the rust-native `round_f8`).
+#[inline]
+pub fn round_f8(x: f32) -> f32 {
+    decode(encode(x))
+}
+
+/// All finite representable values, including negatives (for tests and
+/// the unique-value accounting of Table 1).
+pub fn finite_values() -> Vec<f32> {
+    (0u16..=255)
+        .map(|b| decode(b as u8))
+        .filter(|v| v.is_finite())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_monotone_ascending() {
+        let g = positive_grid();
+        for i in 1..127 {
+            assert!(g[i] > g[i - 1], "grid not strictly ascending at {i}");
+        }
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[126], 448.0);
+    }
+
+    #[test]
+    fn denormal_spacing_is_uniform() {
+        for m in 0..8u8 {
+            assert_eq!(decode(m), m as f32 / 512.0);
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_finite_byte() {
+        for b in 0u16..=255 {
+            let b = b as u8;
+            let v = decode(b);
+            if v.is_nan() {
+                continue;
+            }
+            let b2 = encode(v);
+            // signed zero is resolved: -0 encodes as +0
+            if b == 0x80 {
+                assert_eq!(b2, 0x00);
+            } else {
+                assert_eq!(b2, b, "byte {b:#x} value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_beyond_max() {
+        assert_eq!(decode(encode(1e9)), 448.0);
+        assert_eq!(decode(encode(-1e9)), -448.0);
+        assert_eq!(decode(encode(500.0)), 448.0);
+    }
+
+    #[test]
+    fn nan_handling() {
+        assert_eq!(encode(f32::NAN), NAN_BYTE);
+        assert!(decode(NAN_BYTE).is_nan());
+        assert!(decode(0xFF).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even_at_ties() {
+        // between 8+m spacing: e.g. between 16 (0b0_1011_000 -> 16) and 18:
+        // values 16,18,20,... step 2 in [16,32) binade; tie at 17 -> 16 (even mantissa)
+        assert_eq!(round_f8(17.0), 16.0);
+        // tie at 19 -> 20 (mantissa 1 is odd, next is 2 even)
+        assert_eq!(round_f8(19.0), 20.0);
+    }
+
+    #[test]
+    fn nearest_not_floor() {
+        // 15.9 is closer to 16 than to 15
+        assert_eq!(round_f8(15.9), 16.0);
+        assert_eq!(round_f8(15.4), 15.0);
+    }
+
+    #[test]
+    fn signed_zero_resolved() {
+        assert_eq!(encode(-0.0), 0u8);
+        assert_eq!(encode(0.0), 0u8);
+    }
+
+    #[test]
+    fn matches_mldtypes_grid_fixture() {
+        // artifacts/fixtures/f8_grid.json is ml_dtypes' float8_e4m3fn view
+        // of all byte patterns — the authoritative oracle.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/fixtures/f8_grid.json");
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("fixture missing; run `make artifacts` (skipping)");
+            return;
+        };
+        let vals = crate::store::json::parse(&text).unwrap();
+        let arr = vals.as_array().unwrap();
+        assert_eq!(arr.len(), 256);
+        for (b, v) in arr.iter().enumerate() {
+            let got = decode(b as u8);
+            match v.as_f64() {
+                None => assert!(got.is_nan(), "byte {b} should be NaN"),
+                Some(want) => {
+                    assert_eq!(got, want as f32, "byte {b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unique_finite_value_count() {
+        use std::collections::BTreeSet;
+        let set: BTreeSet<u32> = finite_values().iter().map(|v| v.to_bits()).collect();
+        // 254 finite byte patterns, two zeros collapse to... two distinct
+        // bit patterns (+0/-0) but equal values; count distinct values:
+        let mut vals: Vec<f32> = finite_values();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert_eq!(vals.len(), 253); // 126 pos + 126 neg + zero
+        assert!(set.len() >= 253);
+    }
+}

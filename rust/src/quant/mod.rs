@@ -1,0 +1,9 @@
+//! Quantization substrate: the Float8 E4M3 codec, the symmetric
+//! channel-wise quantizer over Float8/Int8, and super-weight detection.
+
+pub mod bf16;
+pub mod f8e4m3;
+pub mod superweight;
+pub mod symmetric;
+
+pub use symmetric::{absmax_scales, quantize, rel_l1_distortion, Format, QMat};

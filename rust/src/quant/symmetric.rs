@@ -1,0 +1,288 @@
+//! Symmetric channel-wise quantizer (paper §2.1) over the Float8/Int8
+//! base formats:  W_q = clamp(round_gamma(W / s), -Qmax, Qmax),
+//! dequant  What = s * W_q,  one scale per output channel (matrix row).
+
+use super::f8e4m3;
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    F8E4M3,
+    Int8,
+}
+
+impl Format {
+    pub fn qmax(self) -> f32 {
+        match self {
+            Format::F8E4M3 => f8e4m3::F8_MAX,
+            Format::Int8 => 127.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::F8E4M3 => "f8e4m3",
+            Format::Int8 => "int8",
+        }
+    }
+
+    /// Round one already-scaled value onto the format grid (no clamp —
+    /// callers clamp first; encode saturates anyway for f8).
+    #[inline]
+    pub fn round(self, u: f32) -> f32 {
+        match self {
+            Format::F8E4M3 => f8e4m3::round_f8(u),
+            Format::Int8 => {
+                let r = u.abs().floor() + if u.abs().fract() >= 0.5 { 1.0 } else { 0.0 };
+                (r.min(127.0)) * u.signum()
+            }
+        }
+    }
+
+    /// Quantize one value: returns (symbol byte, grid value).
+    /// Symbols are the byte alphabet fed to the ANS coder:
+    ///  * f8: the e4m3fn byte itself
+    ///  * i8: the two's-complement byte of the integer code
+    #[inline]
+    pub fn quantize(self, w: f32, scale: f32) -> (u8, f32) {
+        if scale == 0.0 {
+            return (0, 0.0);
+        }
+        let u = (w / scale).clamp(-self.qmax(), self.qmax());
+        match self {
+            Format::F8E4M3 => {
+                let b = f8e4m3::encode(u);
+                (b, f8e4m3::decode(b))
+            }
+            Format::Int8 => {
+                let q = self.round(u);
+                ((q as i32 as i8) as u8, q)
+            }
+        }
+    }
+
+    /// Symbol byte -> grid value.
+    #[inline]
+    pub fn symbol_value(self, b: u8) -> f32 {
+        match self {
+            Format::F8E4M3 => {
+                let v = f8e4m3::decode(b);
+                if v.is_nan() {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            Format::Int8 => (b as i8) as f32,
+        }
+    }
+
+    /// Precomputed 256-entry symbol->value table (decode hot path).
+    pub fn value_table(self) -> [f32; 256] {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = self.symbol_value(b as u8);
+        }
+        t
+    }
+}
+
+/// One quantized matrix: symbol bytes + per-row scales.
+#[derive(Clone, Debug)]
+pub struct QMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmt: Format,
+    pub symbols: Vec<u8>,
+    pub scales: Vec<f32>,
+}
+
+impl QMat {
+    /// Dequantize into the grid-value matrix actually used by inference
+    /// (codes as f32; multiply by scales happens in the GEMM epilogue).
+    pub fn code_values(&self) -> Mat {
+        let table = self.fmt.value_table();
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.symbols.iter().map(|&b| table[b as usize]).collect(),
+        )
+    }
+
+    /// Full dequantization: What = s * codes.
+    pub fn dequantize(&self) -> Mat {
+        let mut m = self.code_values();
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for v in m.row_mut(r) {
+                *v *= s;
+            }
+        }
+        m
+    }
+
+    /// Number of distinct dequantized values (Table 1 accounting).
+    pub fn unique_values(&self) -> usize {
+        use std::collections::BTreeSet;
+        let m = self.dequantize();
+        m.data.iter().map(|v| v.to_bits()).collect::<BTreeSet<_>>().len()
+    }
+}
+
+/// Paper eq. (1): AbsMax per output channel.
+pub fn absmax_scales(w: &Mat, fmt: Format) -> Vec<f32> {
+    (0..w.rows)
+        .map(|r| {
+            let m = w.row(r).iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            m / fmt.qmax()
+        })
+        .collect()
+}
+
+/// Quantize a full matrix with the given per-row scales.
+pub fn quantize(w: &Mat, scales: &[f32], fmt: Format) -> QMat {
+    assert_eq!(scales.len(), w.rows);
+    let mut symbols = Vec::with_capacity(w.rows * w.cols);
+    for r in 0..w.rows {
+        let s = scales[r];
+        for &x in w.row(r) {
+            symbols.push(fmt.quantize(x, s).0);
+        }
+    }
+    QMat { rows: w.rows, cols: w.cols, fmt, symbols, scales: scales.to_vec() }
+}
+
+/// Relative entry-wise l1 distortion d(W, What) (paper §2.2).
+pub fn rel_l1_distortion(w: &Mat, what: &Mat) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..w.data.len() {
+        num += (w.data[i] - what.data[i]).abs() as f64;
+        den += w.data[i].abs() as f64;
+    }
+    num / (den + 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.normal() * rng.normal().exp()) as f32)
+            .collect();
+        Mat::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn absmax_uses_full_range() {
+        let w = randmat(8, 32, 1);
+        for fmt in [Format::F8E4M3, Format::Int8] {
+            let s = absmax_scales(&w, fmt);
+            let q = quantize(&w, &s, fmt);
+            let codes = q.code_values();
+            let maxcode = codes.abs_max();
+            assert!((maxcode - fmt.qmax()).abs() / fmt.qmax() < 0.1, "{fmt:?} {maxcode}");
+        }
+    }
+
+    #[test]
+    fn absmax_distortion_small() {
+        let w = randmat(16, 64, 2);
+        for (fmt, tol) in [(Format::F8E4M3, 0.05), (Format::Int8, 0.05)] {
+            let s = absmax_scales(&w, fmt);
+            let q = quantize(&w, &s, fmt);
+            let d = rel_l1_distortion(&w, &q.dequantize());
+            assert!(d < tol, "{fmt:?} d={d}");
+        }
+    }
+
+    #[test]
+    fn zero_scale_rows_are_zero() {
+        let w = randmat(2, 8, 3);
+        let q = quantize(&w, &[0.0, 1.0], Format::F8E4M3);
+        assert!(q.dequantize().row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn i8_symbols_roundtrip() {
+        for q in -127i32..=127 {
+            let b = (q as i8) as u8;
+            assert_eq!(Format::Int8.symbol_value(b), q as f32);
+        }
+    }
+
+    #[test]
+    fn i8_round_half_away_from_zero() {
+        assert_eq!(Format::Int8.round(0.5), 1.0);
+        assert_eq!(Format::Int8.round(-0.5), -1.0);
+        assert_eq!(Format::Int8.round(1.49), 1.0);
+        assert_eq!(Format::Int8.round(-2.5), -3.0);
+    }
+
+    #[test]
+    fn f8_symbols_match_codec() {
+        let w = randmat(4, 16, 4);
+        let s = absmax_scales(&w, Format::F8E4M3);
+        let q = quantize(&w, &s, Format::F8E4M3);
+        for r in 0..4 {
+            for c in 0..16 {
+                let (b, v) = Format::F8E4M3.quantize(w.at(r, c), s[r]);
+                assert_eq!(q.symbols[r * 16 + c], b);
+                assert_eq!(q.code_values().at(r, c), v);
+            }
+        }
+    }
+
+    #[test]
+    fn unique_values_bounded_by_grid() {
+        let w = randmat(32, 64, 5);
+        let s = absmax_scales(&w, Format::F8E4M3);
+        let q = quantize(&w, &s, Format::F8E4M3);
+        // dequantized uniques can exceed 253 because scales differ per row
+        assert!(q.unique_values() > 100);
+        let codes = q.code_values();
+        use std::collections::BTreeSet;
+        let uc: BTreeSet<u32> = codes.data.iter().map(|v| v.to_bits()).collect();
+        assert!(uc.len() <= 253);
+    }
+
+    #[test]
+    fn matches_python_fakequant_fixture() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/fixtures/fakequant.json");
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("fixture missing; run `make artifacts` (skipping)");
+            return;
+        };
+        let v = crate::store::json::parse(&text).unwrap();
+        let wrows = v.get("w").unwrap().as_array().unwrap();
+        let rows = wrows.len();
+        let cols = wrows[0].as_array().unwrap().len();
+        let data: Vec<f32> = wrows
+            .iter()
+            .flat_map(|r| r.f64_array().unwrap())
+            .map(|x| x as f32)
+            .collect();
+        let w = Mat::from_vec(rows, cols, data);
+        for (fmt, key) in [(Format::F8E4M3, "f8"), (Format::Int8, "i8")] {
+            let s: Vec<f32> = v.get(&format!("s_{key}")).unwrap().f64_array().unwrap()
+                .into_iter().map(|x| x as f32).collect();
+            let want_codes: Vec<f32> = v.get(&format!("codes_{key}")).unwrap()
+                .as_array().unwrap().iter()
+                .flat_map(|r| r.f64_array().unwrap()).map(|x| x as f32).collect();
+            let want_what: Vec<f32> = v.get(&format!("what_{key}")).unwrap()
+                .as_array().unwrap().iter()
+                .flat_map(|r| r.f64_array().unwrap()).map(|x| x as f32).collect();
+            let q = quantize(&w, &s, fmt);
+            let codes = q.code_values();
+            let what = q.dequantize();
+            for i in 0..rows * cols {
+                assert_eq!(codes.data[i], want_codes[i], "{fmt:?} code {i}");
+                assert!((what.data[i] - want_what[i]).abs() <= 1e-6 * want_what[i].abs().max(1.0),
+                        "{fmt:?} what {i}: {} vs {}", what.data[i], want_what[i]);
+            }
+        }
+    }
+}

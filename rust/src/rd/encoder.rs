@@ -1,0 +1,201 @@
+//! Paper Algorithm 1 — the EntQuant per-layer encoder:
+//!   1. AbsMax scale init (eq. 1)
+//!   2. L-BFGS over the (log-)scales minimizing the RD objective (eq. 3)
+//!   3. quantize to the base format's symbol alphabet
+//! Block grouping + ANS framing happens in `store::pipeline` (§A.1).
+//!
+//! Also hosts the lambda calibration: the paper exploits the log-linear,
+//! model-independent lam <-> entropy map (Fig. A.1) to pick lam from a
+//! global grid; we make the same map explicit via bisection on a probe
+//! layer, then reuse it for the whole model.
+
+use super::lbfgs::{minimize, LbfgsOpts};
+use super::objective::RdObjective;
+use crate::entropy::entropy_of;
+use crate::quant::{absmax_scales, quantize, rel_l1_distortion, Format, QMat};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct EncodeOpts {
+    pub lam: f64,
+    pub fmt: Format,
+    pub max_iters: usize,
+    /// Skip the entropy optimization entirely (8-bit AbsMax path used
+    /// for super-weight-excluded layers; still ANS-coded downstream).
+    pub skip_optimization: bool,
+}
+
+impl Default for EncodeOpts {
+    fn default() -> Self {
+        EncodeOpts { lam: 0.1, fmt: Format::F8E4M3, max_iters: 60, skip_optimization: false }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub entropy_bits: f64,
+    pub distortion: f64,
+    pub sparsity: f64,
+    pub lbfgs_iters: usize,
+    pub wall_ms: f64,
+}
+
+/// Encode one weight matrix (Algorithm 1 lines 1–3).
+pub fn encode_layer(w: &Mat, opts: &EncodeOpts) -> (QMat, LayerStats) {
+    let t0 = std::time::Instant::now();
+    let s0 = absmax_scales(w, opts.fmt);
+
+    let (mut scales, iters) = if opts.skip_optimization {
+        (s0, 0)
+    } else {
+        let obj = RdObjective::new(w, opts.lam, opts.fmt);
+        let u0: Vec<f64> = s0.iter().map(|&s| (s.max(1e-30) as f64).ln()).collect();
+        let mut s_buf: Vec<f32> = Vec::with_capacity(w.rows);
+        let lopts = LbfgsOpts { max_iters: opts.max_iters, ..Default::default() };
+        let (u, _, iters) = minimize(
+            |u, g| obj.value_grad_log(u, g, &mut s_buf),
+            &u0,
+            &lopts,
+        );
+        (u.iter().map(|&v| v.exp() as f32).collect::<Vec<f32>>(), iters)
+    };
+
+    // scales ship as BF16 (paper §2.2); round *before* quantizing so the
+    // stored scales are exactly the ones the codes were produced under
+    crate::quant::bf16::round_slice(&mut scales);
+    let q = quantize(w, &scales, opts.fmt);
+    let ent = entropy_of(&q.symbols);
+    let what = q.dequantize();
+    let dist = rel_l1_distortion(w, &what);
+    let zero_sym = opts.fmt.quantize(0.0, 1.0).0;
+    let sparsity = q.symbols.iter().filter(|&&b| b == zero_sym).count() as f64
+        / q.symbols.len() as f64;
+    let stats = LayerStats {
+        entropy_bits: ent,
+        distortion: dist,
+        sparsity,
+        lbfgs_iters: iters,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    (q, stats)
+}
+
+/// Bisection calibration of lam for a target entropy on a probe matrix.
+/// The map is monotone decreasing (more lam -> less entropy); Fig. A.1
+/// shows it is near model-independent, so one probe layer suffices.
+pub fn calibrate_lambda(probe: &Mat, target_bits: f64, fmt: Format) -> f64 {
+    let ent_at = |lam: f64| {
+        let (q, _) = encode_layer(probe, &EncodeOpts { lam, fmt, max_iters: 40, skip_optimization: false });
+        entropy_of(&q.symbols)
+    };
+    let (mut lo, mut hi) = (1e-4f64, 3000.0f64);
+    let e_lo = ent_at(lo);
+    if target_bits >= e_lo {
+        return lo;
+    }
+    let e_hi = ent_at(hi);
+    if target_bits <= e_hi {
+        return hi;
+    }
+    // bisection in log(lam)
+    for _ in 0..12 {
+        let mid = (lo.ln() + hi.ln()) / 2.0;
+        let lam = mid.exp();
+        let e = ent_at(lam);
+        if e > target_bits {
+            lo = lam;
+        } else {
+            hi = lam;
+        }
+        if (hi / lo).ln().abs() < 0.05 {
+            break;
+        }
+    }
+    (lo.ln() / 2.0 + hi.ln() / 2.0).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn heavy_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.normal() * (rng.normal() * 0.8).exp()) as f32)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn optimization_beats_absmax_on_objective() {
+        let w = heavy_mat(32, 64, 1);
+        let lam = 0.3;
+        let base = encode_layer(&w, &EncodeOpts { lam, skip_optimization: true, ..Default::default() });
+        let opt = encode_layer(&w, &EncodeOpts { lam, ..Default::default() });
+        let j = |st: &LayerStats, q: &QMat| {
+            let rmean: f64 = {
+                let cv = q.code_values();
+                cv.data.iter().map(|&c| c.abs() as f64).sum::<f64>() / cv.data.len() as f64
+            };
+            st.distortion + lam * rmean
+        };
+        assert!(j(&opt.1, &opt.0) <= j(&base.1, &base.0) + 1e-9,
+                "opt {} vs absmax {}", j(&opt.1, &opt.0), j(&base.1, &base.0));
+    }
+
+    #[test]
+    fn entropy_monotone_in_lambda() {
+        let w = heavy_mat(48, 96, 2);
+        let mut prev = f64::INFINITY;
+        for lam in [0.001, 0.3, 30.0] {
+            let (_, st) = encode_layer(&w, &EncodeOpts { lam, ..Default::default() });
+            assert!(st.entropy_bits <= prev + 0.2, "lam={lam}: {} > {}", st.entropy_bits, prev);
+            prev = st.entropy_bits;
+        }
+    }
+
+    #[test]
+    fn high_lambda_reaches_low_entropy_with_bounded_distortion() {
+        let w = heavy_mat(64, 128, 3);
+        let (q, st) = encode_layer(&w, &EncodeOpts { lam: 300.0, max_iters: 80, ..Default::default() });
+        assert!(st.entropy_bits < 3.5, "H={}", st.entropy_bits);
+        assert!(st.distortion < 0.9, "d={}", st.distortion);
+        assert!(st.sparsity > 0.05, "sparsity={}", st.sparsity);
+        assert!(q.symbols.len() == 64 * 128);
+    }
+
+    #[test]
+    fn skip_optimization_is_absmax() {
+        let w = heavy_mat(8, 16, 4);
+        let (q, st) = encode_layer(&w, &EncodeOpts { skip_optimization: true, ..Default::default() });
+        let mut s0 = absmax_scales(&w, Format::F8E4M3);
+        crate::quant::bf16::round_slice(&mut s0); // scales ship as BF16
+        assert_eq!(q.scales, s0);
+        assert_eq!(st.lbfgs_iters, 0);
+        assert!(st.distortion < 0.05);
+    }
+
+    #[test]
+    fn calibration_hits_target() {
+        let w = heavy_mat(64, 128, 5);
+        for target in [5.5f64, 3.0] {
+            let lam = calibrate_lambda(&w, target, Format::F8E4M3);
+            let (_, st) = encode_layer(&w, &EncodeOpts { lam, ..Default::default() });
+            assert!((st.entropy_bits - target).abs() < 0.8,
+                    "target={target} got {} (lam={lam})", st.entropy_bits);
+        }
+    }
+
+    #[test]
+    fn int8_format_works_too() {
+        let w = heavy_mat(32, 64, 6);
+        let (q, st) = encode_layer(&w, &EncodeOpts { lam: 1.0, fmt: Format::Int8, ..Default::default() });
+        assert_eq!(q.fmt, Format::Int8);
+        assert!(st.entropy_bits < 8.0);
+        assert!(st.distortion < 0.5);
+    }
+}

@@ -1,0 +1,218 @@
+//! From-scratch L-BFGS (Liu & Nocedal 1989): two-loop recursion with
+//! Armijo backtracking line search.  This is the solver the paper runs
+//! per layer over the channel scales (§2.2); history m=8, which is
+//! plenty for the smooth-ish STE landscape.
+
+/// Minimize `f` starting from `x0`.  `f(x, grad_out) -> value` must fill
+/// `grad_out` with the gradient.  Returns (x*, f(x*), iterations used).
+pub struct LbfgsOpts {
+    pub max_iters: usize,
+    pub history: usize,
+    pub grad_tol: f64,
+    /// initial step of the backtracking search
+    pub step0: f64,
+    /// Armijo sufficient-decrease constant
+    pub c1: f64,
+}
+
+impl Default for LbfgsOpts {
+    fn default() -> Self {
+        LbfgsOpts { max_iters: 60, history: 8, grad_tol: 1e-7, step0: 1.0, c1: 1e-4 }
+    }
+}
+
+pub fn minimize<F>(mut f: F, x0: &[f64], opts: &LbfgsOpts) -> (Vec<f64>, f64, usize)
+where
+    F: FnMut(&[f64], &mut [f64]) -> f64,
+{
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; n];
+    let mut fx = f(&x, &mut g);
+
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho_hist: Vec<f64> = Vec::new();
+
+    let mut iters = 0;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        let gnorm = norm(&g);
+        if gnorm < opts.grad_tol {
+            break;
+        }
+
+        // two-loop recursion: d = -H g
+        let mut q = g.clone();
+        let m = s_hist.len();
+        let mut alpha = vec![0.0; m];
+        for i in (0..m).rev() {
+            alpha[i] = rho_hist[i] * dot(&s_hist[i], &q);
+            axpy(&mut q, -alpha[i], &y_hist[i]);
+        }
+        // initial Hessian scaling gamma = s'y / y'y
+        let gamma = if m > 0 {
+            let sy = dot(&s_hist[m - 1], &y_hist[m - 1]);
+            let yy = dot(&y_hist[m - 1], &y_hist[m - 1]);
+            if yy > 0.0 { (sy / yy).max(1e-12) } else { 1.0 }
+        } else {
+            1.0 / gnorm.max(1.0)
+        };
+        for v in q.iter_mut() {
+            *v *= gamma;
+        }
+        for i in 0..m {
+            let beta = rho_hist[i] * dot(&y_hist[i], &q);
+            axpy(&mut q, alpha[i] - beta, &s_hist[i]);
+        }
+        let mut d: Vec<f64> = q.iter().map(|&v| -v).collect();
+
+        // ensure descent direction
+        let mut dg = dot(&d, &g);
+        if dg >= 0.0 {
+            // fall back to steepest descent
+            d = g.iter().map(|&v| -v).collect();
+            dg = -gnorm * gnorm;
+            s_hist.clear();
+            y_hist.clear();
+            rho_hist.clear();
+        }
+
+        // Armijo backtracking
+        let mut step = opts.step0;
+        let mut x_new = vec![0.0; n];
+        let mut g_new = vec![0.0; n];
+        let mut f_new;
+        let mut ls_ok = false;
+        for _ in 0..30 {
+            for i in 0..n {
+                x_new[i] = x[i] + step * d[i];
+            }
+            f_new = f(&x_new, &mut g_new);
+            if f_new.is_finite() && f_new <= fx + opts.c1 * step * dg {
+                // accept
+                let s_vec: Vec<f64> = (0..n).map(|i| x_new[i] - x[i]).collect();
+                let y_vec: Vec<f64> = (0..n).map(|i| g_new[i] - g[i]).collect();
+                let sy = dot(&s_vec, &y_vec);
+                if sy > 1e-10 * norm(&s_vec) * norm(&y_vec) {
+                    if s_hist.len() == opts.history {
+                        s_hist.remove(0);
+                        y_hist.remove(0);
+                        rho_hist.remove(0);
+                    }
+                    rho_hist.push(1.0 / sy);
+                    s_hist.push(s_vec);
+                    y_hist.push(y_vec);
+                }
+                x.copy_from_slice(&x_new);
+                g.copy_from_slice(&g_new);
+                fx = f_new;
+                ls_ok = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !ls_ok {
+            break; // line search failed: practical convergence
+        }
+    }
+    (x, fx, iters)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_converges_exactly() {
+        // f = 0.5 * sum c_i (x_i - t_i)^2
+        let c = [1.0, 10.0, 100.0];
+        let t = [3.0, -2.0, 0.5];
+        let f = |x: &[f64], g: &mut [f64]| {
+            let mut v = 0.0;
+            for i in 0..3 {
+                g[i] = c[i] * (x[i] - t[i]);
+                v += 0.5 * c[i] * (x[i] - t[i]).powi(2);
+            }
+            v
+        };
+        let (x, fx, _) = minimize(f, &[0.0; 3], &LbfgsOpts::default());
+        for i in 0..3 {
+            assert!((x[i] - t[i]).abs() < 1e-5, "{x:?}");
+        }
+        assert!(fx < 1e-10);
+    }
+
+    #[test]
+    fn rosenbrock_2d() {
+        let f = |x: &[f64], g: &mut [f64]| {
+            let (a, b) = (x[0], x[1]);
+            g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+            g[1] = 200.0 * (b - a * a);
+            (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+        };
+        let opts = LbfgsOpts { max_iters: 300, ..Default::default() };
+        let (x, fx, _) = minimize(f, &[-1.2, 1.0], &opts);
+        assert!(fx < 1e-8, "fx={fx} x={x:?}");
+        assert!((x[0] - 1.0).abs() < 1e-3 && (x[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn high_dim_quadratic() {
+        let n = 200;
+        let f = |x: &[f64], g: &mut [f64]| {
+            let mut v = 0.0;
+            for i in 0..n {
+                let c = 1.0 + i as f64;
+                g[i] = c * x[i];
+                v += 0.5 * c * x[i] * x[i];
+            }
+            v
+        };
+        let x0 = vec![1.0; n];
+        let (_, fx, iters) = minimize(f, &x0, &LbfgsOpts { max_iters: 200, ..Default::default() });
+        assert!(fx < 1e-8, "fx={fx} after {iters}");
+    }
+
+    #[test]
+    fn handles_nonfinite_trial_points() {
+        // f = -log(1 - x^2): infinite outside |x|<1; line search must backtrack
+        let f = |x: &[f64], g: &mut [f64]| {
+            let v = 1.0 - x[0] * x[0];
+            if v <= 0.0 {
+                g[0] = 0.0;
+                return f64::INFINITY;
+            }
+            g[0] = 2.0 * x[0] / v;
+            -v.ln()
+        };
+        let (x, fx, _) = minimize(f, &[0.9], &LbfgsOpts::default());
+        assert!(x[0].abs() < 1e-3, "{x:?}");
+        assert!(fx < 1e-5);
+    }
+
+    #[test]
+    fn zero_gradient_terminates_immediately() {
+        let f = |_: &[f64], g: &mut [f64]| {
+            g.fill(0.0);
+            1.0
+        };
+        let (_, fx, iters) = minimize(f, &[5.0, 5.0], &LbfgsOpts::default());
+        assert_eq!(fx, 1.0);
+        assert_eq!(iters, 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! EntQuant's rate–distortion core: the relaxed entropy objective
+//! (paper eq. 3), the from-scratch L-BFGS solver, and the per-layer
+//! encoder (Algorithm 1).
+
+pub mod encoder;
+pub mod lbfgs;
+pub mod objective;
+
+pub use encoder::{calibrate_lambda, encode_layer, EncodeOpts, LayerStats};
+pub use lbfgs::{minimize, LbfgsOpts};
+pub use objective::RdObjective;

@@ -1,0 +1,200 @@
+//! The native rate-distortion objective (paper eq. 3) with clipped-STE
+//! gradients — semantics identical to python/compile/rd.py (cross-checked
+//! against artifacts/fixtures/rd_grad.json).
+//!
+//! ```text
+//! J(s) = ||W - What||_1 / ||W||_1  +  lam * mean(|codes|)
+//! codes = clamp(round_gamma(W/s)),  What = s * codes
+//! ```
+//!
+//! Gradient w.r.t. s (per output channel), straight-through across the
+//! rounding, exact across the clamp:
+//!   inside  |W/s| <= Qmax:  dcodes/ds = -W/s^2,  dWhat/ds = codes - W/s
+//!   clamped |W/s|  > Qmax:  dcodes/ds = 0,       dWhat/ds = codes
+
+use crate::quant::Format;
+use crate::tensor::Mat;
+
+pub struct RdObjective<'a> {
+    pub w: &'a Mat,
+    pub lam: f64,
+    pub fmt: Format,
+    /// precomputed ||W||_1
+    pub w_l1: f64,
+}
+
+impl<'a> RdObjective<'a> {
+    pub fn new(w: &'a Mat, lam: f64, fmt: Format) -> Self {
+        let w_l1 = w.l1_norm() + 1e-12;
+        RdObjective { w, lam, fmt, w_l1 }
+    }
+
+    /// Value and gradient w.r.t. the per-row scales `s`.
+    pub fn value_grad(&self, s: &[f32], grad: &mut [f64]) -> f64 {
+        let (rows, cols) = (self.w.rows, self.w.cols);
+        assert_eq!(s.len(), rows);
+        assert_eq!(grad.len(), rows);
+        let qmax = self.fmt.qmax();
+        let mn = (rows * cols) as f64;
+        let inv_r = 1.0 / mn; // R = mean(|codes|)
+
+        let mut dist = 0.0f64;
+        let mut rsum = 0.0f64;
+        for r in 0..rows {
+            let sr = s[r];
+            let mut gd = 0.0f64; // d(distortion)/ds
+            let mut gr = 0.0f64; // d(R)/ds
+            if sr == 0.0 {
+                // codes = 0, What = 0: distortion = |W| row mass, grad 0
+                for &w in self.w.row(r) {
+                    dist += w.abs() as f64;
+                }
+                grad[r] = 0.0;
+                continue;
+            }
+            for &w in self.w.row(r) {
+                let u = w / sr;
+                let inside = u.abs() <= qmax;
+                let uc = u.clamp(-qmax, qmax);
+                let code = self.fmt.round(uc);
+                let what = sr * code;
+                let resid = w - what;
+                dist += resid.abs() as f64;
+                rsum += code.abs() as f64;
+                let sgn_resid = if resid > 0.0 { 1.0f64 } else if resid < 0.0 { -1.0 } else { 0.0 };
+                let sgn_code = if code > 0.0 { 1.0f64 } else if code < 0.0 { -1.0 } else { 0.0 };
+                if inside {
+                    // dWhat/ds = code - u ; dcodes/ds = -u/s
+                    gd += -sgn_resid * (code - u) as f64;
+                    gr += sgn_code * (-(u as f64) / sr as f64);
+                } else {
+                    // dWhat/ds = code (u pinned at +-qmax); dcodes/ds = 0
+                    gd += -sgn_resid * code as f64;
+                }
+            }
+            grad[r] = gd / self.w_l1 + self.lam * gr * inv_r;
+        }
+        dist / self.w_l1 + self.lam * rsum * inv_r
+    }
+
+    /// Same objective over u = ln(s): the parametrization the encoder
+    /// actually optimizes (scales travel orders of magnitude before the
+    /// f8 grid's uniform denormal region is reached — see DESIGN.md).
+    pub fn value_grad_log(&self, u: &[f64], grad_u: &mut [f64], s_buf: &mut Vec<f32>) -> f64 {
+        s_buf.clear();
+        s_buf.extend(u.iter().map(|&v| v.exp() as f32));
+        let val = self.value_grad(s_buf, grad_u);
+        for r in 0..u.len() {
+            grad_u[r] *= s_buf[r] as f64; // chain rule d/du = s * d/ds
+        }
+        val
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::absmax_scales;
+    use crate::tensor::Rng;
+
+    fn heavy_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| (rng.normal() * rng.normal().exp()) as f32)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn zero_distortion_on_grid() {
+        let w = Mat::from_vec(1, 4, vec![1.0, 2.0, -0.5, 0.25]);
+        let obj = RdObjective::new(&w, 0.0, Format::F8E4M3);
+        let mut g = vec![0.0; 1];
+        let v = obj.value_grad(&[1.0], &mut g);
+        assert!(v.abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn matches_python_fixture() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/fixtures/rd_grad.json");
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("fixture missing; run `make artifacts` (skipping)");
+            return;
+        };
+        let v = crate::store::json::parse(&text).unwrap();
+        let rows_json = v.get("w").unwrap().as_array().unwrap();
+        let rows = rows_json.len();
+        let cols = rows_json[0].as_array().unwrap().len();
+        let w = Mat::from_vec(
+            rows,
+            cols,
+            rows_json.iter().flat_map(|r| r.f64_array().unwrap()).map(|x| x as f32).collect(),
+        );
+        let s: Vec<f32> = v.get("s").unwrap().f64_array().unwrap().iter().map(|&x| x as f32).collect();
+        let lam = v.get("lam").unwrap().as_f64().unwrap();
+        let want_val = v.get("value").unwrap().as_f64().unwrap();
+        let want_grad = v.get("grad").unwrap().f64_array().unwrap();
+
+        let obj = RdObjective::new(&w, lam, Format::F8E4M3);
+        let mut g = vec![0.0; rows];
+        let val = obj.value_grad(&s, &mut g);
+        assert!((val - want_val).abs() < 1e-4 * want_val.abs().max(1.0), "{val} vs {want_val}");
+        for r in 0..rows {
+            assert!(
+                (g[r] - want_grad[r]).abs() < 1e-3 * want_grad[r].abs().max(1.0),
+                "grad[{r}]: {} vs {}",
+                g[r],
+                want_grad[r]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_is_descent_direction() {
+        let w = heavy_mat(8, 32, 3);
+        let s0 = absmax_scales(&w, Format::F8E4M3);
+        let obj = RdObjective::new(&w, 0.05, Format::F8E4M3);
+        let mut g = vec![0.0; 8];
+        let v0 = obj.value_grad(&s0, &mut g);
+        let gn: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let eps = 1e-3 * s0.iter().map(|&x| x as f64).sum::<f64>() / 8.0 / gn.max(1e-12);
+        let s_minus: Vec<f32> = (0..8).map(|i| s0[i] - (eps * g[i]) as f32).collect();
+        let s_plus: Vec<f32> = (0..8).map(|i| s0[i] + (eps * g[i]) as f32).collect();
+        let mut tmp = vec![0.0; 8];
+        let vm = obj.value_grad(&s_minus, &mut tmp);
+        let vp = obj.value_grad(&s_plus, &mut tmp);
+        assert!(vm <= vp + 0.05 * v0.abs(), "vm={vm} vp={vp}");
+    }
+
+    #[test]
+    fn log_parametrization_chain_rule() {
+        let w = heavy_mat(4, 16, 9);
+        let s0 = absmax_scales(&w, Format::F8E4M3);
+        let obj = RdObjective::new(&w, 0.1, Format::F8E4M3);
+        let u: Vec<f64> = s0.iter().map(|&x| (x as f64).ln()).collect();
+        let mut gu = vec![0.0; 4];
+        let mut gs = vec![0.0; 4];
+        let mut sbuf = Vec::new();
+        let vu = obj.value_grad_log(&u, &mut gu, &mut sbuf);
+        let vs = obj.value_grad(&s0, &mut gs);
+        assert!((vu - vs).abs() < 1e-5 * vs.abs().max(1.0));
+        for i in 0..4 {
+            assert!((gu[i] - gs[i] * s0[i] as f64).abs() < 1e-6 * gs[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn clamped_region_pushes_scale_up() {
+        // all symbols saturated: gradient must point to *larger* s
+        // (this is the clipped-STE regression python hit too)
+        let w = heavy_mat(2, 16, 12);
+        let s_tiny: Vec<f32> = vec![1e-6, 1e-6];
+        let obj = RdObjective::new(&w, 0.0, Format::F8E4M3);
+        let mut g = vec![0.0; 2];
+        obj.value_grad(&s_tiny, &mut g);
+        assert!(g[0] < 0.0 && g[1] < 0.0, "negative grad = increase s: {g:?}");
+    }
+}

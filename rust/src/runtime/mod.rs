@@ -1,0 +1,300 @@
+//! PJRT runtime — loads the HLO-text artifacts emitted by
+//! python/compile/aot.py and executes them on the PJRT CPU client
+//! (the request path never touches python).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HloModuleProto::from_text
+//! -> XlaComputation -> client.compile -> execute.  Executables are
+//! compiled lazily on first use and cached for the lifetime of the
+//! runtime (one compiled executable per model variant, as the paper's
+//! Marlin-kernel deployment does per dtype/shape).
+
+use crate::store::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+pub struct ExecSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+pub struct Manifest {
+    pub serve_size: String,
+    pub config: crate::model::Config,
+    pub prefill_slots: Vec<(usize, usize)>,
+    pub decode_slots: Vec<(usize, usize)>,
+    pub executables: Vec<ExecSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let config = crate::model::Config::from_json(v.get("config").ok_or(anyhow!("config"))?)
+            .map_err(|e| anyhow!(e))?;
+        let slots = |key: &str| -> Result<Vec<(usize, usize)>> {
+            v.get(key)
+                .and_then(Value::as_array)
+                .ok_or(anyhow!("{key}"))?
+                .iter()
+                .map(|s| {
+                    let a = s.f64_array().ok_or(anyhow!("slot"))?;
+                    Ok((a[0] as usize, a[1] as usize))
+                })
+                .collect()
+        };
+        let tensor_specs = |arr: &Value| -> Vec<TensorSpec> {
+            arr.as_array()
+                .map(|a| {
+                    a.iter()
+                        .map(|t| TensorSpec {
+                            shape: t
+                                .get("shape")
+                                .and_then(Value::f64_array)
+                                .unwrap_or_default()
+                                .iter()
+                                .map(|&x| x as usize)
+                                .collect(),
+                            dtype: t.get("dtype").and_then(Value::as_str).unwrap_or("f32").into(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let mut executables = Vec::new();
+        for e in v.get("executables").and_then(Value::as_array).ok_or(anyhow!("executables"))? {
+            executables.push(ExecSpec {
+                name: e.get("name").and_then(Value::as_str).ok_or(anyhow!("name"))?.into(),
+                path: e.get("path").and_then(Value::as_str).ok_or(anyhow!("path"))?.into(),
+                inputs: tensor_specs(e.get("inputs").ok_or(anyhow!("inputs"))?),
+                outputs: tensor_specs(e.get("outputs").ok_or(anyhow!("outputs"))?),
+            });
+        }
+        Ok(Manifest {
+            serve_size: v.get("serve_size").and_then(Value::as_str).unwrap_or("M").into(),
+            config,
+            prefill_slots: slots("prefill_slots")?,
+            decode_slots: slots("decode_slots")?,
+            executables,
+        })
+    }
+}
+
+/// A host-side tensor flowing in/out of PJRT executables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
+        HostTensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
+        HostTensor::I32 { data, dims: dims.to_vec() }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], dims: vec![] }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("not f32"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } => dims,
+            HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { data, dims } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+                }
+            }
+            HostTensor::I32 { data, dims } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec_dims: Vec<usize>) -> Result<Self> {
+        // outputs of our artifacts are f32
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor::F32 { data, dims: spec_dims })
+    }
+}
+
+/// The PJRT runtime: client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: String,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// wall time spent in compile (reported by the CLI)
+    pub compile_s: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_string(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_s: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn spec(&self, name: &str) -> Result<&ExecSpec> {
+        self.manifest
+            .executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("unknown executable {name}"))
+    }
+
+    /// Ensure an executable is compiled (warmup path).
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.spec(name)?;
+        let path = format!("{}/{}", self.artifacts_dir, spec.path);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute by name.  Inputs must match the manifest spec; outputs are
+    /// returned as host tensors (jax lowers with return_tuple=True, so
+    /// the single result literal is a tuple to destructure).
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let spec = self.spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: {} inputs given, {} expected", inputs.len(), spec.inputs.len());
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: {} outputs, {} expected", parts.len(), spec.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, os)| HostTensor::from_literal(l, os.shape.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::artifacts_dir();
+        if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+            eprintln!("artifacts missing; run `make artifacts` (skipping)");
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.manifest.serve_size, "M");
+        assert!(!rt.manifest.executables.is_empty());
+        assert!(rt.platform().to_lowercase().contains("pu")); // cpu host
+    }
+
+    #[test]
+    fn embed_prefill_executes() {
+        let Some(rt) = runtime() else { return };
+        let cfg = &rt.manifest.config;
+        let (v, d) = (cfg.vocab, cfg.d_model);
+        // embed table with row t = [t, t, ...] so gather is easy to check
+        let mut table = vec![0.0f32; v * d];
+        for t in 0..v {
+            for c in 0..d {
+                table[t * d + c] = t as f32;
+            }
+        }
+        let tokens = HostTensor::i32(vec![5i32; 128], &[1, 128]);
+        let out = rt
+            .call("embed_p_b1_s128", &[tokens, HostTensor::f32(table, &[v, d])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims(), &[1, 128, d]);
+        assert!(out[0].as_f32().iter().all(|&x| x == 5.0));
+    }
+
+    #[test]
+    fn head_decode_executes() {
+        let Some(rt) = runtime() else { return };
+        let cfg = &rt.manifest.config;
+        let (v, d) = (cfg.vocab, cfg.d_model);
+        let x = HostTensor::f32(vec![0.1; d], &[1, 1, d]);
+        let norm = HostTensor::f32(vec![1.0; d], &[d]);
+        let head = HostTensor::f32(vec![0.01; v * d], &[v, d]);
+        let out = rt.call("head_d_b1", &[x, norm, head]).unwrap();
+        assert_eq!(out[0].dims(), &[1, 1, v]);
+        // all head rows identical -> all logits identical
+        let l = out[0].as_f32();
+        assert!(l.iter().all(|&x| (x - l[0]).abs() < 1e-5));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.call("head_d_b1", &[]).is_err());
+        assert!(rt.call("nonexistent", &[]).is_err());
+    }
+}

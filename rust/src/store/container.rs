@@ -1,0 +1,348 @@
+//! The .eqz compressed-model container — what EntQuant ships instead of
+//! a checkpoint: per-transformer-block ANS bitstreams (paper §A.1 joint
+//! block-wise framing), channel scales, norms, and the uncompressed
+//! high-precision embed/head tensors.
+//!
+//! Wire layout (little endian):
+//!   magic  b"EQZ1"
+//!   u32    header_len, JSON header (config, fmt, block metadata, offsets)
+//!   bytes  f32 region: embed | head | norm_final | per-block norms+scales
+//!   bytes  per-block serialized Bitstreams
+
+use crate::ans::Bitstream;
+use crate::model::{Config, Model, QBlock, QModel};
+use crate::quant::{Format, QMat};
+use crate::store::json::{self, arr, num, obj, s, Value};
+use crate::tensor::Mat;
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"EQZ1";
+
+#[derive(Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub scales: Vec<f32>,
+    /// super-weight exclusion: quantized at plain AbsMax (still ANS coded)
+    pub excluded: bool,
+}
+
+#[derive(Clone)]
+pub struct CompressedBlock {
+    pub layers: Vec<LayerMeta>, // order: BLOCK_LINEARS
+    pub bitstream: Bitstream,   // joint symbols of all 7 linears
+    pub norm_attn: Vec<f32>,
+    pub norm_mlp: Vec<f32>,
+}
+
+impl CompressedBlock {
+    pub fn n_symbols(&self) -> usize {
+        self.layers.iter().map(|l| l.rows * l.cols).sum()
+    }
+
+    /// Byte offsets of each layer inside the decoded symbol buffer.
+    pub fn layer_offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut off = 0;
+        for l in &self.layers {
+            let n = l.rows * l.cols;
+            out.push((off, n));
+            off += n;
+        }
+        out
+    }
+}
+
+#[derive(Clone)]
+pub struct CompressedModel {
+    pub config: Config,
+    pub fmt: Format,
+    pub embed: Mat,
+    pub head: Mat,
+    pub norm_final: Vec<f32>,
+    pub blocks: Vec<CompressedBlock>,
+}
+
+impl CompressedModel {
+    /// Effective bits per *linear* parameter: everything EntQuant must
+    /// store for the compressed linears (bitstreams incl. freq tables &
+    /// chunk index, plus BF16-equivalent scales), matching the paper's
+    /// accounting (embeddings/head excluded, as in Tables 2/C.*).
+    pub fn effective_bits_per_param(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut params = 0usize;
+        for b in &self.blocks {
+            bits += b.bitstream.serialized_len() as f64 * 8.0;
+            for l in &b.layers {
+                bits += l.scales.len() as f64 * 16.0; // scales stored BF16
+                params += l.rows * l.cols;
+            }
+        }
+        bits / params as f64
+    }
+
+    /// Total size in bytes of the serialized container.
+    pub fn total_bytes(&self) -> usize {
+        self.serialize().len()
+    }
+
+    /// Decode block `i`'s symbols into `buf` (len == n_symbols(i)).
+    pub fn decode_block_into(&self, i: usize, buf: &mut [u8], threads: usize) -> Result<()> {
+        self.blocks[i]
+            .bitstream
+            .decode_into(buf, threads)
+            .map_err(|e| anyhow!("block {i}: {e}"))
+    }
+
+    /// Offline-eval path: reconstruct the QModel (and from there a
+    /// dequantized f32 model).
+    pub fn to_qmodel(&self) -> Result<QModel> {
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (i, cb) in self.blocks.iter().enumerate() {
+            let mut buf = vec![0u8; cb.n_symbols()];
+            self.decode_block_into(i, &mut buf, 1)?;
+            let mut linears = Vec::with_capacity(cb.layers.len());
+            for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
+                linears.push(QMat {
+                    rows: l.rows,
+                    cols: l.cols,
+                    fmt: self.fmt,
+                    symbols: buf[off..off + n].to_vec(),
+                    scales: l.scales.clone(),
+                });
+            }
+            blocks.push(QBlock {
+                linears,
+                norm_attn: cb.norm_attn.clone(),
+                norm_mlp: cb.norm_mlp.clone(),
+            });
+        }
+        Ok(QModel {
+            config: self.config.clone(),
+            embed: self.embed.clone(),
+            blocks,
+            norm_final: self.norm_final.clone(),
+            head: self.head.clone(),
+        })
+    }
+
+    /// Convenience: dequantized f32 model for the eval harness.
+    pub fn to_model(&self) -> Result<Model> {
+        Ok(self.to_qmodel()?.dequantize())
+    }
+
+    // ------------------------------------------------------------ wire
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut f32_region: Vec<u8> = Vec::new();
+        let push_f32s = |region: &mut Vec<u8>, vals: &[f32]| -> (usize, usize) {
+            let off = region.len();
+            for &v in vals {
+                region.extend_from_slice(&v.to_le_bytes());
+            }
+            (off, vals.len())
+        };
+
+        let (embed_off, _) = push_f32s(&mut f32_region, &self.embed.data);
+        let (head_off, _) = push_f32s(&mut f32_region, &self.head.data);
+        let (nf_off, _) = push_f32s(&mut f32_region, &self.norm_final);
+
+        // scales ship as BF16 (2 bytes each, paper §2.2); the encoder
+        // already rounded them onto the bf16 grid so this is lossless
+        let push_bf16s = |region: &mut Vec<u8>, vals: &[f32]| -> (usize, usize) {
+            let off = region.len();
+            for &v in vals {
+                region.extend_from_slice(&crate::quant::bf16::encode(v).to_le_bytes());
+            }
+            (off, vals.len())
+        };
+
+        let mut bs_region: Vec<u8> = Vec::new();
+        let mut block_meta: Vec<Value> = Vec::new();
+        for cb in &self.blocks {
+            let (na_off, _) = push_f32s(&mut f32_region, &cb.norm_attn);
+            let (nm_off, _) = push_f32s(&mut f32_region, &cb.norm_mlp);
+            let mut layer_meta = Vec::new();
+            for l in &cb.layers {
+                let (s_off, _) = push_bf16s(&mut f32_region, &l.scales);
+                layer_meta.push(obj(vec![
+                    ("name", s(&l.name)),
+                    ("rows", num(l.rows as f64)),
+                    ("cols", num(l.cols as f64)),
+                    ("scales_off", num(s_off as f64)),
+                    ("excluded", Value::Bool(l.excluded)),
+                ]));
+            }
+            let ser = cb.bitstream.serialize();
+            let bs_off = bs_region.len();
+            bs_region.extend_from_slice(&ser);
+            block_meta.push(obj(vec![
+                ("layers", Value::Array(layer_meta)),
+                ("norm_attn_off", num(na_off as f64)),
+                ("norm_mlp_off", num(nm_off as f64)),
+                ("bs_off", num(bs_off as f64)),
+                ("bs_len", num(ser.len() as f64)),
+            ]));
+        }
+
+        let header = obj(vec![
+            ("config", obj(vec![
+                ("name", s(&self.config.name)),
+                ("vocab", num(self.config.vocab as f64)),
+                ("d_model", num(self.config.d_model as f64)),
+                ("n_layers", num(self.config.n_layers as f64)),
+                ("n_heads", num(self.config.n_heads as f64)),
+                ("d_ff", num(self.config.d_ff as f64)),
+                ("max_ctx", num(self.config.max_ctx as f64)),
+            ])),
+            ("fmt", s(self.fmt.name())),
+            ("embed_off", num(embed_off as f64)),
+            ("head_off", num(head_off as f64)),
+            ("norm_final_off", num(nf_off as f64)),
+            ("f32_region_len", num(f32_region.len() as f64)),
+            ("blocks", arr(block_meta)),
+        ]);
+        let htext = json::write(&header);
+        let mut out = Vec::with_capacity(8 + htext.len() + f32_region.len() + bs_region.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+        out.extend_from_slice(htext.as_bytes());
+        out.extend_from_slice(&f32_region);
+        out.extend_from_slice(&bs_region);
+        out
+    }
+
+    pub fn deserialize(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 || &bytes[..4] != MAGIC {
+            bail!("bad .eqz magic");
+        }
+        let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let header = json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)
+            .map_err(|e| anyhow!("eqz header: {e}"))?;
+        let config = Config::from_json(header.get("config").ok_or(anyhow!("no config"))?)
+            .map_err(|e| anyhow!(e))?;
+        let fmt = match header.get("fmt").and_then(|v| v.as_str()) {
+            Some("f8e4m3") => Format::F8E4M3,
+            Some("int8") => Format::Int8,
+            other => bail!("bad fmt {other:?}"),
+        };
+        let f32_len = header.get("f32_region_len").and_then(|v| v.as_usize()).ok_or(anyhow!("len"))?;
+        let f32_region = &bytes[8 + hlen..8 + hlen + f32_len];
+        let bs_region = &bytes[8 + hlen + f32_len..];
+
+        let read_f32s = |off: usize, n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|i| f32::from_le_bytes(f32_region[off + 4 * i..off + 4 * i + 4].try_into().unwrap()))
+                .collect()
+        };
+        let read_bf16s = |off: usize, n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|i| {
+                    crate::quant::bf16::decode(u16::from_le_bytes(
+                        f32_region[off + 2 * i..off + 2 * i + 2].try_into().unwrap(),
+                    ))
+                })
+                .collect()
+        };
+        let g = |v: &Value, k: &str| -> Result<usize> {
+            v.get(k).and_then(|x| x.as_usize()).ok_or(anyhow!("missing {k}"))
+        };
+
+        let (d, f, v) = (config.d_model, config.d_ff, config.vocab);
+        let embed_off = g(&header, "embed_off")?;
+        let head_off = g(&header, "head_off")?;
+        let nf_off = g(&header, "norm_final_off")?;
+        let embed = Mat::from_vec(v, d, read_f32s(embed_off, v * d));
+        let head = Mat::from_vec(v, d, read_f32s(head_off, v * d));
+        let norm_final = read_f32s(nf_off, d);
+
+        let mut blocks = Vec::new();
+        for bm in header.get("blocks").and_then(|x| x.as_array()).ok_or(anyhow!("blocks"))? {
+            let na_off = g(bm, "norm_attn_off")?;
+            let nm_off = g(bm, "norm_mlp_off")?;
+            let bs_off = g(bm, "bs_off")?;
+            let bs_len = g(bm, "bs_len")?;
+            let (bitstream, _) = Bitstream::deserialize(&bs_region[bs_off..bs_off + bs_len])
+                .map_err(|e| anyhow!("bitstream: {e}"))?;
+            let mut layers = Vec::new();
+            for lm in bm.get("layers").and_then(|x| x.as_array()).ok_or(anyhow!("layers"))? {
+                let rows = g(lm, "rows")?;
+                let cols = g(lm, "cols")?;
+                let s_off = g(lm, "scales_off")?;
+                layers.push(LayerMeta {
+                    name: lm.get("name").and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+                    rows,
+                    cols,
+                    scales: read_bf16s(s_off, rows),
+                    excluded: lm.get("excluded").and_then(|x| x.as_bool()).unwrap_or(false),
+                });
+            }
+            blocks.push(CompressedBlock {
+                layers,
+                bitstream,
+                norm_attn: read_f32s(na_off, d),
+                norm_mlp: read_f32s(nm_off, d),
+            });
+        }
+        let _ = f;
+        Ok(CompressedModel { config, fmt, embed, head, norm_final, blocks })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.serialize()).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::deserialize(&std::fs::read(path).with_context(|| format!("reading {path}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loader::synthetic_model;
+    use crate::store::pipeline::{compress_model, CompressOpts};
+
+    fn tiny() -> crate::model::Model {
+        synthetic_model(
+            Config { name: "T".into(), vocab: 64, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_ctx: 32 },
+            11,
+        )
+    }
+
+    #[test]
+    fn serialize_roundtrip_preserves_decode() {
+        let m = tiny();
+        let (cm, _) = compress_model(&m, &CompressOpts { lam: 0.5, ..Default::default() }).unwrap();
+        let ser = cm.serialize();
+        let cm2 = CompressedModel::deserialize(&ser).unwrap();
+        let q1 = cm.to_qmodel().unwrap();
+        let q2 = cm2.to_qmodel().unwrap();
+        for b in 0..2 {
+            for l in 0..7 {
+                assert_eq!(q1.blocks[b].linears[l].symbols, q2.blocks[b].linears[l].symbols);
+                assert_eq!(q1.blocks[b].linears[l].scales, q2.blocks[b].linears[l].scales);
+            }
+        }
+        assert_eq!(cm2.config, m.config);
+    }
+
+    #[test]
+    fn effective_bits_reasonable() {
+        let m = tiny();
+        let (cm, _) = compress_model(&m, &CompressOpts { lam: 0.01, ..Default::default() }).unwrap();
+        let bits = cm.effective_bits_per_param();
+        // tiny layers: metadata dominates, but must stay well under 16
+        assert!(bits > 0.5 && bits < 16.0, "{bits}");
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let m = tiny();
+        let (cm, _) = compress_model(&m, &CompressOpts::default()).unwrap();
+        let mut ser = cm.serialize();
+        ser[0] = b'X';
+        assert!(CompressedModel::deserialize(&ser).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Persistence substrate: JSON codec, the .eqz compressed-model
+//! container, and the compression pipeline that produces it.
+
+pub mod container;
+pub mod json;
+pub mod pipeline;
+
+pub use container::{CompressedBlock, CompressedModel};
+pub use pipeline::{compress_model, CompressOpts, CompressionReport};

@@ -1,0 +1,524 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation on the substitute testbed (DESIGN.md §4 maps each
+//! experiment id to the modules exercised here).  Each command prints a
+//! paper-style table and appends a JSON record to artifacts/reports/.
+
+use anyhow::{anyhow, Result};
+use entquant::baselines::{self, Method};
+use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::eval::{perplexity, perplexity_aq, TaskSuite};
+use entquant::model::{load_eqw, ActQuant, Model};
+use entquant::quant::{superweight, Format};
+use entquant::runtime::Runtime;
+use entquant::store::json::{arr, num, obj, s, Value};
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn sizes() -> Vec<String> {
+    std::env::var("EQ_SIZES")
+        .unwrap_or_else(|_| "S,M,L".into())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect()
+}
+
+struct EvalCtx {
+    valid: Vec<u8>,
+    suite: TaskSuite,
+    windows: usize,
+    items: usize,
+}
+
+impl EvalCtx {
+    fn load() -> Result<Self> {
+        let art = entquant::artifacts_dir();
+        Ok(EvalCtx {
+            valid: std::fs::read(format!("{art}/corpus/valid.bin"))?,
+            suite: TaskSuite::load(&format!("{art}/corpus/tasks_base.json"))?,
+            windows: env_usize("EQ_WINDOWS", 4),
+            items: env_usize("EQ_ITEMS", 10),
+        })
+    }
+
+    fn eval(&self, m: &Model) -> (f64, f64) {
+        let ppl = perplexity(m, &self.valid, 128, self.windows);
+        let (_, acc) = self.suite.evaluate(m, self.items);
+        (ppl, acc * 100.0)
+    }
+}
+
+fn load_size(size: &str) -> Result<Model> {
+    load_eqw(&format!("{}/model_{size}.eqw", entquant::artifacts_dir()))
+}
+
+fn entquant_at(
+    model: &Model,
+    bits: f64,
+    fmt: Format,
+    sw: Option<f32>,
+) -> Result<(Model, f64, f64, entquant::store::pipeline::CompressionReport)> {
+    let (cm, rep) = compress_model(
+        model,
+        &CompressOpts {
+            target_bits: Some(bits),
+            fmt,
+            superweight_threshold: sw,
+            ..Default::default()
+        },
+    )?;
+    Ok((cm.to_model()?, rep.mean_entropy_bits, rep.effective_bits_per_param, rep))
+}
+
+fn write_report(name: &str, v: Value) -> Result<()> {
+    let dir = format!("{}/reports", entquant::artifacts_dir());
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(format!("{dir}/{name}.json"), entquant::store::json::write(&v))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------- Table 1
+
+/// Unique dequantized values: fixed bit-width vs EntQuant (paper Table 1).
+pub fn table1() -> Result<()> {
+    println!("\n=== Table 1: unique values per layer, fixed bit-width vs EntQuant ===");
+    let model = load_size("S")?;
+    let mut rows = Vec::new();
+    println!("{:<22} {:>8} {:>8} {:>8}", "Method", "4 bits", "3 bits", "2 bits");
+    print!("{:<22}", "Fixed bit-width");
+    for bits in [4u32, 3, 2] {
+        print!(" {:>8}", 1u64 << bits);
+    }
+    println!();
+    print!("{:<22}", "EntQuant (mean/layer)");
+    for bits in [4.0f64, 3.0, 2.0] {
+        let (cm, _) = compress_model(
+            &model,
+            &CompressOpts { target_bits: Some(bits), ..Default::default() },
+        )?;
+        let q = cm.to_qmodel()?;
+        let mut uniq = 0usize;
+        let mut n = 0usize;
+        for b in &q.blocks {
+            for l in &b.linears {
+                // count unique *code values* per layer (paper counts the
+                // distinct representable values actually used)
+                use std::collections::BTreeSet;
+                let set: BTreeSet<u32> =
+                    l.code_values().data.iter().map(|v| v.to_bits()).collect();
+                uniq += set.len();
+                n += 1;
+            }
+        }
+        let mean = uniq as f64 / n as f64;
+        print!(" {:>8.2}", mean);
+        rows.push(obj(vec![("bits", num(bits)), ("entquant_unique", num(mean))]));
+    }
+    println!();
+    write_report("table1", arr(rows))
+}
+
+// ------------------------------------------------------------- Table 2
+
+/// Data-free comparison (paper Table 2 / C.1-C.3).
+pub fn table2() -> Result<()> {
+    println!("\n=== Table 2: data-free methods, PPL (C4-analogue) and zero-shot acc ===");
+    let ctx = EvalCtx::load()?;
+    let mut report = Vec::new();
+    println!("{:<6} {:<16} {:>6} {:>10} {:>8}", "Model", "Method", "Bits", "PPL", "Acc%");
+    for size in sizes() {
+        let model = load_size(&size)?;
+        let mut row = |name: &str, bits: f64, m: &Model| {
+            let (ppl, acc) = ctx.eval(m);
+            println!("{size:<6} {name:<16} {bits:>6.2} {ppl:>10.3} {acc:>8.1}");
+            report.push(obj(vec![
+                ("model", s(&size)),
+                ("method", s(name)),
+                ("bits", num(bits)),
+                ("ppl", num(ppl)),
+                ("acc", num(acc)),
+            ]));
+        };
+        row("base", 16.0, &model);
+        for (method, label) in [
+            (Method::Nf4 { group: 64 }, "nf4-g64"),
+            (Method::Hqq { bits: 4, group: 64 }, "hqq-4b-g64"),
+            (Method::Hqq { bits: 3, group: 64 }, "hqq-3b-g64"),
+            (Method::Hqq { bits: 2, group: 16 }, "hqq-2b-g16"),
+            (Method::Hqq { bits: 2, group: 64 }, "hqq-2b-g64"),
+        ] {
+            let r = baselines::apply(&model, &method, None)?;
+            row(label, r.bits_per_param, &r.model);
+        }
+        for bits in [3.9f64, 3.0, 2.1, 1.7] {
+            let (m, _, eff, _) = entquant_at(&model, bits, Format::F8E4M3, None)?;
+            row("entquant", eff, &m);
+        }
+    }
+    write_report("table2", arr(report))
+}
+
+// ------------------------------------------------------------- Table 3
+
+/// vs calibration methods + compression runtime (paper Table 3 / D.1).
+pub fn table3() -> Result<()> {
+    println!("\n=== Table 3: EntQuant vs calibration methods (GPTQ in-house) ===");
+    let ctx = EvalCtx::load()?;
+    let size = sizes().last().cloned().unwrap_or_else(|| "L".into());
+    let model = load_size(&size)?;
+    let calib = &ctx.valid[..256.min(ctx.valid.len())];
+    let mut report = Vec::new();
+    println!(
+        "{:<16} {:>6} {:>10} {:>8} {:>10} {:>8}",
+        "Method", "Bits", "PPL", "Acc%", "NoCalib", "Wall(s)"
+    );
+    let (base_ppl, base_acc) = ctx.eval(&model);
+    println!("{:<16} {:>6} {base_ppl:>10.3} {base_acc:>8.1} {:>10} {:>8}", "base", 16, "-", "-");
+    for bits in [3.0f64, 2.1] {
+        let t0 = std::time::Instant::now();
+        let (m, _, eff, rep) = entquant_at(&model, bits, Format::F8E4M3, None)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let (ppl, acc) = ctx.eval(&m);
+        println!("{:<16} {eff:>6.2} {ppl:>10.3} {acc:>8.1} {:>10} {wall:>8.1}", "entquant", "yes");
+        report.push(obj(vec![
+            ("method", s("entquant")),
+            ("bits", num(eff)),
+            ("ppl", num(ppl)),
+            ("acc", num(acc)),
+            ("wall_s", num(wall)),
+            ("per_param_us", num(wall * 1e6 / rep.params_compressed as f64)),
+        ]));
+    }
+    for bits in [3u32, 2] {
+        let t0 = std::time::Instant::now();
+        let r = baselines::apply(&model, &Method::Gptq { bits, group: 128 }, Some(calib))?;
+        let wall = t0.elapsed().as_secs_f64();
+        let (ppl, acc) = ctx.eval(&r.model);
+        println!(
+            "{:<16} {:>6.2} {ppl:>10.3} {acc:>8.1} {:>10} {wall:>8.1}",
+            format!("gptq-{bits}b-g128"),
+            r.bits_per_param,
+            "no"
+        );
+        report.push(obj(vec![
+            ("method", s(&format!("gptq-{bits}b"))),
+            ("bits", num(r.bits_per_param)),
+            ("ppl", num(ppl)),
+            ("acc", num(acc)),
+            ("wall_s", num(wall)),
+        ]));
+    }
+    // 70B runtime extrapolation (Table 3a)
+    let (_, _, _, rep) = entquant_at(&model, 3.0, Format::F8E4M3, None)?;
+    let us_per_param = rep.wall_s * 1e6 / rep.params_compressed as f64;
+    let h70 = us_per_param * 70e9 / 1e6 / 3600.0;
+    println!(
+        "compression throughput: {us_per_param:.2} us/param -> extrapolated 70B wall-clock {h70:.1} h on this single core\n(the paper's <30 min on H100 relies on the same layer-parallel fan-out this pipeline exposes via CompressOpts.threads)"
+    );
+    write_report("table3", arr(report))
+}
+
+// ------------------------------------------------------------- Table 4
+
+/// W8A16 vs W8A8 (dynamic activation quantization, paper Table 4).
+pub fn table4() -> Result<()> {
+    println!("\n=== Table 4: weight-only (W8A16) vs weight+activation (W8A8) PPL ===");
+    let ctx = EvalCtx::load()?;
+    let mut report = Vec::new();
+    println!("{:<6} {:<10} {:>6} {:>10} {:>10}", "Model", "Method", "Bits", "W8A16", "W8A8");
+    for size in sizes() {
+        let model = load_size(&size)?;
+        for bits in [3.9f64, 3.0, 2.0] {
+            let (m, _, eff, _) = entquant_at(&model, bits, Format::F8E4M3, None)?;
+            let p16 = perplexity(&m, &ctx.valid, 128, ctx.windows);
+            let p8 =
+                perplexity_aq(&m, &ctx.valid, 128, ctx.windows, ActQuant::Dynamic(Format::F8E4M3));
+            println!("{size:<6} {:<10} {eff:>6.2} {p16:>10.3} {p8:>10.3}", "entquant");
+            report.push(obj(vec![
+                ("model", s(&size)),
+                ("bits", num(eff)),
+                ("w8a16", num(p16)),
+                ("w8a8", num(p8)),
+            ]));
+        }
+    }
+    write_report("table4", arr(report))
+}
+
+// ------------------------------------------------------------- Figure 1
+
+/// Instruction-tuned model under compression (paper Fig 1 / Table E.1).
+pub fn fig1() -> Result<()> {
+    println!("\n=== Figure 1 / Table E.1: instruction-tuned model, advanced benchmarks ===");
+    let art = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{art}/model_M_instruct.eqw"))?;
+    let suite = TaskSuite::load(&format!("{art}/corpus/tasks_instruct.json"))?;
+    let base_suite = TaskSuite::load(&format!("{art}/corpus/tasks_base.json"))?;
+    let items = env_usize("EQ_ITEMS", 10);
+    let mut report = Vec::new();
+    println!("{:<10} {:>6} {:>13} {:>10}", "Method", "Bits", "InstructAcc%", "BaseAcc%");
+    let mut row = |name: &str, bits: f64, m: &Model| {
+        let (per, avg) = suite.evaluate(m, items);
+        let (_, base_avg) = base_suite.evaluate(m, items);
+        println!("{name:<10} {bits:>6.2} {:>13.1} {:>10.1}", avg * 100.0, base_avg * 100.0);
+        report.push(obj(vec![
+            ("method", s(name)),
+            ("bits", num(bits)),
+            ("instruct_acc", num(avg * 100.0)),
+            ("base_acc", num(base_avg * 100.0)),
+            (
+                "per_task",
+                arr(per.iter().map(|(n, a)| obj(vec![("task", s(n)), ("acc", num(a * 100.0))]))),
+            ),
+        ]));
+    };
+    row("base", 16.0, &model);
+    for bits in [3.9f64, 3.0, 2.2] {
+        let (m, _, eff, _) = entquant_at(&model, bits, Format::F8E4M3, None)?;
+        row("entquant", eff, &m);
+    }
+    write_report("fig1", arr(report))
+}
+
+// ------------------------------------------------------------- Figure 4
+
+/// Memory-perplexity Pareto front (paper Figure 4).
+pub fn fig4() -> Result<()> {
+    println!("\n=== Figure 4: memory-perplexity Pareto front ===");
+    let ctx = EvalCtx::load()?;
+    let mut report = Vec::new();
+    println!("{:<6} {:>8} {:>10} {:>12}", "Model", "Bits", "PPL", "Size(KiB)");
+    for size in sizes() {
+        let model = load_size(&size)?;
+        for bits in [6.5f64, 5.0, 3.9, 3.0, 2.5, 2.1, 1.7, 1.4] {
+            let (cm, rep) = compress_model(
+                &model,
+                &CompressOpts { target_bits: Some(bits), ..Default::default() },
+            )?;
+            let m = cm.to_model()?;
+            let ppl = perplexity(&m, &ctx.valid, 128, ctx.windows);
+            let kib = (rep.effective_bits_per_param / 8.0) * rep.params_compressed as f64 / 1024.0;
+            println!("{size:<6} {:>8.2} {ppl:>10.3} {kib:>12.1}", rep.effective_bits_per_param);
+            report.push(obj(vec![
+                ("model", s(&size)),
+                ("bits", num(rep.effective_bits_per_param)),
+                ("ppl", num(ppl)),
+                ("kib", num(kib)),
+            ]));
+        }
+    }
+    write_report("fig4", arr(report))
+}
+
+// ------------------------------------------------------------- Figure 5
+
+/// Inference throughput/latency/peak-memory (paper Fig 5 / F.1-F.3).
+pub fn fig5() -> Result<()> {
+    println!("\n=== Figure 5 / F.1-F.3: serving throughput by residency mode ===");
+    let art = entquant::artifacts_dir();
+    let model = load_size("M")?;
+    let (cm, _) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )?;
+    let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
+    let max_new = env_usize("EQ_MAX_NEW", 16);
+    let mut report = Vec::new();
+    println!(
+        "{:<14} {:>6} {:>12} {:>14} {:>12} {:>14}",
+        "Mode", "Batch", "TTFT(ms)", "Decode tok/s", "ANS(ms)", "ResidentMiB"
+    );
+    for residency in [
+        Residency::Bf16Resident,
+        Residency::F8Resident,
+        Residency::EntQuant,
+        Residency::DiskOffload,
+    ] {
+        for batch_n in [1usize, 4] {
+            let rt = Runtime::new(&art)?;
+            let engine =
+                ServingEngine::new(rt, cm.clone(), EngineOpts { residency, ..Default::default() })?;
+            let reqs: Vec<Request> = (0..batch_n)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: valid[i * 97..i * 97 + 64].to_vec(),
+                    max_new_tokens: max_new,
+                })
+                .collect();
+            let batch = &pack(&reqs, &[(batch_n.max(1), 128), (4, 128)])[0];
+            let (_, m) = engine.generate(batch, max_new)?;
+            let tok_s = (m.decode_tokens * batch_n) as f64 / (m.decode_ms / 1e3);
+            let mib = engine.resident_weight_bytes() as f64 / (1 << 20) as f64;
+            println!(
+                "{:<14} {batch_n:>6} {:>12.0} {:>14.1} {:>12.0} {:>14.2}",
+                format!("{residency:?}"),
+                m.ttft_ms,
+                tok_s,
+                m.ans_decode_ms,
+                mib
+            );
+            report.push(obj(vec![
+                ("mode", s(&format!("{residency:?}"))),
+                ("batch", num(batch_n as f64)),
+                ("ttft_ms", num(m.ttft_ms)),
+                ("decode_tok_s", num(tok_s)),
+                ("ans_ms", num(m.ans_decode_ms)),
+                ("resident_mib", num(mib)),
+            ]));
+        }
+    }
+    write_report("fig5", arr(report))
+}
+
+// ------------------------------------------------------------- Figure 6
+
+/// Float8 vs Int8 and super-weight handling (paper Fig 6 / Table G.1).
+pub fn fig6() -> Result<()> {
+    println!("\n=== Figure 6 / Table G.1: Float8 vs Int8, super-weight exclusion ===");
+    let ctx = EvalCtx::load()?;
+    let mut model = load_size("S")?;
+    // plant a LLaMA-style super weight in an early down-projection so the
+    // ablation exercises the paper's phenomenon (DESIGN.md substitution)
+    superweight::plant_super_weight(&mut model, 1, 60.0);
+    let probe = superweight::detect(&model, f32::INFINITY);
+    let threshold = probe.activation_maxima.iter().cloned().fold(0.0f32, f32::max) / 2.0;
+    let mut report = Vec::new();
+    println!("{:<10} {:<8} {:>6} {:>10} {:>10}", "Format", "SW", "Bits", "PPL", "Excluded");
+    for fmt in [Format::F8E4M3, Format::Int8] {
+        for (sw, sw_label) in [(None, "off"), (Some(threshold), "on")] {
+            for bits in [4.0f64, 3.0, 2.0] {
+                let (m, _, eff, rep) = entquant_at(&model, bits, fmt, sw)?;
+                let ppl = perplexity(&m, &ctx.valid, 128, ctx.windows);
+                println!(
+                    "{:<10} {sw_label:<8} {eff:>6.2} {ppl:>10.3} {:>10}",
+                    fmt.name(),
+                    rep.excluded_blocks.len()
+                );
+                report.push(obj(vec![
+                    ("fmt", s(fmt.name())),
+                    ("sw", s(sw_label)),
+                    ("bits", num(eff)),
+                    ("ppl", num(ppl)),
+                    ("excluded", num(rep.excluded_blocks.len() as f64)),
+                ]));
+            }
+        }
+    }
+    write_report("fig6", arr(report))
+}
+
+// ------------------------------------------------------------- Fig A.1
+
+/// lambda vs entropy map across models (paper Figure A.1).
+pub fn fig_a1() -> Result<()> {
+    println!("\n=== Figure A.1: lambda vs mean entropy (model-independence) ===");
+    let mut report = Vec::new();
+    println!("{:<6} {:>10} {:>10}", "Model", "lambda", "H(bits)");
+    for size in sizes() {
+        let model = load_size(&size)?;
+        for lam in [0.01f64, 0.1, 1.0, 10.0, 100.0, 1000.0] {
+            let (_, rep) = compress_model(&model, &CompressOpts { lam, ..Default::default() })?;
+            println!("{size:<6} {lam:>10.2} {:>10.3}", rep.mean_entropy_bits);
+            report.push(obj(vec![
+                ("model", s(&size)),
+                ("lam", num(lam)),
+                ("entropy", num(rep.mean_entropy_bits)),
+            ]));
+        }
+    }
+    println!("(log-linear, near-overlapping curves across sizes = the paper's clustering)");
+    write_report("figA1", arr(report))
+}
+
+// ------------------------------------------------------------- Fig B.1
+
+/// sparsity vs entropy (paper Figure B.1).
+pub fn fig_b1() -> Result<()> {
+    println!("\n=== Figure B.1: sparsity vs entropy ===");
+    let mut report = Vec::new();
+    println!("{:<6} {:>10} {:>10} {:>10}", "Model", "lambda", "H(bits)", "Sparsity");
+    for size in sizes() {
+        let model = load_size(&size)?;
+        for lam in [0.1f64, 1.0, 10.0, 100.0, 1000.0] {
+            let (_, rep) = compress_model(&model, &CompressOpts { lam, ..Default::default() })?;
+            println!(
+                "{size:<6} {lam:>10.1} {:>10.3} {:>10.3}",
+                rep.mean_entropy_bits, rep.mean_sparsity
+            );
+            report.push(obj(vec![
+                ("model", s(&size)),
+                ("lam", num(lam)),
+                ("entropy", num(rep.mean_entropy_bits)),
+                ("sparsity", num(rep.mean_sparsity)),
+            ]));
+        }
+    }
+    write_report("figB1", arr(report))
+}
+
+// ---------------------------------------------------- §A.1 ablation
+
+/// Block-joint vs layer-wise ANS framing (paper §A.1: ~50% speedup).
+pub fn ablate_blockwise() -> Result<()> {
+    println!("\n=== §A.1 ablation: block-joint vs layer-wise ANS framing ===");
+    use entquant::ans::Bitstream;
+    let model = load_size("M")?;
+    let (cm, _) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )?;
+    // block-joint: one stream per block (what the engine ships)
+    let t0 = std::time::Instant::now();
+    let mut joint_bytes = 0usize;
+    for _ in 0..3 {
+        for b in 0..cm.blocks.len() {
+            let mut buf = vec![0u8; cm.blocks[b].n_symbols()];
+            cm.decode_block_into(b, &mut buf, 1)?;
+            joint_bytes += buf.len();
+        }
+    }
+    let joint_s = t0.elapsed().as_secs_f64();
+    // layer-wise: re-frame each layer as its own stream (7x tables, 7x
+    // stream setups per block)
+    let q = cm.to_qmodel()?;
+    let per_layer: Vec<Bitstream> = q
+        .blocks
+        .iter()
+        .flat_map(|b| b.linears.iter().map(|l| Bitstream::encode(&l.symbols, 1 << 18)))
+        .collect();
+    let t1 = std::time::Instant::now();
+    let mut layer_bytes = 0usize;
+    for _ in 0..3 {
+        for bs in &per_layer {
+            let mut buf = vec![0u8; bs.n_symbols];
+            bs.decode_into(&mut buf, 1).map_err(|e| anyhow!(e))?;
+            layer_bytes += buf.len();
+        }
+    }
+    let layer_s = t1.elapsed().as_secs_f64();
+    let joint_mbs = joint_bytes as f64 / 1e6 / joint_s;
+    let layer_mbs = layer_bytes as f64 / 1e6 / layer_s;
+    println!(
+        "block-joint: {joint_mbs:.1} MB/s   layer-wise: {layer_mbs:.1} MB/s   speedup {:.0}%",
+        (joint_mbs / layer_mbs - 1.0) * 100.0
+    );
+    let meta_joint: usize = cm
+        .blocks
+        .iter()
+        .map(|b| b.bitstream.serialized_len() - b.bitstream.payload.len())
+        .sum();
+    let meta_layer: usize =
+        per_layer.iter().map(|b| b.serialized_len() - b.payload.len()).sum();
+    println!("metadata bytes: joint {meta_joint}, layer-wise {meta_layer}");
+    write_report(
+        "ablate_blockwise",
+        obj(vec![
+            ("joint_mb_s", num(joint_mbs)),
+            ("layer_mb_s", num(layer_mbs)),
+            ("meta_joint", num(meta_joint as f64)),
+            ("meta_layer", num(meta_layer as f64)),
+        ]),
+    )
+}

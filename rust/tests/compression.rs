@@ -1,0 +1,165 @@
+//! Integration tests over the compression stack on the *trained*
+//! checkpoints: rate-distortion behaviour, baselines ordering, and the
+//! paper's headline qualitative claims at small scale.
+
+use entquant::baselines::{self, Method};
+use entquant::eval::perplexity;
+use entquant::model::load_eqw;
+use entquant::quant::Format;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn ready() -> bool {
+    let dir = entquant::artifacts_dir();
+    std::path::Path::new(&format!("{dir}/model_S.eqw")).exists()
+        && std::path::Path::new(&format!("{dir}/corpus/valid.bin")).exists()
+}
+
+#[test]
+fn trained_model_ppl_is_low_and_degrades_gracefully() {
+    if !ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{dir}/model_S.eqw")).unwrap();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let base = perplexity(&model, &valid, 128, 3);
+    assert!(base < 3.0, "trained S model should have low PPL on its corpus: {base}");
+
+    // ~4 effective bits: near-lossless (paper Table 2 top group)
+    let (cm, rep) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(4.0), ..Default::default() },
+    )
+    .unwrap();
+    let p4 = perplexity(&cm.to_model().unwrap(), &valid, 128, 3);
+    assert!(p4 < base * 1.25, "4-bit EntQuant should be near-lossless: {p4} vs {base}");
+    assert!(rep.mean_entropy_bits < 4.8);
+
+    // ~2 effective bits: degraded but functional (the paper's headline)
+    let (cm2, rep2) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(2.1), ..Default::default() },
+    )
+    .unwrap();
+    let p2 = perplexity(&cm2.to_model().unwrap(), &valid, 128, 3);
+    assert!(rep2.mean_entropy_bits < 3.0, "{}", rep2.mean_entropy_bits);
+    assert!(p2.is_finite() && p2 < 60.0, "2-bit EntQuant must not collapse: {p2}");
+    assert!(p2 > p4, "more compression, more perplexity");
+}
+
+#[test]
+fn entquant_2bit_beats_hqq_2bit() {
+    // the paper's central Table 2 claim
+    if !ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{dir}/model_S.eqw")).unwrap();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+
+    let (cm, _) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(2.1), ..Default::default() },
+    )
+    .unwrap();
+    let p_eq = perplexity(&cm.to_model().unwrap(), &valid, 128, 3);
+
+    let hqq = baselines::apply(&model, &Method::Hqq { bits: 2, group: 64 }, None).unwrap();
+    let p_hqq = perplexity(&hqq.model, &valid, 128, 3);
+
+    assert!(
+        p_eq < p_hqq,
+        "EntQuant@2.1 ({p_eq:.2}) must beat HQQ-2b-g64 ({p_hqq:.2})"
+    );
+}
+
+#[test]
+fn four_bit_methods_all_close_to_base() {
+    // paper: "at 4 bits, all methods perform similarly well"
+    if !ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{dir}/model_S.eqw")).unwrap();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let base = perplexity(&model, &valid, 128, 3);
+    for method in [
+        Method::Nf4 { group: 64 },
+        Method::Hqq { bits: 4, group: 64 },
+        Method::Float8Absmax { fmt: Format::F8E4M3 },
+    ] {
+        let r = baselines::apply(&model, &method, None).unwrap();
+        let p = perplexity(&r.model, &valid, 128, 3);
+        assert!(p < base * 1.2, "{method:?}: {p} vs base {base}");
+    }
+}
+
+#[test]
+fn compressed_file_roundtrip_on_trained_model() {
+    if !ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{dir}/model_S.eqw")).unwrap();
+    let (cm, rep) = compress_model(
+        &model,
+        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join("eq_it_roundtrip.eqz");
+    cm.save(path.to_str().unwrap()).unwrap();
+    let cm2 = entquant::store::container::CompressedModel::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(cm.serialize(), cm2.serialize());
+    // the .eqz on disk really is ~bits/8 per linear param + f32 sides
+    let meta = std::fs::metadata(&path).unwrap();
+    let linear_bytes = rep.effective_bits_per_param / 8.0 * rep.params_compressed as f64;
+    let f32_side = (model.embed.data.len()
+        + model.head.data.len()
+        + model.config.d_model * (2 * model.config.n_layers + 1))
+        * 4;
+    assert!(
+        (meta.len() as f64) < linear_bytes + f32_side as f64 * 1.1 + 64_000.0,
+        "file larger than accounted: {} vs {}",
+        meta.len(),
+        linear_bytes + f32_side as f64
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn superweight_exclusion_improves_int8_at_low_bits() {
+    // paper Figure 6: Int8 + SW handling recovers performance
+    if !ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let mut model = load_eqw(&format!("{dir}/model_S.eqw")).unwrap();
+    entquant::quant::superweight::plant_super_weight(&mut model, 0, 80.0);
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let probe = entquant::quant::superweight::detect(&model, f32::INFINITY);
+    let th = probe.activation_maxima.iter().cloned().fold(0.0f32, f32::max) / 2.0;
+
+    let run = |sw: Option<f32>| {
+        let (cm, rep) = compress_model(
+            &model,
+            &CompressOpts {
+                target_bits: Some(3.0),
+                fmt: Format::Int8,
+                superweight_threshold: sw,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (perplexity(&cm.to_model().unwrap(), &valid, 128, 3), rep.excluded_blocks.len())
+    };
+    let (p_off, n_off) = run(None);
+    let (p_on, n_on) = run(Some(th));
+    assert_eq!(n_off, 0);
+    assert!(n_on >= 1, "super weight must be detected");
+    assert!(p_on <= p_off * 1.05, "SW exclusion should not hurt: {p_on} vs {p_off}");
+}

@@ -1,0 +1,154 @@
+//! Integration tests over the full stack: compress -> store -> PJRT
+//! serving engine -> generate, cross-checked against the offline f32
+//! reference forward.  Skipped (with a note) when `make artifacts` has
+//! not been run.
+
+use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::model::{load_eqw, Forward};
+use entquant::runtime::Runtime;
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+fn artifacts_ready() -> bool {
+    let dir = entquant::artifacts_dir();
+    std::path::Path::new(&format!("{dir}/manifest.json")).exists()
+        && std::path::Path::new(&format!("{dir}/model_M.eqw")).exists()
+}
+
+fn compressed_m(lam: f64) -> CompressedModel {
+    let dir = entquant::artifacts_dir();
+    let model = load_eqw(&format!("{dir}/model_M.eqw")).unwrap();
+    let (cm, _) = compress_model(
+        &model,
+        &CompressOpts { lam, max_iters: 8, ..Default::default() },
+    )
+    .unwrap();
+    cm
+}
+
+#[test]
+fn engine_prefill_matches_offline_forward() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; run `make artifacts` (skipping)");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let cm = compressed_m(0.05);
+    let offline = cm.to_model().unwrap();
+
+    let rt = Runtime::new(&dir).unwrap();
+    let engine = ServingEngine::new(rt, cm, EngineOpts::default()).unwrap();
+
+    // full-length prompt (no padding) so offline forward is directly comparable
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let prompt = valid[..128].to_vec();
+    let batch = &pack(
+        &[Request { id: 0, prompt: prompt.clone(), max_new_tokens: 1 }],
+        &[(1, 128)],
+    )[0];
+    assert_eq!(batch.starts[0], 0);
+
+    let mut metrics = entquant::coordinator::Metrics {
+        prefill_ms: 0.0,
+        decode_ms: 0.0,
+        decode_tokens: 0,
+        ans_decode_ms: 0.0,
+        exec_ms: 0.0,
+        ttft_ms: 0.0,
+    };
+    let (logits, _) = engine.prefill(batch, &mut metrics).unwrap();
+    let served = logits.as_f32();
+    let vocab = 256usize;
+
+    let fwd = Forward::new(&offline);
+    let want = fwd.logits(&prompt);
+    // compare the last position's logits
+    let got_last = &served[(128 - 1) * vocab..128 * vocab];
+    let want_last = want.row(want.rows - 1);
+    let spread = want_last.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    for j in 0..vocab {
+        assert!(
+            (got_last[j] - want_last[j]).abs() < 2e-2 * spread.max(1.0),
+            "logit {j}: served {} vs offline {}",
+            got_last[j],
+            want_last[j]
+        );
+    }
+}
+
+#[test]
+fn pipelined_and_scalar_decode_agree() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let cm = compressed_m(0.05);
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let reqs = vec![Request { id: 0, prompt: valid[..40].to_vec(), max_new_tokens: 6 }];
+    let batch = &pack(&reqs, &[(1, 128)])[0];
+
+    let run = |pipeline: bool| {
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = ServingEngine::new(
+            rt,
+            compressed_m(0.05),
+            EngineOpts { pipeline, ..Default::default() },
+        )
+        .unwrap();
+        engine.generate(batch, 6).unwrap().0
+    };
+    assert_eq!(run(true), run(false), "pipeline must not change results");
+    let _ = cm;
+}
+
+#[test]
+fn residency_modes_agree_on_outputs() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let reqs = vec![
+        Request { id: 0, prompt: valid[..32].to_vec(), max_new_tokens: 5 },
+        Request { id: 1, prompt: valid[50..90].to_vec(), max_new_tokens: 5 },
+    ];
+    let batch = &pack(&reqs, &[(4, 128)])[0];
+    let mut outs = Vec::new();
+    for residency in [Residency::EntQuant, Residency::F8Resident, Residency::DiskOffload] {
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = ServingEngine::new(
+            rt,
+            compressed_m(0.05),
+            EngineOpts { residency, ..Default::default() },
+        )
+        .unwrap();
+        outs.push(engine.generate(batch, 5).unwrap().0);
+    }
+    assert_eq!(outs[0], outs[1], "EntQuant vs F8Resident");
+    assert_eq!(outs[0], outs[2], "EntQuant vs DiskOffload");
+}
+
+#[test]
+fn generation_is_text_like() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    // a lightly-compressed trained model should continue corpus text with
+    // printable ascii, mostly lowercase words
+    let dir = entquant::artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let engine = ServingEngine::new(rt, compressed_m(0.02), EngineOpts::default()).unwrap();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let batch = &pack(
+        &[Request { id: 0, prompt: valid[..64].to_vec(), max_new_tokens: 16 }],
+        &[(1, 128)],
+    )[0];
+    let (outs, metrics) = engine.generate(batch, 16).unwrap();
+    assert_eq!(outs[0].len(), 16);
+    let printable = outs[0].iter().filter(|&&b| (32..127).contains(&b)).count();
+    assert!(printable >= 14, "output not text-like: {:?}", outs[0]);
+    assert!(metrics.ttft_ms > 0.0 && metrics.decode_tokens > 0);
+}
