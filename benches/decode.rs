@@ -40,11 +40,40 @@ fn main() {
         });
     }
 
-    println!("\n== encode throughput ==");
+    // the tentpole comparison: chunk-parallel decode on the shared pool
+    // vs the scalar loop (nvCOMP parallelizes across GPU blocks; we fan
+    // out 256 KiB chunks across OS threads)
+    let max_threads = entquant::parallel::default_threads();
+    println!("\n== decode throughput vs threads (chunk=256KiB, H~3.3, {max_threads} available) ==");
+    let bs = Bitstream::encode(&data, 256 * 1024);
+    let mut thread_counts = vec![1usize, 2, 4, 8];
+    thread_counts.retain(|&t| t <= max_threads.max(1));
+    if !thread_counts.contains(&max_threads) {
+        thread_counts.push(max_threads);
+    }
+    let mut base = 0.0;
+    for &t in &thread_counts {
+        let mut out = vec![0u8; n];
+        let mbs = throughput(&format!("decode threads={t}"), n, 5, || {
+            bs.decode_into(&mut out, t).unwrap()
+        });
+        if t == 1 {
+            base = mbs;
+        } else if base > 0.0 {
+            println!("{:<44}   -> {:.2}x vs scalar", "", mbs / base);
+        }
+    }
+
+    println!("\n== encode throughput vs threads ==");
     let data = skewed(n, 10.0, 11);
-    bench("rans encode 4MiB", 5, || {
-        let _ = Bitstream::encode(&data, 256 * 1024);
-    });
+    let scalar_ser = Bitstream::encode(&data, 256 * 1024).serialize();
+    for &t in &thread_counts {
+        bench(&format!("rans encode 4MiB threads={t}"), 5, || {
+            let _ = Bitstream::encode_parallel(&data, 256 * 1024, t);
+        });
+        // parallel framing must be byte-identical to the scalar path
+        assert_eq!(Bitstream::encode_parallel(&data, 256 * 1024, t).serialize(), scalar_ser);
+    }
 
     println!("\n== ANS vs Huffman in the sub-1-bit regime (the paper's motivation) ==");
     let mut rare = vec![0u8; 1 << 20];

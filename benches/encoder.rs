@@ -5,6 +5,8 @@
 mod common;
 
 use common::{artifacts_ready, bench};
+use entquant::model::loader::synthetic_model;
+use entquant::model::Config;
 use entquant::quant::Format;
 use entquant::rd::{encode_layer, EncodeOpts};
 use entquant::store::pipeline::{compress_model, CompressOpts};
@@ -33,6 +35,49 @@ fn main() {
             r.min_ms * 1e3 / params as f64
         );
     }
+
+    // the tentpole comparison: layer-parallel RD fan-out on the shared
+    // pool vs the scalar loop (works without artifacts: synthetic model)
+    let max_threads = entquant::parallel::default_threads();
+    println!("\n== whole-model pipeline vs threads (synthetic, {max_threads} available) ==");
+    let synth = synthetic_model(
+        Config {
+            name: "bench".into(),
+            vocab: 256,
+            d_model: 96,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 256,
+            max_ctx: 64,
+        },
+        42,
+    );
+    let mut thread_counts = vec![1usize, 2, 4];
+    thread_counts.retain(|&t| t <= max_threads.max(1));
+    if !thread_counts.contains(&max_threads) {
+        thread_counts.push(max_threads);
+    }
+    let mut serialized: Vec<Vec<u8>> = Vec::new();
+    let mut base_ms = 0.0;
+    for &t in &thread_counts {
+        let mut last: Option<Vec<u8>> = None;
+        let r = bench(&format!("compress synthetic threads={t}"), 3, || {
+            let (cm, _) = compress_model(
+                &synth,
+                &CompressOpts { lam: 1.0, max_iters: 20, threads: t, ..Default::default() },
+            )
+            .unwrap();
+            last = Some(cm.serialize());
+        });
+        if t == 1 {
+            base_ms = r.min_ms;
+        } else if base_ms > 0.0 {
+            println!("{:<44}   -> {:.2}x vs scalar", "", base_ms / r.min_ms);
+        }
+        serialized.push(last.expect("bench ran at least once"));
+    }
+    // any thread count must produce the identical container
+    assert!(serialized.windows(2).all(|w| w[0] == w[1]), "threads changed the container bytes");
 
     if artifacts_ready() {
         println!("\n== whole-model pipeline (M checkpoint) ==");

@@ -15,15 +15,21 @@ use entquant::store::pipeline::{compress_model, CompressOpts};
 
 fn main() -> anyhow::Result<()> {
     let art = entquant::artifacts_dir();
+    // layer-parallel compression + chunk-parallel ANS decode both ride
+    // the shared pool; override with ENTQUANT_THREADS=N
+    let threads = entquant::parallel::default_threads();
     let model = entquant::model::load_eqw(&format!("{art}/model_M.eqw"))?;
     let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
-    println!("[1/4] loaded trained M checkpoint: {} params", model.config.params());
+    println!(
+        "[1/4] loaded trained M checkpoint: {} params ({threads} threads)",
+        model.config.params()
+    );
 
     // -- compress (paper Algorithm 1, data-free)
     let t0 = std::time::Instant::now();
     let (cm, rep) = compress_model(
         &model,
-        &CompressOpts { target_bits: Some(3.0), ..Default::default() },
+        &CompressOpts { target_bits: Some(3.0), threads, ..Default::default() },
     )?;
     println!(
         "[2/4] compressed in {:.1}s: {:.2} effective bits/param (entropy {:.2}), distortion {:.4}",
@@ -42,7 +48,12 @@ fn main() -> anyhow::Result<()> {
     let engine = ServingEngine::new(
         rt,
         cm,
-        EngineOpts { residency: Residency::EntQuant, pipeline: true, ..Default::default() },
+        EngineOpts {
+            residency: Residency::EntQuant,
+            pipeline: true,
+            decode_threads: threads,
+            ..Default::default()
+        },
     )?;
 
     let requests: Vec<Request> = (0..8)

@@ -2,22 +2,42 @@
 //!
 //! Mirrors the nvCOMP framing the paper uses (§A.1): symbols are split
 //! into 256 KiB chunks, each encoded independently against a *single*
-//! per-bitstream frequency table, so chunks decode in parallel (nvCOMP
-//! parallelizes across GPU blocks; we use a thread pool / scalar loop).
+//! per-bitstream frequency table, so chunks encode and decode in
+//! parallel (nvCOMP parallelizes across GPU blocks; we fan out across
+//! the shared `parallel::Pool`).
 //!
 //! Wire layout (little endian):
 //!   magic  b"EQZB"
+//!   u32    crc32 over everything after this field (integrity check:
+//!          corrupt or truncated streams deserialize to Err, never panic)
 //!   u32    n_symbols_total
 //!   u32    chunk_size (symbols per chunk)
 //!   u32    n_chunks
 //!   [u32]  compressed byte length per chunk
 //!   512B   frequency table
 //!   bytes  chunk payloads, concatenated
+//!
+//! Robustness contract (exercised by tests/corruption.rs): every public
+//! decode/deserialize entry point returns `Err` on malformed input —
+//! attacker-controlled `chunk_lens`, header fields, tables, or payload
+//! bytes must never cause a panic or a silent mis-decode.
 
 use super::rans::{decode_chunk, encode_chunk, FreqTable};
+use crate::parallel::Pool;
+use crate::util::crc32;
 
 pub const DEFAULT_CHUNK: usize = 256 * 1024; // symbols per chunk (paper §A.1)
+/// Largest chunk the framing accepts (16x the default; every in-repo
+/// encoder uses <= 1 MiB).  Bounds the per-chunk decode allocation an
+/// untrusted header can demand.  Note: like any entropy-coded format, a
+/// *valid* stream can still legitimately expand enormously (an all-zero
+/// layer compresses ~20 bytes/chunk), so callers decoding fully
+/// untrusted streams should additionally budget `n_symbols` at the
+/// application level.
+pub const MAX_CHUNK: usize = 16 * DEFAULT_CHUNK;
 const MAGIC: &[u8; 4] = b"EQZB";
+/// magic + crc + n_symbols + chunk_size + n_chunks
+const HEADER_LEN: usize = 20;
 
 #[derive(Clone)]
 pub struct Bitstream {
@@ -28,115 +48,200 @@ pub struct Bitstream {
     pub payload: Vec<u8>,
 }
 
+/// One decode job: (payload offset, payload len, symbols in this chunk).
+type ChunkJob = (usize, usize, usize);
+
+/// `ceil(a / b)` without the 1.73+ `div_ceil`; overflow-free for any
+/// operands (b must be nonzero).
+fn ceil_div(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
 impl Bitstream {
-    /// Encode `symbols` into a chunked bitstream.
+    /// Encode `symbols` into a chunked bitstream (scalar path).
     pub fn encode(symbols: &[u8], chunk_size: usize) -> Self {
-        assert!(chunk_size > 0);
+        Self::encode_parallel(symbols, chunk_size, 1)
+    }
+
+    /// Encode with chunks fanned out across `threads` workers.  The
+    /// output is byte-identical to the scalar path for any thread count
+    /// (chunks are independent and reassembled in order).
+    pub fn encode_parallel(symbols: &[u8], chunk_size: usize, threads: usize) -> Self {
+        // from_data guarantees nonzero frequency for every present
+        // symbol, so the coverage scan in the external-table entry
+        // point is unnecessary here
         let table = FreqTable::from_data(symbols);
-        Self::encode_with_table(symbols, chunk_size, table)
+        Self::encode_chunks(symbols, chunk_size, table, threads)
     }
 
     pub fn encode_with_table(symbols: &[u8], chunk_size: usize, table: FreqTable) -> Self {
-        let mut chunk_lens = Vec::new();
-        let mut payload = Vec::new();
-        if symbols.is_empty() {
-            return Bitstream { n_symbols: 0, chunk_size, chunk_lens, table, payload };
+        Self::encode_with_table_parallel(symbols, chunk_size, table, 1)
+    }
+
+    /// External-table entry point: validates that `table` covers every
+    /// symbol actually present (a zero-frequency symbol would mis-encode
+    /// and divide by zero) before encoding.  The internal
+    /// `encode_parallel` path skips this scan — its table comes from
+    /// `FreqTable::from_data`, which guarantees coverage.
+    pub fn encode_with_table_parallel(
+        symbols: &[u8],
+        chunk_size: usize,
+        table: FreqTable,
+        threads: usize,
+    ) -> Self {
+        let mut present = [false; 256];
+        for &s in symbols {
+            present[s as usize] = true;
         }
-        for chunk in symbols.chunks(chunk_size) {
-            let enc = encode_chunk(chunk, &table);
+        for sym in 0..256 {
+            assert!(
+                !present[sym] || table.freq[sym] > 0,
+                "symbol {sym} present in data but has zero frequency in table"
+            );
+        }
+        Self::encode_chunks(symbols, chunk_size, table, threads)
+    }
+
+    /// Shared encode core; `table` must cover all present symbols.
+    fn encode_chunks(symbols: &[u8], chunk_size: usize, table: FreqTable, threads: usize) -> Self {
+        assert!(
+            chunk_size > 0 && chunk_size <= MAX_CHUNK,
+            "chunk_size must be in 1..={MAX_CHUNK}"
+        );
+        if symbols.is_empty() {
+            return Bitstream {
+                n_symbols: 0,
+                chunk_size,
+                chunk_lens: Vec::new(),
+                table,
+                payload: Vec::new(),
+            };
+        }
+        let chunks: Vec<&[u8]> = symbols.chunks(chunk_size).collect();
+        let encoded: Vec<Vec<u8>> =
+            Pool::new(threads).par_map_indexed(chunks.len(), |i| encode_chunk(chunks[i], &table));
+        let mut chunk_lens = Vec::with_capacity(encoded.len());
+        let mut payload = Vec::with_capacity(encoded.iter().map(Vec::len).sum());
+        for enc in &encoded {
             chunk_lens.push(enc.len() as u32);
-            payload.extend_from_slice(&enc);
+            payload.extend_from_slice(enc);
         }
         Bitstream { n_symbols: symbols.len(), chunk_size, chunk_lens, table, payload }
     }
 
-    /// Decode the whole stream (scalar path).
-    pub fn decode(&self) -> Result<Vec<u8>, String> {
-        let mut out = Vec::with_capacity(self.n_symbols);
+    /// Validate the chunk layout and return one decode job per chunk.
+    /// Every slice boundary the decoder will touch is checked here, so
+    /// corrupt `chunk_lens` / `chunk_size` / `n_symbols` combinations
+    /// surface as `Err` instead of a slice panic.
+    fn chunk_jobs(&self) -> Result<Vec<ChunkJob>, String> {
+        if self.n_symbols == 0 {
+            if !self.chunk_lens.is_empty() || !self.payload.is_empty() {
+                return Err("corrupt bitstream: empty stream with chunk data".into());
+            }
+            return Ok(Vec::new());
+        }
+        if self.chunk_size == 0 || self.chunk_size > MAX_CHUNK {
+            return Err(format!(
+                "corrupt bitstream: chunk_size {} outside 1..={MAX_CHUNK}",
+                self.chunk_size
+            ));
+        }
+        let want_chunks = ceil_div(self.n_symbols, self.chunk_size);
+        if self.chunk_lens.len() != want_chunks {
+            return Err(format!(
+                "corrupt bitstream: {} chunks for {} symbols of chunk_size {} (want {})",
+                self.chunk_lens.len(),
+                self.n_symbols,
+                self.chunk_size,
+                want_chunks
+            ));
+        }
+        let mut jobs = Vec::with_capacity(want_chunks);
         let mut off = 0usize;
         let mut remaining = self.n_symbols;
         for &len in &self.chunk_lens {
+            let len = len as usize;
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| "corrupt bitstream: chunk length overflow".to_string())?;
+            if end > self.payload.len() {
+                return Err(format!(
+                    "corrupt bitstream: chunk extends past payload ({end} > {})",
+                    self.payload.len()
+                ));
+            }
             let n = remaining.min(self.chunk_size);
-            let chunk = &self.payload[off..off + len as usize];
-            out.extend_from_slice(&decode_chunk(chunk, n, &self.table)?);
-            off += len as usize;
+            jobs.push((off, len, n));
+            off = end;
             remaining -= n;
         }
+        if off != self.payload.len() {
+            return Err(format!(
+                "corrupt bitstream: {} trailing payload bytes",
+                self.payload.len() - off
+            ));
+        }
+        Ok(jobs)
+    }
+
+    /// Decode the whole stream (scalar path).
+    ///
+    /// Allocates `n_symbols` bytes after the chunk layout validates
+    /// (structural lies like `n_symbols = usize::MAX` are rejected
+    /// first).  A structurally *valid* untrusted stream can still
+    /// demand up to u32::MAX symbols from a few KiB of input — an
+    /// inherent property of entropy coding (cf. zstd bombs); servers
+    /// decoding untrusted streams should budget `n_symbols` before
+    /// calling, or use `decode_into` with a caller-sized buffer.
+    pub fn decode(&self) -> Result<Vec<u8>, String> {
+        self.chunk_jobs()?;
+        let mut out = vec![0u8; self.n_symbols];
+        self.decode_into(&mut out, 1)?;
         Ok(out)
     }
 
     /// Decode into a caller-provided buffer (the serving double-buffer
     /// path: no allocation on the request path).  Chunks decode across
-    /// `threads` OS threads when the stream is large enough.
+    /// `threads` workers of the shared pool; the result is identical to
+    /// the scalar path for any thread count.
     pub fn decode_into(&self, out: &mut [u8], threads: usize) -> Result<(), String> {
-        assert_eq!(out.len(), self.n_symbols, "output buffer size mismatch");
-        if self.n_symbols == 0 {
+        if out.len() != self.n_symbols {
+            return Err(format!(
+                "output buffer holds {} bytes but stream has {} symbols",
+                out.len(),
+                self.n_symbols
+            ));
+        }
+        let jobs = self.chunk_jobs()?;
+        if jobs.is_empty() {
             return Ok(());
         }
-        // precompute (payload range, out range) per chunk
-        let mut jobs = Vec::with_capacity(self.chunk_lens.len());
-        let mut off = 0usize;
-        for (i, &len) in self.chunk_lens.iter().enumerate() {
-            let start = i * self.chunk_size;
-            let n = (self.n_symbols - start).min(self.chunk_size);
-            jobs.push((off, len as usize, start, n));
-            off += len as usize;
+        // pair each chunk with its disjoint output slice; chunk_jobs()
+        // guarantees the slice lengths sum to exactly n_symbols
+        let mut tasks: Vec<(ChunkJob, &mut [u8])> = Vec::with_capacity(jobs.len());
+        let mut rest = out;
+        for &job in &jobs {
+            let (head, tail) = rest.split_at_mut(job.2);
+            tasks.push((job, head));
+            rest = tail;
         }
-        if threads <= 1 || jobs.len() == 1 {
-            for &(poff, plen, start, n) in &jobs {
-                let dec = decode_chunk(&self.payload[poff..poff + plen], n, &self.table)?;
-                out[start..start + n].copy_from_slice(&dec);
-            }
-            return Ok(());
-        }
-        // split output into disjoint chunk-aligned slices for the threads
-        let errs: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let mut out_slices: Vec<Option<&mut [u8]>> = Vec::with_capacity(jobs.len());
-        {
-            let mut rest = out;
-            for (i, &(_, _, start, n)) in jobs.iter().enumerate() {
-                let rel = start - (jobs[..i].iter().map(|j| j.3).sum::<usize>());
-                debug_assert_eq!(rel, 0);
-                let (head, tail) = rest.split_at_mut(n);
-                out_slices.push(Some(head));
-                rest = tail;
-            }
-        }
-        let slices = std::sync::Mutex::new(out_slices);
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(jobs.len()) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        break;
-                    }
-                    let (poff, plen, _, n) = jobs[i];
-                    let slice = slices.lock().unwrap()[i].take().unwrap();
-                    match decode_chunk(&self.payload[poff..poff + plen], n, &self.table) {
-                        Ok(dec) => slice.copy_from_slice(&dec),
-                        Err(e) => errs.lock().unwrap().push(e),
-                    }
-                });
-            }
-        });
-        let errs = errs.into_inner().unwrap();
-        if errs.is_empty() {
+        Pool::new(threads).try_for_each(tasks, |_, ((poff, plen, n), slice)| {
+            let dec = decode_chunk(&self.payload[poff..poff + plen], n, &self.table)?;
+            slice.copy_from_slice(&dec);
             Ok(())
-        } else {
-            Err(errs.join("; "))
-        }
+        })
     }
 
     /// Total serialized size in bytes (storage accounting for the
     /// effective-bits-per-parameter numbers in every table).
     pub fn serialized_len(&self) -> usize {
-        4 + 4 + 4 + 4 + 4 * self.chunk_lens.len() + FreqTable::serialized_len() + self.payload.len()
+        HEADER_LEN + 4 * self.chunk_lens.len() + FreqTable::serialized_len() + self.payload.len()
     }
 
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.serialized_len());
         out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&[0u8; 4]); // crc placeholder
         out.extend_from_slice(&(self.n_symbols as u32).to_le_bytes());
         out.extend_from_slice(&(self.chunk_size as u32).to_le_bytes());
         out.extend_from_slice(&(self.chunk_lens.len() as u32).to_le_bytes());
@@ -145,37 +250,76 @@ impl Bitstream {
         }
         self.table.serialize_into(&mut out);
         out.extend_from_slice(&self.payload);
+        let crc = crc32(&out[8..]);
+        out[4..8].copy_from_slice(&crc.to_le_bytes());
         out
     }
 
+    /// Parse a bitstream from `bytes`, returning it plus the number of
+    /// bytes consumed (trailing data is the caller's business).  All
+    /// header fields are cross-validated and the crc32 must match; any
+    /// corruption or truncation yields `Err`.
     pub fn deserialize(bytes: &[u8]) -> Result<(Self, usize), String> {
-        if bytes.len() < 16 || &bytes[..4] != MAGIC {
-            return Err("bad bitstream magic".into());
+        if bytes.len() < HEADER_LEN + FreqTable::serialized_len() || &bytes[..4] != MAGIC {
+            return Err("bad bitstream magic or truncated header".into());
         }
         let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
-        let n_symbols = rd_u32(4) as usize;
-        let chunk_size = rd_u32(8) as usize;
-        let n_chunks = rd_u32(12) as usize;
-        let mut off = 16;
-        if bytes.len() < off + 4 * n_chunks + 512 {
+        let crc_stored = rd_u32(4);
+        let n_symbols = rd_u32(8) as usize;
+        let chunk_size = rd_u32(12) as usize;
+        let n_chunks = rd_u32(16) as usize;
+
+        // structural consistency before any allocation or slicing
+        if n_symbols == 0 {
+            if n_chunks != 0 {
+                return Err("corrupt bitstream: empty stream with chunks".into());
+            }
+        } else {
+            if chunk_size == 0 || chunk_size > MAX_CHUNK {
+                return Err(format!(
+                    "corrupt bitstream: chunk_size {chunk_size} outside 1..={MAX_CHUNK}"
+                ));
+            }
+            if n_chunks != ceil_div(n_symbols, chunk_size) {
+                return Err(format!(
+                    "corrupt bitstream: {n_chunks} chunks for {n_symbols} symbols of chunk_size {chunk_size}"
+                ));
+            }
+        }
+        let lens_bytes = n_chunks
+            .checked_mul(4)
+            .ok_or_else(|| "corrupt bitstream: chunk count overflow".to_string())?;
+        let payload_off = HEADER_LEN
+            .checked_add(lens_bytes)
+            .and_then(|o| o.checked_add(FreqTable::serialized_len()))
+            .ok_or_else(|| "corrupt bitstream: header overflow".to_string())?;
+        let table_off = payload_off - FreqTable::serialized_len();
+        if bytes.len() < payload_off {
             return Err("bitstream truncated (header)".into());
         }
+
         let mut chunk_lens = Vec::with_capacity(n_chunks);
+        let mut total = 0u64;
         for i in 0..n_chunks {
-            chunk_lens.push(rd_u32(off + 4 * i));
+            let l = rd_u32(HEADER_LEN + 4 * i);
+            total += l as u64;
+            chunk_lens.push(l);
         }
-        off += 4 * n_chunks;
-        let table = FreqTable::deserialize(&bytes[off..off + 512])?;
-        off += 512;
-        let total: usize = chunk_lens.iter().map(|&l| l as usize).sum();
-        if bytes.len() < off + total {
+        let total = usize::try_from(total)
+            .map_err(|_| "corrupt bitstream: payload length overflow".to_string())?;
+        let consumed = payload_off
+            .checked_add(total)
+            .ok_or_else(|| "corrupt bitstream: payload length overflow".to_string())?;
+        if bytes.len() < consumed {
             return Err("bitstream truncated (payload)".into());
         }
-        let payload = bytes[off..off + total].to_vec();
-        Ok((
-            Bitstream { n_symbols, chunk_size, chunk_lens, table, payload },
-            off + total,
-        ))
+        if crc32(&bytes[8..consumed]) != crc_stored {
+            return Err("corrupt bitstream: crc32 mismatch".into());
+        }
+
+        let table = FreqTable::deserialize(&bytes[table_off..payload_off])?;
+        let payload = bytes[payload_off..consumed].to_vec();
+        Ok((Bitstream { n_symbols, chunk_size, chunk_lens, table, payload }, consumed))
     }
 }
 
@@ -218,6 +362,16 @@ mod tests {
     }
 
     #[test]
+    fn parallel_encode_is_byte_identical() {
+        let d = data(30_000, 8);
+        let scalar = Bitstream::encode(&d, 1 << 10).serialize();
+        for threads in [2, 4, 7] {
+            let par = Bitstream::encode_parallel(&d, 1 << 10, threads).serialize();
+            assert_eq!(par, scalar, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn serialize_roundtrip() {
         let d = data(5000, 4);
         let bs = Bitstream::encode(&d, 700);
@@ -254,6 +408,41 @@ mod tests {
         let mut ser = Bitstream::encode(&d, 64).serialize();
         ser[0] = b'X';
         assert!(Bitstream::deserialize(&ser).is_err());
+    }
+
+    #[test]
+    fn wrong_buffer_size_is_error_not_panic() {
+        let d = data(1000, 9);
+        let bs = Bitstream::encode(&d, 256);
+        let mut small = vec![0u8; d.len() - 1];
+        assert!(bs.decode_into(&mut small, 1).is_err());
+        let mut big = vec![0u8; d.len() + 1];
+        assert!(bs.decode_into(&mut big, 2).is_err());
+    }
+
+    #[test]
+    fn lying_chunk_lens_is_error_not_panic() {
+        let d = data(4000, 10);
+        let mut bs = Bitstream::encode(&d, 1000);
+        // chunk claims more payload than exists
+        bs.chunk_lens[3] += 50;
+        assert!(bs.decode().is_err());
+        // chunk claims less: trailing payload bytes
+        bs.chunk_lens[3] -= 100;
+        assert!(bs.decode().is_err());
+        // wrong chunk count entirely
+        let mut bs2 = Bitstream::encode(&d, 1000);
+        bs2.chunk_lens.pop();
+        assert!(bs2.decode().is_err());
+        // zero chunk_size with symbols outstanding
+        let mut bs3 = Bitstream::encode(&d, 1000);
+        bs3.chunk_size = 0;
+        assert!(bs3.decode().is_err());
+        // chunk_size beyond the framing cap (alloc-bomb guard)
+        let mut bs4 = Bitstream::encode(&d, 1000);
+        bs4.chunk_size = MAX_CHUNK + 1;
+        bs4.n_symbols = MAX_CHUNK + 1;
+        assert!(bs4.decode().is_err());
     }
 
     #[test]

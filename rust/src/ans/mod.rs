@@ -6,6 +6,6 @@ pub mod bitstream;
 pub mod huffman;
 pub mod rans;
 
-pub use bitstream::{Bitstream, DEFAULT_CHUNK};
+pub use bitstream::{Bitstream, DEFAULT_CHUNK, MAX_CHUNK};
 pub use huffman::Huffman;
 pub use rans::{FreqTable, N_STREAMS, PROB_BITS};

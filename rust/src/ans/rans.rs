@@ -96,11 +96,14 @@ impl FreqTable {
             freq[i] = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]) as u32;
             total += freq[i] as u64;
         }
-        // u16 can't hold 4096? it can (4096 < 65536); but a single symbol
-        // with freq 4096 is representable, fine.
         if total != PROB_SCALE as u64 {
             return Err(format!("freq table sums to {total}, want {PROB_SCALE}"));
         }
+        // A table can sum to 2^12 yet still be the *wrong* table for a
+        // payload (e.g. freq 0 for a symbol the encoder used).  That
+        // cannot be detected here without the payload; `decode_chunk`
+        // catches it via its final-state/consumption checks instead of
+        // silently mis-decoding.
         Ok(Self::from_freqs(freq))
     }
 }
@@ -187,6 +190,24 @@ pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Resu
     let mut tail_states = [x0, x1, x2, x3];
     for idx in n4..n_symbols {
         step!(tail_states[idx % N_STREAMS], out[idx]);
+    }
+
+    // Integrity check: decoding is the exact inverse of encoding, so a
+    // well-formed (payload, n_symbols, table) triple consumes every
+    // input byte and returns every state to the encoder's initial L.
+    // Anything else — truncated/extended payload, a table whose
+    // frequencies disagree with the one used at encode time (including
+    // freq-0 symbols that were present in the data), or a wrong symbol
+    // count — fails here instead of silently mis-decoding.
+    if ip != inp.len() {
+        return Err(format!("rans: {} unconsumed payload bytes (corrupt chunk)", inp.len() - ip));
+    }
+    for (i, &x) in tail_states.iter().enumerate() {
+        if x != RANS_L {
+            return Err(format!(
+                "rans: stream {i} final state {x:#010x} != L (corrupt chunk or wrong freq table)"
+            ));
+        }
     }
     Ok(out)
 }
@@ -300,6 +321,40 @@ mod tests {
         let mut buf = vec![0u8; 512];
         buf[0] = 1; // freq[0] = 1, total = 1 != 4096
         assert!(FreqTable::deserialize(&buf).is_err());
+    }
+
+    #[test]
+    fn wrong_table_is_error_not_silent_misdecode() {
+        // encode against a table that covers symbols {0..=5}; decode with
+        // a valid-looking table (sums to 2^12) that gives those symbols
+        // zero frequency — the satellite-bug scenario where a corrupt
+        // FreqTable passes the sum check but belongs to different data
+        let data = skewed_data(5000, 2.0, 17);
+        let t = FreqTable::from_data(&data);
+        let enc = encode_chunk(&data, &t);
+
+        let mut wrong = [0u32; 256];
+        wrong[200] = PROB_SCALE; // all mass on a symbol absent from `data`
+        let wrong = FreqTable::from_freqs(wrong);
+        assert!(decode_chunk(&enc, data.len(), &wrong).is_err());
+
+        // a mildly perturbed table (still sums to 2^12) must also fail
+        let mut freqs = t.freq;
+        let hi = (0..256).max_by_key(|&s| freqs[s]).unwrap();
+        let lo = (0..256).find(|&s| freqs[s] == 0).unwrap();
+        freqs[hi] -= 1;
+        freqs[lo] += 1;
+        let perturbed = FreqTable::from_freqs(freqs);
+        assert!(decode_chunk(&enc, data.len(), &perturbed).is_err());
+    }
+
+    #[test]
+    fn extended_payload_is_error() {
+        let data = skewed_data(1000, 3.0, 19);
+        let t = FreqTable::from_data(&data);
+        let mut enc = encode_chunk(&data, &t);
+        enc.push(0xAB); // unconsumed trailing byte inside a chunk
+        assert!(decode_chunk(&enc, data.len(), &t).is_err());
     }
 
     #[test]

@@ -22,7 +22,6 @@ use super::batcher::Batch;
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::container::CompressedModel;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc;
 use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,8 +64,14 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Decode throughput; 0.0 for zero-token or zero-duration runs
+    /// (instead of NaN/inf from the naive division).
     pub fn tokens_per_s_decode(&self, batch: usize) -> f64 {
-        (self.decode_tokens * batch) as f64 / (self.decode_ms / 1e3)
+        let tokens = (self.decode_tokens * batch) as f64;
+        if tokens <= 0.0 || self.decode_ms <= 0.0 {
+            return 0.0;
+        }
+        tokens / (self.decode_ms / 1e3)
     }
 }
 
@@ -168,15 +173,8 @@ impl ServingEngine {
 
     /// ANS-decode one block and expand symbols to f32 code tensors.
     fn decode_block_codes(&self, b: usize) -> Result<Vec<HostTensor>> {
-        let cb = &self.cm.blocks[b];
-        let mut sym = vec![0u8; cb.n_symbols()];
-        self.cm.decode_block_into(b, &mut sym, self.opts.decode_threads)?;
-        let mut out = Vec::with_capacity(cb.layers.len());
-        for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
-            let data: Vec<f32> = sym[off..off + n].iter().map(|&s| self.value_table[s as usize]).collect();
-            out.push(HostTensor::f32(data, &[l.rows, l.cols]));
-        }
-        Ok(out)
+        decode_codes(&self.cm, &self.value_table, b, self.opts.decode_threads)
+            .map_err(|e| anyhow!(e))
     }
 
     fn offload_block_codes(&self, b: usize) -> Result<Vec<HostTensor>> {
@@ -225,50 +223,26 @@ impl ServingEngine {
             }
             return Ok(());
         }
-        // decode-ahead: a scoped worker decodes block b+1 while the main
-        // thread executes block b (paper A.1 double buffering)
-        let cm = Arc::clone(&self.cm);
-        let table = self.value_table;
+        // decode-ahead (paper A.1 double buffering): the parallel
+        // subsystem's one-ahead worker inflates block b+1's chunks
+        // across `decode_threads` pool workers while the calling thread
+        // executes block b
+        let cm: &CompressedModel = &self.cm;
+        let table = &self.value_table;
         let threads = self.opts.decode_threads;
-        std::thread::scope(|scope| -> Result<()> {
-            let (req_tx, req_rx) = mpsc::channel::<usize>();
-            let (res_tx, res_rx) = mpsc::channel::<Result<(usize, Vec<HostTensor>, f64), String>>();
-            let cm2 = Arc::clone(&cm);
-            scope.spawn(move || {
-                while let Ok(b) = req_rx.recv() {
-                    let t0 = std::time::Instant::now();
-                    let cb = &cm2.blocks[b];
-                    let mut sym = vec![0u8; cb.n_symbols()];
-                    let r = cm2.decode_block_into(b, &mut sym, threads).map_err(|e| e.to_string()).map(|()| {
-                        let mut out = Vec::with_capacity(cb.layers.len());
-                        for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
-                            let data: Vec<f32> =
-                                sym[off..off + n].iter().map(|&s| table[s as usize]).collect();
-                            out.push(HostTensor::f32(data, &[l.rows, l.cols]));
-                        }
-                        (b, out, t0.elapsed().as_secs_f64() * 1e3)
-                    });
-                    if res_tx.send(r).is_err() {
-                        break;
-                    }
-                }
-            });
-            req_tx.send(0).unwrap();
-            for b in 0..n {
-                let (bb, codes, ms) = res_rx
-                    .recv()
-                    .map_err(|e| anyhow!("decode pipeline: {e}"))?
-                    .map_err(|e| anyhow!("decode pipeline: {e}"))?;
-                debug_assert_eq!(bb, b);
+        crate::parallel::decode_ahead(
+            n,
+            move |b| {
+                let t0 = std::time::Instant::now();
+                let codes = decode_codes(cm, table, b, threads)?;
+                Ok((codes, t0.elapsed().as_secs_f64() * 1e3))
+            },
+            |b, (codes, ms): (Vec<HostTensor>, f64)| {
                 *ans_ms += ms; // decode wall (overlapped with prior exec)
-                if b + 1 < n {
-                    req_tx.send(b + 1).unwrap();
-                }
-                run_block(b, &codes)?;
-            }
-            drop(req_tx);
-            Ok(())
-        })
+                run_block(b, &codes).map_err(|e| format!("{e:#}"))
+            },
+        )
+        .map_err(|e| anyhow!("decode pipeline: {e}"))
     }
 
     fn block_inputs(
@@ -452,6 +426,27 @@ impl ServingEngine {
     }
 }
 
+/// ANS-decode one block of `cm` and expand symbols to f32 code tensors.
+/// Free function (not a method) so the decode-ahead worker can run it
+/// without capturing `&ServingEngine` (whose executable cache is a
+/// single-threaded `RefCell`).
+fn decode_codes(
+    cm: &CompressedModel,
+    value_table: &[f32; 256],
+    b: usize,
+    threads: usize,
+) -> std::result::Result<Vec<HostTensor>, String> {
+    let cb = cm.blocks.get(b).ok_or_else(|| format!("block {b} out of range"))?;
+    let mut sym = vec![0u8; cb.n_symbols()];
+    cm.decode_block_into(b, &mut sym, threads).map_err(|e| format!("{e:#}"))?;
+    let mut out = Vec::with_capacity(cb.layers.len());
+    for ((off, n), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
+        let data: Vec<f32> = sym[off..off + n].iter().map(|&s| value_table[s as usize]).collect();
+        out.push(HostTensor::f32(data, &[l.rows, l.cols]));
+    }
+    Ok(out)
+}
+
 fn argmax(x: &[f32]) -> usize {
     let mut best = 0usize;
     for i in 1..x.len() {
@@ -461,3 +456,38 @@ fn argmax(x: &[f32]) -> usize {
     }
     best
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_token_metrics_are_zero_not_nan() {
+        let m = Metrics {
+            prefill_ms: 1.0,
+            decode_ms: 0.0,
+            decode_tokens: 0,
+            ans_decode_ms: 0.0,
+            exec_ms: 0.0,
+            ttft_ms: 1.0,
+        };
+        assert_eq!(m.tokens_per_s_decode(4), 0.0);
+        // tokens but an (impossible) zero duration must not be inf
+        let m2 = Metrics { decode_tokens: 10, ..m };
+        assert_eq!(m2.tokens_per_s_decode(4), 0.0);
+    }
+
+    #[test]
+    fn nonzero_metrics_compute_rate() {
+        let m = Metrics {
+            prefill_ms: 0.0,
+            decode_ms: 500.0,
+            decode_tokens: 50,
+            ans_decode_ms: 0.0,
+            exec_ms: 0.0,
+            ttft_ms: 0.0,
+        };
+        assert!((m.tokens_per_s_decode(2) - 200.0).abs() < 1e-9);
+    }
+}
+

@@ -7,6 +7,8 @@
 //! * `quant`, `entropy`, `ans`, `rd` — the compression core (Algorithms 1/2)
 //! * `model`, `store`, `baselines`, `eval` — substrates: transformer,
 //!   container format, comparison methods, evaluation harness
+//! * `parallel`, `util` — shared infrastructure: the scoped thread-pool
+//!   subsystem behind every `--threads` knob, and the container checksum
 //! * `runtime`, `coordinator` — the L3 serving engine over PJRT
 //!   executables compiled from the JAX/Pallas layers
 
@@ -16,11 +18,13 @@ pub mod coordinator;
 pub mod entropy;
 pub mod eval;
 pub mod model;
+pub mod parallel;
 pub mod quant;
 pub mod rd;
 pub mod runtime;
 pub mod store;
 pub mod tensor;
+pub mod util;
 
 /// Repo-relative artifacts directory (overridable for tests).
 pub fn artifacts_dir() -> String {

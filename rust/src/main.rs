@@ -17,17 +17,27 @@ fn usage() -> ! {
     eprintln!(
         "entquant <command> [args]\n\
          commands:\n\
-           compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P]\n\
+           compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P] [--threads N]\n\
            eval     --model <size|path> [--compressed P] [--windows N]\n\
-           serve    --compressed P [--prompts N] [--max-new N] [--residency MODE]\n\
+           serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N]\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
-           ablate-blockwise | report-all"
+           ablate-blockwise | report-all\n\
+         --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
     );
     std::process::exit(2);
 }
 
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// The `--threads` knob shared by compress and serve; defaults to the
+/// parallel subsystem's detected width.
+fn arg_threads(args: &[String]) -> Result<usize> {
+    Ok(match arg_val(args, "--threads") {
+        Some(v) => v.parse::<usize>()?.max(1),
+        None => entquant::parallel::default_threads(),
+    })
 }
 
 fn model_path(spec: &str) -> String {
@@ -85,7 +95,7 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         Some("i8") => Format::Int8,
         Some(f) => bail!("bad fmt {f}"),
     };
-    let mut opts = CompressOpts { fmt, ..Default::default() };
+    let mut opts = CompressOpts { fmt, threads: arg_threads(args)?, ..Default::default() };
     if let Some(b) = arg_val(args, "--bits") {
         opts.target_bits = Some(b.parse()?);
     } else if let Some(l) = arg_val(args, "--lam") {
@@ -99,9 +109,10 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         .unwrap_or_else(|| format!("{}/compressed_{spec}.eqz", entquant::artifacts_dir()));
     cm.save(&out)?;
     println!(
-        "compressed {} ({} params) in {:.1}s\n  lam={:.4}  entropy={:.2} bits/param  effective={:.2} bits/param\n  distortion={:.4}  sparsity={:.3}  excluded_blocks={:?}\n  wrote {}",
+        "compressed {} ({} params, {} threads) in {:.1}s\n  lam={:.4}  entropy={:.2} bits/param  effective={:.2} bits/param\n  distortion={:.4}  sparsity={:.3}  excluded_blocks={:?}\n  wrote {}",
         spec,
         rep.params_compressed,
+        opts.threads,
         rep.wall_s,
         rep.lam,
         rep.mean_entropy_bits,
@@ -147,7 +158,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Some(r) => bail!("bad residency {r}"),
     };
     let rt = Runtime::new(&art)?;
-    let engine = ServingEngine::new(rt, cm, EngineOpts { residency, ..Default::default() })?;
+    let decode_threads = arg_threads(args)?;
+    let engine = ServingEngine::new(
+        rt,
+        cm,
+        EngineOpts { residency, decode_threads, ..Default::default() },
+    )?;
     let n_prompts: usize = arg_val(args, "--prompts").map(|v| v.parse()).transpose()?.unwrap_or(4);
     let max_new: usize = arg_val(args, "--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
 

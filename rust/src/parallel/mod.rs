@@ -1,0 +1,39 @@
+//! Shared parallel subsystem — the embarrassing parallelism the paper's
+//! "<30 min for a 70B model" claim rests on (per-layer RD optimization,
+//! nvCOMP-style chunk-parallel ANS, §A.1 decode-ahead double buffering),
+//! factored out of the former ad-hoc `std::thread::scope` + mutex-vec
+//! sites in `store::pipeline`, `ans::bitstream`, and
+//! `coordinator::engine`.
+//!
+//! Design points:
+//! * **Scoped**: everything runs under `std::thread::scope`, so jobs may
+//!   borrow from the caller's stack — no `'static` bounds, no channels
+//!   of owned clones.
+//! * **Chunked work stealing**: workers pull job indices from a shared
+//!   atomic counter (or an owned-job queue), so skewed per-job cost
+//!   (e.g. RD optimization on differently shaped layers) balances
+//!   automatically.
+//! * **Deterministic results**: `par_map_indexed` returns results in
+//!   index order and `try_*` variants surface the lowest-index error,
+//!   so `threads = N` is byte-identical to `threads = 1` on every path
+//!   (the encode/decode identity tests in `tests/corruption.rs` pin
+//!   this).
+//! * **Graceful degeneration**: `threads <= 1` (or a single job) runs
+//!   the plain sequential loop on the calling thread — no pool, no
+//!   channels, no overhead on the single-core testbed.
+
+pub mod pool;
+
+pub use pool::{decode_ahead, Pool};
+
+/// Default worker count for `--threads`-style knobs: the
+/// `ENTQUANT_THREADS` env var when set, else the machine's available
+/// parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ENTQUANT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

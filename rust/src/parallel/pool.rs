@@ -1,0 +1,365 @@
+//! The scoped pool: indexed fan-out (`par_map_indexed`), owned-job
+//! fan-out (`try_for_each`), and the one-ahead producer/consumer used by
+//! the serving engine (`decode_ahead`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Uninhabited error type for the infallible `par_map_indexed` wrapper.
+enum Never {}
+
+/// A lightweight handle describing how wide to fan out.  Cheap to
+/// construct per call site; actual OS threads are scoped to each call.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `0..n`, returning results in index order.  Jobs are
+    /// distributed by work stealing; the output is independent of the
+    /// thread count.
+    pub fn par_map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match self.try_par_map_indexed(n, |i| Ok::<T, Never>(f(i))) {
+            Ok(v) => v,
+            Err(e) => match e {},
+        }
+    }
+
+    /// Fallible `par_map_indexed`: on failure, returns the error with
+    /// the lowest job index (deterministic error reporting; remaining
+    /// jobs are abandoned as soon as any error is observed).
+    pub fn try_par_map_indexed<T, E, F>(&self, n: usize, f: F) -> Result<Vec<T>, E>
+    where
+        T: Send,
+        E: Send,
+        F: Fn(usize) -> Result<T, E> + Sync,
+    {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, E>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let (f, next, abort) = (&f, &next, &abort);
+                scope.spawn(move || loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i);
+                    if r.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx); // the receive loop below ends when all workers exit
+
+            let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+            slots.resize_with(n, || None);
+            let mut first_err: Option<(usize, E)> = None;
+            for (i, r) in rx {
+                match r {
+                    Ok(v) => slots[i] = Some(v),
+                    Err(e) => {
+                        let replace = match &first_err {
+                            Some((j, _)) => i < *j,
+                            None => true,
+                        };
+                        if replace {
+                            first_err = Some((i, e));
+                        }
+                    }
+                }
+            }
+            if let Some((_, e)) = first_err {
+                return Err(e);
+            }
+            Ok(slots
+                .into_iter()
+                .map(|s| s.expect("pool: worker completed every job"))
+                .collect())
+        })
+    }
+
+    /// Run `f(index, job)` over owned jobs (e.g. disjoint `&mut` output
+    /// slices paired with their chunk descriptors).  Jobs are handed out
+    /// in index order; on failure the lowest-index error observed is
+    /// returned and remaining jobs are abandoned.
+    pub fn try_for_each<I, E, F>(&self, jobs: Vec<I>, f: F) -> Result<(), E>
+    where
+        I: Send,
+        E: Send,
+        F: Fn(usize, I) -> Result<(), E> + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            for (i, job) in jobs.into_iter().enumerate() {
+                f(i, job)?;
+            }
+            return Ok(());
+        }
+
+        let mut stack: Vec<(usize, I)> = jobs.into_iter().enumerate().collect();
+        stack.reverse(); // pop() hands out jobs in index order
+        let queue = Mutex::new(stack);
+        let abort = AtomicBool::new(false);
+        let first_err: Mutex<Option<(usize, E)>> = Mutex::new(None);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let (queue, abort, first_err, f) = (&queue, &abort, &first_err, &f);
+                scope.spawn(move || loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let job = queue.lock().unwrap().pop();
+                    let Some((i, job)) = job else { break };
+                    if let Err(e) = f(i, job) {
+                        abort.store(true, Ordering::Relaxed);
+                        let mut slot = first_err.lock().unwrap();
+                        let replace = match &*slot {
+                            Some((j, _)) => i < *j,
+                            None => true,
+                        };
+                        if replace {
+                            *slot = Some((i, e));
+                        }
+                    }
+                });
+            }
+        });
+        match first_err.into_inner().unwrap() {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One-ahead producer/consumer: `produce(i)` runs on a background worker
+/// one step ahead of `consume(i, item)` on the calling thread — the
+/// paper's §A.1 double-buffer scheme (block i+1's ANS decode overlaps
+/// block i's compute).  `consume` always observes items in index order.
+/// The first error (from either side) aborts the pipeline.
+pub fn decode_ahead<T, E, P, C>(n: usize, produce: P, mut consume: C) -> Result<(), E>
+where
+    T: Send,
+    E: Send,
+    P: Fn(usize) -> Result<T, E> + Sync,
+    C: FnMut(usize, T) -> Result<(), E>,
+{
+    if n == 0 {
+        return Ok(());
+    }
+    std::thread::scope(|scope| {
+        let (req_tx, req_rx) = mpsc::channel::<usize>();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<T, E>)>();
+        let produce = &produce;
+        scope.spawn(move || {
+            while let Ok(i) = req_rx.recv() {
+                if res_tx.send((i, produce(i))).is_err() {
+                    break;
+                }
+            }
+        });
+        req_tx.send(0).ok();
+        let mut result = Ok(());
+        for i in 0..n {
+            let (j, item) = match res_rx.recv() {
+                Ok(x) => x,
+                // worker gone early: its panic (if any) propagates when
+                // the scope joins, so just stop consuming
+                Err(_) => break,
+            };
+            debug_assert_eq!(j, i, "decode_ahead results must arrive in order");
+            let item = match item {
+                Ok(t) => t,
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            };
+            // request the next block before consuming this one, so the
+            // worker decodes ahead while the caller computes
+            if i + 1 < n {
+                req_tx.send(i + 1).ok();
+            }
+            if let Err(e) = consume(i, item) {
+                result = Err(e);
+                break;
+            }
+        }
+        drop(req_tx); // unblocks the worker's recv loop
+        result
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_matches_scalar_for_any_thread_count() {
+        let f = |i: usize| i * i + 7;
+        let want: Vec<usize> = (0..100).map(f).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            assert_eq!(Pool::new(threads).par_map_indexed(100, f), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert_eq!(Pool::new(4).par_map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(Pool::new(4).par_map_indexed(1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn zero_threads_degenerates_to_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(0).par_map_indexed(5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn try_map_reports_lowest_index_error() {
+        for threads in [1, 4] {
+            let r = Pool::new(threads).try_par_map_indexed(64, |i| {
+                if i % 10 == 3 {
+                    Err(format!("bad {i}"))
+                } else {
+                    Ok(i)
+                }
+            });
+            assert_eq!(r, Err("bad 3".to_string()), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_runs_every_job_exactly_once() {
+        for threads in [1, 3, 16] {
+            let n = 200;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            let jobs: Vec<usize> = (0..n).collect();
+            Pool::new(threads)
+                .try_for_each(jobs, |i, job| {
+                    assert_eq!(i, job);
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                    Ok::<(), String>(())
+                })
+                .unwrap();
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_writes_disjoint_mut_slices() {
+        let mut out = vec![0u8; 40];
+        let jobs: Vec<(usize, &mut [u8])> = out.chunks_mut(10).enumerate().collect();
+        Pool::new(4)
+            .try_for_each(jobs, |_, (k, slice)| {
+                slice.fill(k as u8 + 1);
+                Ok::<(), String>(())
+            })
+            .unwrap();
+        for (k, chunk) in out.chunks(10).enumerate() {
+            assert!(chunk.iter().all(|&b| b == k as u8 + 1));
+        }
+    }
+
+    #[test]
+    fn for_each_propagates_error() {
+        let r = Pool::new(4).try_for_each((0..50).collect::<Vec<_>>(), |_, job| {
+            if job == 7 {
+                Err("seven")
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r, Err("seven"));
+    }
+
+    #[test]
+    fn decode_ahead_consumes_in_order() {
+        for n in [0usize, 1, 2, 9] {
+            let mut seen = Vec::new();
+            decode_ahead(
+                n,
+                |i| Ok::<usize, String>(i * 2),
+                |i, item| {
+                    assert_eq!(item, i * 2);
+                    seen.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn decode_ahead_producer_error_stops_pipeline() {
+        let consumed = AtomicUsize::new(0);
+        let r = decode_ahead(
+            10,
+            |i| if i == 3 { Err(format!("produce {i}")) } else { Ok(i) },
+            |_, _| {
+                consumed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            },
+        );
+        assert_eq!(r, Err("produce 3".to_string()));
+        assert_eq!(consumed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn decode_ahead_consumer_error_stops_pipeline() {
+        let r = decode_ahead(
+            10,
+            |i| Ok::<usize, String>(i),
+            |i, _| if i == 2 { Err("consume 2".to_string()) } else { Ok(()) },
+        );
+        assert_eq!(r, Err("consume 2".to_string()));
+    }
+
+    #[test]
+    fn map_overlaps_work_across_threads() {
+        // not a timing assertion (CI varies); just exercises real
+        // contention: many jobs, shared state behind atomics only
+        let total = AtomicUsize::new(0);
+        let out = Pool::new(8).par_map_indexed(1000, |i| {
+            total.fetch_add(i, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 1000);
+        assert_eq!(total.load(Ordering::Relaxed), 1000 * 999 / 2);
+    }
+}

@@ -4,19 +4,30 @@
 //! high-precision embed/head tensors.
 //!
 //! Wire layout (little endian):
-//!   magic  b"EQZ1"
-//!   u32    header_len, JSON header (config, fmt, block metadata, offsets)
+//!   magic  b"EQZ2"
+//!   u32    header_len
+//!   u32    crc32 over header + f32 region + bitstream region
+//!   bytes  JSON header (config, fmt, block metadata, offsets)
 //!   bytes  f32 region: embed | head | norm_final | per-block norms+scales
 //!   bytes  per-block serialized Bitstreams
+//!
+//! Robustness contract (exercised by tests/corruption.rs): `.eqz` bytes
+//! are treated as untrusted.  Every offset/length in the header is
+//! bounds-checked, the container-wide crc32 must match, and per-block
+//! layer shapes must agree with the embedded bitstreams — so corrupt or
+//! truncated files load as `Err`, never a panic or a silent mis-decode.
 
 use crate::ans::Bitstream;
 use crate::model::{Config, Model, QBlock, QModel};
 use crate::quant::{Format, QMat};
 use crate::store::json::{self, arr, num, obj, s, Value};
 use crate::tensor::Mat;
+use crate::util::crc32;
 use anyhow::{anyhow, bail, Context, Result};
 
-const MAGIC: &[u8; 4] = b"EQZ1";
+const MAGIC: &[u8; 4] = b"EQZ2";
+/// magic + header_len + crc32
+const PREFIX_LEN: usize = 12;
 
 #[derive(Clone)]
 pub struct LayerMeta {
@@ -79,6 +90,9 @@ impl CompressedModel {
                 params += l.rows * l.cols;
             }
         }
+        if params == 0 {
+            return 0.0;
+        }
         bits / params as f64
     }
 
@@ -89,7 +103,10 @@ impl CompressedModel {
 
     /// Decode block `i`'s symbols into `buf` (len == n_symbols(i)).
     pub fn decode_block_into(&self, i: usize, buf: &mut [u8], threads: usize) -> Result<()> {
-        self.blocks[i]
+        let block = self.blocks.get(i).ok_or_else(|| {
+            anyhow!("block {i} out of range ({} blocks)", self.blocks.len())
+        })?;
+        block
             .bitstream
             .decode_into(buf, threads)
             .map_err(|e| anyhow!("block {i}: {e}"))
@@ -201,25 +218,52 @@ impl CompressedModel {
             ("head_off", num(head_off as f64)),
             ("norm_final_off", num(nf_off as f64)),
             ("f32_region_len", num(f32_region.len() as f64)),
+            ("bs_region_len", num(bs_region.len() as f64)),
             ("blocks", arr(block_meta)),
         ]);
         let htext = json::write(&header);
-        let mut out = Vec::with_capacity(8 + htext.len() + f32_region.len() + bs_region.len());
+        let mut out =
+            Vec::with_capacity(PREFIX_LEN + htext.len() + f32_region.len() + bs_region.len());
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]); // crc placeholder
         out.extend_from_slice(htext.as_bytes());
         out.extend_from_slice(&f32_region);
         out.extend_from_slice(&bs_region);
+        let crc = crc32(&out[PREFIX_LEN..]);
+        out[8..PREFIX_LEN].copy_from_slice(&crc.to_le_bytes());
         out
     }
 
     pub fn deserialize(bytes: &[u8]) -> Result<Self> {
-        if bytes.len() < 8 || &bytes[..4] != MAGIC {
-            bail!("bad .eqz magic");
+        if bytes.len() < PREFIX_LEN || &bytes[..4] != MAGIC {
+            bail!("bad .eqz magic (or pre-EQZ2 container)");
         }
         let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
-        let header = json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)
+        let crc_stored = u32::from_le_bytes(bytes[8..PREFIX_LEN].try_into().unwrap());
+        let htext = checked_slice(bytes, PREFIX_LEN, hlen, "header")?;
+        let header = json::parse(std::str::from_utf8(htext)?)
             .map_err(|e| anyhow!("eqz header: {e}"))?;
+
+        let g = |v: &Value, k: &str| -> Result<usize> {
+            v.get(k).and_then(|x| x.as_usize()).ok_or(anyhow!("eqz header missing {k}"))
+        };
+        let f32_len = g(&header, "f32_region_len")?;
+        let bs_len = g(&header, "bs_region_len")?;
+        let f32_start = PREFIX_LEN + hlen;
+        let extent = f32_start
+            .checked_add(f32_len)
+            .and_then(|x| x.checked_add(bs_len))
+            .ok_or(anyhow!("corrupt .eqz: region lengths overflow"))?;
+        if bytes.len() < extent {
+            bail!(".eqz truncated: {} bytes, header claims {extent}", bytes.len());
+        }
+        if crc32(&bytes[PREFIX_LEN..extent]) != crc_stored {
+            bail!("corrupt .eqz: crc32 mismatch");
+        }
+        let f32_region = &bytes[f32_start..f32_start + f32_len];
+        let bs_region = &bytes[f32_start + f32_len..extent];
+
         let config = Config::from_json(header.get("config").ok_or(anyhow!("no config"))?)
             .map_err(|e| anyhow!(e))?;
         let fmt = match header.get("fmt").and_then(|v| v.as_str()) {
@@ -227,65 +271,69 @@ impl CompressedModel {
             Some("int8") => Format::Int8,
             other => bail!("bad fmt {other:?}"),
         };
-        let f32_len = header.get("f32_region_len").and_then(|v| v.as_usize()).ok_or(anyhow!("len"))?;
-        let f32_region = &bytes[8 + hlen..8 + hlen + f32_len];
-        let bs_region = &bytes[8 + hlen + f32_len..];
 
-        let read_f32s = |off: usize, n: usize| -> Vec<f32> {
-            (0..n)
-                .map(|i| f32::from_le_bytes(f32_region[off + 4 * i..off + 4 * i + 4].try_into().unwrap()))
-                .collect()
+        let read_f32s = |off: usize, n: usize, what: &str| -> Result<Vec<f32>> {
+            let raw = checked_slice(f32_region, off, n.checked_mul(4).ok_or(anyhow!("corrupt .eqz: {what} length overflow"))?, what)?;
+            Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
         };
-        let read_bf16s = |off: usize, n: usize| -> Vec<f32> {
-            (0..n)
-                .map(|i| {
-                    crate::quant::bf16::decode(u16::from_le_bytes(
-                        f32_region[off + 2 * i..off + 2 * i + 2].try_into().unwrap(),
-                    ))
-                })
-                .collect()
-        };
-        let g = |v: &Value, k: &str| -> Result<usize> {
-            v.get(k).and_then(|x| x.as_usize()).ok_or(anyhow!("missing {k}"))
+        let read_bf16s = |off: usize, n: usize, what: &str| -> Result<Vec<f32>> {
+            let raw = checked_slice(f32_region, off, n.checked_mul(2).ok_or(anyhow!("corrupt .eqz: {what} length overflow"))?, what)?;
+            Ok(raw
+                .chunks_exact(2)
+                .map(|c| crate::quant::bf16::decode(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect())
         };
 
-        let (d, f, v) = (config.d_model, config.d_ff, config.vocab);
-        let embed_off = g(&header, "embed_off")?;
-        let head_off = g(&header, "head_off")?;
-        let nf_off = g(&header, "norm_final_off")?;
-        let embed = Mat::from_vec(v, d, read_f32s(embed_off, v * d));
-        let head = Mat::from_vec(v, d, read_f32s(head_off, v * d));
-        let norm_final = read_f32s(nf_off, d);
+        let (d, v) = (config.d_model, config.vocab);
+        let vd = v.checked_mul(d).ok_or(anyhow!("corrupt .eqz: vocab*d_model overflows"))?;
+        let embed = Mat::from_vec(v, d, read_f32s(g(&header, "embed_off")?, vd, "embed")?);
+        let head = Mat::from_vec(v, d, read_f32s(g(&header, "head_off")?, vd, "head")?);
+        let norm_final = read_f32s(g(&header, "norm_final_off")?, d, "norm_final")?;
 
         let mut blocks = Vec::new();
-        for bm in header.get("blocks").and_then(|x| x.as_array()).ok_or(anyhow!("blocks"))? {
-            let na_off = g(bm, "norm_attn_off")?;
-            let nm_off = g(bm, "norm_mlp_off")?;
+        for (bi, bm) in header
+            .get("blocks")
+            .and_then(|x| x.as_array())
+            .ok_or(anyhow!("blocks"))?
+            .iter()
+            .enumerate()
+        {
             let bs_off = g(bm, "bs_off")?;
-            let bs_len = g(bm, "bs_len")?;
-            let (bitstream, _) = Bitstream::deserialize(&bs_region[bs_off..bs_off + bs_len])
-                .map_err(|e| anyhow!("bitstream: {e}"))?;
+            let bs_bytes = checked_slice(bs_region, bs_off, g(bm, "bs_len")?, "bitstream")?;
+            let (bitstream, _) = Bitstream::deserialize(bs_bytes)
+                .map_err(|e| anyhow!("block {bi} bitstream: {e}"))?;
             let mut layers = Vec::new();
+            let mut symbols = 0usize;
             for lm in bm.get("layers").and_then(|x| x.as_array()).ok_or(anyhow!("layers"))? {
                 let rows = g(lm, "rows")?;
                 let cols = g(lm, "cols")?;
-                let s_off = g(lm, "scales_off")?;
+                symbols = rows
+                    .checked_mul(cols)
+                    .and_then(|n| symbols.checked_add(n))
+                    .ok_or(anyhow!("corrupt .eqz: block {bi} layer shape overflows"))?;
                 layers.push(LayerMeta {
                     name: lm.get("name").and_then(|x| x.as_str()).unwrap_or("?").to_string(),
                     rows,
                     cols,
-                    scales: read_bf16s(s_off, rows),
+                    scales: read_bf16s(g(lm, "scales_off")?, rows, "scales")?,
                     excluded: lm.get("excluded").and_then(|x| x.as_bool()).unwrap_or(false),
                 });
+            }
+            // layer shapes must account for exactly the symbols the
+            // bitstream holds, or block decode would mis-slice
+            if symbols != bitstream.n_symbols {
+                bail!(
+                    "corrupt .eqz: block {bi} layers claim {symbols} symbols, bitstream holds {}",
+                    bitstream.n_symbols
+                );
             }
             blocks.push(CompressedBlock {
                 layers,
                 bitstream,
-                norm_attn: read_f32s(na_off, d),
-                norm_mlp: read_f32s(nm_off, d),
+                norm_attn: read_f32s(g(bm, "norm_attn_off")?, d, "norm_attn")?,
+                norm_mlp: read_f32s(g(bm, "norm_mlp_off")?, d, "norm_mlp")?,
             });
         }
-        let _ = f;
         Ok(CompressedModel { config, fmt, embed, head, norm_final, blocks })
     }
 
@@ -296,6 +344,18 @@ impl CompressedModel {
     pub fn load(path: &str) -> Result<Self> {
         Self::deserialize(&std::fs::read(path).with_context(|| format!("reading {path}"))?)
     }
+}
+
+/// Bounds-checked subslice: `bytes[off..off + len]` or a descriptive
+/// error (never a panic) when the range is out of bounds or overflows.
+fn checked_slice<'a>(bytes: &'a [u8], off: usize, len: usize, what: &str) -> Result<&'a [u8]> {
+    let end = off
+        .checked_add(len)
+        .ok_or_else(|| anyhow!("corrupt .eqz: {what} range overflows"))?;
+    if end > bytes.len() {
+        bail!("corrupt .eqz: {what} out of bounds ({off}+{len} > {})", bytes.len());
+    }
+    Ok(&bytes[off..end])
 }
 
 #[cfg(test)]
@@ -344,5 +404,27 @@ mod tests {
         let mut ser = cm.serialize();
         ser[0] = b'X';
         assert!(CompressedModel::deserialize(&ser).is_err());
+    }
+
+    #[test]
+    fn mismatched_layer_shapes_rejected() {
+        let m = tiny();
+        let (mut cm, _) = compress_model(&m, &CompressOpts::default()).unwrap();
+        // in-memory tamper: layer metadata no longer matches the
+        // bitstream symbol count; serialize then reload must reject
+        cm.blocks[0].layers[0].rows += 1;
+        let ser = cm.serialize();
+        assert!(CompressedModel::deserialize(&ser).is_err());
+        // decode on the tampered in-memory struct errors (no panic)
+        let mut buf = vec![0u8; cm.blocks[0].n_symbols()];
+        assert!(cm.decode_block_into(0, &mut buf, 1).is_err());
+    }
+
+    #[test]
+    fn out_of_range_block_is_error() {
+        let m = tiny();
+        let (cm, _) = compress_model(&m, &CompressOpts::default()).unwrap();
+        let mut buf = vec![0u8; 16];
+        assert!(cm.decode_block_into(99, &mut buf, 1).is_err());
     }
 }

@@ -2,12 +2,15 @@
 //! layer, §A.1 block-joint ANS framing, §A.2 super-weight exclusions).
 //!
 //! This is the "<30 min for 70B" path: layers are independent, so the
-//! per-layer RD optimizations run embarrassingly parallel across a
-//! thread pool (on this single-core testbed the pool degenerates to a
-//! scalar loop; Table 3(a) extrapolates per-parameter throughput).
+//! per-layer RD optimizations fan out across the shared
+//! `parallel::Pool` (work-stealing over layer jobs, deterministic
+//! result order), and each block's ANS bitstream encodes its chunks on
+//! the same pool.  `threads = 1` degenerates to the scalar loop and is
+//! byte-identical to any other thread count.
 
 use crate::ans::{Bitstream, DEFAULT_CHUNK};
 use crate::model::{Model, BLOCK_LINEARS};
+use crate::parallel::Pool;
 use crate::quant::{superweight, Format};
 use crate::rd::{calibrate_lambda, encode_layer, EncodeOpts, LayerStats};
 use crate::store::container::{CompressedBlock, CompressedModel, LayerMeta};
@@ -59,6 +62,10 @@ pub struct CompressionReport {
 /// Compress a model end-to-end.  Data-free: only the weights go in.
 pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedModel, CompressionReport)> {
     let t0 = std::time::Instant::now();
+    anyhow::ensure!(
+        !model.blocks.is_empty() && model.linear_params() > 0,
+        "compress_model: model has no linear parameters to compress"
+    );
 
     // 0. lambda selection
     let lam = match opts.target_bits {
@@ -86,37 +93,19 @@ pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedM
         .flat_map(|b| BLOCK_LINEARS.iter().map(move |&name| Job { block: b, name }))
         .collect();
 
-    let results: Vec<(crate::quant::QMat, LayerStats)> = {
-        let run_job = |j: &Job| {
-            let w = model.blocks[j.block].linear(j.name);
-            // paper A.2: excluded blocks' *down projections* skip the
-            // entropy optimization and stay at 8-bit AbsMax
-            let skip = j.name == "w_down" && excluded_blocks.contains(&j.block);
-            encode_layer(
-                w,
-                &EncodeOpts { lam, fmt: opts.fmt, max_iters: opts.max_iters, skip_optimization: skip },
-            )
-        };
-        if opts.threads <= 1 {
-            jobs.iter().map(run_job).collect()
-        } else {
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            let out: Vec<std::sync::Mutex<Option<(crate::quant::QMat, LayerStats)>>> =
-                jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
-            std::thread::scope(|scope| {
-                for _ in 0..opts.threads {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= jobs.len() {
-                            break;
-                        }
-                        *out[i].lock().unwrap() = Some(run_job(&jobs[i]));
-                    });
-                }
-            });
-            out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
-        }
+    let pool = Pool::new(opts.threads);
+    let run_job = |j: &Job| {
+        let w = model.blocks[j.block].linear(j.name);
+        // paper A.2: excluded blocks' *down projections* skip the
+        // entropy optimization and stay at 8-bit AbsMax
+        let skip = j.name == "w_down" && excluded_blocks.contains(&j.block);
+        encode_layer(
+            w,
+            &EncodeOpts { lam, fmt: opts.fmt, max_iters: opts.max_iters, skip_optimization: skip },
+        )
     };
+    let results: Vec<(crate::quant::QMat, LayerStats)> =
+        pool.par_map_indexed(jobs.len(), |i| run_job(&jobs[i]));
 
     // 3. block-joint ANS framing (paper A.1: one bitstream per block)
     let mut blocks = Vec::with_capacity(model.blocks.len());
@@ -148,7 +137,7 @@ pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedM
         for i in 0..256 {
             hist_total[i] += h[i];
         }
-        let bitstream = Bitstream::encode(&symbols, opts.chunk_size);
+        let bitstream = Bitstream::encode_parallel(&symbols, opts.chunk_size, opts.threads);
         blocks.push(CompressedBlock {
             layers,
             bitstream,
@@ -237,6 +226,16 @@ mod tests {
         let (c1, _) = compress_model(&m, &CompressOpts { lam: 0.3, threads: 1, ..Default::default() }).unwrap();
         let (c2, _) = compress_model(&m, &CompressOpts { lam: 0.3, threads: 4, ..Default::default() }).unwrap();
         assert_eq!(c1.serialize(), c2.serialize());
+    }
+
+    #[test]
+    fn empty_model_is_error_not_nan() {
+        // zero linear params would otherwise divide to NaN in the report
+        let m = synthetic_model(
+            Config { name: "E".into(), vocab: 8, d_model: 4, n_layers: 0, n_heads: 1, d_ff: 8, max_ctx: 8 },
+            9,
+        );
+        assert!(compress_model(&m, &CompressOpts::default()).is_err());
     }
 
     #[test]

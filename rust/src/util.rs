@@ -1,0 +1,60 @@
+//! Small shared utilities: the CRC-32 integrity checksum guarding the
+//! `.eqz` / `EQZB` wire formats against corrupt or truncated bytes.
+
+/// IEEE CRC-32 lookup table (reflected polynomial 0xEDB88320), built at
+/// compile time.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Standard IEEE CRC-32 (the zlib/PNG polynomial).  Used as an
+/// end-to-end integrity check on serialized containers so that any
+/// bit flip or truncation surfaces as a decode *error*, never a panic
+/// or a silent mis-decode.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard test vectors for IEEE CRC-32
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_every_bit() {
+        let data = b"entquant container".to_vec();
+        let base = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut m = data.clone();
+                m[byte] ^= 1 << bit;
+                assert_ne!(crc32(&m), base, "flip byte {byte} bit {bit}");
+            }
+        }
+    }
+}

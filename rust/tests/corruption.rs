@@ -1,0 +1,163 @@
+//! Corrupt-container fuzz sweeps and parallel/scalar identity tests.
+//!
+//! Contract under test (ISSUE 1): a production server exposes `.eqz` /
+//! `EQZB` parsing to untrusted bytes, so EVERY mutation — a bit flip in
+//! any field or a truncation at any length — must surface as `Err`,
+//! never a panic, abort, or silent mis-decode.  And the shared
+//! `parallel::Pool` must leave all byte streams invariant: `threads=N`
+//! output is identical to `threads=1` for encode, decode, and the whole
+//! compression pipeline.
+
+use entquant::ans::Bitstream;
+use entquant::model::loader::synthetic_model;
+use entquant::model::Config;
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+use entquant::tensor::Rng;
+
+fn symbols(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| ((rng.normal().abs() * 5.0) as usize).min(255) as u8).collect()
+}
+
+fn tiny_model(seed: u64) -> entquant::model::Model {
+    synthetic_model(
+        Config {
+            name: "fuzz".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_ctx: 32,
+        },
+        seed,
+    )
+}
+
+// ------------------------------------------------------------ EQZB
+
+#[test]
+fn eqzb_every_bit_flip_is_rejected() {
+    let data = symbols(3000, 1);
+    let ser = Bitstream::encode(&data, 512).serialize();
+    // the stream has no trailing bytes, so every byte is load-bearing:
+    // header, chunk lens, freq table, or payload — the crc32 (plus the
+    // structural cross-checks) must reject every single-bit corruption
+    for byte in 0..ser.len() {
+        for bit in 0..8 {
+            let mut m = ser.clone();
+            m[byte] ^= 1 << bit;
+            assert!(
+                Bitstream::deserialize(&m).is_err(),
+                "flip byte {byte} bit {bit} was accepted"
+            );
+        }
+    }
+}
+
+#[test]
+fn eqzb_every_truncation_is_rejected() {
+    let data = symbols(2000, 2);
+    let ser = Bitstream::encode(&data, 512).serialize();
+    for k in 0..ser.len() {
+        assert!(Bitstream::deserialize(&ser[..k]).is_err(), "truncation to {k} was accepted");
+    }
+}
+
+#[test]
+fn eqzb_corrupt_in_memory_fields_error_not_panic() {
+    // decode must also survive a Bitstream struct whose fields lie
+    // (e.g. assembled from a hostile custom parser rather than our
+    // deserialize): exhaustively perturb each field
+    let data = symbols(4000, 3);
+    let good = Bitstream::encode(&data, 1000);
+    let perturbations: Vec<Box<dyn Fn(&mut Bitstream)>> = vec![
+        Box::new(|b| b.n_symbols += 1),
+        Box::new(|b| b.n_symbols -= 1),
+        Box::new(|b| b.n_symbols = usize::MAX),
+        Box::new(|b| b.chunk_size = 0),
+        Box::new(|b| b.chunk_size += 1),
+        Box::new(|b| b.chunk_lens.push(12)),
+        Box::new(|b| {
+            b.chunk_lens.pop();
+        }),
+        Box::new(|b| b.chunk_lens[0] = u32::MAX),
+        Box::new(|b| b.chunk_lens[2] += 1),
+        Box::new(|b| b.payload.truncate(b.payload.len() / 2)),
+        Box::new(|b| b.payload.push(0)),
+    ];
+    for (i, p) in perturbations.iter().enumerate() {
+        let mut bs = good.clone();
+        p(&mut bs);
+        assert!(bs.decode().is_err(), "perturbation {i} decoded successfully");
+        let mut buf = vec![0u8; data.len()];
+        assert!(bs.decode_into(&mut buf, 2).is_err(), "perturbation {i} decoded (parallel)");
+    }
+    // and the untouched stream still round-trips
+    assert_eq!(good.decode().unwrap(), data);
+}
+
+// ------------------------------------------------------------ .eqz
+
+#[test]
+fn eqz_bit_flip_sweep_is_rejected() {
+    let m = tiny_model(4);
+    let (cm, _) = compress_model(&m, &CompressOpts { lam: 0.4, ..Default::default() }).unwrap();
+    let ser = cm.serialize();
+    // one flipped bit per byte (rotating bit position) keeps the sweep
+    // fast while still touching every byte of the container
+    for byte in 0..ser.len() {
+        let mut mutated = ser.clone();
+        mutated[byte] ^= 1 << (byte % 8);
+        assert!(
+            CompressedModel::deserialize(&mutated).is_err(),
+            "flip in byte {byte} was accepted"
+        );
+    }
+}
+
+#[test]
+fn eqz_truncation_sweep_is_rejected() {
+    let m = tiny_model(5);
+    let (cm, _) = compress_model(&m, &CompressOpts { lam: 0.4, ..Default::default() }).unwrap();
+    let ser = cm.serialize();
+    let mut cuts: Vec<usize> = (0..ser.len()).step_by(7).collect();
+    cuts.extend([0, 1, 4, 8, 11, 12, ser.len() - 1]);
+    for k in cuts {
+        assert!(CompressedModel::deserialize(&ser[..k]).is_err(), "truncation to {k} accepted");
+    }
+    // the untouched container still loads and decodes
+    let cm2 = CompressedModel::deserialize(&ser).unwrap();
+    cm2.to_qmodel().unwrap();
+}
+
+// ------------------------------------------ parallel == scalar
+
+#[test]
+fn bitstream_encode_decode_identical_across_thread_counts() {
+    let data = symbols(200_000, 6);
+    let scalar = Bitstream::encode(&data, 16 * 1024);
+    let scalar_ser = scalar.serialize();
+    for threads in [2usize, 3, 4, 8] {
+        let par = Bitstream::encode_parallel(&data, 16 * 1024, threads);
+        assert_eq!(par.serialize(), scalar_ser, "encode threads={threads}");
+        let mut out = vec![0u8; data.len()];
+        par.decode_into(&mut out, threads).unwrap();
+        assert_eq!(out, data, "decode threads={threads}");
+    }
+}
+
+#[test]
+fn compress_model_identical_across_thread_counts() {
+    let m = tiny_model(7);
+    let opts = |threads| CompressOpts { lam: 0.2, threads, ..Default::default() };
+    let (c1, _) = compress_model(&m, &opts(1)).unwrap();
+    let ser1 = c1.serialize();
+    for threads in [2usize, 4] {
+        let (cn, _) = compress_model(&m, &opts(threads)).unwrap();
+        assert_eq!(cn.serialize(), ser1, "threads={threads}");
+    }
+    // and the container itself round-trips bit-exactly
+    assert_eq!(CompressedModel::deserialize(&ser1).unwrap().serialize(), ser1);
+}

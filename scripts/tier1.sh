@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate (see ROADMAP.md): every PR must keep this green.
+#
+#   scripts/tier1.sh           # build + tests + format check
+#   scripts/tier1.sh --fast    # skip the release build (tests only)
+#
+# Integration tests that need trained artifacts (`make artifacts`)
+# self-skip with a note; the unit suites (ANS, container, parallel
+# subsystem, corruption fuzz sweeps) always run.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+if [[ "$FAST" == 0 ]]; then
+    echo "== cargo build --release =="
+    cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+if ! cargo fmt --version >/dev/null 2>&1; then
+    echo "(rustfmt unavailable in this image; skipping format check)"
+else
+    cargo fmt --check
+fi
+
+echo "tier-1: OK"

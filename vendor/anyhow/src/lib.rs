@@ -1,0 +1,227 @@
+//! Offline drop-in subset of the `anyhow` crate (the container image has
+//! no crates.io access).  Implements exactly the surface this repo uses:
+//! `Error`, `Result<T>`, `anyhow!`, `bail!`, `ensure!`, and the
+//! `Context` extension trait.  Semantics match upstream closely enough
+//! that swapping in the real crate is a one-line Cargo.toml change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error with an optional cause chain, mirroring
+/// `anyhow::Error` for the APIs used in this repo.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    fn with_source(
+        msg: String,
+        source: Box<dyn StdError + Send + Sync + 'static>,
+    ) -> Self {
+        Error { msg, source: Some(source) }
+    }
+
+    /// Wrap this error with an outer context message (the `Context`
+    /// machinery; keeps the inner message in the chain).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let inner = ChainedError { msg: self.msg, source: self.source };
+        Error { msg: context.to_string(), source: Some(Box::new(inner)) }
+    }
+
+    fn render(&self, f: &mut fmt::Formatter<'_>, chain: bool) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if chain {
+            let mut src: Option<&(dyn StdError + 'static)> =
+                self.source.as_ref().map(|b| b.as_ref() as &(dyn StdError + 'static));
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Internal node used to keep `context()` chains walkable via
+/// `std::error::Error::source`.
+struct ChainedError {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl fmt::Display for ChainedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for ChainedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl StdError for ChainedError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|b| b.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` prints the outermost message; `{e:#}` prints the chain,
+        // matching upstream anyhow.
+        self.render(f, f.alternate())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f, true)
+    }
+}
+
+// Like upstream: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::with_source(e.to_string(), Box::new(e))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// `Result::context` / `with_context` extension, as in upstream anyhow.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// `Error` does not implement StdError (see above), so contextualizing
+// an already-anyhow Result needs its own impl — same split as upstream.
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} and {}", 4);
+        assert_eq!(e.to_string(), "value 3 and 4");
+        let s = String::from("owned");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("reached end")
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "reached end");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading /tmp/x".to_string()).unwrap_err();
+        assert_eq!(e.to_string(), "reading /tmp/x");
+        assert_eq!(format!("{e:#}"), "reading /tmp/x: missing");
+        assert!(format!("{e:?}").contains("missing"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let n: Option<u8> = None;
+        assert_eq!(n.context("absent").unwrap_err().to_string(), "absent");
+    }
+}
