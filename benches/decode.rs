@@ -1,10 +1,15 @@
 //! Bench: rANS decode/encode throughput across entropy levels, chunk
 //! sizes and framing — the substrate numbers behind Figure 5's decode
-//! overhead and the §A.1 block-joint ablation.  Run via `cargo bench`.
+//! overhead and the §A.1 block-joint ablation.  Run via `cargo bench`
+//! (or `scripts/bench.sh`, which also captures the tracked
+//! `BENCH_decode.json`: seed-scalar vs chunk-parallel vs fused MB/s).
+//!
+//! `BENCH_SMOKE=1` shrinks sizes/iterations for the tier-1 smoke hook.
 
 mod common;
 
 use common::{bench, throughput};
+use entquant::ans::rans::decode_chunk;
 use entquant::ans::{Bitstream, Huffman};
 use entquant::entropy::entropy_of;
 use entquant::tensor::Rng;
@@ -15,7 +20,10 @@ fn skewed(n: usize, spread: f64, seed: u64) -> Vec<u8> {
 }
 
 fn main() {
-    let n = 4 << 20; // 4M symbols ~ one M-model block x8
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let n = if smoke { 1 << 20 } else { 4 << 20 }; // symbols ~ M-model blocks
+    let iters = if smoke { 2 } else { 5 };
+
     println!("== rANS decode throughput vs entropy (n = {} MiB) ==", n >> 20);
     for spread in [0.3f64, 2.0, 10.0, 60.0] {
         let data = skewed(n, spread, 7);
@@ -23,9 +31,12 @@ fn main() {
         let bs = Bitstream::encode(&data, 256 * 1024);
         let mut out = vec![0u8; n];
         throughput(
-            &format!("decode H={h:.2} bits ({:.2} bits/sym stored)", bs.payload.len() as f64 * 8.0 / n as f64),
+            &format!(
+                "decode H={h:.2} bits ({:.2} bits/sym stored)",
+                bs.payload.len() as f64 * 8.0 / n as f64
+            ),
             n,
-            5,
+            iters,
             || bs.decode_into(&mut out, 1).unwrap(),
         );
     }
@@ -35,14 +46,14 @@ fn main() {
     for chunk in [16 * 1024, 64 * 1024, 256 * 1024, 1024 * 1024] {
         let bs = Bitstream::encode(&data, chunk);
         let mut out = vec![0u8; n];
-        throughput(&format!("decode chunk={}KiB", chunk >> 10), n, 5, || {
+        throughput(&format!("decode chunk={}KiB", chunk >> 10), n, iters, || {
             bs.decode_into(&mut out, 1).unwrap()
         });
     }
 
-    // the tentpole comparison: chunk-parallel decode on the shared pool
-    // vs the scalar loop (nvCOMP parallelizes across GPU blocks; we fan
-    // out 256 KiB chunks across OS threads)
+    // chunk-parallel decode on the shared pool vs the scalar loop
+    // (nvCOMP parallelizes across GPU blocks; we fan out 256 KiB chunks
+    // across OS threads, two per worker for the 8-chain joint loop)
     let max_threads = entquant::parallel::default_threads();
     println!("\n== decode throughput vs threads (chunk=256KiB, H~3.3, {max_threads} available) ==");
     let bs = Bitstream::encode(&data, 256 * 1024);
@@ -51,24 +62,93 @@ fn main() {
     if !thread_counts.contains(&max_threads) {
         thread_counts.push(max_threads);
     }
-    let mut base = 0.0;
+    let mut scalar_mb_s = 0.0;
+    let mut parallel_mb_s = 0.0;
     for &t in &thread_counts {
         let mut out = vec![0u8; n];
-        let mbs = throughput(&format!("decode threads={t}"), n, 5, || {
+        let mbs = throughput(&format!("decode threads={t}"), n, iters, || {
             bs.decode_into(&mut out, t).unwrap()
         });
         if t == 1 {
-            base = mbs;
-        } else if base > 0.0 {
-            println!("{:<44}   -> {:.2}x vs scalar", "", mbs / base);
+            scalar_mb_s = mbs;
+        } else if scalar_mb_s > 0.0 {
+            println!("{:<44}   -> {:.2}x vs scalar", "", mbs / scalar_mb_s);
+        }
+        if t == max_threads {
+            parallel_mb_s = mbs;
         }
     }
+
+    // the tentpole comparison: the fused bitstream->f32 hot path vs the
+    // seed serving path (per-chunk Vec + memcpy via decode_chunk, then
+    // a separate LUT map allocating the f32 code buffer)
+    println!("\n== fused decode->dequant (bitstream -> f32 codes) ==");
+    let lut: [f32; 256] = core::array::from_fn(|i| i as f32 * 0.125 - 16.0);
+    let mut sym = vec![0u8; n];
+    let seed_mb_s = throughput("seed path: decode_chunk + LUT map", n, iters, || {
+        let mut poff = 0usize;
+        let mut soff = 0usize;
+        for &len in &bs.chunk_lens {
+            let len = len as usize;
+            let m = bs.chunk_size.min(n - soff);
+            let dec = decode_chunk(&bs.payload[poff..poff + len], m, &bs.table).unwrap();
+            sym[soff..soff + m].copy_from_slice(&dec);
+            poff += len;
+            soff += m;
+        }
+        let codes: Vec<f32> = sym.iter().map(|&s| lut[s as usize]).collect();
+        std::hint::black_box(&codes);
+    });
+    let mut codes = vec![0.0f32; n];
+    let fused_mb_s = throughput("fused decode threads=1 (8-chain pairs)", n, iters, || {
+        bs.decode_fused_into(&mut codes, &lut, 1).unwrap()
+    });
+    println!("{:<44}   -> {:.2}x vs seed path", "", fused_mb_s / seed_mb_s);
+    let fused_par_mb_s =
+        throughput(&format!("fused decode threads={max_threads}"), n, iters, || {
+            bs.decode_fused_into(&mut codes, &lut, max_threads).unwrap()
+        });
+
+    // tracked bench trajectory: scalar vs threads=N vs fused, MB/s
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"decode\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"n_symbols\": {n},\n",
+            "  \"threads\": {threads},\n",
+            "  \"seed_scalar_mb_s\": {seed:.1},\n",
+            "  \"scalar_mb_s\": {scalar:.1},\n",
+            "  \"parallel_mb_s\": {par:.1},\n",
+            "  \"fused_mb_s\": {fused:.1},\n",
+            "  \"fused_parallel_mb_s\": {fused_par:.1},\n",
+            "  \"fused_speedup_vs_seed\": {speedup:.2}\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        n = n,
+        threads = max_threads,
+        seed = seed_mb_s,
+        scalar = scalar_mb_s,
+        par = parallel_mb_s,
+        fused = fused_mb_s,
+        fused_par = fused_par_mb_s,
+        speedup = fused_mb_s / seed_mb_s,
+    );
+    // smoke numbers are not comparable to full runs: default them to a
+    // separate file so a BENCH=1 tier-1 pass never clobbers the
+    // tracked full-run trajectory
+    let default_name = if smoke { "BENCH_decode.smoke.json" } else { "BENCH_decode.json" };
+    let path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| format!("{}/{default_name}", env!("CARGO_MANIFEST_DIR")));
+    std::fs::write(&path, &json).expect("writing bench json");
+    println!("\nwrote {path}");
 
     println!("\n== encode throughput vs threads ==");
     let data = skewed(n, 10.0, 11);
     let scalar_ser = Bitstream::encode(&data, 256 * 1024).serialize();
     for &t in &thread_counts {
-        bench(&format!("rans encode 4MiB threads={t}"), 5, || {
+        bench(&format!("rans encode {}MiB threads={t}", n >> 20), iters, || {
             let _ = Bitstream::encode_parallel(&data, 256 * 1024, t);
         });
         // parallel framing must be byte-identical to the scalar path

@@ -22,12 +22,21 @@ fn heavy(rows: usize, cols: usize, seed: u64) -> Mat {
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let iters = if smoke { 1 } else { 3 };
+    let rd_iters = if smoke { 10 } else { 60 };
     println!("== per-layer RD optimization (L-BFGS over channel scales) ==");
     for (rows, cols) in [(192, 192), (512, 192), (256, 688)] {
         let w = heavy(rows, cols, 3);
         let params = rows * cols;
-        let r = bench(&format!("encode_layer {rows}x{cols} lam=1"), 3, || {
-            let _ = encode_layer(&w, &EncodeOpts { lam: 1.0, fmt: Format::F8E4M3, max_iters: 60, skip_optimization: false });
+        let r = bench(&format!("encode_layer {rows}x{cols} lam=1"), iters, || {
+            let opts = EncodeOpts {
+                lam: 1.0,
+                fmt: Format::F8E4M3,
+                max_iters: rd_iters,
+                skip_optimization: false,
+            };
+            let _ = encode_layer(&w, &opts);
         });
         println!(
             "{:<44}   -> {:.3} us/param",
@@ -61,7 +70,7 @@ fn main() {
     let mut base_ms = 0.0;
     for &t in &thread_counts {
         let mut last: Option<Vec<u8>> = None;
-        let r = bench(&format!("compress synthetic threads={t}"), 3, || {
+        let r = bench(&format!("compress synthetic threads={t}"), iters, || {
             let (cm, _) = compress_model(
                 &synth,
                 &CompressOpts { lam: 1.0, max_iters: 20, threads: t, ..Default::default() },

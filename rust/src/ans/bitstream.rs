@@ -22,8 +22,11 @@
 //! attacker-controlled `chunk_lens`, header fields, tables, or payload
 //! bytes must never cause a panic or a silent mis-decode.
 
-use super::rans::{decode_chunk, encode_chunk, FreqTable};
-use crate::parallel::Pool;
+use super::rans::{
+    decode_chunk_fused, decode_chunk_into, decode_chunk_pair_fused, decode_chunk_pair_into,
+    encode_chunk, FreqTable,
+};
+use crate::parallel::{pair_jobs, Pool};
 use crate::util::crc32;
 
 pub const DEFAULT_CHUNK: usize = 256 * 1024; // symbols per chunk (paper §A.1)
@@ -50,6 +53,10 @@ pub struct Bitstream {
 
 /// One decode job: (payload offset, payload len, symbols in this chunk).
 type ChunkJob = (usize, usize, usize);
+
+/// A chunk job paired with its disjoint output slice (u8 symbols or
+/// fused f32 codes).
+type DecodeTask<'a, T> = (ChunkJob, &'a mut [T]);
 
 /// `ceil(a / b)` without the 1.73+ `div_ceil`; overflow-free for any
 /// operands (b must be nonzero).
@@ -200,36 +207,90 @@ impl Bitstream {
         Ok(out)
     }
 
-    /// Decode into a caller-provided buffer (the serving double-buffer
-    /// path: no allocation on the request path).  Chunks decode across
-    /// `threads` workers of the shared pool; the result is identical to
-    /// the scalar path for any thread count.
-    pub fn decode_into(&self, out: &mut [u8], threads: usize) -> Result<(), String> {
-        if out.len() != self.n_symbols {
-            return Err(format!(
-                "output buffer holds {} bytes but stream has {} symbols",
-                out.len(),
-                self.n_symbols
-            ));
-        }
+    /// Pair each chunk with its disjoint output slice (chunk_jobs()
+    /// guarantees the slice lengths sum to exactly n_symbols), then
+    /// group chunks two-per-task where that keeps every worker busy:
+    /// a worker that owns both chunks of a task decodes them in the
+    /// 8-chain software-pipelined joint loop (see `rans`).
+    fn decode_tasks<'a, T>(
+        &self,
+        out: &'a mut [T],
+        threads: usize,
+    ) -> Result<Vec<(DecodeTask<'a, T>, Option<DecodeTask<'a, T>>)>, String> {
         let jobs = self.chunk_jobs()?;
-        if jobs.is_empty() {
-            return Ok(());
-        }
-        // pair each chunk with its disjoint output slice; chunk_jobs()
-        // guarantees the slice lengths sum to exactly n_symbols
-        let mut tasks: Vec<(ChunkJob, &mut [u8])> = Vec::with_capacity(jobs.len());
+        let mut tasks: Vec<DecodeTask<'a, T>> = Vec::with_capacity(jobs.len());
         let mut rest = out;
         for &job in &jobs {
             let (head, tail) = rest.split_at_mut(job.2);
             tasks.push((job, head));
             rest = tail;
         }
-        Pool::new(threads).try_for_each(tasks, |_, ((poff, plen, n), slice)| {
-            let dec = decode_chunk(&self.payload[poff..poff + plen], n, &self.table)?;
-            slice.copy_from_slice(&dec);
-            Ok(())
+        Ok(pair_jobs(tasks, threads))
+    }
+
+    /// Shared decode driver: validate the output size, build (possibly
+    /// paired) chunk tasks, and fan them out — `single`/`pair` supply
+    /// the per-task decode (byte sink or fused f32 sink).
+    fn decode_dispatch<T, FS, FP>(
+        &self,
+        out: &mut [T],
+        threads: usize,
+        single: FS,
+        pair: FP,
+    ) -> Result<(), String>
+    where
+        T: Send,
+        FS: Fn(&[u8], &mut [T]) -> Result<(), String> + Sync,
+        FP: Fn(&[u8], &mut [T], &[u8], &mut [T]) -> Result<(), String> + Sync,
+    {
+        if out.len() != self.n_symbols {
+            return Err(format!(
+                "output buffer holds {} elements but stream has {} symbols",
+                out.len(),
+                self.n_symbols
+            ));
+        }
+        let tasks = self.decode_tasks(out, threads)?;
+        Pool::new(threads).try_for_each(tasks, |_, (((ao, al, _), a_out), second)| {
+            match second {
+                Some(((bo, bl, _), b_out)) => {
+                    pair(&self.payload[ao..ao + al], a_out, &self.payload[bo..bo + bl], b_out)
+                }
+                None => single(&self.payload[ao..ao + al], a_out),
+            }
         })
+    }
+
+    /// Decode into a caller-provided buffer (the serving arena path: no
+    /// allocation on the request path — symbols are written straight
+    /// into `out`'s chunk slices).  Chunks decode across `threads`
+    /// workers of the shared pool; the result is identical to the
+    /// scalar path for any thread count.
+    pub fn decode_into(&self, out: &mut [u8], threads: usize) -> Result<(), String> {
+        self.decode_dispatch(
+            out,
+            threads,
+            |p, o| decode_chunk_into(p, o, &self.table),
+            |pa, oa, pb, ob| decode_chunk_pair_into(pa, oa, pb, ob, &self.table),
+        )
+    }
+
+    /// Fused decode->dequant: inflate the whole stream straight to f32
+    /// codes through a 256-entry LUT — the serving hot path, with no
+    /// intermediate symbol buffer.  Output equals `decode_into` mapped
+    /// through `lut`, for any thread count.
+    pub fn decode_fused_into(
+        &self,
+        out: &mut [f32],
+        lut: &[f32; 256],
+        threads: usize,
+    ) -> Result<(), String> {
+        self.decode_dispatch(
+            out,
+            threads,
+            |p, o| decode_chunk_fused(p, o, lut, &self.table),
+            |pa, oa, pb, ob| decode_chunk_pair_fused(pa, oa, pb, ob, lut, &self.table),
+        )
     }
 
     /// Total serialized size in bytes (storage accounting for the
@@ -359,6 +420,37 @@ mod tests {
         let mut buf2 = vec![0u8; d.len()];
         bs.decode_into(&mut buf2, 4).unwrap();
         assert_eq!(buf2, d);
+    }
+
+    #[test]
+    fn fused_decode_matches_scalar_across_threads() {
+        let d = data(100_000, 12);
+        // 13 chunks: exercises both the paired path (threads small
+        // enough to pair) and the odd single-chunk tail
+        let bs = Bitstream::encode(&d, 8 * 1024);
+        assert_eq!(bs.chunk_lens.len(), 13);
+        let lut = core::array::from_fn::<f32, 256, _>(|i| (i as f32).sqrt() - 3.0);
+        let mut sym = vec![0u8; d.len()];
+        bs.decode_into(&mut sym, 1).unwrap();
+        assert_eq!(sym, d);
+        let want: Vec<f32> = d.iter().map(|&s| lut[s as usize]).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let mut out = vec![0.0f32; d.len()];
+            bs.decode_fused_into(&mut out, &lut, threads).unwrap();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_decode_wrong_size_or_corrupt_is_error() {
+        let d = data(5000, 13);
+        let mut bs = Bitstream::encode(&d, 1024);
+        let lut = [0.0f32; 256];
+        let mut small = vec![0.0f32; d.len() - 1];
+        assert!(bs.decode_fused_into(&mut small, &lut, 1).is_err());
+        bs.chunk_lens[0] += 1;
+        let mut out = vec![0.0f32; d.len()];
+        assert!(bs.decode_fused_into(&mut out, &lut, 2).is_err());
     }
 
     #[test]

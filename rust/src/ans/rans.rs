@@ -141,32 +141,91 @@ pub fn encode_chunk(symbols: &[u8], table: &FreqTable) -> Vec<u8> {
     payload
 }
 
-/// Decode `n_symbols` from one chunk payload.
-///
-/// §Perf L3: the inner loop is unrolled over the 4 interleaved states
-/// (no per-symbol modulo, 4 independent dependency chains in flight) and
-/// each symbol costs a single packed SlotEntry load.  Byte pulls stay in
-/// exact program order so the stream layout matches the encoder.
-pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Result<Vec<u8>, String> {
-    if payload.len() < 16 {
+/// Where decoded symbols land: a raw byte buffer (`decode_chunk_into`)
+/// or, fused through a 256-entry dequant LUT, an f32 code buffer
+/// (`decode_chunk_fused`).  Monomorphized away — each sink compiles to
+/// a single store in the inner loop.
+trait SymbolSink {
+    fn put(&mut self, idx: usize, sym: u8);
+}
+
+struct ByteSink<'a>(&'a mut [u8]);
+
+impl SymbolSink for ByteSink<'_> {
+    #[inline(always)]
+    fn put(&mut self, idx: usize, sym: u8) {
+        self.0[idx] = sym;
+    }
+}
+
+struct FusedSink<'a> {
+    out: &'a mut [f32],
+    lut: &'a [f32; 256],
+}
+
+impl SymbolSink for FusedSink<'_> {
+    #[inline(always)]
+    fn put(&mut self, idx: usize, sym: u8) {
+        self.out[idx] = self.lut[sym as usize];
+    }
+}
+
+/// Parse the N_STREAMS initial states off a chunk payload header.
+#[inline]
+fn read_states(payload: &[u8]) -> Result<([u32; N_STREAMS], &[u8]), String> {
+    if payload.len() < 4 * N_STREAMS {
         return Err("chunk payload too short".into());
     }
     let mut states = [0u32; N_STREAMS];
     for (i, st) in states.iter_mut().enumerate() {
         *st = u32::from_le_bytes(payload[4 * i..4 * i + 4].try_into().unwrap());
     }
-    let inp = &payload[16..];
-    let mut ip = 0usize;
-    let mut out = vec![0u8; n_symbols];
+    Ok((states, &payload[4 * N_STREAMS..]))
+}
 
+/// Shared integrity epilogue: decoding is the exact inverse of
+/// encoding, so a well-formed (payload, n_symbols, table) triple
+/// consumes every input byte and returns every state to the encoder's
+/// initial L.  Anything else — truncated/extended payload, a table
+/// whose frequencies disagree with the one used at encode time
+/// (including freq-0 symbols that were present in the data), or a wrong
+/// symbol count — fails here instead of silently mis-decoding.
+#[inline]
+fn check_final(ip: usize, inp_len: usize, states: &[u32; N_STREAMS]) -> Result<(), String> {
+    if ip != inp_len {
+        return Err(format!("rans: {} unconsumed payload bytes (corrupt chunk)", inp_len - ip));
+    }
+    for (i, &x) in states.iter().enumerate() {
+        if x != RANS_L {
+            return Err(format!(
+                "rans: stream {i} final state {x:#010x} != L (corrupt chunk or wrong freq table)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// §Perf L3: the inner loop is unrolled over the 4 interleaved states
+/// (no per-symbol modulo, 4 independent dependency chains in flight) and
+/// each symbol costs a single packed SlotEntry load.  Byte pulls stay in
+/// exact program order so the stream layout matches the encoder.
+#[inline(always)]
+fn decode_core<S: SymbolSink>(
+    payload: &[u8],
+    n_symbols: usize,
+    table: &FreqTable,
+    sink: &mut S,
+) -> Result<(), String> {
+    let (states, inp) = read_states(payload)?;
+    let mut ip = 0usize;
     let mask = PROB_SCALE - 1;
     let slots = &table.slots[..];
 
     macro_rules! step {
-        ($x:expr, $slot_out:expr) => {{
+        ($x:expr, $idx:expr) => {{
             let slot = $x & mask;
             let e = slots[slot as usize];
-            $slot_out = e.sym;
+            sink.put($idx, e.sym);
             let mut x = (e.freq as u32) * ($x >> PROB_BITS) + slot - e.cum as u32;
             while x < RANS_L {
                 let b = *inp.get(ip).ok_or("rans: input exhausted")?;
@@ -181,35 +240,178 @@ pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Resu
     let [mut x0, mut x1, mut x2, mut x3] = states;
     let mut idx = 0usize;
     while idx < n4 {
-        step!(x0, out[idx]);
-        step!(x1, out[idx + 1]);
-        step!(x2, out[idx + 2]);
-        step!(x3, out[idx + 3]);
+        step!(x0, idx);
+        step!(x1, idx + 1);
+        step!(x2, idx + 2);
+        step!(x3, idx + 3);
         idx += 4;
     }
     let mut tail_states = [x0, x1, x2, x3];
     for idx in n4..n_symbols {
-        step!(tail_states[idx % N_STREAMS], out[idx]);
+        step!(tail_states[idx % N_STREAMS], idx);
+    }
+    check_final(ip, inp.len(), &tail_states)
+}
+
+/// Software-pipelined joint decode of two *independent* chunks: the 4
+/// interleaved states of chunk A and the 4 of chunk B carry no
+/// dependency on each other, so the main loop keeps 8 decode chains in
+/// flight per iteration (the renorm byte pulls of each chunk stay in
+/// exact program order against its own payload, so output is
+/// byte-identical to decoding the chunks one after another).  When the
+/// chunks differ in length the longer one drains on the plain 4-chain
+/// loop.
+#[inline(always)]
+fn decode_pair_core<S: SymbolSink>(
+    a: (&[u8], usize, &mut S),
+    b: (&[u8], usize, &mut S),
+    table: &FreqTable,
+) -> Result<(), String> {
+    let (pa, na, sink_a) = a;
+    let (pb, nb, sink_b) = b;
+    let (st_a, inp_a) = read_states(pa)?;
+    let (st_b, inp_b) = read_states(pb)?;
+    let (mut ipa, mut ipb) = (0usize, 0usize);
+    let mask = PROB_SCALE - 1;
+    let slots = &table.slots[..];
+
+    macro_rules! step_a {
+        ($x:expr, $idx:expr) => {{
+            let slot = $x & mask;
+            let e = slots[slot as usize];
+            sink_a.put($idx, e.sym);
+            let mut x = (e.freq as u32) * ($x >> PROB_BITS) + slot - e.cum as u32;
+            while x < RANS_L {
+                let byte = *inp_a.get(ipa).ok_or("rans: input exhausted")?;
+                ipa += 1;
+                x = (x << 8) | byte as u32;
+            }
+            $x = x;
+        }};
+    }
+    macro_rules! step_b {
+        ($x:expr, $idx:expr) => {{
+            let slot = $x & mask;
+            let e = slots[slot as usize];
+            sink_b.put($idx, e.sym);
+            let mut x = (e.freq as u32) * ($x >> PROB_BITS) + slot - e.cum as u32;
+            while x < RANS_L {
+                let byte = *inp_b.get(ipb).ok_or("rans: input exhausted")?;
+                ipb += 1;
+                x = (x << 8) | byte as u32;
+            }
+            $x = x;
+        }};
     }
 
-    // Integrity check: decoding is the exact inverse of encoding, so a
-    // well-formed (payload, n_symbols, table) triple consumes every
-    // input byte and returns every state to the encoder's initial L.
-    // Anything else — truncated/extended payload, a table whose
-    // frequencies disagree with the one used at encode time (including
-    // freq-0 symbols that were present in the data), or a wrong symbol
-    // count — fails here instead of silently mis-decoding.
-    if ip != inp.len() {
-        return Err(format!("rans: {} unconsumed payload bytes (corrupt chunk)", inp.len() - ip));
+    let n4a = na - na % N_STREAMS;
+    let n4b = nb - nb % N_STREAMS;
+    let joint = n4a.min(n4b);
+    let [mut a0, mut a1, mut a2, mut a3] = st_a;
+    let [mut b0, mut b1, mut b2, mut b3] = st_b;
+    let mut idx = 0usize;
+    while idx < joint {
+        step_a!(a0, idx);
+        step_b!(b0, idx);
+        step_a!(a1, idx + 1);
+        step_b!(b1, idx + 1);
+        step_a!(a2, idx + 2);
+        step_b!(b2, idx + 2);
+        step_a!(a3, idx + 3);
+        step_b!(b3, idx + 3);
+        idx += 4;
     }
-    for (i, &x) in tail_states.iter().enumerate() {
-        if x != RANS_L {
-            return Err(format!(
-                "rans: stream {i} final state {x:#010x} != L (corrupt chunk or wrong freq table)"
-            ));
-        }
+
+    let mut ia = joint;
+    while ia < n4a {
+        step_a!(a0, ia);
+        step_a!(a1, ia + 1);
+        step_a!(a2, ia + 2);
+        step_a!(a3, ia + 3);
+        ia += 4;
     }
+    let mut tail_a = [a0, a1, a2, a3];
+    for i in n4a..na {
+        step_a!(tail_a[i % N_STREAMS], i);
+    }
+
+    let mut ib = joint;
+    while ib < n4b {
+        step_b!(b0, ib);
+        step_b!(b1, ib + 1);
+        step_b!(b2, ib + 2);
+        step_b!(b3, ib + 3);
+        ib += 4;
+    }
+    let mut tail_b = [b0, b1, b2, b3];
+    for i in n4b..nb {
+        step_b!(tail_b[i % N_STREAMS], i);
+    }
+
+    check_final(ipa, inp_a.len(), &tail_a)?;
+    check_final(ipb, inp_b.len(), &tail_b)
+}
+
+/// Decode `n_symbols` from one chunk payload (allocating convenience
+/// wrapper around `decode_chunk_into`).
+pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Result<Vec<u8>, String> {
+    let mut out = vec![0u8; n_symbols];
+    decode_chunk_into(payload, &mut out, table)?;
     Ok(out)
+}
+
+/// Decode `out.len()` symbols from one chunk payload straight into the
+/// caller's slice — the allocation-free serving path.
+pub fn decode_chunk_into(payload: &[u8], out: &mut [u8], table: &FreqTable) -> Result<(), String> {
+    let n = out.len();
+    decode_core(payload, n, table, &mut ByteSink(out))
+}
+
+/// Fused decode->dequant: inflate one chunk straight to f32 codes
+/// through `lut`, with no intermediate symbol buffer.
+pub fn decode_chunk_fused(
+    payload: &[u8],
+    out: &mut [f32],
+    lut: &[f32; 256],
+    table: &FreqTable,
+) -> Result<(), String> {
+    let n = out.len();
+    decode_core(payload, n, table, &mut FusedSink { out, lut })
+}
+
+/// Decode two independent chunks in the 8-chain software-pipelined
+/// joint loop (see `decode_pair_core`); outputs are byte-identical to
+/// two `decode_chunk_into` calls.
+pub fn decode_chunk_pair_into(
+    payload_a: &[u8],
+    out_a: &mut [u8],
+    payload_b: &[u8],
+    out_b: &mut [u8],
+    table: &FreqTable,
+) -> Result<(), String> {
+    let (na, nb) = (out_a.len(), out_b.len());
+    decode_pair_core(
+        (payload_a, na, &mut ByteSink(out_a)),
+        (payload_b, nb, &mut ByteSink(out_b)),
+        table,
+    )
+}
+
+/// Fused 8-chain pair decode: two chunks straight to f32 codes.
+pub fn decode_chunk_pair_fused(
+    payload_a: &[u8],
+    out_a: &mut [f32],
+    payload_b: &[u8],
+    out_b: &mut [f32],
+    lut: &[f32; 256],
+    table: &FreqTable,
+) -> Result<(), String> {
+    let (na, nb) = (out_a.len(), out_b.len());
+    decode_pair_core(
+        (payload_a, na, &mut FusedSink { out: out_a, lut }),
+        (payload_b, nb, &mut FusedSink { out: out_b, lut }),
+        table,
+    )
 }
 
 #[cfg(test)]
@@ -301,6 +503,80 @@ mod tests {
         let enc = encode_chunk(&data, &t);
         let bps = enc.len() as f64 * 8.0 / data.len() as f64;
         assert!(bps < 0.35, "ANS must beat 1 bit/sym: got {bps} at H={h}");
+    }
+
+    #[test]
+    fn into_pair_fused_match_scalar_sweep() {
+        // proptest-style sweep: every decode variant (slice sink, fused
+        // LUT sink, 8-chain pair loop) must be byte-identical to the
+        // scalar `decode_chunk` for any size/skew/seed, including the
+        // uneven-pair case where one chunk drains on the 4-chain loop
+        let lut = core::array::from_fn::<f32, 256, _>(|i| i as f32 * 0.5 - 17.0);
+        for &n in &[2usize, 3, 5, 17, 100, 1000, 10_000] {
+            for seed in 1..3u64 {
+                let a = skewed_data(n, 3.0, seed * 13 + n as u64);
+                let b = skewed_data(n + n / 3 + 1, 8.0, seed * 13 + n as u64 + 100);
+                let mut joint = a.clone();
+                joint.extend_from_slice(&b);
+                let t = FreqTable::from_data(&joint);
+                let ea = encode_chunk(&a, &t);
+                let eb = encode_chunk(&b, &t);
+                let want_a = decode_chunk(&ea, a.len(), &t).unwrap();
+                assert_eq!(want_a, a, "n={n} seed={seed}");
+
+                let mut out_a = vec![0u8; a.len()];
+                decode_chunk_into(&ea, &mut out_a, &t).unwrap();
+                assert_eq!(out_a, a, "into n={n} seed={seed}");
+
+                let mut pa = vec![0u8; a.len()];
+                let mut pb = vec![0u8; b.len()];
+                decode_chunk_pair_into(&ea, &mut pa, &eb, &mut pb, &t).unwrap();
+                assert_eq!(pa, a, "pair A n={n} seed={seed}");
+                assert_eq!(pb, b, "pair B n={n} seed={seed}");
+
+                let want_fa: Vec<f32> = a.iter().map(|&s| lut[s as usize]).collect();
+                let want_fb: Vec<f32> = b.iter().map(|&s| lut[s as usize]).collect();
+                let mut fa = vec![0.0f32; a.len()];
+                decode_chunk_fused(&ea, &mut fa, &lut, &t).unwrap();
+                assert_eq!(fa, want_fa, "fused n={n} seed={seed}");
+
+                let mut ga = vec![0.0f32; a.len()];
+                let mut gb = vec![0.0f32; b.len()];
+                decode_chunk_pair_fused(&ea, &mut ga, &eb, &mut gb, &lut, &t).unwrap();
+                assert_eq!(ga, want_fa, "pair-fused A n={n} seed={seed}");
+                assert_eq!(gb, want_fb, "pair-fused B n={n} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_decode_corrupt_member_is_error_not_panic() {
+        let a = skewed_data(3000, 4.0, 21);
+        let b = skewed_data(2500, 4.0, 22);
+        let mut joint = a.clone();
+        joint.extend_from_slice(&b);
+        let t = FreqTable::from_data(&joint);
+        let ea = encode_chunk(&a, &t);
+        let eb = encode_chunk(&b, &t);
+        let mut oa = vec![0u8; a.len()];
+        let mut ob = vec![0u8; b.len()];
+        // truncate either member: error, never panic
+        let cut = &ea[..ea.len() / 2];
+        assert!(decode_chunk_pair_into(cut, &mut oa, &eb, &mut ob, &t).is_err());
+        assert!(decode_chunk_pair_into(&ea, &mut oa, &eb[..8], &mut ob, &t).is_err());
+        // extended member: unconsumed bytes
+        let mut ext = eb.clone();
+        ext.push(1);
+        assert!(decode_chunk_pair_into(&ea, &mut oa, &ext, &mut ob, &t).is_err());
+        // fused variant shares the same integrity checks
+        let lut = [0.5f32; 256];
+        let mut fa = vec![0.0f32; a.len()];
+        let mut fb = vec![0.0f32; b.len()];
+        assert!(decode_chunk_pair_fused(cut, &mut fa, &eb, &mut fb, &lut, &t).is_err());
+        // and the untouched pair still round-trips
+        decode_chunk_pair_into(&ea, &mut oa, &eb, &mut ob, &t).unwrap();
+        assert_eq!(oa, a);
+        assert_eq!(ob, b);
     }
 
     #[test]

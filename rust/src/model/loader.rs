@@ -40,20 +40,33 @@ pub fn parse_eqw(bytes: &[u8]) -> Result<Model> {
             .collect();
         let offset = rec.get("offset").and_then(|v| v.as_usize()).ok_or(anyhow!("offset"))?;
         let nbytes = rec.get("nbytes").and_then(|v| v.as_usize()).ok_or(anyhow!("nbytes"))?;
-        if offset + nbytes > data.len() {
-            bail!("tensor {name} out of bounds");
+        // header offsets are untrusted: checked arithmetic (a huge
+        // offset must not wrap past the bounds test) and an exact
+        // f32-multiple length, then bulk-parse 4-byte chunks
+        let end = offset
+            .checked_add(nbytes)
+            .ok_or_else(|| anyhow!("tensor {name} range overflows"))?;
+        if end > data.len() {
+            bail!("tensor {name} out of bounds ({offset}+{nbytes} > {})", data.len());
         }
-        let n = nbytes / 4;
-        let mut vals = Vec::with_capacity(n);
-        for i in 0..n {
-            let o = offset + 4 * i;
-            vals.push(f32::from_le_bytes(data[o..o + 4].try_into().unwrap()));
+        if nbytes % 4 != 0 {
+            bail!("tensor {name} byte length {nbytes} is not a multiple of 4");
         }
+        let vals: Vec<f32> = data[offset..end]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
         let (rows, cols) = match shape.len() {
             1 => (1, shape[0]),
             2 => (shape[0], shape[1]),
             _ => bail!("unsupported rank for {name}"),
         };
+        let want = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow!("tensor {name} shape overflows"))?;
+        if vals.len() != want {
+            bail!("tensor {name}: {} f32s but shape {rows}x{cols}", vals.len());
+        }
         tensors.insert(name.to_string(), Mat::from_vec(rows, cols, vals));
     }
 
@@ -230,6 +243,35 @@ mod tests {
     fn rejects_bad_magic() {
         assert!(parse_eqw(b"NOPE....").is_err());
         assert!(parse_eqw(b"EQ").is_err());
+    }
+
+    #[test]
+    fn hostile_tensor_offsets_error_not_panic() {
+        let cfg = r#""config":{"name":"T","vocab":32,"d_model":16,"n_layers":1,"n_heads":2,"d_ff":24,"max_ctx":16}"#;
+        let mk = |tensor_json: &str| {
+            let header = format!("{{{cfg},\"tensors\":[{tensor_json}]}}");
+            let mut bytes = b"EQW1".to_vec();
+            bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(header.as_bytes());
+            bytes.extend_from_slice(&[0u8; 64]); // data region
+            bytes
+        };
+        // offset + nbytes overflows usize: Err, never a wrapped bounds
+        // check followed by a slice panic
+        let huge = format!(
+            "{{\"name\":\"embed\",\"shape\":[16],\"dtype\":\"f32\",\"offset\":{},\"nbytes\":64}}",
+            usize::MAX
+        );
+        assert!(parse_eqw(&mk(&huge)).is_err());
+        // plain out of bounds
+        let oob = r#"{"name":"embed","shape":[100],"dtype":"f32","offset":32,"nbytes":400}"#;
+        assert!(parse_eqw(&mk(oob)).is_err());
+        // in bounds but not an f32 multiple
+        let ragged = r#"{"name":"embed","shape":[3],"dtype":"f32","offset":0,"nbytes":13}"#;
+        assert!(parse_eqw(&mk(ragged)).is_err());
+        // byte length disagrees with the declared shape
+        let short = r#"{"name":"embed","shape":[3],"dtype":"f32","offset":0,"nbytes":16}"#;
+        assert!(parse_eqw(&mk(short)).is_err());
     }
 
     #[test]

@@ -165,6 +165,25 @@ impl Pool {
     }
 }
 
+/// Chunk-pair scheduling: group jobs two-per-task when the pairing
+/// still leaves every worker at least one task.  A worker that owns
+/// both members of a pair can software-pipeline them (the decoder's
+/// 8-chain joint rANS loop); with fewer jobs than `2 * threads`,
+/// pairing would idle workers, so jobs stay single.  Pairs keep index
+/// order, so downstream results are independent of the thread count.
+pub fn pair_jobs<I>(jobs: Vec<I>, threads: usize) -> Vec<(I, Option<I>)> {
+    let threads = threads.max(1);
+    if jobs.len() < 2 * threads {
+        return jobs.into_iter().map(|j| (j, None)).collect();
+    }
+    let mut out = Vec::with_capacity(jobs.len() / 2 + 1);
+    let mut it = jobs.into_iter();
+    while let Some(first) = it.next() {
+        out.push((first, it.next()));
+    }
+    out
+}
+
 /// One-ahead producer/consumer: `produce(i)` runs on a background worker
 /// one step ahead of `consume(i, item)` on the calling thread — the
 /// paper's §A.1 double-buffer scheme (block i+1's ANS decode overlaps
@@ -305,6 +324,22 @@ mod tests {
             }
         });
         assert_eq!(r, Err("seven"));
+    }
+
+    #[test]
+    fn pair_jobs_pairs_only_when_workers_stay_busy() {
+        // plenty of jobs: pair up (odd tail stays single)
+        let t = pair_jobs((0..5).collect::<Vec<_>>(), 1);
+        assert_eq!(t, vec![(0, Some(1)), (2, Some(3)), (4, None)]);
+        let t = pair_jobs((0..8).collect::<Vec<_>>(), 4);
+        assert_eq!(t.len(), 4);
+        assert!(t.iter().all(|(_, snd)| snd.is_some()));
+        // too few jobs per worker: stay single so all workers get one
+        let t = pair_jobs((0..5).collect::<Vec<_>>(), 3);
+        assert_eq!(t, (0..5).map(|i| (i, None)).collect::<Vec<_>>());
+        // degenerate inputs
+        assert_eq!(pair_jobs(Vec::<u8>::new(), 4), vec![]);
+        assert_eq!(pair_jobs(vec![9], 0), vec![(9, None)]);
     }
 
     #[test]

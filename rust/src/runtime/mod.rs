@@ -12,6 +12,7 @@ use crate::store::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub struct TensorSpec {
     pub shape: Vec<usize>,
@@ -89,16 +90,43 @@ impl Manifest {
 }
 
 /// A host-side tensor flowing in/out of PJRT executables.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub enum HostTensor {
     F32 { data: Vec<f32>, dims: Vec<usize> },
+    /// `len` f32s at `off` inside a shared (arena-recycled) buffer:
+    /// per-layer views of a decoded block alias one block buffer, so
+    /// cloning is an Arc bump and the serving arena reclaims the
+    /// buffer once every view has been dropped.
+    F32View { data: Arc<Vec<f32>>, off: usize, len: usize, dims: Vec<usize> },
     I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+/// Logical equality: f32 tensors compare by (dims, visible window), so
+/// an owned `F32` and an arena-backed `F32View` with the same contents
+/// are equal, and views never compare their out-of-window buffer tails.
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (HostTensor::I32 { data: a, dims: da }, HostTensor::I32 { data: b, dims: db }) => {
+                a == b && da == db
+            }
+            (HostTensor::I32 { .. }, _) | (_, HostTensor::I32 { .. }) => false,
+            _ => self.dims() == other.dims() && self.as_f32() == other.as_f32(),
+        }
+    }
 }
 
 impl HostTensor {
     pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
         assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
         HostTensor::F32 { data, dims: dims.to_vec() }
+    }
+
+    /// Zero-copy view into a shared f32 buffer (serving arena path).
+    pub fn f32_view(data: Arc<Vec<f32>>, off: usize, len: usize, dims: &[usize]) -> Self {
+        assert_eq!(len, dims.iter().product::<usize>().max(1));
+        assert!(off + len <= data.len(), "view {off}+{len} outside buffer of {}", data.len());
+        HostTensor::F32View { data, off, len, dims: dims.to_vec() }
     }
 
     pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
@@ -113,6 +141,7 @@ impl HostTensor {
     pub fn as_f32(&self) -> &[f32] {
         match self {
             HostTensor::F32 { data, .. } => data,
+            HostTensor::F32View { data, off, len, .. } => &data[*off..*off + *len],
             _ => panic!("not f32"),
         }
     }
@@ -120,30 +149,24 @@ impl HostTensor {
     pub fn dims(&self) -> &[usize] {
         match self {
             HostTensor::F32 { dims, .. } => dims,
+            HostTensor::F32View { dims, .. } => dims,
             HostTensor::I32 { dims, .. } => dims,
         }
     }
 
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
-            HostTensor::F32 { data, dims } => {
-                let l = xla::Literal::vec1(data.as_slice());
-                if dims.is_empty() {
-                    l.reshape(&[])?
-                } else {
-                    l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?
-                }
+            HostTensor::F32 { .. } | HostTensor::F32View { .. } => {
+                xla::Literal::vec1(self.as_f32())
             }
-            HostTensor::I32 { data, dims } => {
-                let l = xla::Literal::vec1(data.as_slice());
-                if dims.is_empty() {
-                    l.reshape(&[])?
-                } else {
-                    l.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?
-                }
-            }
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
         };
-        Ok(lit)
+        let dims = self.dims();
+        Ok(if dims.is_empty() {
+            lit.reshape(&[])?
+        } else {
+            lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+        })
     }
 
     fn from_literal(lit: &xla::Literal, spec_dims: Vec<usize>) -> Result<Self> {
@@ -245,6 +268,20 @@ mod tests {
             return None;
         }
         Some(Runtime::new(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn f32_view_reads_its_window() {
+        let buf = Arc::new((0..12).map(|i| i as f32).collect::<Vec<f32>>());
+        let v = HostTensor::f32_view(Arc::clone(&buf), 4, 6, &[2, 3]);
+        assert_eq!(v.dims(), &[2, 3]);
+        assert_eq!(v.as_f32(), &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        // clones are Arc bumps sharing the same storage
+        let c = v.clone();
+        drop(v);
+        assert_eq!(c.as_f32(), &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        drop(c);
+        assert_eq!(Arc::strong_count(&buf), 1);
     }
 
     #[test]

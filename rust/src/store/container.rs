@@ -112,6 +112,25 @@ impl CompressedModel {
             .map_err(|e| anyhow!("block {i}: {e}"))
     }
 
+    /// Fused serving path: decode block `i` straight to f32 codes
+    /// through the format's 256-entry dequant LUT (no intermediate
+    /// symbol buffer).  `out.len()` must equal `n_symbols(i)`.
+    pub fn decode_block_fused_into(
+        &self,
+        i: usize,
+        out: &mut [f32],
+        lut: &[f32; 256],
+        threads: usize,
+    ) -> Result<()> {
+        let block = self.blocks.get(i).ok_or_else(|| {
+            anyhow!("block {i} out of range ({} blocks)", self.blocks.len())
+        })?;
+        block
+            .bitstream
+            .decode_fused_into(out, lut, threads)
+            .map_err(|e| anyhow!("block {i}: {e}"))
+    }
+
     /// Offline-eval path: reconstruct the QModel (and from there a
     /// dequantized f32 model).
     pub fn to_qmodel(&self) -> Result<QModel> {

@@ -93,6 +93,10 @@ fn eqzb_corrupt_in_memory_fields_error_not_panic() {
         assert!(bs.decode().is_err(), "perturbation {i} decoded successfully");
         let mut buf = vec![0u8; data.len()];
         assert!(bs.decode_into(&mut buf, 2).is_err(), "perturbation {i} decoded (parallel)");
+        // the fused decode->f32 path shares every integrity check
+        let mut fbuf = vec![0.0f32; data.len()];
+        let lut = [1.0f32; 256];
+        assert!(bs.decode_fused_into(&mut fbuf, &lut, 2).is_err(), "perturbation {i} (fused)");
     }
     // and the untouched stream still round-trips
     assert_eq!(good.decode().unwrap(), data);
@@ -139,12 +143,19 @@ fn bitstream_encode_decode_identical_across_thread_counts() {
     let data = symbols(200_000, 6);
     let scalar = Bitstream::encode(&data, 16 * 1024);
     let scalar_ser = scalar.serialize();
+    let lut = core::array::from_fn::<f32, 256, _>(|i| i as f32 * 0.25 - 8.0);
+    let want_f: Vec<f32> = data.iter().map(|&s| lut[s as usize]).collect();
     for threads in [2usize, 3, 4, 8] {
         let par = Bitstream::encode_parallel(&data, 16 * 1024, threads);
         assert_eq!(par.serialize(), scalar_ser, "encode threads={threads}");
         let mut out = vec![0u8; data.len()];
         par.decode_into(&mut out, threads).unwrap();
         assert_eq!(out, data, "decode threads={threads}");
+        // fused decode->f32 must equal the scalar symbols mapped
+        // through the LUT, for any thread count / pairing layout
+        let mut fout = vec![0.0f32; data.len()];
+        par.decode_fused_into(&mut fout, &lut, threads).unwrap();
+        assert_eq!(fout, want_f, "fused decode threads={threads}");
     }
 }
 

@@ -103,6 +103,29 @@ fn pipelined_and_scalar_decode_agree() {
 }
 
 #[test]
+fn repeated_generate_is_identical_and_alloc_free() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let dir = entquant::artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let engine = ServingEngine::new(rt, compressed_m(0.05), EngineOpts::default()).unwrap();
+    let valid = std::fs::read(format!("{dir}/corpus/valid.bin")).unwrap();
+    let batch = &pack(
+        &[Request { id: 0, prompt: valid[..40].to_vec(), max_new_tokens: 6 }],
+        &[(1, 128)],
+    )[0];
+    let out1 = engine.generate(batch, 6).unwrap().0;
+    let out2 = engine.generate(batch, 6).unwrap().0;
+    assert_eq!(out1, out2, "arena reuse must not change outputs");
+    // steady-state decode must recycle the two arena buffers: no fresh
+    // block-sized buffer allocation across either generate call (tiny
+    // per-view metadata allocations are out of scope for this counter)
+    assert_eq!(engine.decode_arena_fresh_allocs(), 0, "decode path allocated past the arena");
+}
+
+#[test]
 fn residency_modes_agree_on_outputs() {
     if !artifacts_ready() {
         eprintln!("artifacts missing; skipping");

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tracked decode/encode benches.  Runs the hand-rolled bench binaries
+# and captures the decode trajectory to BENCH_decode.json (MB/s for the
+# seed scalar path, chunk-parallel threads=N, and the fused
+# bitstream->f32 path).
+#
+#   scripts/bench.sh                 # full run
+#   BENCH_SMOKE=1 scripts/bench.sh   # fast smoke (tier1.sh BENCH=1 hook)
+#   BENCH_JSON=/path.json            # override the JSON output path
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench decode
+cargo bench --bench encoder
+
+# smoke runs write BENCH_decode.smoke.json so they never clobber the
+# tracked full-run trajectory
+if [[ "${BENCH_SMOKE:-0}" == 1 ]]; then
+    DEFAULT_JSON=BENCH_decode.smoke.json
+else
+    DEFAULT_JSON=BENCH_decode.json
+fi
+echo
+echo "== ${BENCH_JSON:-$DEFAULT_JSON} =="
+cat "${BENCH_JSON:-$DEFAULT_JSON}"

@@ -3,6 +3,8 @@
 #
 #   scripts/tier1.sh           # build + tests + format check
 #   scripts/tier1.sh --fast    # skip the release build (tests only)
+#   BENCH=1 scripts/tier1.sh   # additionally smoke the tracked benches
+#                              # (scripts/bench.sh -> BENCH_decode.json)
 #
 # Integration tests that need trained artifacts (`make artifacts`)
 # self-skip with a note; the unit suites (ANS, container, parallel
@@ -27,6 +29,11 @@ if ! cargo fmt --version >/dev/null 2>&1; then
     echo "(rustfmt unavailable in this image; skipping format check)"
 else
     cargo fmt --check
+fi
+
+if [[ "${BENCH:-0}" == 1 ]]; then
+    echo "== bench smoke (BENCH=1) =="
+    BENCH_SMOKE=1 scripts/bench.sh
 fi
 
 echo "tier-1: OK"
