@@ -1,0 +1,135 @@
+//! Bench: the serve subsystem under a synthetic request trace —
+//! scheduler throughput (tokens/s) and p50 time-to-first-token at
+//! 1/2/4 shards, end-to-end on the native executor (compress a
+//! synthetic checkpoint, shard it, drive the continuous-batching
+//! scheduler).  Emits the tracked `BENCH_serve.json`
+//! (`BENCH_serve.smoke.json` under `BENCH_SMOKE=1`, which also shrinks
+//! the trace; `BENCH_SERVE_JSON` overrides the path).
+
+use entquant::coordinator::EngineOpts;
+use entquant::model::loader::synthetic_model;
+use entquant::model::Config;
+use entquant::runtime::{Manifest, Runtime};
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+
+const SEQ: usize = 24;
+const CTX: usize = 48;
+
+fn native_rt(cm: &CompressedModel) -> Runtime {
+    Runtime::native(Manifest::synthetic(
+        cm.config.clone(),
+        vec![(1, SEQ), (2, SEQ), (4, SEQ), (8, SEQ)],
+        vec![(1, CTX), (2, CTX), (4, CTX), (8, CTX)],
+    ))
+}
+
+struct TracePoint {
+    shards: usize,
+    tokens: usize,
+    wall_s: f64,
+    tokens_per_s: f64,
+    p50_ttft_ms: f64,
+    fused: usize,
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (n_layers, n_requests, max_new) = if smoke { (4, 16, 6) } else { (8, 64, 8) };
+
+    println!("== compressing a synthetic checkpoint ({n_layers} layers) ==");
+    let model = synthetic_model(
+        Config {
+            name: "bench".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers,
+            n_heads: 4,
+            d_ff: 48,
+            max_ctx: 64,
+        },
+        71,
+    );
+    let t0 = std::time::Instant::now();
+    let threads = entquant::parallel::default_threads();
+    let (cm, rep) = compress_model(
+        &model,
+        &CompressOpts { lam: 0.3, max_iters: 6, threads, ..Default::default() },
+    )
+    .expect("compress");
+    println!(
+        "compressed in {:.1}s: {:.2} effective bits/param",
+        t0.elapsed().as_secs_f64(),
+        rep.effective_bits_per_param
+    );
+
+    println!("\n== scheduler trace: {n_requests} requests, max_new {max_new}, shards 1/2/4 ==");
+    let mut points: Vec<TracePoint> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let plan = ShardPlan::balance(&cm, shards);
+        let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&cm)).collect();
+        let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).expect("shards");
+        let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
+        let ids: Vec<u64> = (0..n_requests as u64)
+            .map(|i| {
+                let len = 2 + (i as usize * 5) % (SEQ - 4);
+                let prompt: Vec<u8> =
+                    (0..len).map(|j| ((i as usize * 13 + j * 7) % 64) as u8).collect();
+                sched.submit(prompt, max_new)
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        sched.resume();
+        sched.drain(std::time::Duration::from_secs(600)).expect("drain");
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = sched.metrics();
+        assert_eq!(m.completed, ids.len(), "trace must complete");
+        let tokens_per_s = m.tokens as f64 / wall_s;
+        println!(
+            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, p50 ttft {:.1} ms, {} fused admissions",
+            m.tokens, m.p50_ttft_ms, m.fused_admissions
+        );
+        points.push(TracePoint {
+            shards,
+            tokens: m.tokens,
+            wall_s,
+            tokens_per_s,
+            p50_ttft_ms: m.p50_ttft_ms,
+            fused: m.fused_admissions,
+        });
+        sched.shutdown().expect("driver shutdown");
+    }
+
+    // tracked trajectory: tokens/s and p50 ttft per shard count
+    let mut series = String::new();
+    for (i, p) in points.iter().enumerate() {
+        if i > 0 {
+            series.push_str(",\n");
+        }
+        series.push_str(&format!(
+            "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, \"p50_ttft_ms\": {:.2}, \"fused_admissions\": {}}}",
+            p.shards, p.tokens, p.wall_s, p.tokens_per_s, p.p50_ttft_ms, p.fused
+        ));
+    }
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"serve\",\n",
+            "  \"smoke\": {smoke},\n",
+            "  \"requests\": {requests},\n",
+            "  \"max_new\": {max_new},\n",
+            "  \"trace\": [\n{series}\n  ]\n",
+            "}}\n"
+        ),
+        smoke = smoke,
+        requests = n_requests,
+        max_new = max_new,
+        series = series,
+    );
+    let default_name = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
+    let path = std::env::var("BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| format!("{}/{default_name}", env!("CARGO_MANIFEST_DIR")));
+    std::fs::write(&path, &json).expect("writing bench json");
+    println!("\nwrote {path}");
+}

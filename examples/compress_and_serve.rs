@@ -1,16 +1,18 @@
 //! End-to-end driver (DESIGN.md "End-to-end validation"): load the
 //! build-time-trained M checkpoint, compress it data-free to ~3
-//! effective bits, then serve batched requests through the full
-//! three-layer stack — rust coordinator -> PJRT executables (lowered
-//! from the JAX model whose linears are the Pallas qmatmul kernel) —
+//! effective bits, then serve a request trace through the full serve
+//! subsystem — blocks sharded across two engines by compressed byte
+//! size, requests admitted through the continuous-batching scheduler
+//! (PJRT executables when available, the native executor otherwise) —
 //! with on-the-fly block-wise ANS decoding, reporting latency and
 //! throughput.  Recorded in EXPERIMENTS.md §E2E.
 //!
 //!   cargo run --release --example compress_and_serve
 
-use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::coordinator::EngineOpts;
 use entquant::eval::perplexity;
 use entquant::runtime::Runtime;
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
 use entquant::store::pipeline::{compress_model, CompressOpts};
 
 fn main() -> anyhow::Result<()> {
@@ -42,55 +44,51 @@ fn main() -> anyhow::Result<()> {
     let comp_ppl = perplexity(&cm.to_model()?, &valid, 128, 4);
     println!("      quality: base ppl {base_ppl:.3} -> compressed ppl {comp_ppl:.3}");
 
-    // -- serve (paper Algorithm 2 + §A.1 block-wise decode pipeline)
-    let rt = Runtime::new(&art)?;
-    println!("[3/4] PJRT runtime up on {}", rt.platform());
-    let engine = ServingEngine::new(
-        rt,
-        cm,
-        EngineOpts {
-            residency: Residency::EntQuant,
-            pipeline: true,
-            decode_threads: threads,
-            ..Default::default()
-        },
+    // -- shard (serve::shard: contiguous block ranges balanced by
+    //    compressed bytes, one engine + pool + arena per shard)
+    let plan = ShardPlan::balance(&cm, 2);
+    let mut runtimes = Vec::with_capacity(plan.n_shards());
+    for _ in 0..plan.n_shards() {
+        runtimes.push(Runtime::new(&art)?);
+    }
+    println!(
+        "[3/4] runtime up on {}; {} shards, compressed bytes per shard {:?}",
+        runtimes[0].platform(),
+        plan.n_shards(),
+        plan.bytes
+    );
+    let engine = ShardedEngine::new(
+        runtimes,
+        &cm,
+        plan,
+        &EngineOpts { decode_threads: threads, ..Default::default() },
     )?;
 
-    let requests: Vec<Request> = (0..8)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: valid[i * 120..i * 120 + 64].to_vec(),
-            max_new_tokens: 24,
-        })
-        .collect();
-    let slots = engine.runtime().manifest.prefill_slots.clone();
+    // -- serve a trace through the continuous-batching scheduler
+    let scheduler = Scheduler::new(engine, SchedulerOpts::default());
+    let max_new = 24usize;
     let t1 = std::time::Instant::now();
+    let ids: Vec<u64> = (0..8)
+        .map(|i| scheduler.submit(valid[i * 120..i * 120 + 64].to_vec(), max_new))
+        .collect();
+    println!("[4/4] submitted {} requests; decoding continuously ...", ids.len());
     let mut total_tokens = 0usize;
-    println!("[4/4] serving {} batched requests ...", requests.len());
-    for batch in pack(&requests, &slots) {
-        let (outputs, m) = engine.generate(&batch, 24)?;
-        for (r, out) in batch.requests.iter().zip(&outputs) {
-            let prompt_tail: String =
-                r.prompt[r.prompt.len() - 24..].iter().map(|&b| b as char).collect();
-            let text: String = out.iter().map(|&b| b as char).collect();
-            println!("    [{}] ...{prompt_tail} | {text}", r.id);
-            total_tokens += out.len();
-        }
-        println!(
-            "    batch {:?}: ttft {:.0} ms, {:.1} decode tok/s/lane, ans-decode {:.0} ms, pjrt {:.0} ms",
-            batch.slot,
-            m.ttft_ms,
-            m.decode_tokens as f64 / (m.decode_ms / 1e3),
-            m.ans_decode_ms,
-            m.exec_ms,
-        );
+    for (i, id) in ids.iter().enumerate() {
+        let out = scheduler.wait(*id, std::time::Duration::from_secs(600))?;
+        let text: String = out.iter().map(|&b| b as char).collect();
+        println!("    [{i}] {text}");
+        total_tokens += out.len();
     }
     let wall = t1.elapsed().as_secs_f64();
+    let m = scheduler.metrics();
     println!(
-        "done: {total_tokens} new tokens in {wall:.2}s = {:.1} tok/s aggregate; resident weights {:.2} MiB (vs {:.2} MiB bf16)",
+        "done: {total_tokens} new tokens in {wall:.2}s = {:.1} tok/s aggregate; p50 ttft {:.1} ms, {} fused admissions, shard fresh allocs {:?} (vs {:.2} MiB bf16 resident)",
         total_tokens as f64 / wall,
-        engine.resident_weight_bytes() as f64 / (1 << 20) as f64,
+        m.p50_ttft_ms,
+        m.fused_admissions,
+        m.shard_fresh_allocs,
         model.bf16_bytes() as f64 / (1 << 20) as f64,
     );
+    scheduler.shutdown().map_err(anyhow::Error::msg)?;
     Ok(())
 }

@@ -25,22 +25,43 @@ pub struct Batch {
 
 pub const PAD: u8 = b' ';
 
-/// Pack requests into batches.  Slots must be sorted by batch size
-/// ascending; all slots share the same seq in the shipped config but
-/// mixed seqs are handled (smallest seq >= longest prompt in the group,
-/// falling back to truncating the prompt's head — oldest context first,
-/// like a sliding window).
+/// Pick the slot for a group of `group_len` requests whose longest
+/// prompt is `longest` tokens.  Among slots with capacity for the
+/// group, prefer the smallest seq that holds the longest prompt
+/// un-truncated (ties to the smallest batch); when no seq is long
+/// enough, fall back to the largest seq — minimal, deterministic
+/// truncation (ties again to the smallest batch).  When no slot has
+/// the capacity, the largest-capacity choice under the same seq rules
+/// applies and the caller's group simply occupies every lane.
+pub fn select_slot(group_len: usize, longest: usize, slots: &[(usize, usize)]) -> (usize, usize) {
+    assert!(!slots.is_empty());
+    let fitting: Vec<(usize, usize)> =
+        slots.iter().copied().filter(|(b, _)| *b >= group_len).collect();
+    let pool: &[(usize, usize)] = if fitting.is_empty() { slots } else { &fitting };
+    let fits = pool.iter().filter(|(_, s)| *s >= longest).min_by_key(|(b, s)| (*s, *b));
+    if let Some(&slot) = fits {
+        return slot;
+    }
+    // every seq truncates: take the longest (then smallest batch)
+    *pool.iter().max_by_key(|(b, s)| (*s, usize::MAX - *b)).unwrap()
+}
+
+/// Pack requests into batches.  All slots share the same seq in the
+/// shipped config but mixed seqs are handled by `select_slot`
+/// (smallest seq >= longest prompt in the group, falling back to
+/// truncating the prompt's head — oldest context first, like a sliding
+/// window).  No requests means no batches — the slot table is not even
+/// consulted.
 pub fn pack(requests: &[Request], slots: &[(usize, usize)]) -> Vec<Batch> {
+    if requests.is_empty() {
+        return Vec::new();
+    }
     assert!(!slots.is_empty());
     let max_b = slots.iter().map(|s| s.0).max().unwrap();
     let mut batches = Vec::new();
     for group in requests.chunks(max_b) {
-        // smallest slot that fits the group size
-        let slot = *slots
-            .iter()
-            .filter(|(b, _)| *b >= group.len())
-            .min_by_key(|(b, s)| (*b, *s))
-            .unwrap_or(slots.last().unwrap());
+        let longest = group.iter().map(|r| r.prompt.len()).max().unwrap_or(0);
+        let slot = select_slot(group.len(), longest, slots);
         let (b, s) = slot;
         let mut tokens = vec![PAD; b * s];
         let mut starts = vec![s as i32; b];
@@ -120,6 +141,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn empty_requests_return_no_batches_without_touching_slots() {
+        // the slot table must not be consulted (an empty one would
+        // panic the assert) — no requests simply means no batches
+        assert!(pack(&[], &[]).is_empty());
+        assert!(pack(&[], SLOTS).is_empty());
+    }
+
+    #[test]
+    fn mixed_seq_slots_pick_smallest_seq_that_fits_the_prompt() {
+        let slots = &[(4, 64), (4, 256), (1, 256)];
+        // fits the short seq: stay there
+        let b = pack(&[req(0, 40), req(1, 10)], slots);
+        assert_eq!(b[0].slot, (4, 64));
+        // longest prompt exceeds 64: the 256 slot with enough lanes wins
+        let b = pack(&[req(0, 40), req(1, 100)], slots);
+        assert_eq!(b[0].slot, (4, 256));
+        assert_eq!(b[0].starts[1], 156);
+        assert_eq!(&b[0].tokens[256 + 156..2 * 256], &req(1, 100).prompt[..]);
+    }
+
+    #[test]
+    fn prompt_longer_than_every_seq_truncates_deterministically() {
+        let slots = &[(1, 32), (1, 64)];
+        let r = req(7, 100);
+        let b1 = pack(&[r.clone()], slots);
+        let b2 = pack(&[r.clone()], slots);
+        // largest seq wins (least truncation), head dropped, tail kept
+        assert_eq!(b1[0].slot, (1, 64));
+        assert_eq!(b1[0].starts[0], 0);
+        assert_eq!(&b1[0].tokens[..], &r.prompt[100 - 64..]);
+        // byte-for-byte repeatable
+        assert_eq!(b1[0].tokens, b2[0].tokens);
+        assert_eq!(b1[0].starts, b2[0].starts);
+    }
+
+    #[test]
+    fn select_slot_prefers_fit_then_minimal_truncation() {
+        let slots = &[(1, 32), (2, 64), (4, 128)];
+        assert_eq!(select_slot(1, 10, slots), (1, 32));
+        assert_eq!(select_slot(1, 50, slots), (2, 64));
+        assert_eq!(select_slot(3, 10, slots), (4, 128));
+        // nothing holds 500 tokens: largest seq, smallest batch on ties
+        assert_eq!(select_slot(1, 500, slots), (4, 128));
+        // over-capacity group: capacity filter relaxes, seq rules hold
+        assert_eq!(select_slot(9, 10, slots), (1, 32));
     }
 
     #[test]

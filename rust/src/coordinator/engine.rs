@@ -95,6 +95,7 @@ struct BlockConsts {
     norm_mlp: HostTensor,
 }
 
+#[derive(Clone)]
 pub struct EngineOpts {
     pub residency: Residency,
     /// overlap ANS decode of block i+1 with compute of block i
@@ -110,6 +111,7 @@ impl Default for EngineOpts {
     }
 }
 
+#[derive(Clone)]
 pub struct Metrics {
     pub prefill_ms: f64,
     pub decode_ms: f64,
@@ -120,6 +122,17 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    pub fn zero() -> Metrics {
+        Metrics {
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            decode_tokens: 0,
+            ans_decode_ms: 0.0,
+            exec_ms: 0.0,
+            ttft_ms: 0.0,
+        }
+    }
+
     /// Decode throughput; 0.0 for zero-token or zero-duration runs
     /// (instead of NaN/inf from the naive division).
     pub fn tokens_per_s_decode(&self, batch: usize) -> f64 {
@@ -142,6 +155,10 @@ pub struct ServingEngine {
     resident_codes: Option<Vec<Vec<HostTensor>>>,
     /// double-buffer code arena (EntQuant mode only)
     arena: Option<DecodeArena>,
+    /// width descriptor for this engine's scoped decode fan-outs (each
+    /// shard carries its own, so per-shard decode width is independent;
+    /// workers themselves are scoped per call, not long-lived)
+    pool: crate::parallel::Pool,
     opts: EngineOpts,
     value_table: [f32; 256],
     offload_paths: Vec<String>,
@@ -183,6 +200,7 @@ impl ServingEngine {
             _ => None,
         };
         let cm = Arc::new(cm);
+        let pool = crate::parallel::Pool::new(opts.decode_threads);
         let mut engine = ServingEngine {
             rt,
             cm,
@@ -192,6 +210,7 @@ impl ServingEngine {
             norm_final,
             resident_codes: None,
             arena,
+            pool,
             opts,
             value_table,
             offload_paths: Vec::new(),
@@ -238,12 +257,28 @@ impl ServingEngine {
         &self.cm
     }
 
+    /// The shard-local decode pool (width == `opts.decode_threads`).
+    pub fn pool(&self) -> &crate::parallel::Pool {
+        &self.pool
+    }
+
+    /// Context length of the decode slot for batch size `b`.
+    pub fn decode_ctx(&self, b: usize) -> Result<usize> {
+        self.rt
+            .manifest
+            .decode_slots
+            .iter()
+            .find(|(db, _)| *db == b)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| anyhow!("no decode slot for batch {b}"))
+    }
+
     /// ANS-decode one block straight to f32 code tensors (fused path);
     /// EntQuant serving routes through the double-buffer arena, the
     /// load-time resident/offload decodes allocate exactly-sized
     /// buffers.
     fn decode_block_codes(&self, b: usize) -> Result<Vec<HostTensor>> {
-        decode_codes(&self.cm, &self.value_table, self.arena.as_ref(), b, self.opts.decode_threads)
+        decode_codes(&self.cm, &self.value_table, self.arena.as_ref(), b, self.pool.threads())
             .map_err(|e| anyhow!(e))
     }
 
@@ -298,7 +333,7 @@ impl ServingEngine {
         let cm: &CompressedModel = &self.cm;
         let table = &self.value_table;
         let arena = self.arena.as_ref();
-        let threads = self.opts.decode_threads;
+        let threads = self.pool.threads();
         crate::parallel::decode_ahead(
             n,
             move |b| {
@@ -331,19 +366,31 @@ impl ServingEngine {
         inputs
     }
 
-    /// Prefill one packed batch: returns (full logits [B,S,V], caches).
-    pub fn prefill(&self, batch: &Batch, metrics: &mut Metrics) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
+    /// Embed one packed batch's tokens (prefill stage 1 of 3).
+    pub(crate) fn embed_prefill(&self, batch: &Batch) -> Result<HostTensor> {
         let (b, s) = batch.slot;
-        let cfg = &self.rt.manifest.config;
-        let t0 = std::time::Instant::now();
         let tokens = HostTensor::i32(batch.tokens.iter().map(|&t| t as i32).collect(), &[b, s]);
-        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
-        let mut x = self
+        Ok(self
             .rt
             .call(&format!("embed_p_b{b}_s{s}"), &[tokens, self.embed.clone()])?
-            .remove(0);
-        let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(cfg.n_layers);
+            .remove(0))
+    }
+
+    /// Run this engine's blocks over prefill activations (stage 2 of 3;
+    /// a shard runs exactly its own contiguous block range here),
+    /// returning the outgoing activations and per-block [B,H,S,hd]
+    /// caches.
+    pub(crate) fn prefill_blocks(
+        &self,
+        x0: HostTensor,
+        starts: &HostTensor,
+        slot: (usize, usize),
+        metrics: &mut Metrics,
+    ) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
+        let (b, s) = slot;
         let exec_name = format!("block_p_b{b}_s{s}");
+        let mut x = x0;
+        let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(self.cm.blocks.len());
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
             let t1 = std::time::Instant::now();
@@ -357,128 +404,135 @@ impl ServingEngine {
             Ok(())
         })?;
         metrics.ans_decode_ms += ans_ms;
-        let logits = self
+        Ok((x, caches))
+    }
+
+    /// Final norm + LM head over prefill activations (stage 3 of 3).
+    pub(crate) fn head_prefill(&self, x: HostTensor, slot: (usize, usize)) -> Result<HostTensor> {
+        let (b, s) = slot;
+        Ok(self
             .rt
             .call(&format!("head_p_b{b}_s{s}"), &[x, self.norm_final.clone(), self.head.clone()])?
-            .remove(0);
+            .remove(0))
+    }
+
+    /// Prefill one packed batch: returns (full logits [B,S,V], caches).
+    pub fn prefill(&self, batch: &Batch, metrics: &mut Metrics) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
+        let (b, _s) = batch.slot;
+        let t0 = std::time::Instant::now();
+        let x = self.embed_prefill(batch)?;
+        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
+        let (x, caches) = self.prefill_blocks(x, &starts, batch.slot, metrics)?;
+        let logits = self.head_prefill(x, batch.slot)?;
         metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
         Ok((logits, caches))
     }
 
-    /// Greedy-generate `max_new` tokens for a packed batch.
-    pub fn generate(&self, batch: &Batch, max_new: usize) -> Result<(Vec<Vec<u8>>, Metrics)> {
-        let (b, s) = batch.slot;
-        let cfg = &self.rt.manifest.config;
-        let (_, ctx) = *self
+    /// Embed one decode step's tokens.
+    pub(crate) fn embed_decode(&self, next: &[i32], b: usize) -> Result<HostTensor> {
+        let toks = HostTensor::i32(next.to_vec(), &[b, 1]);
+        Ok(self.rt.call(&format!("embed_d_b{b}"), &[toks, self.embed.clone()])?.remove(0))
+    }
+
+    /// Run this engine's blocks for one decode step, updating the
+    /// caller's cache slice in place (a shard passes exactly its own
+    /// cache range).
+    pub(crate) fn decode_blocks(
+        &self,
+        x0: HostTensor,
+        caches: &mut [(HostTensor, HostTensor)],
+        pos: i32,
+        starts: &HostTensor,
+        slot_b: usize,
+        ctx: usize,
+        metrics: &mut Metrics,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(
+            caches.len() == self.cm.blocks.len(),
+            "decode_blocks: {} caches for {} blocks",
+            caches.len(),
+            self.cm.blocks.len()
+        );
+        let block_name = format!("block_d_b{slot_b}_c{ctx}");
+        let rt = &self.rt;
+        let consts = &self.consts;
+        let mut x = x0;
+        let mut ans_ms = 0.0;
+        self.run_pipelined(&mut ans_ms, |blk, codes| {
+            let t1 = std::time::Instant::now();
+            let (kc, vc) = caches[blk].clone();
+            let mut inputs = Vec::with_capacity(21);
+            inputs.push(x.clone());
+            inputs.extend(codes.iter().cloned());
+            inputs.extend(consts[blk].scales.iter().cloned());
+            inputs.push(consts[blk].norm_attn.clone());
+            inputs.push(consts[blk].norm_mlp.clone());
+            inputs.push(kc);
+            inputs.push(vc);
+            inputs.push(HostTensor::scalar_i32(pos));
+            inputs.push(starts.clone());
+            let mut out = rt.call(&block_name, &inputs)?;
+            x = out.remove(0);
+            caches[blk] = (out.remove(0), out.remove(0));
+            metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
+            Ok(())
+        })?;
+        metrics.ans_decode_ms += ans_ms;
+        Ok(x)
+    }
+
+    /// Final norm + LM head for one decode step.
+    pub(crate) fn head_decode(&self, x: HostTensor, b: usize) -> Result<HostTensor> {
+        Ok(self
             .rt
-            .manifest
-            .decode_slots
-            .iter()
-            .find(|(db, _)| *db == b)
-            .ok_or_else(|| anyhow!("no decode slot for batch {b}"))?;
-        let mut metrics = Metrics {
-            prefill_ms: 0.0,
-            decode_ms: 0.0,
-            decode_tokens: 0,
-            ans_decode_ms: 0.0,
-            exec_ms: 0.0,
-            ttft_ms: 0.0,
-        };
+            .call(&format!("head_d_b{b}"), &[x, self.norm_final.clone(), self.head.clone()])?
+            .remove(0))
+    }
+
+    /// Prefill a batch into a step-wise `DecodeState`: caches expanded
+    /// to the decode slot's context, every lane's first greedy token
+    /// recorded.  The scheduler interleaves request admission between
+    /// `decode_step` calls on the returned state.
+    pub fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        let cfg = &self.rt.manifest.config;
+        let ctx = self.decode_ctx(batch.slot.0)?;
+        let mut metrics = Metrics::zero();
         let t_start = std::time::Instant::now();
         let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
         metrics.ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
+    }
 
-        // expand prefill caches [B,H,S,hd] into decode caches [B,H,C,hd]
-        let (h, hd) = (cfg.n_heads, cfg.head_dim());
-        let mut caches: Vec<(HostTensor, HostTensor)> = prefill_caches
-            .into_iter()
-            .map(|(k, v)| {
-                let expand = |t: &HostTensor| {
-                    let src = t.as_f32();
-                    let mut dst = vec![0.0f32; b * h * ctx * hd];
-                    for bi in 0..b {
-                        for hi in 0..h {
-                            for si in 0..s {
-                                let so = ((bi * h + hi) * s + si) * hd;
-                                let d0 = ((bi * h + hi) * ctx + si) * hd;
-                                dst[d0..d0 + hd].copy_from_slice(&src[so..so + hd]);
-                            }
-                        }
-                    }
-                    HostTensor::f32(dst, &[b, h, ctx, hd])
-                };
-                (expand(&k), expand(&v))
-            })
-            .collect();
-
-        // greedy pick from the last prefill position
-        let vsize = cfg.vocab;
-        let lf = logits.as_f32();
-        let mut next: Vec<i32> = (0..b)
-            .map(|bi| {
-                let row = &lf[(bi * s + (s - 1)) * vsize..(bi * s + s) * vsize];
-                argmax(row) as i32
-            })
-            .collect();
-        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); batch.requests.len()];
-        for (bi, o) in outputs.iter_mut().enumerate() {
-            o.push(next[bi] as u8);
+    /// One greedy decode step for every lane of `st`.  Returns `false`
+    /// (without stepping) once the decode context is exhausted.
+    pub fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
+        if st.pos >= st.ctx {
+            return Ok(false);
         }
+        let (b, _s) = st.batch.slot;
+        let cfg = &self.rt.manifest.config;
+        let t0 = std::time::Instant::now();
+        let x = self.embed_decode(&st.next, b)?;
+        let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
+        let pos = st.pos as i32;
+        let x = self.decode_blocks(x, &mut st.caches, pos, &starts, b, st.ctx, &mut st.metrics)?;
+        let logits = self.head_decode(x, b)?;
+        apply_decode_logits(st, &logits, cfg.vocab, t0);
+        Ok(true)
+    }
 
-        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
-        let embed_name = format!("embed_d_b{b}");
-        let block_name = format!("block_d_b{b}_c{ctx}");
-        let head_name = format!("head_d_b{b}");
-        let t_dec = std::time::Instant::now();
-        for step in 0..max_new.saturating_sub(1) {
-            let pos = (s + step) as i32;
-            if pos as usize >= ctx {
+    /// Greedy-generate `max_new` tokens for a packed batch (the
+    /// monolithic one-shot path, now a thin loop over `prefill_state` +
+    /// `decode_step`).
+    pub fn generate(&self, batch: &Batch, max_new: usize) -> Result<(Vec<Vec<u8>>, Metrics)> {
+        let mut st = self.prefill_state(batch)?;
+        for _ in 0..max_new.saturating_sub(1) {
+            if !self.decode_step(&mut st)? {
                 break;
             }
-            let toks = HostTensor::i32(next.clone(), &[b, 1]);
-            let mut x = self.rt.call(&embed_name, &[toks, self.embed.clone()])?.remove(0);
-            let mut ans_ms = 0.0;
-            let caches_ref = &mut caches;
-            let rt = &self.rt;
-            let consts = &self.consts;
-            {
-                let x_cell = std::cell::RefCell::new(&mut x);
-                self.run_pipelined(&mut ans_ms, |blk, codes| {
-                    let t1 = std::time::Instant::now();
-                    let (kc, vc) = caches_ref[blk].clone();
-                    let mut inputs = Vec::with_capacity(21);
-                    inputs.push((*x_cell.borrow()).clone());
-                    inputs.extend(codes.iter().cloned());
-                    inputs.extend(consts[blk].scales.iter().cloned());
-                    inputs.push(consts[blk].norm_attn.clone());
-                    inputs.push(consts[blk].norm_mlp.clone());
-                    inputs.push(kc);
-                    inputs.push(vc);
-                    inputs.push(HostTensor::scalar_i32(pos));
-                    inputs.push(starts.clone());
-                    let mut out = rt.call(&block_name, &inputs)?;
-                    **x_cell.borrow_mut() = out.remove(0);
-                    caches_ref[blk] = (out.remove(0), out.remove(0));
-                    metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
-                    Ok(())
-                })?;
-            }
-            metrics.ans_decode_ms += ans_ms;
-            let logits = self
-                .rt
-                .call(&head_name, &[x, self.norm_final.clone(), self.head.clone()])?
-                .remove(0);
-            let lf = logits.as_f32();
-            for bi in 0..b {
-                next[bi] = argmax(&lf[bi * vsize..(bi + 1) * vsize]) as i32;
-            }
-            for (bi, o) in outputs.iter_mut().enumerate() {
-                o.push(next[bi] as u8);
-            }
-            metrics.decode_tokens += 1;
         }
-        metrics.decode_ms = t_dec.elapsed().as_secs_f64() * 1e3;
-        Ok((outputs, metrics))
+        let outputs = st.outputs.into_iter().take(batch.requests.len()).collect();
+        Ok((outputs, st.metrics))
     }
 
     /// Approximate resident weight bytes for this residency mode (the
@@ -493,6 +547,278 @@ impl ServingEngine {
             Residency::DiskOffload => buffer,
         }
     }
+}
+
+/// The in-flight state of a decoding batch, extracted from the former
+/// monolithic `generate` loop so a scheduler can interleave work
+/// between steps: per-block decode caches, each lane's next token and
+/// generated bytes, and the shared write position.
+///
+/// Positions are batch-global (the AOT decode executable takes one
+/// `pos` scalar), so every lane in a state is step-synchronized;
+/// continuous batching aligns a newcomer by running it solo until its
+/// `pos` catches up, then grafting it in with `adopt_lane`.  Because
+/// every per-lane computation in the executors is lane-independent
+/// with a fixed reduction order, lane surgery never perturbs the other
+/// lanes' token trajectories — the serve equivalence tests pin this.
+pub struct DecodeState {
+    pub batch: Batch,
+    /// per-block (k, v) decode caches, [B, H, C, hd]
+    pub caches: Vec<(HostTensor, HostTensor)>,
+    /// next token per lane (the most recently generated one)
+    pub next: Vec<i32>,
+    /// generated bytes per lane (index-aligned with lanes, not
+    /// `batch.requests`; unoccupied lanes accumulate garbage that the
+    /// caller ignores)
+    pub outputs: Vec<Vec<u8>>,
+    /// cache write position of the next decode step
+    pub pos: usize,
+    /// decode-slot context length (steps stop at `pos == ctx`)
+    pub ctx: usize,
+    pub metrics: Metrics,
+}
+
+impl DecodeState {
+    pub fn lanes(&self) -> usize {
+        self.batch.slot.0
+    }
+
+    pub fn seq(&self) -> usize {
+        self.batch.slot.1
+    }
+
+    /// Graft a single-lane state (same seq, same `pos`) into `lane`:
+    /// cache rows, start, next token, outputs, and the request itself
+    /// all move across.  `lane` must be an existing lane — either one
+    /// whose request retired, or the first lane past the occupied ones.
+    pub fn adopt_lane(&mut self, src: DecodeState, lane: usize) -> Result<()> {
+        anyhow::ensure!(src.batch.slot.0 == 1, "adopt_lane: source must be single-lane");
+        anyhow::ensure!(
+            src.batch.slot.1 == self.batch.slot.1,
+            "adopt_lane: seq mismatch ({} vs {})",
+            src.batch.slot.1,
+            self.batch.slot.1
+        );
+        anyhow::ensure!(
+            src.pos == self.pos,
+            "adopt_lane: position mismatch ({} vs {})",
+            src.pos,
+            self.pos
+        );
+        anyhow::ensure!(lane < self.lanes(), "adopt_lane: lane {lane} outside the slot");
+        anyhow::ensure!(
+            lane <= self.batch.requests.len(),
+            "adopt_lane: lane {lane} would leave a gap"
+        );
+        anyhow::ensure!(
+            src.caches.len() == self.caches.len(),
+            "adopt_lane: block count mismatch ({} vs {})",
+            src.caches.len(),
+            self.caches.len()
+        );
+        for ((dk, dv), (sk, sv)) in self.caches.iter_mut().zip(&src.caches) {
+            copy_cache_lane(dk, lane, sk, 0)?;
+            copy_cache_lane(dv, lane, sv, 0)?;
+        }
+        let req = src
+            .batch
+            .requests
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("adopt_lane: source carries no request"))?;
+        self.batch.starts[lane] = src.batch.starts[0];
+        let s = self.batch.slot.1;
+        self.batch.tokens[lane * s..(lane + 1) * s].copy_from_slice(&src.batch.tokens[..s]);
+        if lane == self.batch.requests.len() {
+            self.batch.requests.push(req);
+        } else {
+            self.batch.requests[lane] = req;
+        }
+        self.next[lane] = src.next[0];
+        self.outputs[lane] = src.outputs.into_iter().next().unwrap_or_default();
+        Ok(())
+    }
+
+    /// Re-pack the kept lanes into a (usually smaller) slot with decode
+    /// context `new_ctx` — the scheduler's slot-downgrade path once
+    /// lanes retire.  Keeps `pos`, so the trajectory of every kept lane
+    /// continues unchanged.
+    pub fn compact(
+        &self,
+        keep: &[usize],
+        new_slot: (usize, usize),
+        new_ctx: usize,
+    ) -> Result<DecodeState> {
+        let (nb, ns) = new_slot;
+        anyhow::ensure!(ns == self.seq(), "compact: seq mismatch ({ns} vs {})", self.seq());
+        anyhow::ensure!(keep.len() <= nb, "compact: {} lanes into a {nb}-slot", keep.len());
+        anyhow::ensure!(
+            self.pos <= new_ctx,
+            "compact: position {} past new context {new_ctx}",
+            self.pos
+        );
+        for &l in keep {
+            anyhow::ensure!(
+                l < self.lanes() && l < self.batch.requests.len(),
+                "compact: lane {l} not occupied"
+            );
+        }
+        let mut caches = Vec::with_capacity(self.caches.len());
+        for (k, v) in &self.caches {
+            let dims = k.dims();
+            anyhow::ensure!(dims.len() == 4, "compact: cache must be 4-d, got {dims:?}");
+            let (h, hd) = (dims[1], dims[3]);
+            let mut nk = HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
+            let mut nv = HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
+            for (dst, &src) in keep.iter().enumerate() {
+                copy_cache_lane(&mut nk, dst, k, src)?;
+                copy_cache_lane(&mut nv, dst, v, src)?;
+            }
+            caches.push((nk, nv));
+        }
+        // unoccupied lanes: fully masked (start == seq) with a benign
+        // token 0 — lane independence keeps them inert
+        let mut starts = vec![ns as i32; nb];
+        let mut next = vec![0i32; nb];
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); nb];
+        let mut tokens = vec![super::batcher::PAD; nb * ns];
+        let mut requests = Vec::with_capacity(keep.len());
+        for (dst, &src) in keep.iter().enumerate() {
+            starts[dst] = self.batch.starts[src];
+            next[dst] = self.next[src];
+            outputs[dst] = self.outputs[src].clone();
+            tokens[dst * ns..(dst + 1) * ns]
+                .copy_from_slice(&self.batch.tokens[src * ns..(src + 1) * ns]);
+            requests.push(self.batch.requests[src].clone());
+        }
+        Ok(DecodeState {
+            batch: Batch { slot: new_slot, requests, tokens, starts },
+            caches,
+            next,
+            outputs,
+            pos: self.pos,
+            ctx: new_ctx,
+            metrics: self.metrics.clone(),
+        })
+    }
+}
+
+/// Build a `DecodeState` from prefill outputs: caches expanded to the
+/// decode context, every lane's first greedy token recorded.  Shared by
+/// the single engine and the shard pipeline so the greedy-pick /
+/// bookkeeping semantics can never diverge between them.
+pub(crate) fn state_from_prefill(
+    batch: &Batch,
+    logits: &HostTensor,
+    prefill_caches: &[(HostTensor, HostTensor)],
+    cfg: &crate::model::Config,
+    ctx: usize,
+    metrics: Metrics,
+) -> DecodeState {
+    let (b, s) = batch.slot;
+    let caches = expand_prefill_caches(prefill_caches, b, cfg.n_heads, cfg.head_dim(), s, ctx);
+    // greedy pick from the last prefill position
+    let vsize = cfg.vocab;
+    let lf = logits.as_f32();
+    let next: Vec<i32> = (0..b)
+        .map(|bi| {
+            let row = &lf[(bi * s + (s - 1)) * vsize..(bi * s + s) * vsize];
+            argmax(row) as i32
+        })
+        .collect();
+    let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); b];
+    for (bi, o) in outputs.iter_mut().enumerate() {
+        o.push(next[bi] as u8);
+    }
+    DecodeState { batch: batch.clone(), caches, next, outputs, pos: s, ctx, metrics }
+}
+
+/// Fold one decode step's logits into the state (greedy pick, output
+/// append, counters, position advance) — the other half shared between
+/// the single engine and the shard pipeline.
+pub(crate) fn apply_decode_logits(
+    st: &mut DecodeState,
+    logits: &HostTensor,
+    vsize: usize,
+    t0: std::time::Instant,
+) {
+    let b = st.batch.slot.0;
+    let lf = logits.as_f32();
+    for bi in 0..b {
+        st.next[bi] = argmax(&lf[bi * vsize..(bi + 1) * vsize]) as i32;
+    }
+    for (bi, o) in st.outputs.iter_mut().enumerate() {
+        o.push(st.next[bi] as u8);
+    }
+    st.metrics.decode_tokens += 1;
+    st.metrics.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+    st.pos += 1;
+}
+
+/// Expand prefill caches [B,H,S,hd] into decode caches [B,H,C,hd]
+/// (positions past S stay zero until decode steps write them).
+pub(crate) fn expand_prefill_caches(
+    prefill: &[(HostTensor, HostTensor)],
+    b: usize,
+    h: usize,
+    hd: usize,
+    s: usize,
+    ctx: usize,
+) -> Vec<(HostTensor, HostTensor)> {
+    let expand = |t: &HostTensor| {
+        let src = t.as_f32();
+        let mut dst = vec![0.0f32; b * h * ctx * hd];
+        for bi in 0..b {
+            for hi in 0..h {
+                for si in 0..s {
+                    let so = ((bi * h + hi) * s + si) * hd;
+                    let d0 = ((bi * h + hi) * ctx + si) * hd;
+                    dst[d0..d0 + hd].copy_from_slice(&src[so..so + hd]);
+                }
+            }
+        }
+        HostTensor::f32(dst, &[b, h, ctx, hd])
+    };
+    prefill.iter().map(|(k, v)| (expand(k), expand(v))).collect()
+}
+
+/// Copy one lane of a [B,H,C,hd] cache tensor into another (contexts
+/// may differ; the overlapping prefix is copied, which covers every
+/// position at or below the write cursor).
+pub(crate) fn copy_cache_lane(
+    dst: &mut HostTensor,
+    dst_lane: usize,
+    src: &HostTensor,
+    src_lane: usize,
+) -> Result<()> {
+    let dd: Vec<usize> = dst.dims().to_vec();
+    let sd: Vec<usize> = src.dims().to_vec();
+    anyhow::ensure!(
+        dd.len() == 4 && sd.len() == 4 && dd[1] == sd[1] && dd[3] == sd[3],
+        "cache lane copy: incompatible shapes {dd:?} vs {sd:?}"
+    );
+    anyhow::ensure!(
+        dst_lane < dd[0] && src_lane < sd[0],
+        "cache lane copy: lane out of range ({dst_lane} of {}, {src_lane} of {})",
+        dd[0],
+        sd[0]
+    );
+    let (h, hd) = (dd[1], dd[3]);
+    let (dc, sc) = (dd[2], sd[2]);
+    let c = dc.min(sc);
+    let sdata = src.as_f32();
+    let data = match dst {
+        HostTensor::F32 { data, .. } => data,
+        _ => anyhow::bail!("cache lane copy: destination must be an owned f32 tensor"),
+    };
+    for head in 0..h {
+        for p in 0..c {
+            let doff = ((dst_lane * h + head) * dc + p) * hd;
+            let soff = ((src_lane * h + head) * sc + p) * hd;
+            data[doff..doff + hd].copy_from_slice(&sdata[soff..soff + hd]);
+        }
+    }
+    Ok(())
 }
 
 /// ANS-decode one block of `cm` straight to f32 code tensors — the
@@ -566,7 +892,7 @@ fn parse_offload_codes(
     Ok(out)
 }
 
-fn argmax(x: &[f32]) -> usize {
+pub(crate) fn argmax(x: &[f32]) -> usize {
     let mut best = 0usize;
     for i in 1..x.len() {
         if x[i] > x[best] {
@@ -579,8 +905,10 @@ fn argmax(x: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batcher::{pack, Request};
     use crate::model::loader::synthetic_model;
     use crate::model::Config;
+    use crate::runtime::Manifest;
     use crate::store::pipeline::{compress_model, CompressOpts};
 
     fn tiny_compressed() -> CompressedModel {
@@ -597,6 +925,31 @@ mod tests {
             23,
         );
         compress_model(&m, &CompressOpts { lam: 0.3, ..Default::default() }).unwrap().0
+    }
+
+    /// Native-executor runtime over the tiny model's config: prefill
+    /// seq 16, decode ctx 24, batch sizes 1/2/4.
+    fn native_rt(cm: &CompressedModel) -> Runtime {
+        Runtime::native(Manifest::synthetic(
+            cm.config.clone(),
+            vec![(1, 16), (2, 16), (4, 16)],
+            vec![(1, 24), (2, 24), (4, 24)],
+        ))
+    }
+
+    fn native_engine() -> ServingEngine {
+        let cm = tiny_compressed();
+        let rt = native_rt(&cm);
+        ServingEngine::new(rt, cm, EngineOpts::default()).unwrap()
+    }
+
+    /// Prompt bytes stay inside the tiny model's vocab (64).
+    fn req(id: u64, len: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..len).map(|i| ((id as usize * 11 + i * 7) % 64) as u8).collect(),
+            max_new_tokens: 8,
+        }
     }
 
     #[test]
@@ -660,6 +1013,97 @@ mod tests {
         let mut padded = bytes.clone();
         padded.extend_from_slice(&[0u8; 4]);
         assert!(parse_offload_codes(&padded, cb).is_err());
+    }
+
+    #[test]
+    fn native_generate_is_deterministic_and_alloc_free() {
+        let engine = native_engine();
+        let reqs = [req(0, 10), req(1, 5)];
+        let batch = &pack(&reqs, &[(2, 16)])[0];
+        let (o1, m) = engine.generate(batch, 6).unwrap();
+        let (o2, _) = engine.generate(batch, 6).unwrap();
+        assert_eq!(o1, o2, "repeated generate must be byte-identical");
+        assert_eq!(o1.len(), 2);
+        assert!(o1.iter().all(|o| o.len() == 6), "{:?}", o1);
+        assert_eq!(m.decode_tokens, 5);
+        assert!(m.ttft_ms > 0.0);
+        assert_eq!(engine.decode_arena_fresh_allocs(), 0, "arena must absorb all decodes");
+    }
+
+    #[test]
+    fn step_api_matches_generate_and_stops_at_ctx() {
+        let engine = native_engine();
+        let batch = &pack(&[req(2, 8)], &[(1, 16)])[0];
+        let (want, _) = engine.generate(batch, 6).unwrap();
+        let mut st = engine.prefill_state(batch).unwrap();
+        for _ in 0..5 {
+            assert!(engine.decode_step(&mut st).unwrap());
+        }
+        assert_eq!(st.outputs[0], want[0], "step API must reproduce generate");
+        // drive to the context wall: 24 - 16 - 5 = 3 more steps, then false
+        for _ in 0..3 {
+            assert!(engine.decode_step(&mut st).unwrap());
+        }
+        assert!(!engine.decode_step(&mut st).unwrap(), "ctx exhausted");
+        assert_eq!(st.outputs[0].len(), 1 + 8);
+        // generate with a huge budget hits the same wall
+        let (capped, _) = engine.generate(batch, 1000).unwrap();
+        assert_eq!(capped[0], st.outputs[0]);
+    }
+
+    #[test]
+    fn adopt_lane_matches_joint_prefill() {
+        let engine = native_engine();
+        let (r0, r1) = (req(3, 9), req(4, 12));
+        // reference: both lanes prefilled together
+        let joint = &pack(&[r0.clone(), r1.clone()], &[(2, 16)])[0];
+        let (want, _) = engine.generate(joint, 7).unwrap();
+        // adopted: r0 starts alone in the 2-slot, r1 arrives solo and
+        // is grafted into lane 1 before any step runs
+        let main_batch = &pack(&[r0], &[(2, 16)])[0];
+        let mut main = engine.prefill_state(main_batch).unwrap();
+        let solo_batch = &pack(&[r1], &[(1, 16)])[0];
+        let solo = engine.prefill_state(solo_batch).unwrap();
+        main.adopt_lane(solo, 1).unwrap();
+        for _ in 0..6 {
+            assert!(engine.decode_step(&mut main).unwrap());
+        }
+        assert_eq!(main.outputs[0], want[0], "resident lane perturbed by adoption");
+        assert_eq!(main.outputs[1], want[1], "adopted lane diverged from joint prefill");
+    }
+
+    #[test]
+    fn adopt_lane_rejects_misaligned_positions() {
+        let engine = native_engine();
+        let mut main = engine.prefill_state(&pack(&[req(5, 6)], &[(2, 16)])[0]).unwrap();
+        let mut solo = engine.prefill_state(&pack(&[req(6, 6)], &[(1, 16)])[0]).unwrap();
+        engine.decode_step(&mut solo).unwrap(); // solo now one step ahead
+        assert!(main.adopt_lane(solo, 1).is_err());
+    }
+
+    #[test]
+    fn compact_preserves_trajectories() {
+        let engine = native_engine();
+        let reqs = [req(7, 10), req(8, 4)];
+        let joint = &pack(&reqs, &[(4, 16)])[0];
+        let (want, _) = engine.generate(joint, 7).unwrap();
+        let mut st = engine.prefill_state(joint).unwrap();
+        for _ in 0..2 {
+            engine.decode_step(&mut st).unwrap();
+        }
+        // drop to the 2-slot mid-flight; trajectories must continue
+        let mut small = st.compact(&[0, 1], (2, 16), engine.decode_ctx(2).unwrap()).unwrap();
+        for _ in 0..4 {
+            engine.decode_step(&mut small).unwrap();
+        }
+        assert_eq!(small.outputs[0], want[0]);
+        assert_eq!(small.outputs[1], want[1]);
+        // kept-lane reordering works too (lane 1 alone)
+        let mut one = st.compact(&[1], (1, 16), engine.decode_ctx(1).unwrap()).unwrap();
+        for _ in 0..4 {
+            engine.decode_step(&mut one).unwrap();
+        }
+        assert_eq!(one.outputs[0], want[1]);
     }
 
     #[test]

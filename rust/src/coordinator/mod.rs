@@ -5,5 +5,5 @@
 pub mod batcher;
 pub mod engine;
 
-pub use batcher::{pack, Batch, Request};
-pub use engine::{EngineOpts, Metrics, Residency, ServingEngine};
+pub use batcher::{pack, select_slot, Batch, Request};
+pub use engine::{DecodeState, EngineOpts, Metrics, Residency, ServingEngine};

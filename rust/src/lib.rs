@@ -10,7 +10,10 @@
 //! * `parallel`, `util` — shared infrastructure: the scoped thread-pool
 //!   subsystem behind every `--threads` knob, and the container checksum
 //! * `runtime`, `coordinator` — the L3 serving engine over PJRT
-//!   executables compiled from the JAX/Pallas layers
+//!   executables compiled from the JAX/Pallas layers (or the built-in
+//!   native executor when PJRT is unavailable)
+//! * `serve` — the multi-tenant frontend: sharded engines on a balanced
+//!   block partition plus a continuously-batched admission scheduler
 
 pub mod ans;
 pub mod baselines;
@@ -22,6 +25,7 @@ pub mod parallel;
 pub mod quant;
 pub mod rd;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod tensor;
 pub mod util;

@@ -3,11 +3,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use entquant::coordinator::{pack, EngineOpts, Request, Residency, ServingEngine};
+use entquant::coordinator::{EngineOpts, Residency};
 use entquant::eval::{perplexity, TaskSuite};
 use entquant::model::load_eqw;
 use entquant::quant::Format;
 use entquant::runtime::Runtime;
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
 
@@ -19,7 +20,7 @@ fn usage() -> ! {
          commands:\n\
            compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P] [--threads N]\n\
            eval     --model <size|path> [--compressed P] [--windows N]\n\
-           serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N]\n\
+           serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N] [--shards N]\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
            ablate-blockwise | report-all\n\
          --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
@@ -157,49 +158,54 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Some("offload") => Residency::DiskOffload,
         Some(r) => bail!("bad residency {r}"),
     };
-    let rt = Runtime::new(&art)?;
     let decode_threads = arg_threads(args)?;
-    let engine = ServingEngine::new(
-        rt,
-        cm,
-        EngineOpts { residency, decode_threads, ..Default::default() },
-    )?;
+    let shards: usize = arg_val(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(1);
     let n_prompts: usize = arg_val(args, "--prompts").map(|v| v.parse()).transpose()?.unwrap_or(4);
     let max_new: usize = arg_val(args, "--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
 
+    // shard the blocks by compressed bytes; each shard gets its own
+    // runtime, pool and decode arena
+    let plan = ShardPlan::balance(&cm, shards);
+    let mut runtimes = Vec::with_capacity(plan.n_shards());
+    for _ in 0..plan.n_shards() {
+        runtimes.push(Runtime::new(&art)?);
+    }
+    let platform = runtimes[0].platform();
+    let engine = ShardedEngine::new(
+        runtimes,
+        &cm,
+        plan,
+        &EngineOpts { residency, decode_threads, ..Default::default() },
+    )?;
+    println!(
+        "serving on {platform}: {} shard(s) {:?} ({:?} residency, {} decode threads/shard)",
+        engine.n_shards(),
+        engine.plan().bytes,
+        residency,
+        decode_threads
+    );
+
     let valid = std::fs::read(format!("{art}/corpus/valid.bin"))?;
-    let requests: Vec<Request> = (0..n_prompts)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: valid[i * 100..i * 100 + 48].to_vec(),
-            max_new_tokens: max_new,
-        })
-        .collect();
-    let slots = engine.runtime().manifest.prefill_slots.clone();
-    println!("serving {} requests ({:?} residency) ...", requests.len(), residency);
-    let mut total_tokens = 0usize;
+    let scheduler = Scheduler::new(engine, SchedulerOpts::default());
     let t0 = std::time::Instant::now();
-    for batch in pack(&requests, &slots) {
-        let (outputs, m) = engine.generate(&batch, max_new)?;
-        for (r, out) in batch.requests.iter().zip(&outputs) {
-            let text: String = out.iter().map(|&b| b as char).collect();
-            println!("  req {}: {:?}", r.id, text);
-            total_tokens += out.len();
-        }
-        println!(
-            "  batch {:?}: ttft {:.0} ms, decode {:.1} tok/s/lane, ans {:.0} ms, exec {:.0} ms",
-            batch.slot,
-            m.ttft_ms,
-            m.decode_tokens as f64 / (m.decode_ms / 1e3),
-            m.ans_decode_ms,
-            m.exec_ms
-        );
+    let ids: Vec<u64> = (0..n_prompts)
+        .map(|i| scheduler.submit(valid[i * 100..i * 100 + 48].to_vec(), max_new))
+        .collect();
+    for (i, id) in ids.iter().enumerate() {
+        let out = scheduler.wait(*id, std::time::Duration::from_secs(600))?;
+        let text: String = out.iter().map(|&b| b as char).collect();
+        println!("  req {i}: {text:?}");
     }
     let wall = t0.elapsed().as_secs_f64();
+    let m = scheduler.metrics();
     println!(
-        "total: {total_tokens} tokens in {wall:.2}s ({:.1} tok/s), resident weight bytes: {}",
-        total_tokens as f64 / wall,
-        engine.resident_weight_bytes()
+        "total: {} tokens in {wall:.2}s ({:.1} tok/s), p50 ttft {:.1} ms, {} fused admissions, shard fresh allocs {:?}",
+        m.tokens,
+        m.tokens as f64 / wall,
+        m.p50_ttft_ms,
+        m.fused_admissions,
+        m.shard_fresh_allocs
     );
+    scheduler.shutdown().map_err(|e| anyhow!(e))?;
     Ok(())
 }

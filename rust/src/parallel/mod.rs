@@ -24,7 +24,7 @@
 
 pub mod pool;
 
-pub use pool::{decode_ahead, pair_jobs, Pool};
+pub use pool::{decode_ahead, pair_jobs, Pool, Service};
 
 /// Default worker count for `--threads`-style knobs: the
 /// `ENTQUANT_THREADS` env var when set, else the machine's available

@@ -1,9 +1,10 @@
 //! The scoped pool: indexed fan-out (`par_map_indexed`), owned-job
-//! fan-out (`try_for_each`), and the one-ahead producer/consumer used by
-//! the serving engine (`decode_ahead`).
+//! fan-out (`try_for_each`), the one-ahead producer/consumer used by
+//! the serving engine (`decode_ahead`), and the long-lived `Service`
+//! worker loop the serve scheduler's driver runs on.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Uninhabited error type for the infallible `par_map_indexed` wrapper.
 enum Never {}
@@ -184,6 +185,67 @@ pub fn pair_jobs<I>(jobs: Vec<I>, threads: usize) -> Vec<(I, Option<I>)> {
     out
 }
 
+/// A long-lived named worker: unlike the scoped fan-outs above (which
+/// join before returning), a `Service` owns an OS thread that runs the
+/// caller's loop until `request_stop`/drop — the serve scheduler's
+/// driver lives on one so request admission and decode stepping happen
+/// off the submitting caller's thread.
+///
+/// The closure receives the stop flag and is responsible for polling it
+/// between units of work (cooperative shutdown; nothing is interrupted
+/// mid-step).  Drop requests stop and joins, so a `Service` can never
+/// outlive the state its closure borrows via `Arc`s.
+pub struct Service {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn spawn<F>(name: &str, f: F) -> Service
+    where
+        F: FnOnce(&AtomicBool) + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || f(&flag))
+            .expect("spawning service worker");
+        Service { stop, handle: Some(handle) }
+    }
+
+    /// Signal the worker loop to exit after its current unit of work.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Stop and join.  A worker that panicked is reported as `Err` with
+    /// the thread name (the panic itself already printed to stderr).
+    pub fn stop(mut self) -> Result<(), String> {
+        self.request_stop();
+        match self.handle.take() {
+            Some(h) => {
+                let name = h.thread().name().unwrap_or("service").to_string();
+                h.join().map_err(|_| format!("service worker '{name}' panicked"))
+            }
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.request_stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One-ahead producer/consumer: `produce(i)` runs on a background worker
 /// one step ahead of `consume(i, item)` on the calling thread — the
 /// paper's §A.1 double-buffer scheme (block i+1's ANS decode overlaps
@@ -246,6 +308,7 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn map_matches_scalar_for_any_thread_count() {
@@ -383,6 +446,48 @@ mod tests {
             |i, _| if i == 2 { Err("consume 2".to_string()) } else { Ok(()) },
         );
         assert_eq!(r, Err("consume 2".to_string()));
+    }
+
+    #[test]
+    fn service_runs_until_stopped() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let svc = Service::spawn("test-service", move |stop| {
+            while !stop.load(Ordering::SeqCst) {
+                c2.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        });
+        // the loop must actually be running in the background
+        let t0 = std::time::Instant::now();
+        while count.load(Ordering::SeqCst) < 3 {
+            assert!(t0.elapsed().as_secs() < 10, "service loop never ran");
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        svc.stop().unwrap();
+    }
+
+    #[test]
+    fn service_drop_joins_cleanly() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = Arc::clone(&done);
+        {
+            let _svc = Service::spawn("drop-service", move |stop| {
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+                d2.store(1, Ordering::SeqCst);
+            });
+            // drop at end of scope must request stop and join
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 1, "drop must stop + join the worker");
+    }
+
+    #[test]
+    fn service_stop_reports_panic() {
+        let svc = Service::spawn("panic-service", |_| panic!("worker died"));
+        let err = svc.stop().unwrap_err();
+        assert!(err.contains("panic"), "{err}");
     }
 
     #[test]

@@ -1,12 +1,21 @@
-//! PJRT runtime — loads the HLO-text artifacts emitted by
-//! python/compile/aot.py and executes them on the PJRT CPU client
-//! (the request path never touches python).
+//! Serving runtime — executes the per-block serving functions either on
+//! the PJRT CPU client (HLO-text artifacts emitted by
+//! python/compile/aot.py) or on the built-in native CPU executor
+//! (`native`), which implements the same executables in pure Rust.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HloModuleProto::from_text
-//! -> XlaComputation -> client.compile -> execute.  Executables are
-//! compiled lazily on first use and cached for the lifetime of the
-//! runtime (one compiled executable per model variant, as the paper's
-//! Marlin-kernel deployment does per dtype/shape).
+//! PJRT pattern follows /opt/xla-example/load_hlo: HloModuleProto::
+//! from_text -> XlaComputation -> client.compile -> execute.
+//! Executables are compiled lazily on first use and cached for the
+//! lifetime of the runtime (one compiled executable per model variant,
+//! as the paper's Marlin-kernel deployment does per dtype/shape).
+//!
+//! When the PJRT client is unavailable (this image vendors a
+//! compile-time `xla` stub), `Runtime::new` degrades to the native
+//! executor instead of failing, and `Runtime::native` builds a runtime
+//! from an in-memory `Manifest::synthetic` with no artifacts at all —
+//! the path CI's serving/serve tests and benches run on.
+
+pub mod native;
 
 use crate::store::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
@@ -35,6 +44,25 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// An in-memory manifest for the native executor: no files, no
+    /// executable specs (the native backend derives every shape from
+    /// its inputs).  Slot tables are the caller's to choose; serving
+    /// code only requires that a decode slot exists for every prefill
+    /// batch size it uses.
+    pub fn synthetic(
+        config: crate::model::Config,
+        prefill_slots: Vec<(usize, usize)>,
+        decode_slots: Vec<(usize, usize)>,
+    ) -> Manifest {
+        Manifest {
+            serve_size: "synthetic".to_string(),
+            config,
+            prefill_slots,
+            decode_slots,
+            executables: Vec::new(),
+        }
+    }
+
     pub fn load(artifacts_dir: &str) -> Result<Self> {
         let path = format!("{artifacts_dir}/manifest.json");
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
@@ -176,9 +204,16 @@ impl HostTensor {
     }
 }
 
-/// The PJRT runtime: client + lazily compiled executable cache.
+/// Which engine actually executes a `call`.
+enum Backend {
+    Pjrt(xla::PjRtClient),
+    Native(native::NativeExec),
+}
+
+/// The serving runtime: backend + lazily compiled executable cache
+/// (PJRT only; the native executor has nothing to compile).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     artifacts_dir: String,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
@@ -189,9 +224,14 @@ pub struct Runtime {
 impl Runtime {
     pub fn new(artifacts_dir: &str) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let backend = match xla::PjRtClient::cpu() {
+            Ok(client) => Backend::Pjrt(client),
+            // the vendored stub (or a missing plugin) degrades to the
+            // native executor rather than refusing to serve
+            Err(_) => Backend::Native(native::NativeExec::new(manifest.config.n_heads)),
+        };
         Ok(Runtime {
-            client,
+            backend,
             artifacts_dir: artifacts_dir.to_string(),
             manifest,
             cache: RefCell::new(HashMap::new()),
@@ -199,8 +239,29 @@ impl Runtime {
         })
     }
 
+    /// A native-executor runtime over an in-memory manifest — no
+    /// artifacts directory, no PJRT.  This is how the serve subsystem's
+    /// tests and benches run the full engine stack in CI.
+    pub fn native(manifest: Manifest) -> Self {
+        let backend = Backend::Native(native::NativeExec::new(manifest.config.n_heads));
+        Runtime {
+            backend,
+            artifacts_dir: String::new(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_s: RefCell::new(0.0),
+        }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native(_))
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Pjrt(client) => client.platform_name(),
+            Backend::Native(_) => "native-cpu".to_string(),
+        }
     }
 
     fn spec(&self, name: &str) -> Result<&ExecSpec> {
@@ -211,8 +272,13 @@ impl Runtime {
             .ok_or_else(|| anyhow!("unknown executable {name}"))
     }
 
-    /// Ensure an executable is compiled (warmup path).
+    /// Ensure an executable is compiled (warmup path; no-op on the
+    /// native backend, which has nothing to compile).
     pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let client = match &self.backend {
+            Backend::Pjrt(client) => client,
+            Backend::Native(_) => return Ok(()),
+        };
         if self.cache.borrow().contains_key(name) {
             return Ok(());
         }
@@ -222,7 +288,7 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         *self.compile_s.borrow_mut() += t0.elapsed().as_secs_f64();
         self.cache.borrow_mut().insert(name.to_string(), exe);
         Ok(())
@@ -230,8 +296,12 @@ impl Runtime {
 
     /// Execute by name.  Inputs must match the manifest spec; outputs are
     /// returned as host tensors (jax lowers with return_tuple=True, so
-    /// the single result literal is a tuple to destructure).
+    /// the single result literal is a tuple to destructure).  The native
+    /// backend validates arity and shapes itself from the inputs.
     pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Backend::Native(exec) = &self.backend {
+            return exec.call(name, inputs);
+        }
         self.ensure_compiled(name)?;
         let spec = self.spec(name)?;
         if inputs.len() != spec.inputs.len() {
@@ -282,6 +352,38 @@ mod tests {
         assert_eq!(c.as_f32(), &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
         drop(c);
         assert_eq!(Arc::strong_count(&buf), 1);
+    }
+
+    #[test]
+    fn native_runtime_serves_without_artifacts() {
+        let cfg = crate::model::Config {
+            name: "T".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            max_ctx: 16,
+        };
+        let rt = Runtime::native(Manifest::synthetic(cfg, vec![(1, 4)], vec![(1, 8)]));
+        assert!(rt.is_native());
+        assert_eq!(rt.platform(), "native-cpu");
+        assert_eq!(rt.manifest.prefill_slots, vec![(1, 4)]);
+        rt.ensure_compiled("embed_p_b1_s4").unwrap(); // no-op, must not error
+        let mut table = vec![0.0f32; 16 * 8];
+        for t in 0..16 {
+            for c in 0..8 {
+                table[t * 8 + c] = t as f32;
+            }
+        }
+        let tokens = HostTensor::i32(vec![5i32; 4], &[1, 4]);
+        let out = rt
+            .call("embed_p_b1_s4", &[tokens, HostTensor::f32(table, &[16, 8])])
+            .unwrap();
+        assert_eq!(out[0].dims(), &[1, 4, 8]);
+        assert!(out[0].as_f32().iter().all(|&x| x == 5.0));
+        // unknown executables are a clean error on the native path too
+        assert!(rt.call("nonexistent", &[]).is_err());
     }
 
     #[test]

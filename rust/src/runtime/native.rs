@@ -1,0 +1,594 @@
+//! Native CPU executor — a pure-Rust implementation of the serving
+//! executables the PJRT runtime normally compiles from
+//! python/compile/model.py (`embed_fwd`, `block_prefill`,
+//! `block_decode`, `head_fwd`).
+//!
+//! Every executable is a pure function of its input tensors (weights
+//! arrive as inputs: decoded symbol codes, channel scales, norms), so a
+//! host implementation slots in behind `Runtime::call` with no state of
+//! its own beyond the model's head count.  This is what lets the whole
+//! serving stack — `ServingEngine`, `serve::shard`, `serve::Scheduler`
+//! — run end-to-end in CI, where the vendored `xla` crate is a
+//! compile-time stub (ROADMAP: "real PJRT backend / native interpreter
+//! over model::forward").
+//!
+//! Numerical contract (the serve equivalence tests lean on all three):
+//! * mirrors the JAX reference op-for-op: RMSNorm (eps 1e-5), absolute
+//!   slot-position RoPE, causal + left-pad masking with -1e30, softmax
+//!   over the full row, SwiGLU MLP, and the Pallas qmatmul's epilogue
+//!   scaling `y[m,n] = (sum_k x[m,k] * codes[n,k]) * scale[n]`;
+//! * **lane independence**: every output row of every op is computed
+//!   from that lane's inputs alone with a fixed reduction order, so a
+//!   request's trajectory is byte-identical whatever batch it rides in;
+//! * decode/prefill consistency: a decode step at position `p` over
+//!   caches copied from a prefill reproduces the prefill logits at `p`
+//!   bit-for-bit (masked cache tail underflows to exactly 0 in
+//!   softmax).
+
+use crate::runtime::HostTensor;
+use crate::tensor::{dot, rmsnorm, softmax_inplace};
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// The executor: stateless beyond the model's head count (every other
+/// shape is recovered from the input tensors themselves).
+#[derive(Clone, Copy, Debug)]
+pub struct NativeExec {
+    n_heads: usize,
+}
+
+impl NativeExec {
+    pub fn new(n_heads: usize) -> Self {
+        NativeExec { n_heads: n_heads.max(1) }
+    }
+
+    /// Dispatch by executable name (the manifest naming scheme shared
+    /// with python/compile/aot.py).
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if name.starts_with("embed_") {
+            embed(name, inputs)
+        } else if name.starts_with("block_p_") {
+            self.block_prefill(name, inputs)
+        } else if name.starts_with("block_d_") {
+            self.block_decode(name, inputs)
+        } else if name.starts_with("head_") {
+            head(name, inputs)
+        } else {
+            bail!("native executor: unknown executable {name}")
+        }
+    }
+
+    /// block_p_b{B}_s{S}: [x, 7 codes, 7 scales, norm_attn, norm_mlp,
+    /// starts] -> [x', k [B,H,S,hd], v [B,H,S,hd]].
+    fn block_prefill(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 18, "{name}: {} inputs, 18 expected", inputs.len());
+        let x = &inputs[0];
+        let (b, s, d) = dims3(x, name)?;
+        let codes = &inputs[1..8];
+        let scales = &inputs[8..15];
+        let norm_attn = inputs[15].as_f32();
+        let norm_mlp = inputs[16].as_f32();
+        let starts = as_i32(&inputs[17], name)?;
+        ensure!(starts.len() == b, "{name}: starts len {} != batch {b}", starts.len());
+        let h = self.n_heads;
+        ensure!(d % h == 0, "{name}: d_model {d} not divisible by {h} heads");
+        let hd = d / h;
+
+        let xin = x.as_f32();
+        let mut x1 = xin.to_vec();
+        let mut knew = vec![0.0f32; b * h * s * hd];
+        let mut vnew = vec![0.0f32; b * h * s * hd];
+        // per lane: attention over this lane's rows only
+        for bi in 0..b {
+            let rows = &xin[bi * s * d..(bi + 1) * s * d];
+            let xn = rmsnorm_rows(rows, norm_attn, s, d);
+            let mut q = linear_rows(&xn, &codes[0], &scales[0], s, name)?;
+            let mut k = linear_rows(&xn, &codes[1], &scales[1], s, name)?;
+            let v = linear_rows(&xn, &codes[2], &scales[2], s, name)?;
+            // RoPE at absolute slot positions 0..S (matches the JAX
+            // prefill; left-padding relies on RoPE's relative-distance
+            // property, not on shifting positions)
+            for pos in 0..s {
+                rope_row(&mut q[pos * d..(pos + 1) * d], pos, h, hd);
+                rope_row(&mut k[pos * d..(pos + 1) * d], pos, h, hd);
+            }
+            // caches: [B,H,S,hd] from the roped k and raw v
+            for head in 0..h {
+                for pos in 0..s {
+                    let dst = ((bi * h + head) * s + pos) * hd;
+                    let src = pos * d + head * hd;
+                    knew[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                    vnew[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                }
+            }
+            let start = starts[bi].max(0) as usize;
+            let mut ctx = vec![0.0f32; s * d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut att = vec![0.0f32; s];
+            for head in 0..h {
+                let off = head * hd;
+                for i in 0..s {
+                    let qi = &q[i * d + off..i * d + off + hd];
+                    for j in 0..s {
+                        att[j] = if j <= i && j >= start {
+                            dot(qi, &k[j * d + off..j * d + off + hd]) * scale
+                        } else {
+                            -1e30
+                        };
+                    }
+                    softmax_inplace(&mut att);
+                    let out = &mut ctx[i * d + off..i * d + off + hd];
+                    for j in 0..s {
+                        let p = att[j];
+                        let vj = &v[j * d + off..j * d + off + hd];
+                        for t in 0..hd {
+                            out[t] += p * vj[t];
+                        }
+                    }
+                }
+            }
+            let att_out = linear_rows(&ctx, &codes[3], &scales[3], s, name)?;
+            let lane_x1 = &mut x1[bi * s * d..(bi + 1) * s * d];
+            for i in 0..s * d {
+                lane_x1[i] += att_out[i];
+            }
+            mlp_inplace(lane_x1, norm_mlp, &codes[4..7], &scales[4..7], s, name)?;
+        }
+        Ok(vec![
+            HostTensor::f32(x1, &[b, s, d]),
+            HostTensor::f32(knew, &[b, h, s, hd]),
+            HostTensor::f32(vnew, &[b, h, s, hd]),
+        ])
+    }
+
+    /// block_d_b{B}_c{C}: [x, 7 codes, 7 scales, norm_attn, norm_mlp,
+    /// k_cache, v_cache, pos, starts] -> [x', k', v'] with caches
+    /// [B,H,C,hd] and the new k/v written at `pos`.
+    fn block_decode(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        ensure!(inputs.len() == 21, "{name}: {} inputs, 21 expected", inputs.len());
+        let x = &inputs[0];
+        let (b, s1, d) = dims3(x, name)?;
+        ensure!(s1 == 1, "{name}: decode step must have seq 1, got {s1}");
+        let codes = &inputs[1..8];
+        let scales = &inputs[8..15];
+        let norm_attn = inputs[15].as_f32();
+        let norm_mlp = inputs[16].as_f32();
+        let kc = &inputs[17];
+        let vc = &inputs[18];
+        let pos = as_i32(&inputs[19], name)?;
+        ensure!(pos.len() == 1, "{name}: pos must be a scalar");
+        let pos = pos[0].max(0) as usize;
+        let starts = as_i32(&inputs[20], name)?;
+        ensure!(starts.len() == b, "{name}: starts len {} != batch {b}", starts.len());
+        let h = self.n_heads;
+        ensure!(d % h == 0, "{name}: d_model {d} not divisible by {h} heads");
+        let hd = d / h;
+        let c = cache_ctx(kc, b, h, hd, name)?;
+        ensure!(cache_ctx(vc, b, h, hd, name)? == c, "{name}: k/v cache shapes differ");
+        ensure!(pos < c, "{name}: write position {pos} outside cache of {c}");
+
+        let xin = x.as_f32();
+        let mut x1 = xin.to_vec();
+        let mut knew = kc.as_f32().to_vec();
+        let mut vnew = vc.as_f32().to_vec();
+        for bi in 0..b {
+            let row = &xin[bi * d..(bi + 1) * d];
+            let xn = rmsnorm_rows(row, norm_attn, 1, d);
+            let mut q = linear_rows(&xn, &codes[0], &scales[0], 1, name)?;
+            let mut k = linear_rows(&xn, &codes[1], &scales[1], 1, name)?;
+            let v = linear_rows(&xn, &codes[2], &scales[2], 1, name)?;
+            rope_row(&mut q, pos, h, hd);
+            rope_row(&mut k, pos, h, hd);
+            // write this step's k/v into the lane's cache at `pos`
+            for head in 0..h {
+                let dst = ((bi * h + head) * c + pos) * hd;
+                knew[dst..dst + hd].copy_from_slice(&k[head * hd..(head + 1) * hd]);
+                vnew[dst..dst + hd].copy_from_slice(&v[head * hd..(head + 1) * hd]);
+            }
+            let start = starts[bi].max(0) as usize;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut ctx = vec![0.0f32; d];
+            let mut att = vec![0.0f32; c];
+            for head in 0..h {
+                let off = head * hd;
+                let qh = &q[off..off + hd];
+                let lane_k = &knew[(bi * h + head) * c * hd..(bi * h + head + 1) * c * hd];
+                let lane_v = &vnew[(bi * h + head) * c * hd..(bi * h + head + 1) * c * hd];
+                for j in 0..c {
+                    att[j] = if j <= pos && j >= start {
+                        dot(qh, &lane_k[j * hd..(j + 1) * hd]) * scale
+                    } else {
+                        -1e30
+                    };
+                }
+                softmax_inplace(&mut att);
+                let out = &mut ctx[off..off + hd];
+                for j in 0..c {
+                    let p = att[j];
+                    let vj = &lane_v[j * hd..(j + 1) * hd];
+                    for t in 0..hd {
+                        out[t] += p * vj[t];
+                    }
+                }
+            }
+            let att_out = linear_rows(&ctx, &codes[3], &scales[3], 1, name)?;
+            let lane_x1 = &mut x1[bi * d..(bi + 1) * d];
+            for i in 0..d {
+                lane_x1[i] += att_out[i];
+            }
+            mlp_inplace(lane_x1, norm_mlp, &codes[4..7], &scales[4..7], 1, name)?;
+        }
+        Ok(vec![
+            HostTensor::f32(x1, &[b, 1, d]),
+            HostTensor::f32(knew, &[b, h, c, hd]),
+            HostTensor::f32(vnew, &[b, h, c, hd]),
+        ])
+    }
+}
+
+/// embed_p_b{B}_s{S} / embed_d_b{B}: [tokens i32 [B,S], embed [V,D]]
+/// -> [x [B,S,D]] (token-row gather).
+fn embed(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    ensure!(inputs.len() == 2, "{name}: {} inputs, 2 expected", inputs.len());
+    let toks = as_i32(&inputs[0], name)?;
+    let tdims = inputs[0].dims();
+    ensure!(tdims.len() == 2, "{name}: tokens must be [B,S], got {tdims:?}");
+    let (b, s) = (tdims[0], tdims[1]);
+    let table = &inputs[1];
+    let edims = table.dims();
+    ensure!(edims.len() == 2, "{name}: embed table must be [V,D], got {edims:?}");
+    let (v, d) = (edims[0], edims[1]);
+    let et = table.as_f32();
+    let mut x = vec![0.0f32; b * s * d];
+    for (i, &t) in toks.iter().enumerate() {
+        let t = t as usize; // tokens are u8-ranged in this model family
+        ensure!(t < v, "{name}: token {t} outside vocab {v}");
+        x[i * d..(i + 1) * d].copy_from_slice(&et[t * d..(t + 1) * d]);
+    }
+    Ok(vec![HostTensor::f32(x, &[b, s, d])])
+}
+
+/// head_p_b{B}_s{S} / head_d_b{B}: [x [B,S,D], norm_final [D],
+/// head [V,D]] -> [logits [B,S,V]].
+fn head(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    ensure!(inputs.len() == 3, "{name}: {} inputs, 3 expected", inputs.len());
+    let x = &inputs[0];
+    let (b, s, d) = dims3(x, name)?;
+    let g = inputs[1].as_f32();
+    ensure!(g.len() == d, "{name}: norm len {} != d_model {d}", g.len());
+    let hdims = inputs[2].dims();
+    ensure!(
+        hdims.len() == 2 && hdims[1] == d,
+        "{name}: head must be [V,{d}], got {hdims:?}"
+    );
+    let v = hdims[0];
+    let ht = inputs[2].as_f32();
+    let xin = x.as_f32();
+    let mut logits = vec![0.0f32; b * s * v];
+    let mut xn = vec![0.0f32; d];
+    for m in 0..b * s {
+        rmsnorm(&xin[m * d..(m + 1) * d], g, &mut xn);
+        let lrow = &mut logits[m * v..(m + 1) * v];
+        for (vi, l) in lrow.iter_mut().enumerate() {
+            *l = dot(&xn, &ht[vi * d..(vi + 1) * d]);
+        }
+    }
+    Ok(vec![HostTensor::f32(logits, &[b, s, v])])
+}
+
+// ---------------------------------------------------------------------------
+// shared primitives (all lane-row deterministic)
+
+fn dims3(x: &HostTensor, name: &str) -> Result<(usize, usize, usize)> {
+    let d = x.dims();
+    ensure!(d.len() == 3, "{name}: activation must be [B,S,D], got {d:?}");
+    Ok((d[0], d[1], d[2]))
+}
+
+fn as_i32<'a>(t: &'a HostTensor, name: &str) -> Result<&'a [i32]> {
+    match t {
+        HostTensor::I32 { data, .. } => Ok(data),
+        _ => Err(anyhow!("{name}: expected an i32 tensor")),
+    }
+}
+
+fn cache_ctx(cache: &HostTensor, b: usize, h: usize, hd: usize, name: &str) -> Result<usize> {
+    let d = cache.dims();
+    ensure!(
+        d.len() == 4 && d[0] == b && d[1] == h && d[3] == hd,
+        "{name}: cache must be [{b},{h},C,{hd}], got {d:?}"
+    );
+    Ok(d[2])
+}
+
+fn rmsnorm_rows(x: &[f32], g: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        rmsnorm(&x[r * d..(r + 1) * d], g, &mut out[r * d..(r + 1) * d]);
+    }
+    out
+}
+
+/// The Pallas qmatmul contract: `y[m,n] = (sum_k x[m,k] * codes[n,k]) *
+/// scale[n]` — channel scale applied once, in the epilogue, after the
+/// K-reduction.  Row `m` touches only row `m` of `x`.
+fn linear_rows(
+    x: &[f32],
+    codes: &HostTensor,
+    scale: &HostTensor,
+    rows: usize,
+    name: &str,
+) -> Result<Vec<f32>> {
+    let cd = codes.dims();
+    ensure!(cd.len() == 2, "{name}: weight codes must be 2-d, got {cd:?}");
+    let (n, k) = (cd[0], cd[1]);
+    ensure!(rows * k == x.len(), "{name}: activation len {} != {rows}x{k}", x.len());
+    let s = scale.as_f32();
+    ensure!(s.len() == n, "{name}: scale len {} != out channels {n}", s.len());
+    let c = codes.as_f32();
+    let mut y = vec![0.0f32; rows * n];
+    for m in 0..rows {
+        let xm = &x[m * k..(m + 1) * k];
+        let ym = &mut y[m * n..(m + 1) * n];
+        for j in 0..n {
+            ym[j] = dot(xm, &c[j * k..(j + 1) * k]) * s[j];
+        }
+    }
+    Ok(y)
+}
+
+/// RoPE over one activation row (heads contiguous): theta = pos *
+/// 10000^(-j/half), halves rotated — matches model::forward and the JAX
+/// `apply_rope`.
+fn rope_row(row: &mut [f32], pos: usize, n_heads: usize, hd: usize) {
+    let half = hd / 2;
+    for h in 0..n_heads {
+        let off = h * hd;
+        for j in 0..half {
+            let freq = 10000f32.powf(-(j as f32) / half as f32);
+            let theta = pos as f32 * freq;
+            let (sin, cos) = theta.sin_cos();
+            let a = row[off + j];
+            let b = row[off + half + j];
+            row[off + j] = a * cos - b * sin;
+            row[off + half + j] = a * sin + b * cos;
+        }
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU MLP with residual, in place over `x1` ([rows, D]):
+/// `x1 += w_down(silu(w_gate(norm(x1))) * w_up(norm(x1)))`.
+fn mlp_inplace(
+    x1: &mut [f32],
+    norm_mlp: &[f32],
+    codes: &[HostTensor],
+    scales: &[HostTensor],
+    rows: usize,
+    name: &str,
+) -> Result<()> {
+    let d = norm_mlp.len();
+    let xn2 = rmsnorm_rows(x1, norm_mlp, rows, d);
+    let gate = linear_rows(&xn2, &codes[0], &scales[0], rows, name)?;
+    let up = linear_rows(&xn2, &codes[1], &scales[1], rows, name)?;
+    let mut hidden = vec![0.0f32; gate.len()];
+    for i in 0..hidden.len() {
+        hidden[i] = silu(gate[i]) * up[i];
+    }
+    let down = linear_rows(&hidden, &codes[2], &scales[2], rows, name)?;
+    for i in 0..x1.len() {
+        x1[i] += down[i];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // a tiny deterministic "model": d_model 8, 2 heads, d_ff 12, vocab 16
+    const D: usize = 8;
+    const H: usize = 2;
+    const F: usize = 12;
+    const V: usize = 16;
+
+    fn t(data: Vec<f32>, dims: &[usize]) -> HostTensor {
+        HostTensor::f32(data, dims)
+    }
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> HostTensor {
+        let mut rng = crate::tensor::Rng::new(seed);
+        t(
+            (0..rows * cols).map(|_| (rng.normal() * 0.3) as f32).collect(),
+            &[rows, cols],
+        )
+    }
+
+    fn ones(n: usize) -> HostTensor {
+        t(vec![1.0; n], &[n])
+    }
+
+    fn block_inputs(b: usize, s: usize, x: HostTensor, starts: Vec<i32>) -> Vec<HostTensor> {
+        let mut inputs = vec![x];
+        // 7 code matrices: wq wk wv wo [D,D], gate/up [F,D], down [D,F]
+        for (i, (r, c)) in
+            [(D, D), (D, D), (D, D), (D, D), (F, D), (F, D), (D, F)].iter().enumerate()
+        {
+            inputs.push(mat(*r, *c, 100 + i as u64));
+        }
+        for (i, r) in [D, D, D, D, F, F, D].iter().enumerate() {
+            let mut rng = crate::tensor::Rng::new(200 + i as u64);
+            inputs.push(t((0..*r).map(|_| 1.0 + rng.uniform() as f32 * 0.1).collect(), &[*r]));
+        }
+        inputs.push(ones(D)); // norm_attn
+        inputs.push(ones(D)); // norm_mlp
+        inputs.push(HostTensor::i32(starts, &[b]));
+        let _ = s;
+        inputs
+    }
+
+    fn lane_x(b: usize, s: usize, seed: u64) -> HostTensor {
+        let mut rng = crate::tensor::Rng::new(seed);
+        t(
+            (0..b * s * D).map(|_| rng.normal() as f32 * 0.5).collect(),
+            &[b, s, D],
+        )
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let mut table = vec![0.0f32; V * D];
+        for v in 0..V {
+            for c in 0..D {
+                table[v * D + c] = v as f32 + c as f32 * 0.01;
+            }
+        }
+        let toks = HostTensor::i32(vec![3, 0, 15, 3], &[2, 2]);
+        let out = embed("embed_p_b2_s2", &[toks, t(table.clone(), &[V, D])]).unwrap();
+        assert_eq!(out[0].dims(), &[2, 2, D]);
+        let x = out[0].as_f32();
+        assert_eq!(&x[0..D], &table[3 * D..4 * D]);
+        assert_eq!(&x[2 * D..3 * D], &table[15 * D..16 * D]);
+        // out-of-vocab token is an error, not a panic
+        let bad = HostTensor::i32(vec![16], &[1, 1]);
+        assert!(embed("embed_d_b1", &[bad, t(table, &[V, D])]).is_err());
+    }
+
+    #[test]
+    fn prefill_shapes_and_finiteness() {
+        let ex = NativeExec::new(H);
+        let (b, s) = (2, 6);
+        let out = ex
+            .block_prefill("block_p_b2_s6", &block_inputs(b, s, lane_x(b, s, 7), vec![0, 2]))
+            .unwrap();
+        assert_eq!(out[0].dims(), &[b, s, D]);
+        assert_eq!(out[1].dims(), &[b, H, s, D / H]);
+        assert_eq!(out[2].dims(), &[b, H, s, D / H]);
+        for o in &out {
+            assert!(o.as_f32().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn lanes_are_batch_invariant() {
+        // THE serve-subsystem invariant: a lane's outputs must not
+        // depend on what else rides in the batch
+        let ex = NativeExec::new(H);
+        let s = 5;
+        let x2 = lane_x(2, s, 11);
+        let solo0: Vec<f32> = x2.as_f32()[..s * D].to_vec();
+        let solo1: Vec<f32> = x2.as_f32()[s * D..].to_vec();
+        let big = ex
+            .block_prefill("block_p_b2_s5", &block_inputs(2, s, x2, vec![1, 3]))
+            .unwrap();
+        let a = ex
+            .block_prefill("block_p_b1_s5", &block_inputs(1, s, t(solo0, &[1, s, D]), vec![1]))
+            .unwrap();
+        let bl = ex
+            .block_prefill("block_p_b1_s5", &block_inputs(1, s, t(solo1, &[1, s, D]), vec![3]))
+            .unwrap();
+        assert_eq!(&big[0].as_f32()[..s * D], a[0].as_f32());
+        assert_eq!(&big[0].as_f32()[s * D..], bl[0].as_f32());
+        assert_eq!(&big[1].as_f32()[..H * s * (D / H)], a[1].as_f32());
+        assert_eq!(&big[2].as_f32()[H * s * (D / H)..], bl[2].as_f32());
+    }
+
+    #[test]
+    fn left_pad_mask_hides_padding() {
+        // tokens before `start` must not influence later positions
+        let ex = NativeExec::new(H);
+        let s = 6;
+        let xa = lane_x(1, s, 21);
+        let mut xb_data = xa.as_f32().to_vec();
+        for v in xb_data.iter_mut().take(2 * D) {
+            *v += 7.5; // perturb the two padding positions
+        }
+        let start = vec![2];
+        let a = ex
+            .block_prefill("block_p_b1_s6", &block_inputs(1, s, xa, start.clone()))
+            .unwrap();
+        let b = ex
+            .block_prefill("block_p_b1_s6", &block_inputs(1, s, t(xb_data, &[1, s, D]), start))
+            .unwrap();
+        // positions >= start agree exactly
+        assert_eq!(&a[0].as_f32()[2 * D..], &b[0].as_f32()[2 * D..]);
+    }
+
+    #[test]
+    fn decode_step_matches_prefill_position() {
+        // prefill over 4 real tokens == prefill over 3 + one decode step
+        // at pos 3, bit for bit
+        let ex = NativeExec::new(H);
+        let (s, c) = (4, 8);
+        let hd = D / H;
+        let xfull = lane_x(1, s, 33);
+        let full = ex
+            .block_prefill("block_p_b1_s4", &block_inputs(1, s, xfull.clone(), vec![0]))
+            .unwrap();
+
+        // prefix prefill: first 3 positions
+        let xpre = t(xfull.as_f32()[..3 * D].to_vec(), &[1, 3, D]);
+        let pre = ex
+            .block_prefill("block_p_b1_s3", &block_inputs(1, 3, xpre, vec![0]))
+            .unwrap();
+        // expand prefill caches [1,H,3,hd] into decode caches [1,H,C,hd]
+        let expand = |t_: &HostTensor| {
+            let src = t_.as_f32();
+            let mut dst = vec![0.0f32; H * c * hd];
+            for h in 0..H {
+                for p in 0..3 {
+                    let so = (h * 3 + p) * hd;
+                    let eo = (h * c + p) * hd;
+                    dst[eo..eo + hd].copy_from_slice(&src[so..so + hd]);
+                }
+            }
+            HostTensor::f32(dst, &[1, H, c, hd])
+        };
+        let (kc, vc) = (expand(&pre[1]), expand(&pre[2]));
+        let xstep = t(xfull.as_f32()[3 * D..4 * D].to_vec(), &[1, 1, D]);
+        let mut inputs = block_inputs(1, 1, xstep, vec![0]);
+        let starts = inputs.pop().unwrap();
+        inputs.push(kc);
+        inputs.push(vc);
+        inputs.push(HostTensor::scalar_i32(3));
+        inputs.push(starts);
+        let step = ex.block_decode("block_d_b1_c8", &inputs).unwrap();
+        // decode x' at pos 3 == prefill x' row 3
+        assert_eq!(step[0].as_f32(), &full[0].as_f32()[3 * D..4 * D]);
+        // and the written cache row matches the full prefill's row 3
+        let kfull = full[1].as_f32();
+        let knew = step[1].as_f32();
+        for h in 0..H {
+            assert_eq!(
+                &knew[(h * c + 3) * hd..(h * c + 3) * hd + hd],
+                &kfull[(h * s + 3) * hd..(h * s + 3) * hd + hd]
+            );
+        }
+    }
+
+    #[test]
+    fn head_logits_shape_and_norm() {
+        let x = lane_x(2, 3, 41);
+        let out = head("head_p_b2_s3", &[x, ones(D), mat(V, D, 50)]).unwrap();
+        assert_eq!(out[0].dims(), &[2, 3, V]);
+        assert!(out[0].as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        let ex = NativeExec::new(H);
+        assert!(ex.call("unknown_exec", &[]).is_err());
+        assert!(ex.call("block_p_b1_s4", &[]).is_err());
+        assert!(ex.call("head_p_b1_s4", &[lane_x(1, 4, 1)]).is_err());
+        // wrong starts length
+        let mut inputs = block_inputs(1, 4, lane_x(1, 4, 2), vec![0, 0]);
+        assert!(ex.call("block_p_b1_s4", &inputs).is_err());
+        // scale length mismatch
+        inputs = block_inputs(1, 4, lane_x(1, 4, 2), vec![0]);
+        inputs[8] = ones(D + 1);
+        assert!(ex.call("block_p_b1_s4", &inputs).is_err());
+    }
+}

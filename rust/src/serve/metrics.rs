@@ -1,0 +1,201 @@
+//! Serve-level counters — the observability face of the scheduler:
+//! request lifecycle tallies, queue depth, time-to-first-token, token
+//! throughput, and the per-shard decode-arena fresh-alloc gauges
+//! (which must stay 0 in steady state, same contract as the engine's
+//! `decode_arena_fresh_allocs`).
+//!
+//! Everything is lock-free atomics except the TTFT reservoir (a short
+//! mutex-guarded vec; one push per request, read only at snapshot
+//! time), so the driver's hot loop pays near nothing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct ServeMetrics {
+    submitted: AtomicUsize,
+    completed: AtomicUsize,
+    cancelled: AtomicUsize,
+    failed: AtomicUsize,
+    /// requests grafted into an in-flight batch between decode steps
+    /// (the continuous-batching path, as opposed to riding a freshly
+    /// formed batch)
+    fused_admissions: AtomicUsize,
+    tokens: AtomicUsize,
+    decode_steps: AtomicUsize,
+    queue_depth: AtomicUsize,
+    ttft_ms: Mutex<Vec<f64>>,
+    shard_fresh_allocs: Mutex<Vec<usize>>,
+    started: Instant,
+}
+
+/// A plain-data copy of the counters at one instant.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: usize,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub fused_admissions: usize,
+    pub tokens: usize,
+    pub decode_steps: usize,
+    pub queue_depth: usize,
+    pub p50_ttft_ms: f64,
+    pub mean_ttft_ms: f64,
+    pub elapsed_s: f64,
+    pub tokens_per_s: f64,
+    pub shard_fresh_allocs: Vec<usize>,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            submitted: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            cancelled: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            fused_admissions: AtomicUsize::new(0),
+            tokens: AtomicUsize::new(0),
+            decode_steps: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
+            ttft_ms: Mutex::new(Vec::new()),
+            shard_fresh_allocs: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn inc_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_fused(&self) {
+        self.fused_admissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_tokens(&self, n: usize) {
+        self.tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_decode_steps(&self) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn record_ttft_ms(&self, ms: f64) {
+        self.ttft_ms.lock().unwrap().push(ms);
+    }
+
+    pub fn set_shard_fresh_allocs(&self, allocs: Vec<usize>) {
+        *self.shard_fresh_allocs.lock().unwrap() = allocs;
+    }
+
+    pub fn fused_admissions(&self) -> usize {
+        self.fused_admissions.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let ttft = self.ttft_ms.lock().unwrap().clone();
+        let (p50, mean) = percentile_and_mean(&ttft);
+        let tokens = self.tokens.load(Ordering::Relaxed);
+        let elapsed_s = self.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            fused_admissions: self.fused_admissions.load(Ordering::Relaxed),
+            tokens,
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            p50_ttft_ms: p50,
+            mean_ttft_ms: mean,
+            elapsed_s,
+            tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
+            shard_fresh_allocs: self.shard_fresh_allocs.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// (p50, mean) of a sample; (0, 0) when empty.  The median of an even
+/// count takes the lower-middle element — deterministic and fine at
+/// trace sizes.
+fn percentile_and_mean(samples: &[f64]) -> (f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let p50 = sorted[(sorted.len() - 1) / 2];
+    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+    (p50, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = ServeMetrics::new();
+        for _ in 0..3 {
+            m.inc_submitted();
+        }
+        m.inc_completed();
+        m.inc_cancelled();
+        m.inc_fused();
+        m.add_tokens(42);
+        m.inc_decode_steps();
+        m.set_queue_depth(2);
+        m.record_ttft_ms(10.0);
+        m.record_ttft_ms(30.0);
+        m.record_ttft_ms(20.0);
+        m.set_shard_fresh_allocs(vec![0, 0]);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.fused_admissions, 1);
+        assert_eq!(s.tokens, 42);
+        assert_eq!(s.decode_steps, 1);
+        assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.p50_ttft_ms, 20.0);
+        assert!((s.mean_ttft_ms - 20.0).abs() < 1e-9);
+        assert_eq!(s.shard_fresh_allocs, vec![0, 0]);
+        assert!(s.tokens_per_s >= 0.0);
+    }
+
+    #[test]
+    fn empty_ttft_is_zero_not_nan() {
+        let s = ServeMetrics::new().snapshot();
+        assert_eq!(s.p50_ttft_ms, 0.0);
+        assert_eq!(s.mean_ttft_ms, 0.0);
+        assert_eq!(s.tokens_per_s, 0.0);
+    }
+
+    #[test]
+    fn p50_even_count_takes_lower_middle() {
+        assert_eq!(percentile_and_mean(&[4.0, 1.0, 3.0, 2.0]).0, 2.0);
+        assert_eq!(percentile_and_mean(&[5.0]).0, 5.0);
+    }
+}

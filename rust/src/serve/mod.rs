@@ -1,0 +1,102 @@
+//! The serve subsystem — a sharded, continuously-batched serving
+//! frontend over the one-shot `coordinator` engine, in three pieces:
+//!
+//! * **`shard`** — `ShardPlan` splits a `CompressedModel`'s blocks into
+//!   contiguous ranges balanced by compressed byte size;
+//!   `ShardedEngine` gives each range its own `ServingEngine` (own
+//!   `Runtime`, `parallel::Pool`, `DecodeArena`) and pipelines
+//!   activations shard-to-shard, embed on the first and LM head on the
+//!   last.  Any shard count is byte-identical to the monolithic engine.
+//! * **`scheduler`** — a multi-tenant admission queue with a
+//!   submit/poll/cancel lifecycle and continuous batching: a long-lived
+//!   `parallel::Service` driver retires lanes at their
+//!   `max_new_tokens` deadlines, grafts queued requests into free lanes
+//!   between decode steps (solo prefill + catch-up, then
+//!   `DecodeState::adopt_lane`), and re-slots the batch through the
+//!   `batcher` tables as occupancy changes — FCFS throughout.
+//! * **`metrics`** — queue depth, lifecycle tallies, time-to-first-
+//!   token, token throughput and per-shard decode-arena gauges,
+//!   snapshotted lock-free from any thread.
+//!
+//! The split mirrors the serving designs in Heilper & Singer 2025 and
+//! Mao et al. 2024: decode-on-demand weights partitioned across
+//! workers behind a continuous admission queue.  Everything here is
+//! engine-agnostic via `StepEngine`, so the scheduler drives one
+//! engine or a shard pipeline identically — and, through the native
+//! executor, the whole stack runs end-to-end in CI.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod shard;
+
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use scheduler::{Scheduler, SchedulerOpts, Status};
+pub use shard::{ShardPlan, ShardedEngine};
+
+use crate::coordinator::engine::DecodeState;
+use crate::coordinator::{Batch, ServingEngine};
+use anyhow::Result;
+
+/// The step-wise engine surface the scheduler drives: prefill a batch
+/// into a `DecodeState`, then advance it one token at a time so
+/// admission can interleave between steps.  Implemented by the single
+/// `ServingEngine` and the `ShardedEngine` pipeline.
+pub trait StepEngine: Send {
+    fn prefill_state(&self, batch: &Batch) -> Result<DecodeState>;
+    /// One decode step; `false` (without stepping) once the decode
+    /// context is exhausted.
+    fn decode_step(&self, st: &mut DecodeState) -> Result<bool>;
+    fn prefill_slots(&self) -> Vec<(usize, usize)>;
+    fn decode_slots(&self) -> Vec<(usize, usize)>;
+    /// Decode-arena fresh allocations per shard (one entry per shard; 0
+    /// each in steady state).
+    fn fresh_allocs_per_shard(&self) -> Vec<usize>;
+
+    fn n_shards(&self) -> usize {
+        self.fresh_allocs_per_shard().len()
+    }
+}
+
+impl StepEngine for ServingEngine {
+    fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        ServingEngine::prefill_state(self, batch)
+    }
+
+    fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
+        ServingEngine::decode_step(self, st)
+    }
+
+    fn prefill_slots(&self) -> Vec<(usize, usize)> {
+        self.runtime().manifest.prefill_slots.clone()
+    }
+
+    fn decode_slots(&self) -> Vec<(usize, usize)> {
+        self.runtime().manifest.decode_slots.clone()
+    }
+
+    fn fresh_allocs_per_shard(&self) -> Vec<usize> {
+        vec![self.decode_arena_fresh_allocs()]
+    }
+}
+
+impl StepEngine for ShardedEngine {
+    fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        ShardedEngine::prefill_state(self, batch)
+    }
+
+    fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
+        ShardedEngine::decode_step(self, st)
+    }
+
+    fn prefill_slots(&self) -> Vec<(usize, usize)> {
+        ShardedEngine::prefill_slots(self)
+    }
+
+    fn decode_slots(&self) -> Vec<(usize, usize)> {
+        ShardedEngine::decode_slots(self)
+    }
+
+    fn fresh_allocs_per_shard(&self) -> Vec<usize> {
+        self.fresh_allocs()
+    }
+}

@@ -1,0 +1,600 @@
+//! Continuous-batching admission scheduler — the multi-tenant front of
+//! the serve subsystem.
+//!
+//! Requests enter through `submit` (FCFS), decode inside a shared
+//! in-flight batch driven by a long-lived `parallel::Service` worker
+//! (never on the caller's thread), and leave through `poll`/`wait` with
+//! a `Status` lifecycle: `Queued -> Decoding -> Done | Cancelled |
+//! Failed`.
+//!
+//! Continuous batching over fixed-shape AOT slots works in three moves,
+//! all between decode steps:
+//!
+//! 1. **Retire** — a lane whose request hit its `max_new_tokens`
+//!    deadline (or was cancelled) frees up; the remaining lanes step on
+//!    undisturbed.
+//! 2. **Admit** — the oldest queued request prefills solo in a `(1, s)`
+//!    slot, catches up to the in-flight batch's shared write position
+//!    by decoding solo (each catch-up step emits one of its real
+//!    tokens — nothing is thrown away), then grafts into the free lane
+//!    via `DecodeState::adopt_lane`.  A newcomer therefore starts
+//!    decoding *before* the current batch drains — the property the
+//!    serve tests pin via the `fused_admissions` counter.
+//! 3. **Re-slot** — when lanes retire, the batch compacts into the
+//!    smallest decode slot that still fits (`DecodeState::compact`);
+//!    when the queue is deep and every lane is busy, it upsizes so
+//!    admission has somewhere to land.  Both re-pack through the
+//!    `batcher` slot tables.
+//!
+//! Because every executor computation is lane-independent with a fixed
+//! reduction order, none of these moves perturbs other requests'
+//! trajectories: a request's generation is byte-identical to a solo
+//! `ServingEngine::generate` run whatever admission order the trace
+//! produced (rust/tests/serve.rs).
+
+use super::metrics::{MetricsSnapshot, ServeMetrics};
+use super::StepEngine;
+use crate::coordinator::batcher::{pack, Request};
+use crate::coordinator::engine::DecodeState;
+use crate::parallel::Service;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Request lifecycle as observed through `poll`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Status {
+    Queued,
+    Decoding,
+    Done,
+    Cancelled,
+    Failed(String),
+}
+
+impl Status {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Status::Done | Status::Cancelled | Status::Failed(_))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerOpts {
+    /// Start with admission paused (`resume` to begin): lets callers
+    /// queue a trace deterministically before the driver forms batches.
+    pub paused: bool,
+    /// Driver sleep between polls when there is nothing to do.
+    pub idle: Duration,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts { paused: false, idle: Duration::from_micros(200) }
+    }
+}
+
+struct Entry {
+    prompt: Vec<u8>,
+    max_new: usize,
+    status: Status,
+    output: Vec<u8>,
+    cancel_requested: bool,
+    submitted_at: Instant,
+    got_first_token: bool,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<u64>>,
+    entries: Mutex<HashMap<u64, Entry>>,
+    next_id: AtomicU64,
+    paused: AtomicBool,
+    metrics: ServeMetrics,
+}
+
+/// The multi-tenant serving frontend: submit/poll/cancel from any
+/// thread; decoding happens on the driver worker.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    driver: Option<Service>,
+}
+
+impl Scheduler {
+    pub fn new<E: StepEngine + 'static>(engine: E, opts: SchedulerOpts) -> Scheduler {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            entries: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            paused: AtomicBool::new(opts.paused),
+            metrics: ServeMetrics::new(),
+        });
+        let drv_shared = Arc::clone(&shared);
+        let idle = opts.idle;
+        let driver = Service::spawn("serve-driver", move |stop| {
+            let prefill_slots = engine.prefill_slots();
+            let decode_slots = engine.decode_slots();
+            let max_group = prefill_slots.iter().map(|(b, _)| *b).max().unwrap_or(1);
+            Driver {
+                engine,
+                shared: drv_shared,
+                idle,
+                prefill_slots,
+                decode_slots,
+                max_group,
+                flight: None,
+                solo_admission_broken: false,
+            }
+            .run(stop)
+        });
+        Scheduler { shared, driver: Some(driver) }
+    }
+
+    /// Enqueue a prompt; returns the request id for `poll`/`cancel`.
+    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> u64 {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shared.entries.lock().unwrap().insert(
+            id,
+            Entry {
+                prompt,
+                max_new: max_new.max(1),
+                status: Status::Queued,
+                output: Vec::new(),
+                cancel_requested: false,
+                submitted_at: Instant::now(),
+                got_first_token: false,
+            },
+        );
+        let mut queue = self.shared.queue.lock().unwrap();
+        queue.push_back(id);
+        self.shared.metrics.set_queue_depth(queue.len());
+        drop(queue);
+        self.shared.metrics.inc_submitted();
+        id
+    }
+
+    /// Current status and the tokens generated so far.
+    pub fn poll(&self, id: u64) -> Option<(Status, Vec<u8>)> {
+        self.shared
+            .entries
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| (e.status.clone(), e.output.clone()))
+    }
+
+    /// Cancel: immediate while queued; between decode steps while
+    /// decoding (the lane retires at the next step boundary).
+    pub fn cancel(&self, id: u64) {
+        let mut entries = self.shared.entries.lock().unwrap();
+        if let Some(e) = entries.get_mut(&id) {
+            if e.status == Status::Queued {
+                e.status = Status::Cancelled;
+                self.shared.metrics.inc_cancelled();
+            } else if e.status == Status::Decoding {
+                e.cancel_requested = true;
+            }
+        }
+    }
+
+    pub fn pause(&self) {
+        self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Block until `id` is terminal; `Ok` only for `Done`.
+    pub fn wait(&self, id: u64, timeout: Duration) -> Result<Vec<u8>> {
+        let t0 = Instant::now();
+        loop {
+            match self.poll(id) {
+                None => anyhow::bail!("unknown request {id}"),
+                Some((Status::Done, out)) => return Ok(out),
+                Some((Status::Cancelled, _)) => anyhow::bail!("request {id} was cancelled"),
+                Some((Status::Failed(msg), _)) => anyhow::bail!("request {id} failed: {msg}"),
+                Some(_) => {}
+            }
+            anyhow::ensure!(t0.elapsed() <= timeout, "timed out waiting for request {id}");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Block until every submitted request is terminal.
+    pub fn drain(&self, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            {
+                let entries = self.shared.entries.lock().unwrap();
+                if entries.values().all(|e| e.status.is_terminal()) {
+                    return Ok(());
+                }
+            }
+            anyhow::ensure!(t0.elapsed() <= timeout, "drain timed out");
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+
+    /// Stop the driver worker (joins; surfaces a driver panic).
+    pub fn shutdown(mut self) -> std::result::Result<(), String> {
+        match self.driver.take() {
+            Some(service) => service.stop(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One in-flight batch: the decode state plus which request occupies
+/// each lane (`None` = free).
+struct Flight {
+    st: DecodeState,
+    lane_ids: Vec<Option<u64>>,
+}
+
+struct Driver<E: StepEngine> {
+    engine: E,
+    shared: Arc<Shared>,
+    idle: Duration,
+    prefill_slots: Vec<(usize, usize)>,
+    decode_slots: Vec<(usize, usize)>,
+    max_group: usize,
+    flight: Option<Flight>,
+    /// Set when a solo admission prefill errored (usually a config gap
+    /// like a missing b=1 decode slot): stop attempting fused admission
+    /// until the next fresh batch, where the larger-slot path serves
+    /// the queue instead of failing it request by request.
+    solo_admission_broken: bool,
+}
+
+impl<E: StepEngine> Driver<E> {
+    fn run(mut self, stop: &std::sync::atomic::AtomicBool) {
+        while !stop.load(Ordering::SeqCst) {
+            if self.shared.paused.load(Ordering::SeqCst) {
+                std::thread::sleep(self.idle);
+                continue;
+            }
+            match self.tick() {
+                Ok(true) => {}
+                Ok(false) => std::thread::sleep(self.idle),
+                Err(e) => {
+                    // a step failed mid-batch: fail its requests, drop
+                    // the batch, keep serving the queue
+                    self.fail_flight(&format!("{e:#}"));
+                }
+            }
+        }
+    }
+
+    /// One driver iteration; `Ok(false)` means idle.
+    fn tick(&mut self) -> Result<bool> {
+        // flush a fully drained flight so fresh batches skip catch-up
+        if let Some(fl) = &self.flight {
+            if fl.lane_ids.iter().all(Option::is_none) {
+                self.flight = None;
+            }
+        }
+        if self.flight.is_none() {
+            return self.form_batch();
+        }
+        self.admit()?;
+        self.maybe_compact()?;
+        let stepped = match self.flight.as_mut() {
+            Some(fl) => self.engine.decode_step(&mut fl.st)?,
+            // admission can drain the flight-forming path entirely
+            None => return Ok(true),
+        };
+        if stepped {
+            self.shared.metrics.inc_decode_steps();
+            self.sync_flight_lanes();
+        } else {
+            // decode context exhausted: every still-active lane is as
+            // done as its solo reference run would be
+            self.finish_flight();
+        }
+        self.shared.metrics.set_shard_fresh_allocs(self.engine.fresh_allocs_per_shard());
+        Ok(true)
+    }
+
+    /// Form a fresh batch from the queue head (FCFS, up to the largest
+    /// prefill slot).
+    fn form_batch(&mut self) -> Result<bool> {
+        let reqs = self.pop_group(self.max_group);
+        if reqs.is_empty() {
+            return Ok(false);
+        }
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let batches = pack(&reqs, &self.prefill_slots);
+        let batch = &batches[0]; // group size <= max slot capacity
+        match self.engine.prefill_state(batch) {
+            Ok(st) => {
+                let mut lane_ids = vec![None; st.lanes()];
+                for (lane, r) in batch.requests.iter().enumerate() {
+                    lane_ids[lane] = Some(r.id);
+                }
+                self.flight = Some(Flight { st, lane_ids });
+                self.solo_admission_broken = false; // fresh batch, fresh try
+                self.sync_flight_lanes();
+                Ok(true)
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for id in ids {
+                    self.fail_request(id, &msg);
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Admit queued requests into free lanes: solo prefill, solo
+    /// catch-up to the shared position, then lane adoption.
+    fn admit(&mut self) -> Result<()> {
+        if self.solo_admission_broken {
+            return Ok(());
+        }
+        self.maybe_upsize()?;
+        loop {
+            let Some(lane) = self.free_lane() else { break };
+            let Some(req) = self.pop_group(1).pop() else { break };
+            let id = req.id;
+            let seq = match &self.flight {
+                Some(fl) => fl.st.seq(),
+                None => break,
+            };
+            let Some(solo_slot) =
+                self.prefill_slots.iter().copied().find(|(b, s)| *b == 1 && *s == seq)
+            else {
+                // no solo slot at this seq: ride the next fresh batch
+                self.requeue_front(id);
+                break;
+            };
+            let solo_batches = pack(&[req], &[solo_slot]);
+            let mut solo = match self.engine.prefill_state(&solo_batches[0]) {
+                Ok(st) => st,
+                Err(_) => {
+                    // solo path broken (e.g. missing b=1 decode slot):
+                    // the request is fine — let it ride the next fresh
+                    // batch instead of failing the queue one by one
+                    self.requeue_front(id);
+                    self.solo_admission_broken = true;
+                    break;
+                }
+            };
+            let mut done = self.sync_solo(id, &solo);
+            let target = self.flight.as_ref().map(|fl| fl.st.pos).unwrap_or(solo.pos);
+            while !done && solo.pos < target {
+                match self.engine.decode_step(&mut solo) {
+                    Ok(true) => done = self.sync_solo(id, &solo),
+                    Ok(false) => {
+                        // solo context wall before alignment: as done as
+                        // the solo reference run
+                        self.finish_request(id);
+                        done = true;
+                    }
+                    Err(e) => {
+                        self.fail_request(id, &format!("{e:#}"));
+                        done = true;
+                    }
+                }
+            }
+            if done {
+                continue; // lane still free; try the next queued request
+            }
+            if solo.pos == target {
+                let fl = self.flight.as_mut().expect("flight present during admission");
+                fl.st.adopt_lane(solo, lane)?;
+                fl.lane_ids[lane] = Some(id);
+                self.shared.metrics.inc_fused();
+            } else {
+                self.finish_request(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Queue deep + batch full: move to a larger decode slot so
+    /// admission has a lane to land in.  Only slots with the SAME
+    /// decode context are considered — a shorter context would end
+    /// in-flight requests earlier than their solo reference runs, a
+    /// longer one would extend them past it (both break byte-identity).
+    fn maybe_upsize(&mut self) -> Result<()> {
+        if self.shared.queue.lock().unwrap().is_empty() || self.free_lane().is_some() {
+            return Ok(());
+        }
+        let Some(fl) = &self.flight else { return Ok(()) };
+        let cur_b = fl.st.lanes();
+        let ctx = fl.st.ctx;
+        let Some((nb, nctx)) = self
+            .decode_slots
+            .iter()
+            .copied()
+            .filter(|(b, c)| *b > cur_b && *c == ctx)
+            .min_by_key(|(b, _)| *b)
+        else {
+            return Ok(());
+        };
+        let keep: Vec<usize> = (0..cur_b).collect();
+        let st = fl.st.compact(&keep, (nb, fl.st.seq()), nctx)?;
+        let mut lane_ids = vec![None; nb];
+        lane_ids[..cur_b].copy_from_slice(&fl.lane_ids);
+        self.flight = Some(Flight { st, lane_ids });
+        Ok(())
+    }
+
+    /// Lanes retired: compact into the smallest decode slot (at the
+    /// same decode context, for the same reason as `maybe_upsize`) that
+    /// still holds the active set.
+    fn maybe_compact(&mut self) -> Result<()> {
+        let Some(fl) = &self.flight else { return Ok(()) };
+        let active: Vec<usize> =
+            (0..fl.lane_ids.len()).filter(|&l| fl.lane_ids[l].is_some()).collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let cur_b = fl.st.lanes();
+        let ctx = fl.st.ctx;
+        let Some((nb, nctx)) = self
+            .decode_slots
+            .iter()
+            .copied()
+            .filter(|(b, c)| *b >= active.len() && *c == ctx)
+            .min_by_key(|(b, _)| *b)
+        else {
+            return Ok(());
+        };
+        if nb >= cur_b {
+            return Ok(());
+        }
+        let st = fl.st.compact(&active, (nb, fl.st.seq()), nctx)?;
+        let mut lane_ids = vec![None; nb];
+        for (dst, &src) in active.iter().enumerate() {
+            lane_ids[dst] = fl.lane_ids[src];
+        }
+        self.flight = Some(Flight { st, lane_ids });
+        Ok(())
+    }
+
+    /// Lowest free lane of the in-flight batch.
+    fn free_lane(&self) -> Option<usize> {
+        let fl = self.flight.as_ref()?;
+        let occupied = fl.st.batch.requests.len();
+        (0..fl.st.lanes()).find(|&l| fl.lane_ids[l].is_none() && l <= occupied)
+    }
+
+    /// Pop up to `n` queued requests in FCFS order (skipping entries
+    /// cancelled while queued), marking them `Decoding`.
+    fn pop_group(&self, n: usize) -> Vec<Request> {
+        let mut queue = self.shared.queue.lock().unwrap();
+        let mut entries = self.shared.entries.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < n {
+            let Some(id) = queue.pop_front() else { break };
+            let Some(entry) = entries.get_mut(&id) else { continue };
+            if entry.status != Status::Queued {
+                continue;
+            }
+            entry.status = Status::Decoding;
+            out.push(Request { id, prompt: entry.prompt.clone(), max_new_tokens: entry.max_new });
+        }
+        self.shared.metrics.set_queue_depth(queue.len());
+        out
+    }
+
+    fn requeue_front(&self, id: u64) {
+        let mut queue = self.shared.queue.lock().unwrap();
+        if let Some(e) = self.shared.entries.lock().unwrap().get_mut(&id) {
+            e.status = Status::Queued;
+        }
+        queue.push_front(id);
+        self.shared.metrics.set_queue_depth(queue.len());
+    }
+
+    /// Mirror a solo (catch-up) state into its entry.  Returns true
+    /// once the request is terminal (deadline reached or cancelled).
+    fn sync_solo(&self, id: u64, solo: &DecodeState) -> bool {
+        let mut entries = self.shared.entries.lock().unwrap();
+        let Some(entry) = entries.get_mut(&id) else { return true };
+        Self::mirror_output(&self.shared.metrics, entry, &solo.outputs[0]);
+        if entry.cancel_requested {
+            entry.status = Status::Cancelled;
+            self.shared.metrics.inc_cancelled();
+            return true;
+        }
+        if entry.output.len() >= entry.max_new {
+            entry.status = Status::Done;
+            self.shared.metrics.inc_completed();
+            return true;
+        }
+        entry.status = Status::Decoding;
+        false
+    }
+
+    /// Mirror every occupied lane into its entry and retire lanes whose
+    /// requests hit their deadline or were cancelled.
+    fn sync_flight_lanes(&mut self) {
+        let Some(fl) = &mut self.flight else { return };
+        let mut entries = self.shared.entries.lock().unwrap();
+        for lane in 0..fl.lane_ids.len() {
+            let Some(id) = fl.lane_ids[lane] else { continue };
+            let Some(entry) = entries.get_mut(&id) else {
+                fl.lane_ids[lane] = None;
+                continue;
+            };
+            Self::mirror_output(&self.shared.metrics, entry, &fl.st.outputs[lane]);
+            if entry.cancel_requested {
+                entry.status = Status::Cancelled;
+                self.shared.metrics.inc_cancelled();
+                fl.lane_ids[lane] = None;
+            } else if entry.output.len() >= entry.max_new {
+                entry.status = Status::Done;
+                self.shared.metrics.inc_completed();
+                fl.lane_ids[lane] = None;
+            } else {
+                entry.status = Status::Decoding;
+            }
+        }
+    }
+
+    fn mirror_output(metrics: &ServeMetrics, entry: &mut Entry, lane_out: &[u8]) {
+        let take = lane_out.len().min(entry.max_new);
+        let appended = take.saturating_sub(entry.output.len());
+        if appended > 0 {
+            metrics.add_tokens(appended);
+        }
+        entry.output = lane_out[..take].to_vec();
+        if !entry.got_first_token && !entry.output.is_empty() {
+            entry.got_first_token = true;
+            metrics.record_ttft_ms(entry.submitted_at.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    /// Mark a non-terminal request `Done` (context-capped paths).
+    fn finish_request(&self, id: u64) {
+        let mut entries = self.shared.entries.lock().unwrap();
+        if let Some(entry) = entries.get_mut(&id) {
+            if !entry.status.is_terminal() {
+                entry.status = Status::Done;
+                self.shared.metrics.inc_completed();
+            }
+        }
+    }
+
+    fn fail_request(&self, id: u64, msg: &str) {
+        let mut entries = self.shared.entries.lock().unwrap();
+        if let Some(entry) = entries.get_mut(&id) {
+            if !entry.status.is_terminal() {
+                entry.status = Status::Failed(msg.to_string());
+                self.shared.metrics.inc_failed();
+            }
+        }
+    }
+
+    /// Context exhausted: finalize every active lane as done, drop the
+    /// batch.
+    fn finish_flight(&mut self) {
+        self.sync_flight_lanes();
+        let ids: Vec<u64> = match &mut self.flight {
+            Some(fl) => fl.lane_ids.iter_mut().filter_map(Option::take).collect(),
+            None => Vec::new(),
+        };
+        for id in ids {
+            self.finish_request(id);
+        }
+        self.flight = None;
+    }
+
+    fn fail_flight(&mut self, msg: &str) {
+        let ids: Vec<u64> = match &mut self.flight {
+            Some(fl) => fl.lane_ids.iter_mut().filter_map(Option::take).collect(),
+            None => Vec::new(),
+        };
+        for id in ids {
+            self.fail_request(id, msg);
+        }
+        self.flight = None;
+    }
+}

@@ -1,0 +1,296 @@
+//! Sharded serving: split a `CompressedModel`'s transformer blocks into
+//! contiguous ranges balanced by compressed byte size, give each range
+//! its own `ServingEngine` (own `Runtime`, own `parallel::Pool`, own
+//! `DecodeArena`), and run a pipeline-style forward that hands layer
+//! activations from shard *i* to shard *i+1*.
+//!
+//! The first shard embeds, the last applies the final norm + LM head;
+//! every shard owns exactly its slice of the per-block decode caches.
+//! Because each block's computation depends only on its incoming
+//! activations, a `ShardedEngine` with any shard count is byte-identical
+//! to the monolithic `ServingEngine` — `rust/tests/serve.rs` pins 1-,
+//! 2- and 3-shard generations against `ServingEngine::generate`.
+
+use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState};
+use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
+use crate::runtime::{HostTensor, Runtime};
+use crate::store::container::CompressedModel;
+use anyhow::{ensure, Result};
+use std::ops::Range;
+
+/// A contiguous partition of a model's blocks, balanced by serialized
+/// bitstream bytes (the quantity that drives per-shard ANS decode
+/// work and resident stream memory).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub ranges: Vec<Range<usize>>,
+    /// compressed bitstream bytes per shard (diagnostic / balancing)
+    pub bytes: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Greedy proportional partition: close a shard once its cumulative
+    /// bytes reach the proportional boundary, but never strand a later
+    /// shard without blocks.  `n_shards` is clamped to the block count.
+    pub fn balance(cm: &CompressedModel, n_shards: usize) -> ShardPlan {
+        let n = cm.blocks.len();
+        let k = n_shards.max(1).min(n.max(1));
+        let sizes: Vec<usize> = cm.blocks.iter().map(|b| b.bitstream.serialized_len()).collect();
+        let total: usize = sizes.iter().sum();
+        let mut ranges = Vec::with_capacity(k);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        let mut cut = 1usize; // index of the boundary being chased (1..k)
+        for (i, &sz) in sizes.iter().enumerate() {
+            acc += sz;
+            let blocks_left = n - (i + 1);
+            let shards_left = k - cut;
+            if cut < k && (acc * k >= total * cut || blocks_left == shards_left) {
+                ranges.push(start..i + 1);
+                start = i + 1;
+                cut += 1;
+            }
+        }
+        ranges.push(start..n);
+        let bytes = ranges.iter().map(|r| sizes[r.clone()].iter().sum::<usize>()).collect();
+        ShardPlan { ranges, bytes }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Which shard owns block `b`.
+    pub fn shard_of(&self, b: usize) -> Option<usize> {
+        self.ranges.iter().position(|r| r.contains(&b))
+    }
+
+    /// Clone shard `i`'s blocks into a standalone sub-model.  Embed,
+    /// head and final norm ride along in every shard: the first/last
+    /// shards use them, middle shards keep them only so the engine's
+    /// config validation holds (dropping them there is a follow-on).
+    pub fn slice(&self, cm: &CompressedModel, i: usize) -> CompressedModel {
+        CompressedModel {
+            config: cm.config.clone(),
+            fmt: cm.fmt,
+            embed: cm.embed.clone(),
+            head: cm.head.clone(),
+            norm_final: cm.norm_final.clone(),
+            blocks: cm.blocks[self.ranges[i].clone()].to_vec(),
+        }
+    }
+}
+
+/// N engines over one plan, exposing the same step-wise surface as a
+/// single `ServingEngine` (`prefill_state` / `decode_step` /
+/// `generate`) so the scheduler is oblivious to the shard count.
+pub struct ShardedEngine {
+    shards: Vec<ServingEngine>,
+    plan: ShardPlan,
+}
+
+impl ShardedEngine {
+    /// One runtime per shard (each shard owns its executable cache; on
+    /// the native backend these are nearly free).  All runtimes must
+    /// agree on the slot tables.
+    pub fn new(
+        runtimes: Vec<Runtime>,
+        cm: &CompressedModel,
+        plan: ShardPlan,
+        opts: &EngineOpts,
+    ) -> Result<ShardedEngine> {
+        ensure!(plan.n_shards() >= 1, "shard plan is empty");
+        ensure!(
+            runtimes.len() == plan.n_shards(),
+            "{} runtimes for {} shards",
+            runtimes.len(),
+            plan.n_shards()
+        );
+        let mut shards = Vec::with_capacity(plan.n_shards());
+        for (i, rt) in runtimes.into_iter().enumerate() {
+            let mut shard_opts = opts.clone();
+            if shard_opts.residency == Residency::DiskOffload {
+                // per-shard offload directories: block files are named
+                // by shard-local index, so a shared directory would
+                // have later shards overwrite earlier shards' weights
+                let base = shard_opts.offload_dir.clone().unwrap_or_else(|| {
+                    std::env::temp_dir().join("eq_offload").to_string_lossy().into_owned()
+                });
+                shard_opts.offload_dir = Some(format!("{base}/shard_{i}"));
+            }
+            shards.push(ServingEngine::new(rt, plan.slice(cm, i), shard_opts)?);
+        }
+        Ok(ShardedEngine { shards, plan })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard decode-arena fresh allocations (0 per shard in steady
+    /// state — the sharded serving tests pin this).
+    pub fn fresh_allocs(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.decode_arena_fresh_allocs()).collect()
+    }
+
+    fn first(&self) -> &ServingEngine {
+        &self.shards[0]
+    }
+
+    fn last(&self) -> &ServingEngine {
+        self.shards.last().expect("non-empty shard set")
+    }
+
+    pub fn prefill_slots(&self) -> Vec<(usize, usize)> {
+        self.first().runtime().manifest.prefill_slots.clone()
+    }
+
+    pub fn decode_slots(&self) -> Vec<(usize, usize)> {
+        self.first().runtime().manifest.decode_slots.clone()
+    }
+
+    /// Prefill a batch across all shards: embed on the first, blocks in
+    /// shard order (activations handed shard-to-shard), head on the
+    /// last.  The returned state's caches are the concatenation of the
+    /// shards' block caches, in block order.
+    pub fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        let (b, _s) = batch.slot;
+        let cfg = &self.first().runtime().manifest.config;
+        let ctx = self.first().decode_ctx(b)?;
+        let mut metrics = Metrics::zero();
+        let t0 = std::time::Instant::now();
+        let mut x = self.first().embed_prefill(batch)?;
+        let starts = HostTensor::i32(batch.starts.clone(), &[b]);
+        let mut prefill_caches = Vec::with_capacity(cfg.n_layers);
+        for shard in &self.shards {
+            let (x2, mut caches) = shard.prefill_blocks(x, &starts, batch.slot, &mut metrics)?;
+            x = x2;
+            prefill_caches.append(&mut caches);
+        }
+        let logits = self.last().head_prefill(x, batch.slot)?;
+        metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        metrics.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
+    }
+
+    /// One decode step through the shard pipeline.
+    pub fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
+        if st.pos >= st.ctx {
+            return Ok(false);
+        }
+        let (b, _s) = st.batch.slot;
+        let n_blocks: usize = self.plan.ranges.iter().map(|r| r.len()).sum();
+        ensure!(
+            st.caches.len() == n_blocks,
+            "decode_step: {} caches for {} planned blocks",
+            st.caches.len(),
+            n_blocks
+        );
+        let cfg = &self.first().runtime().manifest.config;
+        let t0 = std::time::Instant::now();
+        let mut x = self.first().embed_decode(&st.next, b)?;
+        let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
+        for (shard, range) in self.shards.iter().zip(&self.plan.ranges) {
+            let slice = &mut st.caches[range.clone()];
+            x = shard.decode_blocks(x, slice, st.pos as i32, &starts, b, st.ctx, &mut st.metrics)?;
+        }
+        let logits = self.last().head_decode(x, b)?;
+        apply_decode_logits(st, &logits, cfg.vocab, t0);
+        Ok(true)
+    }
+
+    /// Greedy-generate `max_new` tokens through the shard pipeline —
+    /// same contract as `ServingEngine::generate`.
+    pub fn generate(&self, batch: &Batch, max_new: usize) -> Result<(Vec<Vec<u8>>, Metrics)> {
+        let mut st = self.prefill_state(batch)?;
+        for _ in 0..max_new.saturating_sub(1) {
+            if !self.decode_step(&mut st)? {
+                break;
+            }
+        }
+        let outputs = st.outputs.into_iter().take(batch.requests.len()).collect();
+        Ok((outputs, st.metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loader::synthetic_model;
+    use crate::model::Config;
+    use crate::store::pipeline::{compress_model, CompressOpts};
+
+    fn tiny_compressed(n_layers: usize) -> CompressedModel {
+        let m = synthetic_model(
+            Config {
+                name: "T".into(),
+                vocab: 64,
+                d_model: 16,
+                n_layers,
+                n_heads: 2,
+                d_ff: 24,
+                max_ctx: 32,
+            },
+            29,
+        );
+        compress_model(&m, &CompressOpts { lam: 0.3, ..Default::default() }).unwrap().0
+    }
+
+    #[test]
+    fn balance_partitions_contiguously_and_exhaustively() {
+        let cm = tiny_compressed(5);
+        for k in 1..=7 {
+            let plan = ShardPlan::balance(&cm, k);
+            assert_eq!(plan.n_shards(), k.min(5), "k={k}");
+            // contiguous cover of 0..n with no gaps or overlaps
+            let mut expect = 0usize;
+            for r in &plan.ranges {
+                assert_eq!(r.start, expect, "k={k}");
+                assert!(r.end > r.start, "empty shard at k={k}");
+                expect = r.end;
+            }
+            assert_eq!(expect, 5);
+            // bytes accounting matches the blocks
+            let total: usize = cm.blocks.iter().map(|b| b.bitstream.serialized_len()).sum();
+            assert_eq!(plan.bytes.iter().sum::<usize>(), total);
+            for b in 0..5 {
+                let s = plan.shard_of(b).unwrap();
+                assert!(plan.ranges[s].contains(&b));
+            }
+        }
+    }
+
+    #[test]
+    fn balance_is_roughly_even_on_uniform_blocks() {
+        let cm = tiny_compressed(6);
+        let plan = ShardPlan::balance(&cm, 3);
+        // blocks share a shape, so bitstream sizes are near-uniform and
+        // no shard should hoard more than half the blocks
+        for r in &plan.ranges {
+            assert!((1..=3).contains(&r.len()), "{:?}", plan.ranges);
+        }
+        // byte balance: the heaviest shard carries at most ~2x the
+        // proportional share
+        let total: usize = plan.bytes.iter().sum();
+        let max = *plan.bytes.iter().max().unwrap();
+        assert!(max * 3 <= total * 2, "unbalanced plan: {:?}", plan.bytes);
+    }
+
+    #[test]
+    fn slice_preserves_block_identity() {
+        let cm = tiny_compressed(4);
+        let plan = ShardPlan::balance(&cm, 2);
+        let mut reassembled = Vec::new();
+        for i in 0..plan.n_shards() {
+            let sub = plan.slice(&cm, i);
+            assert_eq!(sub.config, cm.config);
+            reassembled.extend(sub.blocks.iter().map(|b| b.n_symbols()).collect::<Vec<_>>());
+        }
+        let want: Vec<usize> = cm.blocks.iter().map(|b| b.n_symbols()).collect();
+        assert_eq!(reassembled, want);
+    }
+}

@@ -1,0 +1,264 @@
+//! Integration tests for the serve subsystem, end-to-end on the native
+//! executor (no artifacts, no PJRT): sharded-vs-single byte identity,
+//! a 64-request synthetic trace through the continuous-batching
+//! scheduler on 2 shards, fused mid-flight admission, and the
+//! cancel lifecycle.
+//!
+//! The load-bearing invariant everywhere: a request's generation is
+//! byte-identical to a solo `ServingEngine::generate` run, whatever
+//! shard count, batch composition, or admission order served it.
+
+use entquant::coordinator::{pack, EngineOpts, Request, ServingEngine};
+use entquant::model::loader::synthetic_model;
+use entquant::model::Config;
+use entquant::runtime::{Manifest, Runtime};
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status};
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+const SEQ: usize = 16;
+const CTX: usize = 28;
+
+fn cm() -> &'static CompressedModel {
+    static CM: OnceLock<CompressedModel> = OnceLock::new();
+    CM.get_or_init(|| {
+        let m = synthetic_model(
+            Config {
+                name: "T".into(),
+                vocab: 64,
+                d_model: 16,
+                n_layers: 6,
+                n_heads: 2,
+                d_ff: 24,
+                max_ctx: 32,
+            },
+            51,
+        );
+        compress_model(&m, &CompressOpts { lam: 0.3, max_iters: 6, ..Default::default() })
+            .unwrap()
+            .0
+    })
+}
+
+fn native_rt(model: &CompressedModel) -> Runtime {
+    Runtime::native(Manifest::synthetic(
+        model.config.clone(),
+        vec![(1, SEQ), (2, SEQ), (4, SEQ)],
+        vec![(1, CTX), (2, CTX), (4, CTX)],
+    ))
+}
+
+fn single_engine() -> ServingEngine {
+    let model = cm().clone();
+    let rt = native_rt(&model);
+    ServingEngine::new(rt, model, EngineOpts::default()).unwrap()
+}
+
+fn sharded(n: usize) -> ShardedEngine {
+    let model = cm().clone();
+    let plan = ShardPlan::balance(&model, n);
+    let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&model)).collect();
+    ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+}
+
+/// Deterministic prompt inside the tiny model's vocab (64).
+fn req(id: u64, len: usize) -> Request {
+    Request {
+        id,
+        prompt: (0..len.max(1)).map(|i| ((id as usize * 13 + i * 7) % 64) as u8).collect(),
+        max_new_tokens: 8,
+    }
+}
+
+/// Solo reference: the request alone through the monolithic engine.
+fn reference(engine: &ServingEngine, r: &Request, max_new: usize) -> Vec<u8> {
+    let batch = &pack(std::slice::from_ref(r), &[(1, SEQ)])[0];
+    engine.generate(batch, max_new).unwrap().0.remove(0)
+}
+
+#[test]
+fn sharded_generations_byte_identical_across_shard_counts() {
+    let reqs: Vec<Request> = (0..4).map(|i| req(i, 4 + i as usize * 3)).collect();
+    let batch = &pack(&reqs, &[(4, SEQ)])[0];
+    let engine = single_engine();
+    let (want, _) = engine.generate(batch, 8).unwrap();
+    for shards in [1usize, 2, 3] {
+        let se = sharded(shards);
+        assert_eq!(se.n_shards(), shards);
+        // two rounds: the second exercises arena recycling end-to-end
+        for round in 0..2 {
+            let (got, metrics) = se.generate(batch, 8).unwrap();
+            assert_eq!(got, want, "shards={shards} round={round}");
+            assert_eq!(metrics.decode_tokens, 7);
+        }
+        let allocs = se.fresh_allocs();
+        assert_eq!(allocs.len(), shards);
+        assert!(
+            allocs.iter().all(|&a| a == 0),
+            "shards={shards}: fresh allocs {allocs:?} (arena must stay steady-state)"
+        );
+    }
+}
+
+#[test]
+fn trace_of_64_requests_through_scheduler_matches_single_engine() {
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..64).map(|i| req(i, 1 + (i as usize * 5) % 14)).collect();
+    let max_new = |id: u64| 2 + (id as usize % 7);
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, max_new(r.id))).collect();
+
+    let sched = Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
+    // 56 requests queue up-front; the last 8 arrive mid-trace
+    let mut ids: Vec<u64> =
+        reqs[..56].iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+    sched.resume();
+    std::thread::sleep(Duration::from_millis(5));
+    for r in &reqs[56..] {
+        ids.push(sched.submit(r.prompt.clone(), max_new(r.id)));
+    }
+    sched.drain(Duration::from_secs(300)).unwrap();
+
+    for (i, id) in ids.iter().enumerate() {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "request {i}");
+        assert_eq!(out, want[i], "request {i} diverged from the single-engine path");
+    }
+    let m = sched.metrics();
+    assert_eq!(m.completed, 64);
+    assert_eq!(m.failed, 0);
+    assert!(
+        m.fused_admissions > 0,
+        "continuous admission never engaged over a 64-request trace: {m:?}"
+    );
+    assert!(
+        m.shard_fresh_allocs.iter().all(|&a| a == 0),
+        "per-shard arenas must stay steady-state: {:?}",
+        m.shard_fresh_allocs
+    );
+    assert_eq!(m.shard_fresh_allocs.len(), 2);
+    assert!(m.p50_ttft_ms >= 0.0 && m.tokens > 0);
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn mid_trace_request_fuses_before_initial_batch_drains() {
+    let engine = single_engine();
+    // lane 0 retires after 3 tokens; lanes 1-3 run long
+    let first: Vec<(Request, usize)> = vec![
+        (req(100, 6), 3),
+        (req(101, 5), 12),
+        (req(102, 9), 12),
+        (req(103, 4), 12),
+    ];
+    let late = req(200, 7);
+    let late_max = 5usize;
+
+    let sched = Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
+    let first_ids: Vec<u64> =
+        first.iter().map(|(r, mn)| sched.submit(r.prompt.clone(), *mn)).collect();
+    let late_id = sched.submit(late.prompt.clone(), late_max);
+    sched.resume();
+    // soft overlap probe: watch for the late request decoding while an
+    // initial request is still in flight (asserted structurally below
+    // via the fused-admissions counter, which only counts grafts into a
+    // live batch)
+    let mut overlap_seen = false;
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < Duration::from_secs(60) {
+        let late_state = sched.poll(late_id).unwrap();
+        if !late_state.1.is_empty() {
+            let initial_live = first_ids
+                .iter()
+                .any(|id| !sched.poll(*id).unwrap().0.is_terminal());
+            overlap_seen = overlap_seen || initial_live;
+        }
+        if late_state.0.is_terminal() {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    sched.drain(Duration::from_secs(60)).unwrap();
+
+    let m = sched.metrics();
+    assert!(
+        m.fused_admissions >= 1,
+        "the late request must graft into the in-flight batch: {m:?}"
+    );
+    if !overlap_seen {
+        eprintln!("note: poller missed the live-overlap window (counter still proves fusion)");
+    }
+    // byte identity for everyone, fused or not
+    for ((r, mn), id) in first.iter().zip(&first_ids) {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done);
+        assert_eq!(out, reference(&engine, r, *mn), "initial request {id} diverged");
+    }
+    let (status, out) = sched.poll(late_id).unwrap();
+    assert_eq!(status, Status::Done);
+    assert_eq!(out, reference(&engine, &late, late_max), "fused request diverged");
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_lifecycle_queued_and_mid_decode() {
+    let sched =
+        Scheduler::new(single_engine(), SchedulerOpts { paused: true, ..Default::default() });
+    // a full batch plus one queued victim: cancelling while queued is
+    // immediate and the driver must skip it at admission time
+    let keep: Vec<u64> = (0..4).map(|i| sched.submit(req(300 + i, 5).prompt, 4)).collect();
+    let victim = sched.submit(req(310, 5).prompt, 4);
+    sched.cancel(victim);
+    assert_eq!(sched.poll(victim).unwrap().0, Status::Cancelled);
+    sched.resume();
+    sched.drain(Duration::from_secs(60)).unwrap();
+    for id in &keep {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done);
+        assert_eq!(out.len(), 4);
+    }
+    let (status, out) = sched.poll(victim).unwrap();
+    assert_eq!(status, Status::Cancelled);
+    assert!(out.is_empty(), "a queued cancel must never decode");
+    let m = sched.metrics();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.completed, 4);
+
+    // mid-decode cancel (best effort: on a fast machine the request may
+    // finish first, which is also a legal outcome)
+    let long = sched.submit(req(320, 6).prompt, 12);
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < Duration::from_secs(30) {
+        let (status, out) = sched.poll(long).unwrap();
+        if status.is_terminal() {
+            break;
+        }
+        if !out.is_empty() {
+            sched.cancel(long);
+        }
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    sched.drain(Duration::from_secs(60)).unwrap();
+    let (status, out) = sched.poll(long).unwrap();
+    match status {
+        Status::Cancelled => assert!(out.len() < 12, "cancel must stop generation early"),
+        Status::Done => assert_eq!(out.len(), 12), // finished before the cancel landed
+        other => panic!("unexpected terminal state {other:?}"),
+    }
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_ids_and_double_cancel_are_benign() {
+    let sched =
+        Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
+    assert!(sched.poll(999).is_none());
+    sched.cancel(999); // no-op
+    let id = sched.submit(req(400, 4).prompt, 3);
+    sched.cancel(id);
+    sched.cancel(id); // idempotent
+    assert_eq!(sched.poll(id).unwrap().0, Status::Cancelled);
+    assert_eq!(sched.metrics().cancelled, 1);
+    sched.shutdown().unwrap();
+}

@@ -1,26 +1,35 @@
 #!/usr/bin/env bash
-# Tracked decode/encode benches.  Runs the hand-rolled bench binaries
-# and captures the decode trajectory to BENCH_decode.json (MB/s for the
-# seed scalar path, chunk-parallel threads=N, and the fused
-# bitstream->f32 path).
+# Tracked benches.  Runs the hand-rolled bench binaries and captures:
+#   * BENCH_decode.json — decode trajectory (MB/s for the seed scalar
+#     path, chunk-parallel threads=N, and the fused bitstream->f32 path)
+#   * BENCH_serve.json  — serve trajectory (tokens/s and p50
+#     time-to-first-token at 1/2/4 shards under a synthetic request
+#     trace through the continuous-batching scheduler)
 #
 #   scripts/bench.sh                 # full run
 #   BENCH_SMOKE=1 scripts/bench.sh   # fast smoke (tier1.sh BENCH=1 hook)
-#   BENCH_JSON=/path.json            # override the JSON output path
+#   BENCH_JSON=/path.json            # override the decode JSON path
+#   BENCH_SERVE_JSON=/path.json      # override the serve JSON path
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo bench --bench decode
 cargo bench --bench encoder
+cargo bench --bench serve
 
-# smoke runs write BENCH_decode.smoke.json so they never clobber the
-# tracked full-run trajectory
+# smoke runs write *.smoke.json so they never clobber the tracked
+# full-run trajectories
 if [[ "${BENCH_SMOKE:-0}" == 1 ]]; then
     DEFAULT_JSON=BENCH_decode.smoke.json
+    DEFAULT_SERVE_JSON=BENCH_serve.smoke.json
 else
     DEFAULT_JSON=BENCH_decode.json
+    DEFAULT_SERVE_JSON=BENCH_serve.json
 fi
 echo
 echo "== ${BENCH_JSON:-$DEFAULT_JSON} =="
 cat "${BENCH_JSON:-$DEFAULT_JSON}"
+echo
+echo "== ${BENCH_SERVE_JSON:-$DEFAULT_SERVE_JSON} =="
+cat "${BENCH_SERVE_JSON:-$DEFAULT_SERVE_JSON}"
