@@ -2,17 +2,20 @@
 //! scheduler throughput (tokens/s) and p50 time-to-first-token at
 //! 1/2/4 shards, end-to-end on the native executor (compress a
 //! synthetic checkpoint, shard it, drive the continuous-batching
-//! scheduler).  Emits the tracked `BENCH_serve.json`
+//! scheduler), plus a fault drill (a scripted shard kill mid-trace)
+//! that tracks reroute behavior.  Emits the tracked `BENCH_serve.json`
 //! (`BENCH_serve.smoke.json` under `BENCH_SMOKE=1`, which also shrinks
 //! the trace; `BENCH_SERVE_JSON` overrides the path).
 
 use entquant::coordinator::EngineOpts;
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
+use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
 use entquant::runtime::{Manifest, Runtime};
 use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
+use std::sync::Arc;
 
 const SEQ: usize = 24;
 const CTX: usize = 48;
@@ -32,6 +35,7 @@ struct TracePoint {
     tokens_per_s: f64,
     p50_ttft_ms: f64,
     fused: usize,
+    speculative: usize,
 }
 
 fn main() {
@@ -87,8 +91,8 @@ fn main() {
         assert_eq!(m.completed, ids.len(), "trace must complete");
         let tokens_per_s = m.tokens as f64 / wall_s;
         println!(
-            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, p50 ttft {:.1} ms, {} fused admissions",
-            m.tokens, m.p50_ttft_ms, m.fused_admissions
+            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, p50 ttft {:.1} ms, {} fused admissions ({} speculative)",
+            m.tokens, m.p50_ttft_ms, m.fused_admissions, m.speculative_admissions
         );
         points.push(TracePoint {
             shards,
@@ -97,9 +101,52 @@ fn main() {
             tokens_per_s,
             p50_ttft_ms: m.p50_ttft_ms,
             fused: m.fused_admissions,
+            speculative: m.speculative_admissions,
         });
         sched.shutdown().expect("driver shutdown");
     }
+
+    // fault drill: kill one shard at a scripted decode step mid-trace
+    // on a 2-shard stack — the trace must still complete with zero
+    // failures, and the reroute counter proves the recovery path ran
+    println!("\n== fault drill: scripted shard kill at 2 shards ==");
+    let drill = {
+        let plan = ShardPlan::balance(&cm, 2);
+        let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 4, block: 0 }]);
+        let rts: Vec<Runtime> = (0..plan.n_shards())
+            .map(|i| {
+                native_rt(&cm).with_fault(FaultRuntime::new(
+                    Arc::clone(&faults),
+                    i,
+                    plan.ranges[i].len(),
+                ))
+            })
+            .collect();
+        let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).expect("shards");
+        let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
+        let n_drill = n_requests / 2;
+        for i in 0..n_drill as u64 {
+            let len = 2 + (i as usize * 5) % (SEQ - 4);
+            let prompt: Vec<u8> =
+                (0..len).map(|j| ((i as usize * 13 + j * 7) % 64) as u8).collect();
+            sched.submit(prompt, max_new);
+        }
+        let t0 = std::time::Instant::now();
+        sched.resume();
+        sched.drain(std::time::Duration::from_secs(600)).expect("drain");
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = sched.metrics();
+        assert_eq!(m.completed, n_drill, "fault drill must complete every request");
+        assert_eq!(m.failed, 0, "fault drill must not fail requests");
+        println!(
+            "drill: {} requests survived a scripted shard kill ({} reroute(s), {} fired fault(s)) in {wall_s:.2}s",
+            n_drill,
+            m.reroutes,
+            faults.fired()
+        );
+        sched.shutdown().expect("driver shutdown");
+        (n_drill, m.reroutes, wall_s)
+    };
 
     // tracked trajectory: tokens/s and p50 ttft per shard count
     let mut series = String::new();
@@ -108,8 +155,8 @@ fn main() {
             series.push_str(",\n");
         }
         series.push_str(&format!(
-            "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, \"p50_ttft_ms\": {:.2}, \"fused_admissions\": {}}}",
-            p.shards, p.tokens, p.wall_s, p.tokens_per_s, p.p50_ttft_ms, p.fused
+            "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, \"p50_ttft_ms\": {:.2}, \"fused_admissions\": {}, \"speculative_admissions\": {}}}",
+            p.shards, p.tokens, p.wall_s, p.tokens_per_s, p.p50_ttft_ms, p.fused, p.speculative
         ));
     }
     let json = format!(
@@ -119,13 +166,17 @@ fn main() {
             "  \"smoke\": {smoke},\n",
             "  \"requests\": {requests},\n",
             "  \"max_new\": {max_new},\n",
-            "  \"trace\": [\n{series}\n  ]\n",
+            "  \"trace\": [\n{series}\n  ],\n",
+            "  \"fault_drill\": {{\"shards\": 2, \"requests\": {drill_requests}, \"reroutes\": {drill_reroutes}, \"wall_s\": {drill_wall:.3}}}\n",
             "}}\n"
         ),
         smoke = smoke,
         requests = n_requests,
         max_new = max_new,
         series = series,
+        drill_requests = drill.0,
+        drill_reroutes = drill.1,
+        drill_wall = drill.2,
     );
     let default_name = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
     let path = std::env::var("BENCH_SERVE_JSON")

@@ -82,10 +82,12 @@ fn main() -> anyhow::Result<()> {
     let wall = t1.elapsed().as_secs_f64();
     let m = scheduler.metrics();
     println!(
-        "done: {total_tokens} new tokens in {wall:.2}s = {:.1} tok/s aggregate; p50 ttft {:.1} ms, {} fused admissions, shard fresh allocs {:?} (vs {:.2} MiB bf16 resident)",
+        "done: {total_tokens} new tokens in {wall:.2}s = {:.1} tok/s aggregate; p50 ttft {:.1} ms, {} fused admissions ({} speculative), {} reroute(s), shard fresh allocs {:?} (vs {:.2} MiB bf16 resident)",
         total_tokens as f64 / wall,
         m.p50_ttft_ms,
         m.fused_admissions,
+        m.speculative_admissions,
+        m.reroutes,
         m.shard_fresh_allocs,
         model.bf16_bytes() as f64 / (1 << 20) as f64,
     );

@@ -174,79 +174,100 @@ impl ServingEngine {
             cfg.name
         );
         let value_table = cm.fmt.value_table();
-        let mut consts = Vec::with_capacity(cm.blocks.len());
-        for cb in &cm.blocks {
-            let scales = cb
-                .layers
-                .iter()
-                .map(|l| HostTensor::f32(l.scales.clone(), &[l.rows]))
-                .collect();
-            consts.push(BlockConsts {
-                scales,
-                norm_attn: HostTensor::f32(cb.norm_attn.clone(), &[cb.norm_attn.len()]),
-                norm_mlp: HostTensor::f32(cb.norm_mlp.clone(), &[cb.norm_mlp.len()]),
-            });
-        }
+        let consts = build_consts(&cm);
         let embed = HostTensor::f32(cm.embed.data.clone(), &[cm.embed.rows, cm.embed.cols]);
         let head = HostTensor::f32(cm.head.data.clone(), &[cm.head.rows, cm.head.cols]);
         let norm_final = HostTensor::f32(cm.norm_final.clone(), &[cm.norm_final.len()]);
 
         // §A.1 double buffering: EntQuant serving recycles two
         // block-sized code buffers across blocks and decode steps
-        let arena = match opts.residency {
-            Residency::EntQuant => Some(DecodeArena::new(
-                cm.blocks.iter().map(|b| b.n_symbols()).max().unwrap_or(0),
-            )),
-            _ => None,
-        };
-        let cm = Arc::new(cm);
+        let arena = build_arena(&cm, &opts);
         let pool = crate::parallel::Pool::new(opts.decode_threads);
-        let mut engine = ServingEngine {
+        let (resident_codes, offload_paths) =
+            build_residency(&cm, &opts, &value_table, pool.threads(), resolve_offload_dir(&opts))?;
+        Ok(ServingEngine {
             rt,
-            cm,
+            cm: Arc::new(cm),
             consts,
             embed,
             head,
             norm_final,
-            resident_codes: None,
+            resident_codes,
             arena,
             pool,
             opts,
             value_table,
-            offload_paths: Vec::new(),
-        };
-        match engine.opts.residency {
-            Residency::Bf16Resident | Residency::F8Resident => {
-                // decode once at load time; codes stay resident
-                let mut all = Vec::new();
-                for b in 0..engine.cm.blocks.len() {
-                    all.push(engine.decode_block_codes(b)?);
-                }
-                engine.resident_codes = Some(all);
-            }
-            Residency::DiskOffload => {
-                let dir = engine
-                    .opts
-                    .offload_dir
-                    .clone()
-                    .unwrap_or_else(|| std::env::temp_dir().join("eq_offload").to_string_lossy().into_owned());
-                std::fs::create_dir_all(&dir)?;
-                for b in 0..engine.cm.blocks.len() {
-                    let codes = engine.decode_block_codes(b)?;
-                    let path = format!("{dir}/block_{b}.f32");
-                    let mut bytes = Vec::new();
-                    for t in &codes {
-                        for &v in t.as_f32() {
-                            bytes.extend_from_slice(&v.to_le_bytes());
-                        }
-                    }
-                    std::fs::write(&path, bytes)?;
-                    engine.offload_paths.push(path);
-                }
-            }
-            Residency::EntQuant => {}
+            offload_paths,
+        })
+    }
+
+    /// Re-open a block `range` of the full container on this live
+    /// engine — the shard-failure reroute primitive.  The absorbed
+    /// blocks join this engine's own (`at_front` when the range
+    /// precedes them in global block order, so the merged set stays a
+    /// contiguous global range), and every load-time structure is
+    /// rebuilt to match: per-block consts, the double-buffer arena
+    /// (resized to the new largest block), resident code tensors or
+    /// offload files per the residency mode.  Everything is built
+    /// before anything is committed, so a failed reopen (e.g. a corrupt
+    /// absorbed bitstream under a resident mode) leaves the engine
+    /// serving its old range untouched.
+    pub fn reopen_blocks(
+        &mut self,
+        full: &CompressedModel,
+        range: std::ops::Range<usize>,
+        at_front: bool,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            range.end <= full.blocks.len(),
+            "reopen_blocks: range {range:?} outside container of {} blocks",
+            full.blocks.len()
+        );
+        anyhow::ensure!(
+            full.config == self.cm.config,
+            "reopen_blocks: container config mismatch ({} vs {})",
+            full.config.name,
+            self.cm.config.name
+        );
+        anyhow::ensure!(
+            full.fmt == self.cm.fmt,
+            "reopen_blocks: quant format mismatch (absorbed blocks would dequantize \
+             through the wrong value table)"
+        );
+        let absorbed = full.blocks[range].to_vec();
+        let mut blocks = Vec::with_capacity(self.cm.blocks.len() + absorbed.len());
+        if at_front {
+            blocks.extend(absorbed);
+            blocks.extend(self.cm.blocks.iter().cloned());
+        } else {
+            blocks.extend(self.cm.blocks.iter().cloned());
+            blocks.extend(absorbed);
         }
-        Ok(engine)
+        let cm = CompressedModel {
+            config: self.cm.config.clone(),
+            fmt: self.cm.fmt,
+            embed: self.cm.embed.clone(),
+            head: self.cm.head.clone(),
+            norm_final: self.cm.norm_final.clone(),
+            blocks,
+        };
+        let consts = build_consts(&cm);
+        let arena = build_arena(&cm, &self.opts);
+        // a FRESH offload directory per reopen (block counts strictly
+        // grow across reopens, so the suffix is unique): the live
+        // engine's current files are never touched, so a failed rebuild
+        // truly leaves it serving its old range — the old directory is
+        // merely leaked, never corrupted
+        let offload_dir =
+            format!("{}/reopen_{}", resolve_offload_dir(&self.opts), cm.blocks.len());
+        let (resident_codes, offload_paths) =
+            build_residency(&cm, &self.opts, &self.value_table, self.pool.threads(), offload_dir)?;
+        self.cm = Arc::new(cm);
+        self.consts = consts;
+        self.arena = arena;
+        self.resident_codes = resident_codes;
+        self.offload_paths = offload_paths;
+        Ok(())
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -505,6 +526,15 @@ impl ServingEngine {
 
     /// One greedy decode step for every lane of `st`.  Returns `false`
     /// (without stepping) once the decode context is exhausted.
+    ///
+    /// **Resumable**: a step that fails partway (a block errored after
+    /// earlier blocks already wrote their caches at `pos`) may simply
+    /// be replayed on the same state.  `next`/`outputs`/`pos` only
+    /// advance in `apply_decode_logits` at the very end, and a replayed
+    /// block rewrites the identical cache row at `pos` (every
+    /// computation is deterministic in its inputs, which are unchanged
+    /// on replay) — so replay-after-partial-failure is byte-identical
+    /// to a clean step.  The serve reroute path leans on this.
     pub fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
         if st.pos >= st.ctx {
             return Ok(false);
@@ -819,6 +849,93 @@ pub(crate) fn copy_cache_lane(
         }
     }
     Ok(())
+}
+
+/// Per-block constant tensors (scales + norms) for every block of
+/// `cm` — shared by engine construction and `reopen_blocks`.
+fn build_consts(cm: &CompressedModel) -> Vec<BlockConsts> {
+    let mut consts = Vec::with_capacity(cm.blocks.len());
+    for cb in &cm.blocks {
+        let scales = cb
+            .layers
+            .iter()
+            .map(|l| HostTensor::f32(l.scales.clone(), &[l.rows]))
+            .collect();
+        consts.push(BlockConsts {
+            scales,
+            norm_attn: HostTensor::f32(cb.norm_attn.clone(), &[cb.norm_attn.len()]),
+            norm_mlp: HostTensor::f32(cb.norm_mlp.clone(), &[cb.norm_mlp.len()]),
+        });
+    }
+    consts
+}
+
+/// The EntQuant double-buffer arena, sized to the largest block of
+/// `cm`; `None` for every other residency mode.
+fn build_arena(cm: &CompressedModel, opts: &EngineOpts) -> Option<DecodeArena> {
+    match opts.residency {
+        Residency::EntQuant => Some(DecodeArena::new(
+            cm.blocks.iter().map(|b| b.n_symbols()).max().unwrap_or(0),
+        )),
+        _ => None,
+    }
+}
+
+/// The resolved disk-offload directory for `opts` (the default mirrors
+/// the historic temp-dir fallback).  Shared with `serve::shard`'s
+/// per-shard directory derivation so the fallback can never drift.
+pub(crate) fn resolve_offload_dir(opts: &EngineOpts) -> String {
+    opts.offload_dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join("eq_offload").to_string_lossy().into_owned()
+    })
+}
+
+/// Load-time residency data for `cm` under `opts`: resident code
+/// tensors (Bf16/F8 modes) or disk-offload files written into
+/// `offload_dir` (DiskOffload), decoded fresh without an arena.
+/// Shared by engine construction and `reopen_blocks` so a rerouted
+/// engine rebuilds exactly the load-time state for its merged block
+/// set.  `reopen_blocks` passes a *fresh* directory so a mid-rebuild
+/// failure can never clobber the files the live engine still serves
+/// from.
+fn build_residency(
+    cm: &CompressedModel,
+    opts: &EngineOpts,
+    value_table: &[f32; 256],
+    threads: usize,
+    offload_dir: String,
+) -> Result<(Option<Vec<Vec<HostTensor>>>, Vec<String>)> {
+    match opts.residency {
+        Residency::Bf16Resident | Residency::F8Resident => {
+            let mut all = Vec::with_capacity(cm.blocks.len());
+            for b in 0..cm.blocks.len() {
+                let codes =
+                    decode_codes(cm, value_table, None, b, threads).map_err(|e| anyhow!(e))?;
+                all.push(codes);
+            }
+            Ok((Some(all), Vec::new()))
+        }
+        Residency::DiskOffload => {
+            let dir = offload_dir;
+            std::fs::create_dir_all(&dir)?;
+            let mut paths = Vec::with_capacity(cm.blocks.len());
+            for b in 0..cm.blocks.len() {
+                let codes =
+                    decode_codes(cm, value_table, None, b, threads).map_err(|e| anyhow!(e))?;
+                let path = format!("{dir}/block_{b}.f32");
+                let mut bytes = Vec::new();
+                for t in &codes {
+                    for &v in t.as_f32() {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                std::fs::write(&path, bytes)?;
+                paths.push(path);
+            }
+            Ok((None, paths))
+        }
+        Residency::EntQuant => Ok((None, Vec::new())),
+    }
 }
 
 /// ANS-decode one block of `cm` straight to f32 code tensors — the

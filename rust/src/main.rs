@@ -7,6 +7,7 @@ use entquant::coordinator::{EngineOpts, Residency};
 use entquant::eval::{perplexity, TaskSuite};
 use entquant::model::load_eqw;
 use entquant::quant::Format;
+use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
 use entquant::runtime::Runtime;
 use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
 use entquant::store::container::CompressedModel;
@@ -21,6 +22,7 @@ fn usage() -> ! {
            compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P] [--threads N]\n\
            eval     --model <size|path> [--compressed P] [--windows N]\n\
            serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N] [--shards N]\n\
+                    [--fault-shard K --fault-step S]  (fault drill: kill shard K at decode step S; reroutes + completes)\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
            ablate-blockwise | report-all\n\
          --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
@@ -163,12 +165,31 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let n_prompts: usize = arg_val(args, "--prompts").map(|v| v.parse()).transpose()?.unwrap_or(4);
     let max_new: usize = arg_val(args, "--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
 
+    // optional fault drill: arm one shard's runtime to fail at a
+    // scripted decode step, demonstrating the reroute + replay path
+    let fault_shard: Option<usize> =
+        arg_val(args, "--fault-shard").map(|v| v.parse()).transpose()?;
+    let fault_step: usize =
+        arg_val(args, "--fault-step").map(|v| v.parse()).transpose()?.unwrap_or(4);
+
     // shard the blocks by compressed bytes; each shard gets its own
     // runtime, pool and decode arena
     let plan = ShardPlan::balance(&cm, shards);
+    let faults = fault_shard.map(|k| {
+        println!("fault drill: shard {k} scripted to fail at decode step {fault_step}");
+        FaultPlan::scripted(vec![FaultScript { shard: k, step: fault_step, block: 0 }])
+    });
     let mut runtimes = Vec::with_capacity(plan.n_shards());
-    for _ in 0..plan.n_shards() {
-        runtimes.push(Runtime::new(&art)?);
+    for i in 0..plan.n_shards() {
+        let mut rt = Runtime::new(&art)?;
+        if let Some(plan_faults) = &faults {
+            rt = rt.with_fault(FaultRuntime::new(
+                std::sync::Arc::clone(plan_faults),
+                i,
+                plan.ranges[i].len(),
+            ));
+        }
+        runtimes.push(rt);
     }
     let platform = runtimes[0].platform();
     let engine = ShardedEngine::new(
@@ -199,13 +220,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = scheduler.metrics();
     println!(
-        "total: {} tokens in {wall:.2}s ({:.1} tok/s), p50 ttft {:.1} ms, {} fused admissions, shard fresh allocs {:?}",
+        "total: {} tokens in {wall:.2}s ({:.1} tok/s), p50 ttft {:.1} ms, {} fused admissions ({} speculative), {} reroute(s), shard fresh allocs {:?}",
         m.tokens,
         m.tokens as f64 / wall,
         m.p50_ttft_ms,
         m.fused_admissions,
+        m.speculative_admissions,
+        m.reroutes,
         m.shard_fresh_allocs
     );
+    if let Some(plan_faults) = &faults {
+        println!(
+            "fault drill: {} scripted fault(s) fired, {} reroute(s), {} request(s) failed",
+            plan_faults.fired(),
+            m.reroutes,
+            m.failed
+        );
+    }
     scheduler.shutdown().map_err(|e| anyhow!(e))?;
     Ok(())
 }

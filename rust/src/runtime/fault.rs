@@ -1,0 +1,204 @@
+//! Deterministic fault injection for the serving runtime — the test
+//! infrastructure behind the shard-failure reroute path.
+//!
+//! A `FaultPlan` scripts *where* engine errors strike: each
+//! `FaultScript` names a `(shard, step, block)` coordinate, where
+//! `step` counts that shard's decode steps (bursts of `block_d_*`
+//! executable calls) and `block` picks the call within the step.  A
+//! `FaultRuntime` arms one shard's `Runtime` with a shared plan
+//! (`Runtime::with_fault`): every `call` is checked first, and a
+//! matching coordinate fails exactly once with an `injected fault`
+//! error — indistinguishable from a real runtime/engine failure to
+//! everything above it, but perfectly reproducible.
+//!
+//! Plans are either scripted explicitly or generated from a seed
+//! (`FaultPlan::seeded`), so a failing fault-tolerance test can be
+//! replayed by printing its seed.  `fail_next_prefill` additionally
+//! arms a one-shot fault on a shard's next `block_p_*` call, covering
+//! the batch-formation recovery path.
+//!
+//! Step counting is frozen at arm time (`blocks_owned`): after a
+//! reroute the surviving engine owns more blocks, so script further
+//! injections against pre-reroute coordinates only.
+
+use crate::tensor::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One scripted injection: fail shard `shard`'s decode call for block
+/// `block` (shard-local index) of its `step`-th decode step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultScript {
+    pub shard: usize,
+    pub step: usize,
+    pub block: usize,
+}
+
+/// The shared injection schedule: scripted decode faults plus optional
+/// one-shot prefill faults, each firing at most once.
+pub struct FaultPlan {
+    scripts: Mutex<Vec<(FaultScript, bool)>>,
+    prefill_shards: Mutex<Vec<usize>>,
+    fired: AtomicUsize,
+}
+
+impl FaultPlan {
+    pub fn scripted(scripts: Vec<FaultScript>) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            scripts: Mutex::new(scripts.into_iter().map(|s| (s, false)).collect()),
+            prefill_shards: Mutex::new(Vec::new()),
+            fired: AtomicUsize::new(0),
+        })
+    }
+
+    /// A reproducible random plan: `n_faults` coordinates drawn from
+    /// `shard < n_shards`, `step < max_step`, `block < max_block`.
+    /// Print the seed on failure and the run replays exactly.
+    pub fn seeded(
+        seed: u64,
+        n_shards: usize,
+        max_step: usize,
+        max_block: usize,
+        n_faults: usize,
+    ) -> Arc<FaultPlan> {
+        let mut rng = Rng::new(seed);
+        let scripts = (0..n_faults)
+            .map(|_| FaultScript {
+                shard: rng.below(n_shards.max(1)),
+                step: rng.below(max_step.max(1)),
+                block: rng.below(max_block.max(1)),
+            })
+            .collect();
+        FaultPlan::scripted(scripts)
+    }
+
+    /// Arm a one-shot fault on `shard`'s next prefill block call.
+    pub fn fail_next_prefill(&self, shard: usize) {
+        self.prefill_shards.lock().unwrap().push(shard);
+    }
+
+    /// How many injections have fired so far (tests assert the script
+    /// actually ran).
+    pub fn fired(&self) -> usize {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    fn fire_decode(&self, shard: usize, step: usize, block: usize) -> bool {
+        let mut scripts = self.scripts.lock().unwrap();
+        for (s, done) in scripts.iter_mut() {
+            if !*done && s.shard == shard && s.step == step && s.block == block {
+                *done = true;
+                self.fired.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn fire_prefill(&self, shard: usize) -> bool {
+        let mut shards = self.prefill_shards.lock().unwrap();
+        if let Some(i) = shards.iter().position(|&s| s == shard) {
+            shards.remove(i);
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+/// Arms one shard's runtime with a shared `FaultPlan`: wraps the call
+/// path (`Runtime::with_fault`) and converts scripted coordinates into
+/// injected errors.  Wraps the native executor in the tests, but is
+/// backend-agnostic — the check runs before dispatch.
+pub struct FaultRuntime {
+    plan: Arc<FaultPlan>,
+    shard: usize,
+    /// blocks this shard served at arm time; decode step index =
+    /// block_d calls seen / blocks_owned
+    blocks_owned: usize,
+    block_d_calls: AtomicUsize,
+}
+
+impl FaultRuntime {
+    pub fn new(plan: Arc<FaultPlan>, shard: usize, blocks_owned: usize) -> FaultRuntime {
+        FaultRuntime {
+            plan,
+            shard,
+            blocks_owned: blocks_owned.max(1),
+            block_d_calls: AtomicUsize::new(0),
+        }
+    }
+
+    /// Called by `Runtime::call` before dispatch; `Err` = injected.
+    pub(crate) fn check(&self, name: &str) -> anyhow::Result<()> {
+        if name.starts_with("block_d_") {
+            let idx = self.block_d_calls.fetch_add(1, Ordering::Relaxed);
+            let (step, block) = (idx / self.blocks_owned, idx % self.blocks_owned);
+            if self.plan.fire_decode(self.shard, step, block) {
+                anyhow::bail!(
+                    "injected fault: shard {} step {step} block {block}",
+                    self.shard
+                );
+            }
+        } else if name.starts_with("block_p_") && self.plan.fire_prefill(self.shard) {
+            anyhow::bail!("injected prefill fault: shard {}", self.shard);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_decode_fault_fires_exactly_once_at_its_coordinate() {
+        let plan = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 1 }]);
+        let wrong_shard = FaultRuntime::new(Arc::clone(&plan), 0, 3);
+        let armed = FaultRuntime::new(Arc::clone(&plan), 1, 3);
+        // shard 0 never matches, however many steps pass
+        for _ in 0..12 {
+            wrong_shard.check("block_d_b2_c24").unwrap();
+        }
+        // shard 1: steps 0 and 1 (3 block calls each) pass, then step 2
+        // fails at block 1 only, and never again
+        let mut errors = 0;
+        for call in 0..9 {
+            if armed.check("block_d_b2_c24").is_err() {
+                errors += 1;
+                assert_eq!(call, 2 * 3 + 1, "fired at the wrong call index");
+            }
+        }
+        assert_eq!(errors, 1);
+        assert_eq!(plan.fired(), 1);
+        for _ in 0..9 {
+            armed.check("block_d_b2_c24").unwrap();
+        }
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn prefill_fault_is_one_shot_and_per_shard() {
+        let plan = FaultPlan::scripted(Vec::new());
+        plan.fail_next_prefill(0);
+        let s0 = FaultRuntime::new(Arc::clone(&plan), 0, 2);
+        let s1 = FaultRuntime::new(Arc::clone(&plan), 1, 2);
+        s1.check("block_p_b4_s16").unwrap(); // other shard unaffected
+        s0.check("embed_p_b4_s16").unwrap(); // only block_p triggers
+        assert!(s0.check("block_p_b4_s16").is_err());
+        s0.check("block_p_b4_s16").unwrap(); // one-shot
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_in_range() {
+        let a = FaultPlan::seeded(9, 4, 20, 3, 5);
+        let b = FaultPlan::seeded(9, 4, 20, 3, 5);
+        let (sa, sb) = (a.scripts.lock().unwrap(), b.scripts.lock().unwrap());
+        assert_eq!(sa.len(), 5);
+        for ((x, _), (y, _)) in sa.iter().zip(sb.iter()) {
+            assert_eq!(x, y, "same seed must script the same faults");
+            assert!(x.shard < 4 && x.step < 20 && x.block < 3);
+        }
+    }
+}

@@ -15,6 +15,7 @@
 //! from an in-memory `Manifest::synthetic` with no artifacts at all —
 //! the path CI's serving/serve tests and benches run on.
 
+pub mod fault;
 pub mod native;
 
 use crate::store::json::{self, Value};
@@ -219,6 +220,9 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// wall time spent in compile (reported by the CLI)
     pub compile_s: RefCell<f64>,
+    /// scripted fault injector (tests / fault drills); checked before
+    /// every dispatch
+    fault: Option<fault::FaultRuntime>,
 }
 
 impl Runtime {
@@ -236,6 +240,7 @@ impl Runtime {
             manifest,
             cache: RefCell::new(HashMap::new()),
             compile_s: RefCell::new(0.0),
+            fault: None,
         })
     }
 
@@ -250,7 +255,17 @@ impl Runtime {
             manifest,
             cache: RefCell::new(HashMap::new()),
             compile_s: RefCell::new(0.0),
+            fault: None,
         }
+    }
+
+    /// Arm this runtime with a scripted fault injector (see
+    /// `runtime::fault`): every subsequent `call` consults the plan
+    /// first and fails with an `injected fault` error at scripted
+    /// coordinates.
+    pub fn with_fault(mut self, fault: fault::FaultRuntime) -> Runtime {
+        self.fault = Some(fault);
+        self
     }
 
     pub fn is_native(&self) -> bool {
@@ -299,6 +314,9 @@ impl Runtime {
     /// the single result literal is a tuple to destructure).  The native
     /// backend validates arity and shapes itself from the inputs.
     pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Some(fault) = &self.fault {
+            fault.check(name)?;
+        }
         if let Backend::Native(exec) = &self.backend {
             return exec.call(name, inputs);
         }

@@ -1,8 +1,9 @@
 //! Serve-level counters — the observability face of the scheduler:
 //! request lifecycle tallies, queue depth, time-to-first-token, token
-//! throughput, and the per-shard decode-arena fresh-alloc gauges
-//! (which must stay 0 in steady state, same contract as the engine's
-//! `decode_arena_fresh_allocs`).
+//! throughput, fault-tolerance counters (shard reroutes), the
+//! speculative-admission counters, and the per-shard decode-arena
+//! fresh-alloc gauges (which must stay 0 in steady state, same
+//! contract as the engine's `decode_arena_fresh_allocs`).
 //!
 //! Everything is lock-free atomics except the TTFT reservoir (a short
 //! mutex-guarded vec; one push per request, read only at snapshot
@@ -21,9 +22,26 @@ pub struct ServeMetrics {
     /// (the continuous-batching path, as opposed to riding a freshly
     /// formed batch)
     fused_admissions: AtomicUsize,
+    /// fused admissions served from the speculative slot — the prefill
+    /// (and catch-up) ran *before* a lane freed, so adoption cost
+    /// nothing at the moment of adoption
+    speculative_admissions: AtomicUsize,
+    /// solo catch-up decode steps run at adoption time (after a lane
+    /// freed); 0 for speculative adoptions — the zero-cost property the
+    /// serve tests pin
+    adoption_catchup_steps: AtomicUsize,
+    /// solo prefills run at adoption time (after a lane freed); 0 for
+    /// speculative adoptions
+    adoption_prefills: AtomicUsize,
+    /// shard failures rerouted onto surviving engines (the interrupted
+    /// step was replayed; in-flight requests kept their trajectories)
+    reroutes: AtomicUsize,
     tokens: AtomicUsize,
     decode_steps: AtomicUsize,
     queue_depth: AtomicUsize,
+    /// occupied lanes of the in-flight batch (gauge; must return to 0
+    /// once every request is terminal — the lane-leak check)
+    inflight_lanes: AtomicUsize,
     ttft_ms: Mutex<Vec<f64>>,
     shard_fresh_allocs: Mutex<Vec<usize>>,
     started: Instant,
@@ -37,9 +55,14 @@ pub struct MetricsSnapshot {
     pub cancelled: usize,
     pub failed: usize,
     pub fused_admissions: usize,
+    pub speculative_admissions: usize,
+    pub adoption_catchup_steps: usize,
+    pub adoption_prefills: usize,
+    pub reroutes: usize,
     pub tokens: usize,
     pub decode_steps: usize,
     pub queue_depth: usize,
+    pub inflight_lanes: usize,
     pub p50_ttft_ms: f64,
     pub mean_ttft_ms: f64,
     pub elapsed_s: f64,
@@ -61,9 +84,14 @@ impl ServeMetrics {
             cancelled: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             fused_admissions: AtomicUsize::new(0),
+            speculative_admissions: AtomicUsize::new(0),
+            adoption_catchup_steps: AtomicUsize::new(0),
+            adoption_prefills: AtomicUsize::new(0),
+            reroutes: AtomicUsize::new(0),
             tokens: AtomicUsize::new(0),
             decode_steps: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
+            inflight_lanes: AtomicUsize::new(0),
             ttft_ms: Mutex::new(Vec::new()),
             shard_fresh_allocs: Mutex::new(Vec::new()),
             started: Instant::now(),
@@ -90,6 +118,22 @@ impl ServeMetrics {
         self.fused_admissions.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn inc_speculative(&self) {
+        self.speculative_admissions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_adoption_catchup_steps(&self, n: usize) {
+        self.adoption_catchup_steps.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc_adoption_prefills(&self) {
+        self.adoption_prefills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_reroutes(&self) {
+        self.reroutes.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn add_tokens(&self, n: usize) {
         self.tokens.fetch_add(n, Ordering::Relaxed);
     }
@@ -100,6 +144,10 @@ impl ServeMetrics {
 
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn set_inflight_lanes(&self, lanes: usize) {
+        self.inflight_lanes.store(lanes, Ordering::Relaxed);
     }
 
     pub fn record_ttft_ms(&self, ms: f64) {
@@ -125,9 +173,14 @@ impl ServeMetrics {
             cancelled: self.cancelled.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             fused_admissions: self.fused_admissions.load(Ordering::Relaxed),
+            speculative_admissions: self.speculative_admissions.load(Ordering::Relaxed),
+            adoption_catchup_steps: self.adoption_catchup_steps.load(Ordering::Relaxed),
+            adoption_prefills: self.adoption_prefills.load(Ordering::Relaxed),
+            reroutes: self.reroutes.load(Ordering::Relaxed),
             tokens,
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            inflight_lanes: self.inflight_lanes.load(Ordering::Relaxed),
             p50_ttft_ms: p50,
             mean_ttft_ms: mean,
             elapsed_s,
@@ -137,18 +190,33 @@ impl ServeMetrics {
     }
 }
 
-/// (p50, mean) of a sample; (0, 0) when empty.  The median of an even
-/// count takes the lower-middle element — deterministic and fine at
-/// trace sizes.
+/// Nearest-rank percentile of an unsorted sample: the smallest element
+/// whose rank is `>= ceil(q * n)` (rank 1-based), i.e. the
+/// `ceil(q*n)`-th order statistic.  Always an actual sample (no
+/// interpolation), deterministic, and well-defined at the edges:
+/// empty -> 0.0, a single sample -> that sample, `q <= 0` -> the
+/// minimum, `q >= 1` -> the maximum.  For `q = 0.5` over an even count
+/// this is the LOWER middle element — the ttft p50 semantics the serve
+/// stress tests pin.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as isize; // 1-based
+    let idx = rank.clamp(1, n as isize) as usize - 1;
+    sorted[idx]
+}
+
+/// (p50, mean) of a sample; (0, 0) when empty (never NaN).
 fn percentile_and_mean(samples: &[f64]) -> (f64, f64) {
     if samples.is_empty() {
         return (0.0, 0.0);
     }
-    let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let p50 = sorted[(sorted.len() - 1) / 2];
-    let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
-    (p50, mean)
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (percentile(samples, 0.5), mean)
 }
 
 #[cfg(test)]
@@ -164,9 +232,14 @@ mod tests {
         m.inc_completed();
         m.inc_cancelled();
         m.inc_fused();
+        m.inc_speculative();
+        m.add_adoption_catchup_steps(4);
+        m.inc_adoption_prefills();
+        m.inc_reroutes();
         m.add_tokens(42);
         m.inc_decode_steps();
         m.set_queue_depth(2);
+        m.set_inflight_lanes(3);
         m.record_ttft_ms(10.0);
         m.record_ttft_ms(30.0);
         m.record_ttft_ms(20.0);
@@ -176,9 +249,14 @@ mod tests {
         assert_eq!(s.completed, 1);
         assert_eq!(s.cancelled, 1);
         assert_eq!(s.fused_admissions, 1);
+        assert_eq!(s.speculative_admissions, 1);
+        assert_eq!(s.adoption_catchup_steps, 4);
+        assert_eq!(s.adoption_prefills, 1);
+        assert_eq!(s.reroutes, 1);
         assert_eq!(s.tokens, 42);
         assert_eq!(s.decode_steps, 1);
         assert_eq!(s.queue_depth, 2);
+        assert_eq!(s.inflight_lanes, 3);
         assert_eq!(s.p50_ttft_ms, 20.0);
         assert!((s.mean_ttft_ms - 20.0).abs() < 1e-9);
         assert_eq!(s.shard_fresh_allocs, vec![0, 0]);
@@ -191,11 +269,37 @@ mod tests {
         assert_eq!(s.p50_ttft_ms, 0.0);
         assert_eq!(s.mean_ttft_ms, 0.0);
         assert_eq!(s.tokens_per_s, 0.0);
+        assert!(s.p50_ttft_ms.is_finite() && s.mean_ttft_ms.is_finite());
+    }
+
+    #[test]
+    fn single_sample_is_its_own_p50_and_mean() {
+        let m = ServeMetrics::new();
+        m.record_ttft_ms(7.5);
+        let s = m.snapshot();
+        assert_eq!(s.p50_ttft_ms, 7.5);
+        assert_eq!(s.mean_ttft_ms, 7.5);
     }
 
     #[test]
     fn p50_even_count_takes_lower_middle() {
-        assert_eq!(percentile_and_mean(&[4.0, 1.0, 3.0, 2.0]).0, 2.0);
-        assert_eq!(percentile_and_mean(&[5.0]).0, 5.0);
+        assert_eq!(percentile(&[4.0, 1.0, 3.0, 2.0], 0.5), 2.0);
+        assert_eq!(percentile(&[5.0], 0.5), 5.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_semantics() {
+        let s = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&s, 0.5), 30.0); // odd count: true median
+        assert_eq!(percentile(&s, 0.0), 10.0); // clamped to the minimum
+        assert_eq!(percentile(&s, 1.0), 50.0); // the maximum
+        assert_eq!(percentile(&s, 0.9), 50.0); // ceil(4.5) = rank 5
+        assert_eq!(percentile(&s, 0.2), 10.0); // ceil(1.0) = rank 1
+        assert_eq!(percentile(&[], 0.5), 0.0); // empty: 0, not NaN
+        // out-of-range q is clamped, not a panic or index error
+        assert_eq!(percentile(&s, -1.0), 10.0);
+        assert_eq!(percentile(&s, 2.0), 50.0);
+        // unsorted input sorts internally
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.5), 2.0);
     }
 }

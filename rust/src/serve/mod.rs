@@ -24,6 +24,12 @@
 //! engine-agnostic via `StepEngine`, so the scheduler drives one
 //! engine or a shard pipeline identically — and, through the native
 //! executor, the whole stack runs end-to-end in CI.
+//!
+//! The stack is **fault-tolerant**: a shard failure mid-batch reroutes
+//! that shard's block range onto survivors (`StepEngine::try_recover`)
+//! and the scheduler replays the interrupted decode step, so in-flight
+//! requests still complete byte-identically; `runtime::fault` injects
+//! deterministic failures to prove it in CI (`rust/tests/serve.rs`).
 
 pub mod metrics;
 pub mod scheduler;
@@ -44,7 +50,10 @@ use anyhow::Result;
 pub trait StepEngine: Send {
     fn prefill_state(&self, batch: &Batch) -> Result<DecodeState>;
     /// One decode step; `false` (without stepping) once the decode
-    /// context is exhausted.
+    /// context is exhausted.  Implementations must be **resumable**: a
+    /// step that returned `Err` partway may be replayed on the same
+    /// state and complete byte-identically (both engines guarantee
+    /// this; see `ServingEngine::decode_step`).
     fn decode_step(&self, st: &mut DecodeState) -> Result<bool>;
     fn prefill_slots(&self) -> Vec<(usize, usize)>;
     fn decode_slots(&self) -> Vec<(usize, usize)>;
@@ -54,6 +63,15 @@ pub trait StepEngine: Send {
 
     fn n_shards(&self) -> usize {
         self.fresh_allocs_per_shard().len()
+    }
+
+    /// Attempt recovery after a `prefill_state`/`decode_step` error —
+    /// e.g. reroute a failed shard's block range onto survivors.
+    /// `true` means the engine recovered and the caller should replay
+    /// the interrupted operation; the default (a single engine has no
+    /// spare capacity to reroute to) is unrecoverable.
+    fn try_recover(&self) -> bool {
+        false
     }
 }
 
@@ -98,5 +116,9 @@ impl StepEngine for ShardedEngine {
 
     fn fresh_allocs_per_shard(&self) -> Vec<usize> {
         self.fresh_allocs()
+    }
+
+    fn try_recover(&self) -> bool {
+        ShardedEngine::try_recover(self)
     }
 }

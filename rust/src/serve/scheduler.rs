@@ -7,7 +7,7 @@
 //! a `Status` lifecycle: `Queued -> Decoding -> Done | Cancelled |
 //! Failed`.
 //!
-//! Continuous batching over fixed-shape AOT slots works in three moves,
+//! Continuous batching over fixed-shape AOT slots works in four moves,
 //! all between decode steps:
 //!
 //! 1. **Retire** — a lane whose request hit its `max_new_tokens`
@@ -20,7 +20,14 @@
 //!    via `DecodeState::adopt_lane`.  A newcomer therefore starts
 //!    decoding *before* the current batch drains — the property the
 //!    serve tests pin via the `fused_admissions` counter.
-//! 3. **Re-slot** — when lanes retire, the batch compacts into the
+//! 3. **Speculate** — while every lane is busy, the queue head prefills
+//!    into the idle solo slot *ahead of time* and steps in lockstep
+//!    with the batch, so the moment a lane frees it is adopted with
+//!    zero prefills and zero catch-up steps at adoption time
+//!    (`speculative_admissions` counts these; `adoption_catchup_steps`
+//!    and `adoption_prefills` stay 0 for them — the zero-cost property
+//!    the serve tests pin against a non-speculative run).
+//! 4. **Re-slot** — when lanes retire, the batch compacts into the
 //!    smallest decode slot that still fits (`DecodeState::compact`);
 //!    when the queue is deep and every lane is busy, it upsizes so
 //!    admission has somewhere to land.  Both re-pack through the
@@ -31,6 +38,16 @@
 //! trajectories: a request's generation is byte-identical to a solo
 //! `ServingEngine::generate` run whatever admission order the trace
 //! produced (rust/tests/serve.rs).
+//!
+//! **Fault tolerance**: when a prefill or decode step errors, the
+//! driver first offers the engine a chance to recover
+//! (`StepEngine::try_recover` — a `ShardedEngine` reroutes the failed
+//! shard's block range onto survivors) and then simply *replays* the
+//! interrupted operation: decode steps are resumable, the flight and
+//! speculative states are left intact across the error, and in-flight
+//! requests complete byte-identically to an unfaulted run
+//! (`reroutes` counts recoveries).  Only an unrecoverable error fails
+//! the in-flight requests — and even then the queue keeps serving.
 
 use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::StepEngine;
@@ -44,6 +61,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Request lifecycle as observed through `poll`.
+///
+/// A request may transiently return from `Decoding` to `Queued` *with
+/// a non-empty output* when the scheduler reclaims its capacity (e.g.
+/// a speculative solo requeued to ride the next fresh batch, or a
+/// group requeued across a reroute): the tokens emitted so far stand —
+/// output is monotone, never regressing — and decoding resumes on
+/// re-admission, re-deriving the identical trajectory.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Status {
     Queued,
@@ -66,11 +90,16 @@ pub struct SchedulerOpts {
     pub paused: bool,
     /// Driver sleep between polls when there is nothing to do.
     pub idle: Duration,
+    /// Prefill the queue head into the idle solo slot before a lane
+    /// frees (move 3 above).  On by default; off reverts to
+    /// admit-at-retirement, which pays the prefill + catch-up at
+    /// adoption time.
+    pub speculative: bool,
 }
 
 impl Default for SchedulerOpts {
     fn default() -> Self {
-        SchedulerOpts { paused: false, idle: Duration::from_micros(200) }
+        SchedulerOpts { paused: false, idle: Duration::from_micros(200), speculative: true }
     }
 }
 
@@ -110,6 +139,7 @@ impl Scheduler {
         });
         let drv_shared = Arc::clone(&shared);
         let idle = opts.idle;
+        let speculative = opts.speculative;
         let driver = Service::spawn("serve-driver", move |stop| {
             let prefill_slots = engine.prefill_slots();
             let decode_slots = engine.decode_slots();
@@ -122,6 +152,8 @@ impl Scheduler {
                 decode_slots,
                 max_group,
                 flight: None,
+                spec: None,
+                speculative,
                 solo_admission_broken: false,
             }
             .run(stop)
@@ -235,6 +267,24 @@ struct Flight {
     lane_ids: Vec<Option<u64>>,
 }
 
+/// The speculative-admission slot: the queue head, prefilled solo
+/// while every lane was busy, stepping in lockstep with the flight
+/// until a lane frees (or finishing solo if none ever does).
+struct Spec {
+    id: u64,
+    st: DecodeState,
+}
+
+/// What to do with the speculative slot when a lane frees.
+enum SpecAction {
+    /// no speculative state: admit from the queue
+    FromQueue,
+    /// aligned with the flight: graft it in now
+    Adopt,
+    /// still catching up (or ahead of a fresh batch): hold the lane
+    Hold,
+}
+
 struct Driver<E: StepEngine> {
     engine: E,
     shared: Arc<Shared>,
@@ -243,6 +293,8 @@ struct Driver<E: StepEngine> {
     decode_slots: Vec<(usize, usize)>,
     max_group: usize,
     flight: Option<Flight>,
+    spec: Option<Spec>,
+    speculative: bool,
     /// Set when a solo admission prefill errored (usually a config gap
     /// like a missing b=1 decode slot): stop attempting fused admission
     /// until the next fresh batch, where the larger-slot path serves
@@ -261,11 +313,18 @@ impl<E: StepEngine> Driver<E> {
                 Ok(true) => {}
                 Ok(false) => std::thread::sleep(self.idle),
                 Err(e) => {
-                    // a step failed mid-batch: fail its requests, drop
-                    // the batch, keep serving the queue
-                    self.fail_flight(&format!("{e:#}"));
+                    // a step failed mid-batch: let the engine recover
+                    // (shard reroute) and replay — the flight and
+                    // speculative states are intact, and steps are
+                    // resumable, so the next tick repeats the
+                    // interrupted operation byte-identically.  Only an
+                    // unrecoverable failure costs the batch.
+                    if !self.recovered() {
+                        self.fail_flight(&format!("{e:#}"));
+                    }
                 }
             }
+            self.update_inflight_gauge();
         }
     }
 
@@ -278,7 +337,29 @@ impl<E: StepEngine> Driver<E> {
             }
         }
         if self.flight.is_none() {
-            return self.form_batch();
+            match self.spec.take() {
+                // queue drained: the live speculative solo becomes the
+                // new in-flight batch (it is the oldest admitted
+                // request — FCFS preserved)
+                Some(Spec { id, st }) if self.shared.queue.lock().unwrap().is_empty() => {
+                    let mut lane_ids = vec![None; st.lanes()];
+                    lane_ids[0] = Some(id);
+                    self.flight = Some(Flight { st, lane_ids });
+                    self.solo_admission_broken = false;
+                }
+                // queue still deep: a 1-lane promotion would force every
+                // follow-up through a serial solo catch-up, so requeue
+                // the speculative request at the front and let it ride
+                // one batched fresh prefill with the rest instead.  Its
+                // tokens re-derive byte-identically (trajectories are
+                // deterministic), and `mirror_output` only ever extends,
+                // so observers never see output regress.
+                Some(Spec { id, .. }) => {
+                    self.requeue_front(id);
+                    return self.form_batch();
+                }
+                None => return self.form_batch(),
+            }
         }
         self.admit()?;
         self.maybe_compact()?;
@@ -295,6 +376,7 @@ impl<E: StepEngine> Driver<E> {
             // done as its solo reference run would be
             self.finish_flight();
         }
+        self.speculate();
         self.shared.metrics.set_shard_fresh_allocs(self.engine.fresh_allocs_per_shard());
         Ok(true)
     }
@@ -321,39 +403,141 @@ impl<E: StepEngine> Driver<E> {
                 Ok(true)
             }
             Err(e) => {
-                let msg = format!("{e:#}");
-                for id in ids {
-                    self.fail_request(id, &msg);
+                if self.recovered() {
+                    // rerouted: requeue the group in order and replay
+                    // the prefill on the recovered engine next tick
+                    for id in ids.iter().rev() {
+                        self.requeue_front(*id);
+                    }
+                } else {
+                    let msg = format!("{e:#}");
+                    for id in ids {
+                        self.fail_request(id, &msg);
+                    }
                 }
                 Ok(true)
             }
         }
     }
 
-    /// Admit queued requests into free lanes: solo prefill, solo
-    /// catch-up to the shared position, then lane adoption.
+    /// Attempt engine recovery, counting a successful reroute.  Every
+    /// failure path funnels through here, so a fault attribution is
+    /// always consumed by the error that produced it and can never go
+    /// stale (see `ShardedEngine::try_recover`).
+    fn recovered(&self) -> bool {
+        let ok = self.engine.try_recover();
+        if ok {
+            self.shared.metrics.inc_reroutes();
+        }
+        ok
+    }
+
+    /// Solo prefill with one recovery retry (reroute + replay).
+    fn solo_prefill(&mut self, req: &Request, slot: (usize, usize)) -> Result<DecodeState> {
+        let batches = pack(std::slice::from_ref(req), &[slot]);
+        match self.engine.prefill_state(&batches[0]) {
+            Ok(st) => Ok(st),
+            Err(e) => {
+                if !self.recovered() {
+                    return Err(e);
+                }
+                match self.engine.prefill_state(&batches[0]) {
+                    Ok(st) => Ok(st),
+                    Err(e2) => {
+                        // the retry failed too: consume (and act on)
+                        // its fresh attribution — a shard that failed
+                        // its replay is genuinely bad, and nothing may
+                        // be left armed for an unrelated later error
+                        let _ = self.recovered();
+                        Err(e2)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Solo decode step with one recovery retry (steps are resumable,
+    /// so the replay picks up exactly where the fault struck).
+    fn solo_step(&mut self, st: &mut DecodeState) -> Result<bool> {
+        match self.engine.decode_step(st) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if !self.recovered() {
+                    return Err(e);
+                }
+                match self.engine.decode_step(st) {
+                    Ok(v) => Ok(v),
+                    Err(e2) => {
+                        let _ = self.recovered(); // see solo_prefill
+                        Err(e2)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Admit queued requests into free lanes: the speculative slot
+    /// first (zero-cost when aligned), then solo prefill + catch-up +
+    /// lane adoption for the rest of the queue.
     fn admit(&mut self) -> Result<()> {
-        if self.solo_admission_broken {
+        // broken solo path and nothing speculatively admitted: there is
+        // nothing a free (or upsized) lane could be filled with, so
+        // don't pay for a larger slot nobody can land in
+        if self.solo_admission_broken && self.spec.is_none() {
             return Ok(());
         }
         self.maybe_upsize()?;
         loop {
             let Some(lane) = self.free_lane() else { break };
-            let Some(req) = self.pop_group(1).pop() else { break };
-            let id = req.id;
-            let seq = match &self.flight {
-                Some(fl) => fl.st.seq(),
-                None => break,
+            let action = match (&self.spec, &self.flight) {
+                (None, _) => SpecAction::FromQueue,
+                (Some(_), None) => SpecAction::Hold,
+                (Some(sp), Some(fl)) => {
+                    if sp.st.seq() != fl.st.seq() {
+                        // slot-shape drift (not reachable with the
+                        // shipped single-seq tables): the speculative
+                        // solo finishes via speculate(); admit others
+                        SpecAction::FromQueue
+                    } else if sp.st.pos == fl.st.pos {
+                        SpecAction::Adopt
+                    } else {
+                        SpecAction::Hold
+                    }
+                }
             };
+            match action {
+                SpecAction::Adopt => {
+                    let Spec { id, st } = self.spec.take().expect("spec present");
+                    let fl = self.flight.as_mut().expect("flight present during admission");
+                    if let Err(e) = fl.st.adopt_lane(st, lane) {
+                        // the request is in neither queue, lanes, nor
+                        // spec now — fail it so it terminates exactly
+                        // once instead of leaking as Decoding forever
+                        self.fail_request(id, &format!("{e:#}"));
+                        return Err(e);
+                    }
+                    fl.lane_ids[lane] = Some(id);
+                    self.shared.metrics.inc_fused();
+                    self.shared.metrics.inc_speculative();
+                    continue;
+                }
+                SpecAction::Hold => break,
+                SpecAction::FromQueue => {}
+            }
+            if self.solo_admission_broken {
+                break;
+            }
+            let Some(seq) = self.flight.as_ref().map(|fl| fl.st.seq()) else { break };
             let Some(solo_slot) =
                 self.prefill_slots.iter().copied().find(|(b, s)| *b == 1 && *s == seq)
             else {
-                // no solo slot at this seq: ride the next fresh batch
-                self.requeue_front(id);
+                // no solo slot at this seq: the queue rides the next
+                // fresh batch
                 break;
             };
-            let solo_batches = pack(&[req], &[solo_slot]);
-            let mut solo = match self.engine.prefill_state(&solo_batches[0]) {
+            let Some(req) = self.pop_group(1).pop() else { break };
+            let id = req.id;
+            let mut solo = match self.solo_prefill(&req, solo_slot) {
                 Ok(st) => st,
                 Err(_) => {
                     // solo path broken (e.g. missing b=1 decode slot):
@@ -364,11 +548,15 @@ impl<E: StepEngine> Driver<E> {
                     break;
                 }
             };
+            self.shared.metrics.inc_adoption_prefills();
             let mut done = self.sync_solo(id, &solo);
             let target = self.flight.as_ref().map(|fl| fl.st.pos).unwrap_or(solo.pos);
             while !done && solo.pos < target {
-                match self.engine.decode_step(&mut solo) {
-                    Ok(true) => done = self.sync_solo(id, &solo),
+                match self.solo_step(&mut solo) {
+                    Ok(true) => {
+                        self.shared.metrics.add_adoption_catchup_steps(1);
+                        done = self.sync_solo(id, &solo);
+                    }
                     Ok(false) => {
                         // solo context wall before alignment: as done as
                         // the solo reference run
@@ -386,7 +574,10 @@ impl<E: StepEngine> Driver<E> {
             }
             if solo.pos == target {
                 let fl = self.flight.as_mut().expect("flight present during admission");
-                fl.st.adopt_lane(solo, lane)?;
+                if let Err(e) = fl.st.adopt_lane(solo, lane) {
+                    self.fail_request(id, &format!("{e:#}")); // never leak the id
+                    return Err(e);
+                }
                 fl.lane_ids[lane] = Some(id);
                 self.shared.metrics.inc_fused();
             } else {
@@ -396,13 +587,71 @@ impl<E: StepEngine> Driver<E> {
         Ok(())
     }
 
+    /// Maintain the speculative-admission slot (move 3): while every
+    /// lane is busy, prefill the queue head into the idle solo slot and
+    /// keep it step-aligned with the flight — emitting its real tokens
+    /// as it goes — so a freed lane adopts it at zero cost.
+    fn speculate(&mut self) {
+        if !self.speculative || self.solo_admission_broken {
+            return;
+        }
+        if self.spec.is_none() && self.flight.is_some() && self.free_lane().is_none() {
+            let Some(seq) = self.flight.as_ref().map(|fl| fl.st.seq()) else { return };
+            let Some(solo_slot) =
+                self.prefill_slots.iter().copied().find(|(b, s)| *b == 1 && *s == seq)
+            else {
+                return;
+            };
+            if let Some(req) = self.pop_group(1).pop() {
+                let id = req.id;
+                match self.solo_prefill(&req, solo_slot) {
+                    Ok(st) => {
+                        // the prefill token may already satisfy a
+                        // 1-token deadline (or a queued cancel landed)
+                        if !self.sync_solo(id, &st) {
+                            self.spec = Some(Spec { id, st });
+                        }
+                    }
+                    Err(_) => {
+                        self.requeue_front(id);
+                        self.solo_admission_broken = true;
+                    }
+                }
+            }
+        }
+        // lockstep: advance the speculative solo to the flight's
+        // position (each step emits one of its real tokens)
+        let Some(target) = self.flight.as_ref().map(|fl| fl.st.pos) else { return };
+        while let Some(mut spec) = self.spec.take() {
+            if spec.st.pos >= target {
+                self.spec = Some(spec);
+                break;
+            }
+            match self.solo_step(&mut spec.st) {
+                Ok(true) => {
+                    if !self.sync_solo(spec.id, &spec.st) {
+                        self.spec = Some(spec); // still live; keep pacing
+                    }
+                }
+                Ok(false) => {
+                    // context wall: as done as the solo reference run
+                    self.finish_request(spec.id);
+                }
+                Err(e) => {
+                    self.fail_request(spec.id, &format!("{e:#}"));
+                }
+            }
+        }
+    }
+
     /// Queue deep + batch full: move to a larger decode slot so
     /// admission has a lane to land in.  Only slots with the SAME
     /// decode context are considered — a shorter context would end
     /// in-flight requests earlier than their solo reference runs, a
     /// longer one would extend them past it (both break byte-identity).
     fn maybe_upsize(&mut self) -> Result<()> {
-        if self.shared.queue.lock().unwrap().is_empty() || self.free_lane().is_some() {
+        let queue_empty = self.shared.queue.lock().unwrap().is_empty();
+        if (queue_empty && self.spec.is_none()) || self.free_lane().is_some() {
             return Ok(());
         }
         let Some(fl) = &self.flight else { return Ok(()) };
@@ -493,8 +742,9 @@ impl<E: StepEngine> Driver<E> {
         self.shared.metrics.set_queue_depth(queue.len());
     }
 
-    /// Mirror a solo (catch-up) state into its entry.  Returns true
-    /// once the request is terminal (deadline reached or cancelled).
+    /// Mirror a solo (catch-up or speculative) state into its entry.
+    /// Returns true once the request is terminal (deadline reached or
+    /// cancelled).
     fn sync_solo(&self, id: u64, solo: &DecodeState) -> bool {
         let mut entries = self.shared.entries.lock().unwrap();
         let Some(entry) = entries.get_mut(&id) else { return true };
@@ -539,13 +789,15 @@ impl<E: StepEngine> Driver<E> {
         }
     }
 
+    /// Extend-only: a lane that is re-deriving a requeued request's
+    /// deterministic trajectory (shorter `lane_out` than what was
+    /// already mirrored) never shrinks the observable output.
     fn mirror_output(metrics: &ServeMetrics, entry: &mut Entry, lane_out: &[u8]) {
         let take = lane_out.len().min(entry.max_new);
-        let appended = take.saturating_sub(entry.output.len());
-        if appended > 0 {
-            metrics.add_tokens(appended);
+        if take > entry.output.len() {
+            metrics.add_tokens(take - entry.output.len());
+            entry.output = lane_out[..take].to_vec();
         }
-        entry.output = lane_out[..take].to_vec();
         if !entry.got_first_token && !entry.output.is_empty() {
             entry.got_first_token = true;
             metrics.record_ttft_ms(entry.submitted_at.elapsed().as_secs_f64() * 1e3);
@@ -595,6 +847,25 @@ impl<E: StepEngine> Driver<E> {
         for id in ids {
             self.fail_request(id, msg);
         }
+        // the speculative request itself is healthy (its solo state just
+        // rode the same engine failure): requeue it to the front so it
+        // rides the next fresh batch — re-derivation is byte-identical
+        // and `mirror_output` is extend-only.  If the engine is truly
+        // dead, the next batch-formation failure terminalizes it.
+        if let Some(Spec { id, .. }) = self.spec.take() {
+            self.requeue_front(id);
+        }
         self.flight = None;
+    }
+
+    /// Occupied lanes (flight + speculative slot) — the lane-leak gauge
+    /// the stress tests assert returns to 0 after drain.
+    fn update_inflight_gauge(&self) {
+        let lanes = self
+            .flight
+            .as_ref()
+            .map_or(0, |fl| fl.lane_ids.iter().filter(|l| l.is_some()).count())
+            + usize::from(self.spec.is_some());
+        self.shared.metrics.set_inflight_lanes(lanes);
     }
 }

@@ -10,12 +10,26 @@
 //! activations, a `ShardedEngine` with any shard count is byte-identical
 //! to the monolithic `ServingEngine` — `rust/tests/serve.rs` pins 1-,
 //! 2- and 3-shard generations against `ServingEngine::generate`.
+//!
+//! **Fault tolerance**: a shard whose engine/runtime errors mid-batch
+//! is not fatal.  Every prefill/decode failure is attributed to the
+//! shard it struck, and `try_recover` merges the failed shard's block
+//! range into an adjacent survivor — re-opening the range from the
+//! retained container into that engine's pool and arena
+//! (`ServingEngine::reopen_blocks`) — after which the interrupted step
+//! may simply be replayed: decode steps are resumable (see
+//! `ServingEngine::decode_step`), so in-flight requests complete
+//! byte-identically to an unfaulted run.  The retained pristine
+//! container is the memory price of reroute; at ~2 effective
+//! bits/param it is small next to any resident decode state, and
+//! single-shard engines (no survivor to reroute to) skip it entirely.
 
 use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState};
 use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::container::CompressedModel;
 use anyhow::{ensure, Result};
+use std::cell::{Cell, RefCell};
 use std::ops::Range;
 
 /// A contiguous partition of a model's blocks, balanced by serialized
@@ -33,9 +47,23 @@ impl ShardPlan {
     /// bytes reach the proportional boundary, but never strand a later
     /// shard without blocks.  `n_shards` is clamped to the block count.
     pub fn balance(cm: &CompressedModel, n_shards: usize) -> ShardPlan {
-        let n = cm.blocks.len();
-        let k = n_shards.max(1).min(n.max(1));
         let sizes: Vec<usize> = cm.blocks.iter().map(|b| b.bitstream.serialized_len()).collect();
+        ShardPlan::balance_sizes(&sizes, n_shards)
+    }
+
+    /// The pure partition over per-block byte sizes (what `balance`
+    /// feeds with bitstream lengths).  Guarantees, property-tested in
+    /// `rust/tests/shard_plan.rs` for randomized size distributions:
+    ///
+    /// * ranges are contiguous, disjoint, non-empty, and cover
+    ///   `0..sizes.len()` exactly;
+    /// * **balance bound**: no shard's byte total exceeds the
+    ///   proportional share by more than the largest single block —
+    ///   `max(bytes) <= total/k + max(sizes)` — so the max/min spread
+    ///   is at most `total/k + max(sizes) - min(sizes)`.
+    pub fn balance_sizes(sizes: &[usize], n_shards: usize) -> ShardPlan {
+        let n = sizes.len();
+        let k = n_shards.max(1).min(n.max(1));
         let total: usize = sizes.iter().sum();
         let mut ranges = Vec::with_capacity(k);
         let mut start = 0usize;
@@ -65,10 +93,33 @@ impl ShardPlan {
         self.ranges.iter().position(|r| r.contains(&b))
     }
 
+    /// Merge shard `failed`'s range into the adjacent shard `target`,
+    /// removing `failed` — the bookkeeping half of a reroute.  The
+    /// merged range stays contiguous, so every plan invariant above
+    /// survives reroute.
+    pub fn merge(&mut self, failed: usize, target: usize) {
+        assert!(
+            failed < self.ranges.len()
+                && (target + 1 == failed || target == failed + 1),
+            "merge: {failed} into non-adjacent {target}"
+        );
+        let fr = self.ranges[failed].clone();
+        if target < failed {
+            self.ranges[target] = self.ranges[target].start..fr.end;
+        } else {
+            self.ranges[target] = fr.start..self.ranges[target].end;
+        }
+        self.bytes[target] += self.bytes[failed];
+        self.ranges.remove(failed);
+        self.bytes.remove(failed);
+    }
+
     /// Clone shard `i`'s blocks into a standalone sub-model.  Embed,
     /// head and final norm ride along in every shard: the first/last
     /// shards use them, middle shards keep them only so the engine's
-    /// config validation holds (dropping them there is a follow-on).
+    /// config validation holds (dropping them there is a follow-on) —
+    /// and so that *any* surviving shard can embed or apply the head
+    /// after a reroute removes the original first/last shard.
     pub fn slice(&self, cm: &CompressedModel, i: usize) -> CompressedModel {
         CompressedModel {
             config: cm.config.clone(),
@@ -83,10 +134,20 @@ impl ShardPlan {
 
 /// N engines over one plan, exposing the same step-wise surface as a
 /// single `ServingEngine` (`prefill_state` / `decode_step` /
-/// `generate`) so the scheduler is oblivious to the shard count.
+/// `generate`) so the scheduler is oblivious to the shard count — and
+/// to reroutes, which shrink the shard set behind this facade.
 pub struct ShardedEngine {
-    shards: Vec<ServingEngine>,
-    plan: ShardPlan,
+    shards: RefCell<Vec<ServingEngine>>,
+    plan: RefCell<ShardPlan>,
+    /// pristine container, retained so a failed shard's range can be
+    /// re-opened on a survivor — only when there IS a possible
+    /// survivor (`None` for single-shard engines, where reroute can
+    /// never apply and retaining a second copy would just double
+    /// compressed-weight memory)
+    full: Option<CompressedModel>,
+    /// shard index of the most recently attributed failure
+    pending_fault: Cell<Option<usize>>,
+    reroutes: Cell<usize>,
 }
 
 impl ShardedEngine {
@@ -113,44 +174,98 @@ impl ShardedEngine {
                 // per-shard offload directories: block files are named
                 // by shard-local index, so a shared directory would
                 // have later shards overwrite earlier shards' weights
-                let base = shard_opts.offload_dir.clone().unwrap_or_else(|| {
-                    std::env::temp_dir().join("eq_offload").to_string_lossy().into_owned()
-                });
+                let base = crate::coordinator::engine::resolve_offload_dir(&shard_opts);
                 shard_opts.offload_dir = Some(format!("{base}/shard_{i}"));
             }
             shards.push(ServingEngine::new(rt, plan.slice(cm, i), shard_opts)?);
         }
-        Ok(ShardedEngine { shards, plan })
+        let full = if plan.n_shards() > 1 { Some(cm.clone()) } else { None };
+        Ok(ShardedEngine {
+            shards: RefCell::new(shards),
+            plan: RefCell::new(plan),
+            full,
+            pending_fault: Cell::new(None),
+            reroutes: Cell::new(0),
+        })
     }
 
-    pub fn plan(&self) -> &ShardPlan {
-        &self.plan
+    /// A snapshot of the current plan (reroutes re-shape it).
+    pub fn plan(&self) -> ShardPlan {
+        self.plan.borrow().clone()
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.shards.borrow().len()
+    }
+
+    /// How many shard failures have been rerouted onto survivors.
+    pub fn reroutes(&self) -> usize {
+        self.reroutes.get()
     }
 
     /// Per-shard decode-arena fresh allocations (0 per shard in steady
     /// state — the sharded serving tests pin this).
     pub fn fresh_allocs(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.decode_arena_fresh_allocs()).collect()
-    }
-
-    fn first(&self) -> &ServingEngine {
-        &self.shards[0]
-    }
-
-    fn last(&self) -> &ServingEngine {
-        self.shards.last().expect("non-empty shard set")
+        self.shards.borrow().iter().map(|s| s.decode_arena_fresh_allocs()).collect()
     }
 
     pub fn prefill_slots(&self) -> Vec<(usize, usize)> {
-        self.first().runtime().manifest.prefill_slots.clone()
+        self.shards.borrow()[0].runtime().manifest.prefill_slots.clone()
     }
 
     pub fn decode_slots(&self) -> Vec<(usize, usize)> {
-        self.first().runtime().manifest.decode_slots.clone()
+        self.shards.borrow()[0].runtime().manifest.decode_slots.clone()
+    }
+
+    /// Attribute a shard-scoped result: an `Err` records `shard` as the
+    /// failure site so `try_recover` knows which range to reroute.
+    fn attr<T>(&self, shard: usize, r: Result<T>) -> Result<T> {
+        if r.is_err() {
+            self.pending_fault.set(Some(shard));
+        }
+        r
+    }
+
+    /// Reroute the most recently failed shard's block range onto an
+    /// adjacent survivor: the lighter neighbor (by compressed bytes,
+    /// ties to the left) re-opens the range from the retained container
+    /// into its own pool/arena, the failed engine is dropped, and the
+    /// plan contracts.  Returns `true` when recovery succeeded — the
+    /// caller may then replay the interrupted prefill or decode step
+    /// verbatim (steps are resumable; outputs stay byte-identical).
+    /// Returns `false` with the engine untouched when there is no
+    /// attributed failure, no survivor, or the re-open itself failed
+    /// (e.g. the absorbed range is corrupt under a resident mode).
+    pub fn try_recover(&self) -> bool {
+        let Some(k) = self.pending_fault.take() else { return false };
+        let Some(full) = &self.full else { return false };
+        let mut shards = self.shards.borrow_mut();
+        let mut plan = self.plan.borrow_mut();
+        if shards.len() <= 1 || k >= shards.len() {
+            return false;
+        }
+        let left = k.checked_sub(1);
+        let right = if k + 1 < shards.len() { Some(k + 1) } else { None };
+        let target = match (left, right) {
+            (Some(l), Some(r)) => {
+                if plan.bytes[l] <= plan.bytes[r] {
+                    l
+                } else {
+                    r
+                }
+            }
+            (Some(l), None) => l,
+            (None, Some(r)) => r,
+            (None, None) => return false,
+        };
+        let range = plan.ranges[k].clone();
+        if shards[target].reopen_blocks(full, range, target > k).is_err() {
+            return false;
+        }
+        shards.remove(k);
+        plan.merge(k, target);
+        self.reroutes.set(self.reroutes.get() + 1);
+        true
     }
 
     /// Prefill a batch across all shards: embed on the first, blocks in
@@ -158,47 +273,66 @@ impl ShardedEngine {
     /// last.  The returned state's caches are the concatenation of the
     /// shards' block caches, in block order.
     pub fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        // any fault attribution from a previous (already-handled)
+        // failure is stale by now: clear it so try_recover can only
+        // ever consume an attribution from THIS operation — a later
+        // non-shard error must not reroute a healthy shard
+        self.pending_fault.set(None);
+        let shards = self.shards.borrow();
+        let first = &shards[0];
         let (b, _s) = batch.slot;
-        let cfg = &self.first().runtime().manifest.config;
-        let ctx = self.first().decode_ctx(b)?;
+        let cfg = &first.runtime().manifest.config;
+        let ctx = first.decode_ctx(b)?;
         let mut metrics = Metrics::zero();
         let t0 = std::time::Instant::now();
-        let mut x = self.first().embed_prefill(batch)?;
+        let mut x = self.attr(0, first.embed_prefill(batch))?;
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
         let mut prefill_caches = Vec::with_capacity(cfg.n_layers);
-        for shard in &self.shards {
-            let (x2, mut caches) = shard.prefill_blocks(x, &starts, batch.slot, &mut metrics)?;
+        for (i, shard) in shards.iter().enumerate() {
+            let (x2, mut caches) =
+                self.attr(i, shard.prefill_blocks(x, &starts, batch.slot, &mut metrics))?;
             x = x2;
             prefill_caches.append(&mut caches);
         }
-        let logits = self.last().head_prefill(x, batch.slot)?;
+        let last = shards.len() - 1;
+        let logits = self.attr(last, shards[last].head_prefill(x, batch.slot))?;
         metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
         metrics.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
         Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
     }
 
-    /// One decode step through the shard pipeline.
+    /// One decode step through the shard pipeline.  Resumable exactly
+    /// like `ServingEngine::decode_step`: after a mid-step shard
+    /// failure (and a successful `try_recover`), replaying the step on
+    /// the same state completes it byte-identically.
     pub fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
         if st.pos >= st.ctx {
             return Ok(false);
         }
+        self.pending_fault.set(None); // see prefill_state
+        let shards = self.shards.borrow();
+        let plan = self.plan.borrow();
         let (b, _s) = st.batch.slot;
-        let n_blocks: usize = self.plan.ranges.iter().map(|r| r.len()).sum();
+        let n_blocks: usize = plan.ranges.iter().map(|r| r.len()).sum();
         ensure!(
             st.caches.len() == n_blocks,
             "decode_step: {} caches for {} planned blocks",
             st.caches.len(),
             n_blocks
         );
-        let cfg = &self.first().runtime().manifest.config;
+        let cfg = &shards[0].runtime().manifest.config;
         let t0 = std::time::Instant::now();
-        let mut x = self.first().embed_decode(&st.next, b)?;
+        let mut x = self.attr(0, shards[0].embed_decode(&st.next, b))?;
         let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
-        for (shard, range) in self.shards.iter().zip(&self.plan.ranges) {
+        for (i, (shard, range)) in shards.iter().zip(plan.ranges.iter()).enumerate() {
             let slice = &mut st.caches[range.clone()];
-            x = shard.decode_blocks(x, slice, st.pos as i32, &starts, b, st.ctx, &mut st.metrics)?;
+            x = self.attr(
+                i,
+                shard.decode_blocks(x, slice, st.pos as i32, &starts, b, st.ctx, &mut st.metrics),
+            )?;
         }
-        let logits = self.last().head_decode(x, b)?;
+        let last = shards.len() - 1;
+        let logits = self.attr(last, shards[last].head_decode(x, b))?;
         apply_decode_logits(st, &logits, cfg.vocab, t0);
         Ok(true)
     }
@@ -281,6 +415,40 @@ mod tests {
     }
 
     #[test]
+    fn balance_sizes_is_the_pure_core_of_balance() {
+        let cm = tiny_compressed(4);
+        let sizes: Vec<usize> = cm.blocks.iter().map(|b| b.bitstream.serialized_len()).collect();
+        for k in 1..=5 {
+            assert_eq!(ShardPlan::balance(&cm, k), ShardPlan::balance_sizes(&sizes, k));
+        }
+    }
+
+    #[test]
+    fn merge_contracts_the_plan_contiguously() {
+        let sizes = [10usize, 20, 30, 40, 50];
+        // merge left and merge right, from both directions
+        let mut p = ShardPlan::balance_sizes(&sizes, 3);
+        let ranges0 = p.ranges.clone();
+        let total: usize = p.bytes.iter().sum();
+        p.merge(1, 0); // failed 1 absorbed leftward
+        assert_eq!(p.n_shards(), 2);
+        assert_eq!(p.ranges[0], ranges0[0].start..ranges0[1].end);
+        assert_eq!(p.ranges[1], ranges0[2].clone());
+        assert_eq!(p.bytes.iter().sum::<usize>(), total);
+        let mut q = ShardPlan::balance_sizes(&sizes, 3);
+        q.merge(0, 1); // failed 0 absorbed rightward
+        assert_eq!(q.n_shards(), 2);
+        assert_eq!(q.ranges[0], ranges0[0].start..ranges0[1].end);
+        // still a contiguous exact cover
+        let mut expect = 0usize;
+        for r in &q.ranges {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        assert_eq!(expect, sizes.len());
+    }
+
+    #[test]
     fn slice_preserves_block_identity() {
         let cm = tiny_compressed(4);
         let plan = ShardPlan::balance(&cm, 2);
@@ -292,5 +460,24 @@ mod tests {
         }
         let want: Vec<usize> = cm.blocks.iter().map(|b| b.n_symbols()).collect();
         assert_eq!(reassembled, want);
+    }
+
+    #[test]
+    fn try_recover_without_attributed_failure_is_a_no_op() {
+        let cm = tiny_compressed(4);
+        let plan = ShardPlan::balance(&cm, 2);
+        let rts: Vec<Runtime> = (0..2)
+            .map(|_| {
+                Runtime::native(crate::runtime::Manifest::synthetic(
+                    cm.config.clone(),
+                    vec![(1, 16)],
+                    vec![(1, 24)],
+                ))
+            })
+            .collect();
+        let se = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).unwrap();
+        assert!(!se.try_recover());
+        assert_eq!(se.n_shards(), 2);
+        assert_eq!(se.reroutes(), 0);
     }
 }

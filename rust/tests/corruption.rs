@@ -7,13 +7,21 @@
 //! `parallel::Pool` must leave all byte streams invariant: `threads=N`
 //! output is identical to `threads=1` for encode, decode, and the whole
 //! compression pipeline.
+//!
+//! Extended to the serve path (ISSUE 4): a container corrupted under
+//! one shard of a sharded serving stack must surface as per-request
+//! errors (or a reroute), never a panic or a wrong-token completion.
 
 use entquant::ans::Bitstream;
+use entquant::coordinator::EngineOpts;
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
+use entquant::runtime::{Manifest, Runtime};
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
 use entquant::tensor::Rng;
+use std::time::Duration;
 
 fn symbols(n: usize, seed: u64) -> Vec<u8> {
     let mut rng = Rng::new(seed);
@@ -134,6 +142,101 @@ fn eqz_truncation_sweep_is_rejected() {
     // the untouched container still loads and decodes
     let cm2 = CompressedModel::deserialize(&ser).unwrap();
     cm2.to_qmodel().unwrap();
+}
+
+// ------------------------------------------------------------ serve
+
+/// A 4-layer compressed model + the serving pieces around it.
+fn serve_model(seed: u64) -> CompressedModel {
+    let m = synthetic_model(
+        Config {
+            name: "fuzz-serve".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 4,
+            n_heads: 2,
+            d_ff: 24,
+            max_ctx: 32,
+        },
+        seed,
+    );
+    compress_model(&m, &CompressOpts { lam: 0.3, max_iters: 4, ..Default::default() }).unwrap().0
+}
+
+fn serve_rt(cm: &CompressedModel) -> Runtime {
+    Runtime::native(Manifest::synthetic(
+        cm.config.clone(),
+        vec![(1, 12), (2, 12)],
+        vec![(1, 20), (2, 20)],
+    ))
+}
+
+#[test]
+fn truncated_container_never_reaches_a_shard() {
+    // a truncated .eqz fails the integrity gate at load time — the
+    // serving stack never even constructs on corrupt bytes
+    let cm = serve_model(8);
+    let ser = cm.serialize();
+    for k in [ser.len() / 3, ser.len() / 2, ser.len() - 2] {
+        assert!(CompressedModel::deserialize(&ser[..k]).is_err(), "truncation to {k} accepted");
+    }
+}
+
+#[test]
+fn bit_flipped_block_under_one_shard_fails_requests_never_panics() {
+    // in-memory corruption (past the load-time crc — e.g. a bad DIMM or
+    // a hostile custom loader) in a block owned by shard 1 of 2: under
+    // EntQuant residency construction succeeds, so the corruption is
+    // only discovered on the decode hot path.  The first reroute merges
+    // the corrupt range onto the survivor; the survivor hits the same
+    // corrupt bitstream; with nobody left to reroute to, every request
+    // must surface a per-request `Failed` — no panic, no wrong-token
+    // `Done`.
+    let mut cm = serve_model(9);
+    let plan = ShardPlan::balance(&cm, 2);
+    let victim_block = plan.ranges[1].start; // owned by shard 1
+    cm.blocks[victim_block].bitstream.chunk_lens[0] ^= 1;
+    let rts: Vec<Runtime> = (0..2).map(|_| serve_rt(&cm)).collect();
+    let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).unwrap();
+
+    let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = (0..6)
+        .map(|i| sched.submit((0..4 + i as usize).map(|j| (j % 64) as u8).collect(), 4))
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for id in &ids {
+        let (status, out) = sched.poll(*id).unwrap();
+        match status {
+            Status::Failed(msg) => {
+                assert!(out.is_empty(), "a failed request must not ship tokens: {out:?}");
+                assert!(!msg.is_empty());
+            }
+            other => panic!("corrupt shard produced a non-Failed terminal state {other:?}"),
+        }
+    }
+    let m = sched.metrics();
+    assert_eq!(m.failed, ids.len(), "{m:?}");
+    assert_eq!(m.completed, 0, "nothing may complete against a corrupt block: {m:?}");
+    assert!(m.reroutes >= 1, "the first failure must at least attempt the reroute: {m:?}");
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn bit_flipped_block_under_resident_mode_fails_at_construction() {
+    // resident residencies decode at load time, so the same in-memory
+    // corruption surfaces as a clean constructor error instead
+    let mut cm = serve_model(10);
+    let plan = ShardPlan::balance(&cm, 2);
+    let victim_block = plan.ranges[1].start;
+    let n = cm.blocks[victim_block].bitstream.payload.len();
+    cm.blocks[victim_block].bitstream.payload[n / 2] ^= 0x10;
+    let rts: Vec<Runtime> = (0..2).map(|_| serve_rt(&cm)).collect();
+    let opts = EngineOpts {
+        residency: entquant::coordinator::Residency::F8Resident,
+        ..Default::default()
+    };
+    assert!(ShardedEngine::new(rts, &cm, plan, &opts).is_err());
 }
 
 // ------------------------------------------ parallel == scalar

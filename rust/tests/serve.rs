@@ -1,21 +1,25 @@
 //! Integration tests for the serve subsystem, end-to-end on the native
 //! executor (no artifacts, no PJRT): sharded-vs-single byte identity,
 //! a 64-request synthetic trace through the continuous-batching
-//! scheduler on 2 shards, fused mid-flight admission, and the
-//! cancel lifecycle.
+//! scheduler on 2 shards, fused mid-flight admission, the cancel
+//! lifecycle, scripted shard-failure reroutes (decode and prefill),
+//! and zero-cost speculative admission.
 //!
 //! The load-bearing invariant everywhere: a request's generation is
 //! byte-identical to a solo `ServingEngine::generate` run, whatever
-//! shard count, batch composition, or admission order served it.
+//! shard count, batch composition, admission order — or shard failure
+//! — served it.
 
-use entquant::coordinator::{pack, EngineOpts, Request, ServingEngine};
+use entquant::coordinator::{pack, Batch, DecodeState, EngineOpts, Request, ServingEngine};
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
+use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
 use entquant::runtime::{Manifest, Runtime};
-use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status};
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status, StepEngine};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 const SEQ: usize = 16;
@@ -61,6 +65,55 @@ fn sharded(n: usize) -> ShardedEngine {
     let plan = ShardPlan::balance(&model, n);
     let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&model)).collect();
     ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+}
+
+/// A sharded engine whose per-shard runtimes are armed with a shared
+/// fault plan (each shard counts its own decode steps).
+fn sharded_with_faults(n: usize, faults: &Arc<FaultPlan>) -> ShardedEngine {
+    let model = cm().clone();
+    let plan = ShardPlan::balance(&model, n);
+    let rts: Vec<Runtime> = (0..plan.n_shards())
+        .map(|i| {
+            native_rt(&model)
+                .with_fault(FaultRuntime::new(Arc::clone(faults), i, plan.ranges[i].len()))
+        })
+        .collect();
+    ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+}
+
+/// Counts `prefill_state` calls on the way through to the inner
+/// engine — how the speculative-admission test proves adoption costs
+/// zero extra prefill steps versus the non-speculative scheduler.
+struct CountingEngine<E: StepEngine> {
+    inner: E,
+    prefills: Arc<AtomicUsize>,
+}
+
+impl<E: StepEngine> StepEngine for CountingEngine<E> {
+    fn prefill_state(&self, batch: &Batch) -> anyhow::Result<DecodeState> {
+        self.prefills.fetch_add(1, Ordering::SeqCst);
+        self.inner.prefill_state(batch)
+    }
+
+    fn decode_step(&self, st: &mut DecodeState) -> anyhow::Result<bool> {
+        self.inner.decode_step(st)
+    }
+
+    fn prefill_slots(&self) -> Vec<(usize, usize)> {
+        self.inner.prefill_slots()
+    }
+
+    fn decode_slots(&self) -> Vec<(usize, usize)> {
+        self.inner.decode_slots()
+    }
+
+    fn fresh_allocs_per_shard(&self) -> Vec<usize> {
+        self.inner.fresh_allocs_per_shard()
+    }
+
+    fn try_recover(&self) -> bool {
+        self.inner.try_recover()
+    }
 }
 
 /// Deterministic prompt inside the tiny model's vocab (64).
@@ -247,6 +300,176 @@ fn cancel_lifecycle_queued_and_mid_decode() {
         other => panic!("unexpected terminal state {other:?}"),
     }
     sched.shutdown().unwrap();
+}
+
+#[test]
+fn shard_fault_reroutes_and_replayed_step_is_byte_identical() {
+    // engine-level pin of the reroute + resumable-step contract: a
+    // scripted fault kills shard 1 in the MIDDLE of a decode step
+    // (block 1 of 3, so shard 1's caches are partially written), the
+    // failed range reroutes onto shard 0, and replaying the very same
+    // step on the very same state completes the generation
+    // byte-identically to an unfaulted single-engine run.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(500 + i, 6 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 1 }]);
+    let se = sharded_with_faults(2, &faults);
+    let mut st = se.prefill_state(batch).unwrap();
+    let mut rerouted = 0;
+    for _ in 0..7 {
+        loop {
+            match se.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(e) => {
+                    assert!(se.try_recover(), "reroute must succeed with a survivor: {e:#}");
+                    rerouted += 1; // replay the interrupted step verbatim
+                }
+            }
+        }
+    }
+    assert_eq!(rerouted, 1, "the scripted fault must interrupt exactly one step");
+    assert_eq!(faults.fired(), 1);
+    assert_eq!(se.reroutes(), 1);
+    assert_eq!(se.n_shards(), 1, "the failed shard must be gone");
+    let plan = se.plan();
+    assert_eq!(plan.ranges, vec![0..cm().blocks.len()], "survivor must own every block");
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged across the reroute");
+    }
+}
+
+#[test]
+fn scripted_shard_kill_mid_trace_stays_byte_identical() {
+    // the acceptance drill: kill a shard at a scripted decode step of a
+    // 32-request trace, at 2 and at 4 shards; every final token stream
+    // must equal the unfaulted single-engine reference, and the reroute
+    // counter must prove the failure path actually ran.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..32).map(|i| req(600 + i, 1 + (i as usize * 5) % 14)).collect();
+    let max_new = |id: u64| 2 + (id as usize % 7);
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, max_new(r.id))).collect();
+    for shards in [2usize, 4] {
+        let faults =
+            FaultPlan::scripted(vec![FaultScript { shard: shards - 1, step: 6, block: 0 }]);
+        let se = sharded_with_faults(shards, &faults);
+        let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
+        let ids: Vec<u64> =
+            reqs.iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+        sched.resume();
+        sched.drain(Duration::from_secs(300)).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let (status, out) = sched.poll(*id).unwrap();
+            assert_eq!(status, Status::Done, "shards={shards} request {i}");
+            assert_eq!(out, want[i], "shards={shards} request {i} diverged after the reroute");
+        }
+        let m = sched.metrics();
+        assert_eq!(m.completed, 32, "shards={shards}: {m:?}");
+        assert_eq!(m.failed, 0, "shards={shards}: {m:?}");
+        assert!(m.reroutes >= 1, "shards={shards}: the fault never rerouted: {m:?}");
+        assert_eq!(faults.fired(), 1, "shards={shards}: the scripted fault must fire");
+        assert_eq!(
+            m.shard_fresh_allocs.len(),
+            shards - 1,
+            "shards={shards}: reroute must contract the shard set"
+        );
+        sched.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn prefill_fault_reroutes_and_the_batch_replays() {
+    // a shard that dies during batch formation (prefill) reroutes too:
+    // the group is requeued in order and the prefill replays on the
+    // recovered engine — nobody fails, outputs stay byte-identical.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..4).map(|i| req(700 + i, 5 + i as usize)).collect();
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, 6)).collect();
+    let faults = FaultPlan::scripted(Vec::new());
+    faults.fail_next_prefill(0);
+    let se = sharded_with_faults(2, &faults);
+    let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = reqs.iter().map(|r| sched.submit(r.prompt.clone(), 6)).collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "request {i}");
+        assert_eq!(out, want[i], "request {i} diverged after the prefill reroute");
+    }
+    let m = sched.metrics();
+    assert!(m.reroutes >= 1, "{m:?}");
+    assert_eq!(m.failed, 0, "{m:?}");
+    assert_eq!(faults.fired(), 1);
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn speculative_admission_adopts_at_zero_cost() {
+    // the queue head prefills into the idle solo slot while every lane
+    // is busy, steps in lockstep, and is adopted the moment a lane
+    // frees — with ZERO prefills and ZERO catch-up steps at adoption
+    // time, and zero extra prefill steps overall versus the
+    // non-speculative scheduler.  Everything below is deterministic:
+    // the whole trace is queued before `resume`.
+    let engine = single_engine();
+    let firsts: Vec<(Request, usize)> = vec![
+        (req(800, 6), 3), // retires first, freeing a lane
+        (req(801, 5), 10),
+        (req(802, 9), 10),
+        (req(803, 4), 10),
+    ];
+    let late = req(810, 7);
+    let late_max = 5usize;
+    let mut outputs_by_mode: Vec<Vec<Vec<u8>>> = Vec::new();
+    let mut prefill_counts: Vec<usize> = Vec::new();
+    for speculative in [true, false] {
+        let prefills = Arc::new(AtomicUsize::new(0));
+        let eng = CountingEngine { inner: sharded(2), prefills: Arc::clone(&prefills) };
+        let sched = Scheduler::new(
+            eng,
+            SchedulerOpts { paused: true, speculative, ..Default::default() },
+        );
+        let ids: Vec<u64> =
+            firsts.iter().map(|(r, mn)| sched.submit(r.prompt.clone(), *mn)).collect();
+        let late_id = sched.submit(late.prompt.clone(), late_max);
+        sched.resume();
+        sched.drain(Duration::from_secs(120)).unwrap();
+        let m = sched.metrics();
+        assert!(m.fused_admissions >= 1, "speculative={speculative}: no fusion: {m:?}");
+        if speculative {
+            assert!(m.speculative_admissions >= 1, "never speculated: {m:?}");
+            assert_eq!(m.adoption_catchup_steps, 0, "adoption must be zero-cost: {m:?}");
+            assert_eq!(m.adoption_prefills, 0, "no prefill at adoption time: {m:?}");
+        } else {
+            assert_eq!(m.speculative_admissions, 0, "{m:?}");
+            assert!(m.adoption_catchup_steps > 0, "non-speculative pays catch-up: {m:?}");
+            assert!(m.adoption_prefills >= 1, "{m:?}");
+        }
+        let mut outs = Vec::new();
+        for ((r, mn), id) in firsts.iter().zip(&ids) {
+            let (status, out) = sched.poll(*id).unwrap();
+            assert_eq!(status, Status::Done, "speculative={speculative}");
+            assert_eq!(out, reference(&engine, r, *mn), "speculative={speculative}");
+            outs.push(out);
+        }
+        let (status, out) = sched.poll(late_id).unwrap();
+        assert_eq!(status, Status::Done, "speculative={speculative}");
+        assert_eq!(out, reference(&engine, &late, late_max), "speculative={speculative}");
+        outs.push(out);
+        outputs_by_mode.push(outs);
+        prefill_counts.push(prefills.load(Ordering::SeqCst));
+        sched.shutdown().unwrap();
+    }
+    assert_eq!(outputs_by_mode[0], outputs_by_mode[1], "modes must agree byte-for-byte");
+    assert_eq!(
+        prefill_counts[0], prefill_counts[1],
+        "speculation must not add prefill steps ({} vs {})",
+        prefill_counts[0], prefill_counts[1]
+    );
 }
 
 #[test]

@@ -1,0 +1,155 @@
+//! Property tests for `ShardPlan::balance` / `balance_sizes` over
+//! randomized block-size distributions and shard counts (seeded — a
+//! failing case prints everything needed to replay it; override the
+//! base seed with SHARD_PLAN_SEED).
+//!
+//! Invariants under test, for every distribution:
+//! * ranges are contiguous, disjoint, non-empty, and cover all blocks;
+//! * the plan uses exactly `min(k, n)` shards;
+//! * per-shard bytes sum to the total;
+//! * the documented balance bound holds: no shard exceeds the
+//!   proportional share by more than the largest single block
+//!   (`bytes[i] * k <= total + k * max_size`), hence the max/min
+//!   spread is within `total/k + max_size - min_size`.
+
+use entquant::serve::ShardPlan;
+use entquant::tensor::Rng;
+
+fn base_seed() -> u64 {
+    std::env::var("SHARD_PLAN_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED_2026)
+}
+
+/// Assert every plan invariant; `ctx` identifies the failing case.
+fn check_plan(sizes: &[usize], k: usize, ctx: &str) {
+    let plan = ShardPlan::balance_sizes(sizes, k);
+    let n = sizes.len();
+    let k_eff = k.max(1).min(n.max(1));
+    assert_eq!(plan.n_shards(), k_eff, "{ctx}: wrong shard count");
+    assert_eq!(plan.ranges.len(), plan.bytes.len(), "{ctx}");
+
+    // contiguous, disjoint, exhaustive, non-empty (n > 0)
+    let mut expect = 0usize;
+    for (i, r) in plan.ranges.iter().enumerate() {
+        assert_eq!(r.start, expect, "{ctx}: gap/overlap before shard {i}");
+        if n > 0 {
+            assert!(r.end > r.start, "{ctx}: empty shard {i}");
+        }
+        expect = r.end;
+    }
+    assert_eq!(expect, n, "{ctx}: blocks not fully covered");
+
+    // every block maps to exactly one shard
+    for b in 0..n {
+        let s = plan.shard_of(b).unwrap_or_else(|| panic!("{ctx}: block {b} unowned"));
+        assert!(plan.ranges[s].contains(&b), "{ctx}: shard_of({b}) inconsistent");
+    }
+
+    // byte accounting
+    let total: usize = sizes.iter().sum();
+    assert_eq!(plan.bytes.iter().sum::<usize>(), total, "{ctx}: byte totals drifted");
+    for (i, r) in plan.ranges.iter().enumerate() {
+        assert_eq!(
+            plan.bytes[i],
+            sizes[r.clone()].iter().sum::<usize>(),
+            "{ctx}: shard {i} byte accounting"
+        );
+    }
+
+    if n == 0 {
+        return;
+    }
+    // the documented balance bound: bytes[i] <= total/k + max_size
+    // (integer form to avoid rounding), and the max/min spread bound
+    // that follows from it
+    let max_size = *sizes.iter().max().unwrap();
+    let min_size = *sizes.iter().min().unwrap();
+    for (i, &b) in plan.bytes.iter().enumerate() {
+        assert!(
+            b * k_eff <= total + k_eff * max_size,
+            "{ctx}: shard {i} holds {b} bytes > total/k + max ({total}/{k_eff} + {max_size})"
+        );
+    }
+    let max_b = *plan.bytes.iter().max().unwrap();
+    let min_b = *plan.bytes.iter().min().unwrap();
+    assert!(
+        (max_b - min_b) * k_eff <= total + k_eff * (max_size - min_size),
+        "{ctx}: spread {max_b}-{min_b} outside the documented bound"
+    );
+}
+
+#[test]
+fn randomized_distributions_hold_every_invariant() {
+    let seed = base_seed();
+    eprintln!("shard-plan property seed: {seed} (override with SHARD_PLAN_SEED)");
+    let mut rng = Rng::new(seed);
+    for case in 0..600 {
+        let n = 1 + rng.below(64);
+        let k = 1 + rng.below(12);
+        let dist = rng.below(4);
+        let sizes: Vec<usize> = (0..n)
+            .map(|_| match dist {
+                0 => 1 + rng.below(1000),                        // uniform
+                1 => 997,                                        // constant
+                2 => 1 + (rng.normal().abs() * 300.0) as usize,  // half-normal
+                _ => {
+                    // mostly tiny with occasional huge outliers
+                    if rng.below(8) == 0 {
+                        50_000
+                    } else {
+                        1 + rng.below(100)
+                    }
+                }
+            })
+            .collect();
+        let ctx = format!("seed={seed} case={case} n={n} k={k} dist={dist} sizes={sizes:?}");
+        check_plan(&sizes, k, &ctx);
+    }
+}
+
+#[test]
+fn adversarial_edges_hold_the_invariants() {
+    let seed = base_seed();
+    // single block, k huge; all-equal; strictly increasing/decreasing;
+    // one dominant block at each end; zero-size blocks mixed in
+    let mut dominant_first = vec![1usize; 32];
+    dominant_first[0] = 100_000;
+    let mut dominant_last = vec![1usize; 32];
+    dominant_last[31] = 100_000;
+    let cases: Vec<Vec<usize>> = vec![
+        vec![7],
+        vec![5; 16],
+        (1..=32).collect(),
+        (1..=32).rev().collect(),
+        dominant_first,
+        dominant_last,
+        vec![0, 0, 10, 0, 10, 0, 0],
+        vec![0; 9],
+    ];
+    for (i, sizes) in cases.iter().enumerate() {
+        for k in 1..=(sizes.len() + 2) {
+            let ctx = format!("seed={seed} edge-case={i} k={k} sizes={sizes:?}");
+            check_plan(sizes, k, &ctx);
+        }
+    }
+}
+
+#[test]
+fn empty_size_list_degenerates_to_one_empty_shard() {
+    let plan = ShardPlan::balance_sizes(&[], 4);
+    assert_eq!(plan.n_shards(), 1);
+    assert_eq!(plan.ranges, vec![0..0]);
+    assert_eq!(plan.bytes, vec![0]);
+}
+
+#[test]
+fn plans_are_deterministic_for_a_given_input() {
+    let mut rng = Rng::new(base_seed() ^ 0xABCD);
+    let sizes: Vec<usize> = (0..24).map(|_| 1 + rng.below(500)).collect();
+    for k in 1..=8 {
+        assert_eq!(
+            ShardPlan::balance_sizes(&sizes, k),
+            ShardPlan::balance_sizes(&sizes, k),
+            "k={k}"
+        );
+    }
+}

@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate (see ROADMAP.md): every PR must keep this green.
 #
-#   scripts/tier1.sh           # build + tests + format check
+#   scripts/tier1.sh           # build + tests + lint + format check
 #   scripts/tier1.sh --fast    # skip the release build (tests only)
 #   BENCH=1 scripts/tier1.sh   # additionally smoke the tracked benches
 #                              # (scripts/bench.sh -> BENCH_decode.json)
 #
 # Integration tests that need trained artifacts (`make artifacts`)
 # self-skip with a note; the unit suites (ANS, container, parallel
-# subsystem, corruption fuzz sweeps) always run.
+# subsystem, corruption fuzz sweeps, shard-plan property tests, the
+# fault-injection + scheduler stress suites) always run — seeded tests
+# print their seed so a red run replays exactly.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,6 +25,13 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo clippy (-D warnings) =="
+if ! cargo clippy --version >/dev/null 2>&1; then
+    echo "(clippy unavailable in this image; skipping lint gate)"
+else
+    cargo clippy -q --all-targets -- -D warnings
+fi
 
 echo "== cargo fmt --check =="
 if ! cargo fmt --version >/dev/null 2>&1; then
