@@ -2,8 +2,11 @@
 //! scheduler throughput (tokens/s) and p50 time-to-first-token at
 //! 1/2/4 shards, end-to-end on the native executor (compress a
 //! synthetic checkpoint, shard it, drive the continuous-batching
-//! scheduler), plus a fault drill (a scripted shard kill mid-trace)
-//! that tracks reroute behavior.  Emits the tracked `BENCH_serve.json`
+//! scheduler), plus fault drills (a scripted shard kill mid-trace)
+//! that track reroute behavior, the recovery stall of the incremental
+//! splice versus the legacy full reopen, the contract→expand rejoin,
+//! and the shared-storage memory gauges (`weight_copies`,
+//! `resident_compressed_bytes`).  Emits the tracked `BENCH_serve.json`
 //! (`BENCH_serve.smoke.json` under `BENCH_SMOKE=1`, which also shrinks
 //! the trace; `BENCH_SERVE_JSON` overrides the path).
 
@@ -106,11 +109,23 @@ fn main() {
         sched.shutdown().expect("driver shutdown");
     }
 
-    // fault drill: kill one shard at a scripted decode step mid-trace
+    // fault drills: kill one shard at a scripted decode step mid-trace
     // on a 2-shard stack — the trace must still complete with zero
-    // failures, and the reroute counter proves the recovery path ran
-    println!("\n== fault drill: scripted shard kill at 2 shards ==");
-    let drill = {
+    // failures.  Run once with the incremental recovery splice (plus an
+    // armed rejoin, completing the contract→expand cycle) and once with
+    // the legacy full reopen, tracking the recovery stall each pays and
+    // the shared-storage gauges.
+    struct DrillPoint {
+        requests: usize,
+        reroutes: usize,
+        rejoins: usize,
+        recovery_stall_ms: f64,
+        spliced_blocks: usize,
+        weight_copies: usize,
+        resident_compressed_bytes: usize,
+        wall_s: f64,
+    }
+    let run_drill = |splice: bool, rejoin: bool| -> DrillPoint {
         let plan = ShardPlan::balance(&cm, 2);
         let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 4, block: 0 }]);
         let rts: Vec<Runtime> = (0..plan.n_shards())
@@ -122,7 +137,11 @@ fn main() {
                 ))
             })
             .collect();
-        let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).expect("shards");
+        let opts = EngineOpts { splice, ..Default::default() };
+        let engine = ShardedEngine::new(rts, &cm, plan, &opts).expect("shards");
+        if rejoin {
+            engine.arm_rejoin(native_rt(&cm), 2);
+        }
         let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
         let n_drill = n_requests / 2;
         for i in 0..n_drill as u64 {
@@ -138,15 +157,32 @@ fn main() {
         let m = sched.metrics();
         assert_eq!(m.completed, n_drill, "fault drill must complete every request");
         assert_eq!(m.failed, 0, "fault drill must not fail requests");
+        assert_eq!(m.weight_copies, 1, "one logical weight copy, always");
         println!(
-            "drill: {} requests survived a scripted shard kill ({} reroute(s), {} fired fault(s)) in {wall_s:.2}s",
+            "drill(splice={splice}, rejoin={rejoin}): {} requests survived ({} reroute(s), {} rejoin(s), {:.2} ms recovery stall, {} spliced block(s), weight_copies={}) in {wall_s:.2}s",
             n_drill,
             m.reroutes,
-            faults.fired()
+            m.rejoins,
+            m.recovery_stall_ms,
+            m.recovery_spliced_blocks,
+            m.weight_copies
         );
         sched.shutdown().expect("driver shutdown");
-        (n_drill, m.reroutes, wall_s)
+        DrillPoint {
+            requests: n_drill,
+            reroutes: m.reroutes,
+            rejoins: m.rejoins,
+            recovery_stall_ms: m.recovery_stall_ms,
+            spliced_blocks: m.recovery_spliced_blocks,
+            weight_copies: m.weight_copies,
+            resident_compressed_bytes: m.resident_compressed_bytes,
+            wall_s,
+        }
     };
+    println!("\n== fault drill: scripted shard kill at 2 shards (splice + rejoin) ==");
+    let drill = run_drill(true, true);
+    println!("\n== fault drill: legacy full reopen (stall comparison) ==");
+    let drill_full = run_drill(false, false);
 
     // tracked trajectory: tokens/s and p50 ttft per shard count
     let mut series = String::new();
@@ -167,16 +203,23 @@ fn main() {
             "  \"requests\": {requests},\n",
             "  \"max_new\": {max_new},\n",
             "  \"trace\": [\n{series}\n  ],\n",
-            "  \"fault_drill\": {{\"shards\": 2, \"requests\": {drill_requests}, \"reroutes\": {drill_reroutes}, \"wall_s\": {drill_wall:.3}}}\n",
+            "  \"memory\": {{\"weight_copies\": {copies}, \"resident_compressed_bytes\": {resident}}},\n",
+            "  \"fault_drill\": {{\"shards\": 2, \"requests\": {drill_requests}, \"reroutes\": {drill_reroutes}, \"rejoins\": {drill_rejoins}, \"spliced_blocks\": {drill_spliced}, \"recovery_stall_ms_splice\": {stall_splice:.3}, \"recovery_stall_ms_full\": {stall_full:.3}, \"wall_s\": {drill_wall:.3}}}\n",
             "}}\n"
         ),
         smoke = smoke,
         requests = n_requests,
         max_new = max_new,
         series = series,
-        drill_requests = drill.0,
-        drill_reroutes = drill.1,
-        drill_wall = drill.2,
+        copies = drill.weight_copies,
+        resident = drill.resident_compressed_bytes,
+        drill_requests = drill.requests,
+        drill_reroutes = drill.reroutes,
+        drill_rejoins = drill.rejoins,
+        drill_spliced = drill.spliced_blocks,
+        stall_splice = drill.recovery_stall_ms,
+        stall_full = drill_full.recovery_stall_ms,
+        drill_wall = drill.wall_s,
     );
     let default_name = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
     let path = std::env::var("BENCH_SERVE_JSON")

@@ -11,9 +11,11 @@
 
 use entquant::coordinator::EngineOpts;
 use entquant::eval::perplexity;
+use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
 use entquant::runtime::Runtime;
 use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
 use entquant::store::pipeline::{compress_model, CompressOpts};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let art = entquant::artifacts_dir();
@@ -92,5 +94,46 @@ fn main() -> anyhow::Result<()> {
         model.bf16_bytes() as f64 / (1 << 20) as f64,
     );
     scheduler.shutdown().map_err(anyhow::Error::msg)?;
+
+    // -- contract→expand drill: a scripted shard kill mid-trace
+    //    reroutes the dead range onto the survivor (an Arc splice — one
+    //    logical copy of the weights throughout), then a provisioned
+    //    replacement rejoins and re-splits the merged range, all
+    //    mid-stream and byte-identical
+    let plan = ShardPlan::balance(&cm, 2);
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 4, block: 0 }]);
+    let mut runtimes = Vec::with_capacity(plan.n_shards());
+    for i in 0..plan.n_shards() {
+        runtimes.push(Runtime::new(&art)?.with_fault(FaultRuntime::new(
+            Arc::clone(&faults),
+            i,
+            plan.ranges[i].len(),
+        )));
+    }
+    let engine = ShardedEngine::new(
+        runtimes,
+        &cm,
+        plan,
+        &EngineOpts { decode_threads: threads, ..Default::default() },
+    )?;
+    engine.arm_rejoin(Runtime::new(&art)?, 2);
+    let drill = Scheduler::new(engine, SchedulerOpts::default());
+    let drill_ids: Vec<u64> = (0..4)
+        .map(|i| drill.submit(valid[i * 120..i * 120 + 64].to_vec(), max_new))
+        .collect();
+    for id in &drill_ids {
+        drill.wait(*id, std::time::Duration::from_secs(600))?;
+    }
+    let dm = drill.metrics();
+    println!(
+        "[drill] scripted shard kill: {} reroute(s) ({} block(s) spliced, {:.2} ms stall), {} rejoin(s), weight_copies={}, resident compressed {} B",
+        dm.reroutes,
+        dm.recovery_spliced_blocks,
+        dm.recovery_stall_ms,
+        dm.rejoins,
+        dm.weight_copies,
+        dm.resident_compressed_bytes,
+    );
+    drill.shutdown().map_err(anyhow::Error::msg)?;
     Ok(())
 }

@@ -20,8 +20,10 @@
 use super::batcher::Batch;
 
 use crate::runtime::{HostTensor, Runtime};
-use crate::store::container::{CompressedBlock, CompressedModel};
+use crate::store::container::{CompressedBlock, CompressedModel, SharedMat};
 use anyhow::{anyhow, Result};
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -31,6 +33,28 @@ pub enum Residency {
     F8Resident,
     EntQuant,
     DiskOffload,
+}
+
+/// Which pipeline phases this engine serves.  The first shard embeds
+/// (prefill and decode), the last applies the final norm + LM head;
+/// middle shards run only block phases and materialize neither tensor.
+/// A reroute or rejoin can promote a middle shard, so the role is
+/// re-settable mid-stream (`ServingEngine::set_role`) — promotion costs
+/// an Arc bump, never a copy, because the views alias the container's
+/// shared storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRole {
+    /// serves `embed_*` (owns the embedding-table view)
+    pub first: bool,
+    /// serves `head_*` (owns the final-norm + head views)
+    pub last: bool,
+}
+
+impl Default for ShardRole {
+    /// A standalone engine is the whole pipeline.
+    fn default() -> Self {
+        ShardRole { first: true, last: true }
+    }
 }
 
 /// The double-buffer arena the §A.1 pipeline promises: two preallocated
@@ -86,6 +110,22 @@ impl DecodeArena {
     fn fresh_allocs(&self) -> usize {
         self.fresh_allocs.load(Ordering::Relaxed)
     }
+
+    /// Grow both slot buffers to at least `max_symbols` f32s (a splice
+    /// absorbed a larger block).  The arena object — and with it the
+    /// fresh-alloc ledger — survives, so the alloc-free steady-state
+    /// accounting spans reroutes; a no-op when capacity already
+    /// suffices, which keeps the splice path from touching the warm
+    /// buffers at all.
+    fn ensure_capacity(&mut self, max_symbols: usize) {
+        if max_symbols <= self.max_symbols {
+            return;
+        }
+        self.max_symbols = max_symbols;
+        for slot in &self.slots {
+            *slot.lock().unwrap() = Some(Arc::new(vec![0.0; max_symbols]));
+        }
+    }
 }
 
 /// Precomputed per-block constant tensors (scales + norms).
@@ -103,11 +143,98 @@ pub struct EngineOpts {
     pub decode_threads: usize,
     /// scratch dir for DiskOffload mode
     pub offload_dir: Option<String>,
+    /// which pipeline phases this engine serves (shards override)
+    pub role: ShardRole,
+    /// reroute reopen strategy: `true` (default) splices only the
+    /// absorbed block range into the live engine state; `false` forces
+    /// the legacy full rebuild (every block re-decoded under
+    /// resident/offload modes) — kept for the recovery-stall bench
+    /// comparison in `benches/serve.rs`.
+    pub splice: bool,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { residency: Residency::EntQuant, pipeline: true, decode_threads: 1, offload_dir: None }
+        EngineOpts {
+            residency: Residency::EntQuant,
+            pipeline: true,
+            decode_threads: 1,
+            offload_dir: None,
+            role: ShardRole::default(),
+            splice: true,
+        }
+    }
+}
+
+/// Runtime program names, precomputed per (phase, batch, slot) from the
+/// manifest's slot tables so the prefill/decode hot loops never pay a
+/// per-call `format!` allocation.  Slots are finite and fixed for the
+/// life of a runtime, so the maps are built once at engine
+/// construction.
+struct ProgNames {
+    embed_p: HashMap<(usize, usize), String>,
+    block_p: HashMap<(usize, usize), String>,
+    head_p: HashMap<(usize, usize), String>,
+    embed_d: HashMap<usize, String>,
+    block_d: HashMap<(usize, usize), String>,
+    head_d: HashMap<usize, String>,
+}
+
+impl ProgNames {
+    fn new(manifest: &crate::runtime::Manifest) -> ProgNames {
+        let mut n = ProgNames {
+            embed_p: HashMap::new(),
+            block_p: HashMap::new(),
+            head_p: HashMap::new(),
+            embed_d: HashMap::new(),
+            block_d: HashMap::new(),
+            head_d: HashMap::new(),
+        };
+        for &(b, s) in &manifest.prefill_slots {
+            n.embed_p.insert((b, s), format!("embed_p_b{b}_s{s}"));
+            n.block_p.insert((b, s), format!("block_p_b{b}_s{s}"));
+            n.head_p.insert((b, s), format!("head_p_b{b}_s{s}"));
+        }
+        for &(b, c) in &manifest.decode_slots {
+            n.embed_d.entry(b).or_insert_with(|| format!("embed_d_b{b}"));
+            n.block_d.insert((b, c), format!("block_d_b{b}_c{c}"));
+            n.head_d.entry(b).or_insert_with(|| format!("head_d_b{b}"));
+        }
+        n
+    }
+
+    fn get<'a, K: std::hash::Hash + Eq + std::fmt::Debug>(
+        map: &'a HashMap<K, String>,
+        key: K,
+        what: &str,
+    ) -> Result<&'a str> {
+        map.get(&key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("no {what} program for slot {key:?} in the manifest"))
+    }
+
+    fn embed_p(&self, slot: (usize, usize)) -> Result<&str> {
+        Self::get(&self.embed_p, slot, "embed_p")
+    }
+
+    fn block_p(&self, slot: (usize, usize)) -> Result<&str> {
+        Self::get(&self.block_p, slot, "block_p")
+    }
+
+    fn head_p(&self, slot: (usize, usize)) -> Result<&str> {
+        Self::get(&self.head_p, slot, "head_p")
+    }
+
+    fn embed_d(&self, b: usize) -> Result<&str> {
+        Self::get(&self.embed_d, b, "embed_d")
+    }
+
+    fn block_d(&self, b: usize, ctx: usize) -> Result<&str> {
+        Self::get(&self.block_d, (b, ctx), "block_d")
+    }
+
+    fn head_d(&self, b: usize) -> Result<&str> {
+        Self::get(&self.head_d, b, "head_d")
     }
 }
 
@@ -146,11 +273,14 @@ impl Metrics {
 
 pub struct ServingEngine {
     rt: Runtime,
-    cm: Arc<CompressedModel>,
+    cm: CompressedModel,
     consts: Vec<BlockConsts>,
-    embed: HostTensor,
-    head: HostTensor,
-    norm_final: HostTensor,
+    /// zero-copy views over the container's shared tensors, populated
+    /// per `opts.role`: `embed` on first shards, `head`/`norm_final` on
+    /// last shards, none on middle shards
+    embed: Option<HostTensor>,
+    head: Option<HostTensor>,
+    norm_final: Option<HostTensor>,
     /// resident code tensors (F8Resident / Bf16Resident modes)
     resident_codes: Option<Vec<Vec<HostTensor>>>,
     /// double-buffer code arena (EntQuant mode only)
@@ -162,6 +292,16 @@ pub struct ServingEngine {
     opts: EngineOpts,
     value_table: [f32; 256],
     offload_paths: Vec<String>,
+    /// per-(phase, batch, slot) program names, precomputed so the hot
+    /// loops never allocate a name
+    names: ProgNames,
+    /// blocks ANS-decoded for load-time residency (construction plus
+    /// every splice) — the splice tests pin that a reroute decodes only
+    /// the absorbed range
+    residency_decodes: Cell<usize>,
+    /// blocks absorbed through `reopen_blocks` (the
+    /// `recovery_spliced_blocks` gauge)
+    spliced: Cell<usize>,
 }
 
 impl ServingEngine {
@@ -175,19 +315,19 @@ impl ServingEngine {
         );
         let value_table = cm.fmt.value_table();
         let consts = build_consts(&cm);
-        let embed = HostTensor::f32(cm.embed.data.clone(), &[cm.embed.rows, cm.embed.cols]);
-        let head = HostTensor::f32(cm.head.data.clone(), &[cm.head.rows, cm.head.cols]);
-        let norm_final = HostTensor::f32(cm.norm_final.clone(), &[cm.norm_final.len()]);
-
+        // role-gated zero-copy views: an Arc bump each, backed by the
+        // container's shared storage — middle shards hold none at all
+        let (embed, head, norm_final) = build_role_views(&cm, opts.role);
         // §A.1 double buffering: EntQuant serving recycles two
         // block-sized code buffers across blocks and decode steps
         let arena = build_arena(&cm, &opts);
         let pool = crate::parallel::Pool::new(opts.decode_threads);
-        let (resident_codes, offload_paths) =
+        let names = ProgNames::new(&rt.manifest);
+        let (resident_codes, offload_paths, decodes) =
             build_residency(&cm, &opts, &value_table, pool.threads(), resolve_offload_dir(&opts))?;
         Ok(ServingEngine {
             rt,
-            cm: Arc::new(cm),
+            cm,
             consts,
             embed,
             head,
@@ -198,20 +338,61 @@ impl ServingEngine {
             opts,
             value_table,
             offload_paths,
+            names,
+            residency_decodes: Cell::new(decodes),
+            spliced: Cell::new(0),
         })
+    }
+
+    /// Re-aim this engine's pipeline role (reroutes and rejoins promote
+    /// or demote shards mid-stream).  Costs an Arc bump per view, never
+    /// a tensor copy.
+    pub fn set_role(&mut self, role: ShardRole) {
+        self.opts.role = role;
+        let (embed, head, norm_final) = build_role_views(&self.cm, role);
+        self.embed = embed;
+        self.head = head;
+        self.norm_final = norm_final;
+    }
+
+    pub fn role(&self) -> ShardRole {
+        self.opts.role
+    }
+
+    /// Blocks ANS-decoded for load-time residency so far (construction
+    /// plus splices; always 0 under EntQuant, which decodes on the hot
+    /// path instead).
+    pub fn residency_decodes(&self) -> usize {
+        self.residency_decodes.get()
+    }
+
+    /// Blocks absorbed through `reopen_blocks` since construction.
+    pub fn spliced_blocks(&self) -> usize {
+        self.spliced.get()
     }
 
     /// Re-open a block `range` of the full container on this live
     /// engine — the shard-failure reroute primitive.  The absorbed
     /// blocks join this engine's own (`at_front` when the range
     /// precedes them in global block order, so the merged set stays a
-    /// contiguous global range), and every load-time structure is
-    /// rebuilt to match: per-block consts, the double-buffer arena
-    /// (resized to the new largest block), resident code tensors or
-    /// offload files per the residency mode.  Everything is built
-    /// before anything is committed, so a failed reopen (e.g. a corrupt
-    /// absorbed bitstream under a resident mode) leaves the engine
-    /// serving its old range untouched.
+    /// contiguous global range).  Block storage is shared with the
+    /// container (`Arc` bumps — no compressed bytes are copied), and
+    /// the reopen is an incremental **splice**: only the absorbed
+    /// range's consts are built, only the absorbed blocks are decoded
+    /// under resident/offload modes, and the double-buffer arena — with
+    /// its fresh-alloc ledger — is kept (grown only if an absorbed
+    /// block is larger than every current one).  Residency state for
+    /// untouched blocks is preserved verbatim, which is what shrinks
+    /// the recovery stall from O(merged set) to O(absorbed range).
+    ///
+    /// Everything fallible runs against temporaries before anything is
+    /// committed, so a failed reopen (e.g. a corrupt absorbed bitstream
+    /// under a resident mode, or an injected splice fault) leaves the
+    /// engine serving its old range untouched.
+    ///
+    /// `opts.splice = false` forces the legacy full rebuild (every
+    /// structure rebuilt, every block re-decoded) — kept for the
+    /// recovery-stall comparison in `benches/serve.rs`.
     pub fn reopen_blocks(
         &mut self,
         full: &CompressedModel,
@@ -234,8 +415,14 @@ impl ServingEngine {
             "reopen_blocks: quant format mismatch (absorbed blocks would dequantize \
              through the wrong value table)"
         );
-        let absorbed = full.blocks[range].to_vec();
-        let mut blocks = Vec::with_capacity(self.cm.blocks.len() + absorbed.len());
+        // scripted mid-splice faults (tests/drills) are taken before
+        // any state is touched — a faulted splice must leave the engine
+        // exactly as it was
+        self.rt.fault_probe("splice_reopen")?;
+        let absorbed: Vec<Arc<CompressedBlock>> = full.blocks[range].to_vec();
+        let n_abs = absorbed.len();
+        let n_old = self.cm.blocks.len();
+        let mut blocks = Vec::with_capacity(n_old + n_abs);
         if at_front {
             blocks.extend(absorbed);
             blocks.extend(self.cm.blocks.iter().cloned());
@@ -248,25 +435,114 @@ impl ServingEngine {
             fmt: self.cm.fmt,
             embed: self.cm.embed.clone(),
             head: self.cm.head.clone(),
-            norm_final: self.cm.norm_final.clone(),
+            norm_final: Arc::clone(&self.cm.norm_final),
             blocks,
         };
+        if !self.opts.splice {
+            return self.reopen_full(cm, n_abs);
+        }
+        // --- build the absorbed range's state (all fallible work
+        // happens here, against temporaries)
+        let abs_local = if at_front { 0..n_abs } else { n_old..n_old + n_abs };
+        let abs_consts = build_consts_range(&cm, abs_local.clone());
+        let threads = self.pool.threads();
+        let table = &self.value_table;
+        let mut abs_resident: Vec<Vec<HostTensor>> = Vec::new();
+        let mut abs_paths: Vec<String> = Vec::new();
+        let mut decodes = 0usize;
+        match self.opts.residency {
+            Residency::Bf16Resident | Residency::F8Resident => {
+                for b in abs_local.clone() {
+                    let codes = decode_codes(&cm, table, None, b, threads);
+                    abs_resident.push(codes.map_err(|e| anyhow!(e))?);
+                    decodes += 1;
+                }
+            }
+            Residency::DiskOffload => {
+                // a FRESH directory per splice, keyed by the monotone
+                // spliced-block counter (block COUNTS can shrink again
+                // when a rejoin truncates the donor, so they would not
+                // be unique): the live engine's current files are never
+                // touched, so a failed splice leaves them serving
+                let dir =
+                    format!("{}/splice_{}", resolve_offload_dir(&self.opts), self.spliced.get());
+                std::fs::create_dir_all(&dir)?;
+                for b in abs_local.clone() {
+                    abs_paths.push(write_offload_block(&cm, b, table, threads, &dir)?);
+                    decodes += 1;
+                }
+            }
+            Residency::EntQuant => {}
+        }
+        // --- commit (infallible from here): splice absorbed state in,
+        // preserving every untouched block's state and the warm arena
+        if at_front {
+            self.consts.splice(0..0, abs_consts);
+            if let Some(rc) = self.resident_codes.as_mut() {
+                rc.splice(0..0, abs_resident);
+            }
+            self.offload_paths.splice(0..0, abs_paths);
+        } else {
+            self.consts.extend(abs_consts);
+            if let Some(rc) = self.resident_codes.as_mut() {
+                rc.extend(abs_resident);
+            }
+            self.offload_paths.extend(abs_paths);
+        }
+        if let Some(arena) = self.arena.as_mut() {
+            arena.ensure_capacity(cm.blocks.iter().map(|b| b.n_symbols()).max().unwrap_or(0));
+        }
+        self.cm = cm;
+        self.residency_decodes.set(self.residency_decodes.get() + decodes);
+        self.spliced.set(self.spliced.get() + n_abs);
+        Ok(())
+    }
+
+    /// The legacy reroute reopen: rebuild every load-time structure for
+    /// the merged set (full residency re-decode, fresh arena).  Only
+    /// reachable via `opts.splice = false`; the bench uses it to track
+    /// the recovery stall the splice saves.
+    fn reopen_full(&mut self, cm: CompressedModel, n_abs: usize) -> Result<()> {
         let consts = build_consts(&cm);
         let arena = build_arena(&cm, &self.opts);
-        // a FRESH offload directory per reopen (block counts strictly
-        // grow across reopens, so the suffix is unique): the live
-        // engine's current files are never touched, so a failed rebuild
-        // truly leaves it serving its old range — the old directory is
-        // merely leaked, never corrupted
+        // fresh directory per reopen, keyed by the monotone spliced
+        // counter for the same uniqueness reason as the splice path
         let offload_dir =
-            format!("{}/reopen_{}", resolve_offload_dir(&self.opts), cm.blocks.len());
-        let (resident_codes, offload_paths) =
+            format!("{}/reopen_{}", resolve_offload_dir(&self.opts), self.spliced.get());
+        let (resident_codes, offload_paths, decodes) =
             build_residency(&cm, &self.opts, &self.value_table, self.pool.threads(), offload_dir)?;
-        self.cm = Arc::new(cm);
+        self.cm = cm;
         self.consts = consts;
         self.arena = arena;
         self.resident_codes = resident_codes;
         self.offload_paths = offload_paths;
+        self.residency_decodes.set(self.residency_decodes.get() + decodes);
+        self.spliced.set(self.spliced.get() + n_abs);
+        Ok(())
+    }
+
+    /// Release this engine's trailing blocks, keeping local indices
+    /// `0..keep` — the donor half of a rejoin: the replacement shard
+    /// opens the released range from the shared container, and this
+    /// engine simply forgets it.  State for kept blocks (consts,
+    /// resident codes, offload files, the warm arena) is untouched;
+    /// released offload files are removed best-effort.
+    pub fn truncate_blocks(&mut self, keep: usize) -> Result<()> {
+        anyhow::ensure!(
+            keep >= 1 && keep <= self.cm.blocks.len(),
+            "truncate_blocks: keep {keep} of {} blocks",
+            self.cm.blocks.len()
+        );
+        self.cm.blocks.truncate(keep);
+        self.consts.truncate(keep);
+        if let Some(rc) = self.resident_codes.as_mut() {
+            rc.truncate(keep);
+        }
+        if keep < self.offload_paths.len() {
+            for p in self.offload_paths.drain(keep..) {
+                let _ = std::fs::remove_file(p);
+            }
+        }
         Ok(())
     }
 
@@ -387,13 +663,21 @@ impl ServingEngine {
         inputs
     }
 
+    /// The embed-table view — `Err` on a middle shard, which holds
+    /// none (see `ShardRole`).
+    fn embed_view(&self) -> Result<&HostTensor> {
+        self.embed
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine has no embed role (middle shard runs blocks only)"))
+    }
+
     /// Embed one packed batch's tokens (prefill stage 1 of 3).
     pub(crate) fn embed_prefill(&self, batch: &Batch) -> Result<HostTensor> {
         let (b, s) = batch.slot;
         let tokens = HostTensor::i32(batch.tokens.iter().map(|&t| t as i32).collect(), &[b, s]);
         Ok(self
             .rt
-            .call(&format!("embed_p_b{b}_s{s}"), &[tokens, self.embed.clone()])?
+            .call(self.names.embed_p((b, s))?, &[tokens, self.embed_view()?.clone()])?
             .remove(0))
     }
 
@@ -408,15 +692,14 @@ impl ServingEngine {
         slot: (usize, usize),
         metrics: &mut Metrics,
     ) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
-        let (b, s) = slot;
-        let exec_name = format!("block_p_b{b}_s{s}");
+        let exec_name = self.names.block_p(slot)?;
         let mut x = x0;
         let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(self.cm.blocks.len());
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
             let t1 = std::time::Instant::now();
             let inputs = self.block_inputs(blk, x.clone(), codes, vec![starts.clone()]);
-            let mut out = self.rt.call(&exec_name, &inputs)?;
+            let mut out = self.rt.call(exec_name, &inputs)?;
             x = out.remove(0);
             let k = out.remove(0);
             let v = out.remove(0);
@@ -428,13 +711,18 @@ impl ServingEngine {
         Ok((x, caches))
     }
 
+    /// The head + final-norm views — `Err` on non-last shards.
+    fn head_views(&self) -> Result<(&HostTensor, &HostTensor)> {
+        match (&self.norm_final, &self.head) {
+            (Some(n), Some(h)) => Ok((n, h)),
+            _ => Err(anyhow!("engine has no head role (non-last shard runs blocks only)")),
+        }
+    }
+
     /// Final norm + LM head over prefill activations (stage 3 of 3).
     pub(crate) fn head_prefill(&self, x: HostTensor, slot: (usize, usize)) -> Result<HostTensor> {
-        let (b, s) = slot;
-        Ok(self
-            .rt
-            .call(&format!("head_p_b{b}_s{s}"), &[x, self.norm_final.clone(), self.head.clone()])?
-            .remove(0))
+        let (norm, head) = self.head_views()?;
+        Ok(self.rt.call(self.names.head_p(slot)?, &[x, norm.clone(), head.clone()])?.remove(0))
     }
 
     /// Prefill one packed batch: returns (full logits [B,S,V], caches).
@@ -452,7 +740,7 @@ impl ServingEngine {
     /// Embed one decode step's tokens.
     pub(crate) fn embed_decode(&self, next: &[i32], b: usize) -> Result<HostTensor> {
         let toks = HostTensor::i32(next.to_vec(), &[b, 1]);
-        Ok(self.rt.call(&format!("embed_d_b{b}"), &[toks, self.embed.clone()])?.remove(0))
+        Ok(self.rt.call(self.names.embed_d(b)?, &[toks, self.embed_view()?.clone()])?.remove(0))
     }
 
     /// Run this engine's blocks for one decode step, updating the
@@ -474,7 +762,7 @@ impl ServingEngine {
             caches.len(),
             self.cm.blocks.len()
         );
-        let block_name = format!("block_d_b{slot_b}_c{ctx}");
+        let block_name = self.names.block_d(slot_b, ctx)?;
         let rt = &self.rt;
         let consts = &self.consts;
         let mut x = x0;
@@ -492,7 +780,7 @@ impl ServingEngine {
             inputs.push(vc);
             inputs.push(HostTensor::scalar_i32(pos));
             inputs.push(starts.clone());
-            let mut out = rt.call(&block_name, &inputs)?;
+            let mut out = rt.call(block_name, &inputs)?;
             x = out.remove(0);
             caches[blk] = (out.remove(0), out.remove(0));
             metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
@@ -504,10 +792,8 @@ impl ServingEngine {
 
     /// Final norm + LM head for one decode step.
     pub(crate) fn head_decode(&self, x: HostTensor, b: usize) -> Result<HostTensor> {
-        Ok(self
-            .rt
-            .call(&format!("head_d_b{b}"), &[x, self.norm_final.clone(), self.head.clone()])?
-            .remove(0))
+        let (norm, head) = self.head_views()?;
+        Ok(self.rt.call(self.names.head_d(b)?, &[x, norm.clone(), head.clone()])?.remove(0))
     }
 
     /// Prefill a batch into a step-wise `DecodeState`: caches expanded
@@ -851,11 +1137,42 @@ pub(crate) fn copy_cache_lane(
     Ok(())
 }
 
+/// A zero-copy `HostTensor` view over a container's shared matrix.
+fn shared_view(m: &SharedMat) -> HostTensor {
+    HostTensor::f32_view(Arc::clone(&m.data), 0, m.rows * m.cols, &[m.rows, m.cols])
+}
+
+/// Role-gated views over the container's shared tensors: (embed, head,
+/// norm_final).  Each is an Arc bump into the single shared storage;
+/// middle shards (`first == last == false`) materialize none.
+fn build_role_views(
+    cm: &CompressedModel,
+    role: ShardRole,
+) -> (Option<HostTensor>, Option<HostTensor>, Option<HostTensor>) {
+    let embed = role.first.then(|| shared_view(&cm.embed));
+    let head = role.last.then(|| shared_view(&cm.head));
+    let norm_final = role.last.then(|| {
+        HostTensor::f32_view(
+            Arc::clone(&cm.norm_final),
+            0,
+            cm.norm_final.len(),
+            &[cm.norm_final.len()],
+        )
+    });
+    (embed, head, norm_final)
+}
+
 /// Per-block constant tensors (scales + norms) for every block of
-/// `cm` — shared by engine construction and `reopen_blocks`.
+/// `cm` — engine construction and the full-reopen path.
 fn build_consts(cm: &CompressedModel) -> Vec<BlockConsts> {
-    let mut consts = Vec::with_capacity(cm.blocks.len());
-    for cb in &cm.blocks {
+    build_consts_range(cm, 0..cm.blocks.len())
+}
+
+/// Per-block constant tensors for a sub-range of `cm`'s blocks — the
+/// splice path builds consts for the absorbed range only.
+fn build_consts_range(cm: &CompressedModel, range: std::ops::Range<usize>) -> Vec<BlockConsts> {
+    let mut consts = Vec::with_capacity(range.len());
+    for cb in &cm.blocks[range] {
         let scales = cb
             .layers
             .iter()
@@ -892,19 +1209,18 @@ pub(crate) fn resolve_offload_dir(opts: &EngineOpts) -> String {
 
 /// Load-time residency data for `cm` under `opts`: resident code
 /// tensors (Bf16/F8 modes) or disk-offload files written into
-/// `offload_dir` (DiskOffload), decoded fresh without an arena.
-/// Shared by engine construction and `reopen_blocks` so a rerouted
-/// engine rebuilds exactly the load-time state for its merged block
-/// set.  `reopen_blocks` passes a *fresh* directory so a mid-rebuild
-/// failure can never clobber the files the live engine still serves
-/// from.
+/// `offload_dir` (DiskOffload), decoded fresh without an arena.  The
+/// returned count is how many blocks were ANS-decoded (the splice
+/// tests compare it against the absorbed-range size).  Shared by
+/// engine construction and the full-reopen path; the splice path
+/// decodes its absorbed range inline instead.
 fn build_residency(
     cm: &CompressedModel,
     opts: &EngineOpts,
     value_table: &[f32; 256],
     threads: usize,
     offload_dir: String,
-) -> Result<(Option<Vec<Vec<HostTensor>>>, Vec<String>)> {
+) -> Result<(Option<Vec<Vec<HostTensor>>>, Vec<String>, usize)> {
     match opts.residency {
         Residency::Bf16Resident | Residency::F8Resident => {
             let mut all = Vec::with_capacity(cm.blocks.len());
@@ -913,29 +1229,43 @@ fn build_residency(
                     decode_codes(cm, value_table, None, b, threads).map_err(|e| anyhow!(e))?;
                 all.push(codes);
             }
-            Ok((Some(all), Vec::new()))
+            let n = all.len();
+            Ok((Some(all), Vec::new(), n))
         }
         Residency::DiskOffload => {
             let dir = offload_dir;
             std::fs::create_dir_all(&dir)?;
             let mut paths = Vec::with_capacity(cm.blocks.len());
             for b in 0..cm.blocks.len() {
-                let codes =
-                    decode_codes(cm, value_table, None, b, threads).map_err(|e| anyhow!(e))?;
-                let path = format!("{dir}/block_{b}.f32");
-                let mut bytes = Vec::new();
-                for t in &codes {
-                    for &v in t.as_f32() {
-                        bytes.extend_from_slice(&v.to_le_bytes());
-                    }
-                }
-                std::fs::write(&path, bytes)?;
-                paths.push(path);
+                paths.push(write_offload_block(cm, b, value_table, threads, &dir)?);
             }
-            Ok((None, paths))
+            let n = paths.len();
+            Ok((None, paths, n))
         }
-        Residency::EntQuant => Ok((None, Vec::new())),
+        Residency::EntQuant => Ok((None, Vec::new(), 0)),
     }
+}
+
+/// Decode block `b` of `cm` and write its f32 codes as an offload file
+/// under `dir`, returning the path — one block's worth of the
+/// DiskOffload load-time work, shared by construction and the splice.
+fn write_offload_block(
+    cm: &CompressedModel,
+    b: usize,
+    value_table: &[f32; 256],
+    threads: usize,
+    dir: &str,
+) -> Result<String> {
+    let codes = decode_codes(cm, value_table, None, b, threads).map_err(|e| anyhow!(e))?;
+    let path = format!("{dir}/block_{b}.f32");
+    let mut bytes = Vec::new();
+    for t in &codes {
+        for &v in t.as_f32() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(&path, bytes)?;
+    Ok(path)
 }
 
 /// ANS-decode one block of `cm` straight to f32 code tensors — the
@@ -1221,6 +1551,37 @@ mod tests {
             engine.decode_step(&mut one).unwrap();
         }
         assert_eq!(one.outputs[0], want[1]);
+    }
+
+    #[test]
+    fn middle_role_engine_refuses_embed_and_head() {
+        let cm = tiny_compressed();
+        let rt = native_rt(&cm);
+        let opts =
+            EngineOpts { role: ShardRole { first: false, last: false }, ..Default::default() };
+        let engine = ServingEngine::new(rt, cm, opts).unwrap();
+        let batch = &pack(&[req(9, 6)], &[(1, 16)])[0];
+        let Err(e) = engine.prefill_state(batch) else {
+            panic!("a middle shard must not embed");
+        };
+        assert!(format!("{e:#}").contains("embed role"), "{e:#}");
+    }
+
+    #[test]
+    fn role_promotion_restores_the_full_pipeline() {
+        // a middle-role engine promoted to first+last serves exactly
+        // like a from-birth full engine — promotion is an Arc bump over
+        // the container's shared tensors, so nothing can drift
+        let cm = tiny_compressed();
+        let rt = native_rt(&cm);
+        let opts =
+            EngineOpts { role: ShardRole { first: false, last: false }, ..Default::default() };
+        let mut engine = ServingEngine::new(rt, cm, opts).unwrap();
+        engine.set_role(ShardRole::default());
+        let batch = &pack(&[req(1, 8)], &[(1, 16)])[0];
+        let (got, _) = engine.generate(batch, 6).unwrap();
+        let (want, _) = native_engine().generate(batch, 6).unwrap();
+        assert_eq!(got, want, "promoted engine diverged from a full-role engine");
     }
 
     #[test]

@@ -6,4 +6,4 @@ pub mod batcher;
 pub mod engine;
 
 pub use batcher::{pack, select_slot, Batch, Request};
-pub use engine::{DecodeState, EngineOpts, Metrics, Residency, ServingEngine};
+pub use engine::{DecodeState, EngineOpts, Metrics, Residency, ServingEngine, ShardRole};

@@ -23,6 +23,8 @@ fn usage() -> ! {
            eval     --model <size|path> [--compressed P] [--windows N]\n\
            serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N] [--shards N]\n\
                     [--fault-shard K --fault-step S]  (fault drill: kill shard K at decode step S; reroutes + completes)\n\
+                    [--rejoin-shard N --rejoin-step S] (rejoin drill: N replacement runtime(s) — a COUNT, default 1 —\n\
+                     join S decode steps after a reroute, re-splitting the merged range: the contract->expand cycle)\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
            ablate-blockwise | report-all\n\
          --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
@@ -171,6 +173,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         arg_val(args, "--fault-shard").map(|v| v.parse()).transpose()?;
     let fault_step: usize =
         arg_val(args, "--fault-step").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    // optional rejoin drill (the inverse): provision replacement
+    // runtime(s) that re-split the merged range after the reroute.
+    // Either flag arms the drill with at least one spare, so
+    // `--rejoin-step S` alone (or a zero count) cannot silently
+    // disable it.
+    let rejoin_flagged = args.iter().any(|a| a == "--rejoin-shard" || a == "--rejoin-step");
+    let rejoin_count: usize =
+        arg_val(args, "--rejoin-shard").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let rejoin_shards = if rejoin_flagged { rejoin_count.max(1) } else { 0 };
+    let rejoin_step: usize =
+        arg_val(args, "--rejoin-step").map(|v| v.parse()).transpose()?.unwrap_or(4);
 
     // shard the blocks by compressed bytes; each shard gets its own
     // runtime, pool and decode arena
@@ -198,6 +211,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         plan,
         &EngineOpts { residency, decode_threads, ..Default::default() },
     )?;
+    for _ in 0..rejoin_shards {
+        engine.arm_rejoin(Runtime::new(&art)?, rejoin_step);
+    }
+    if rejoin_shards > 0 {
+        println!(
+            "rejoin drill: {rejoin_shards} replacement runtime(s) armed to join {rejoin_step} decode step(s) after a reroute"
+        );
+    }
     println!(
         "serving on {platform}: {} shard(s) {:?} ({:?} residency, {} decode threads/shard)",
         engine.n_shards(),
@@ -220,20 +241,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = scheduler.metrics();
     println!(
-        "total: {} tokens in {wall:.2}s ({:.1} tok/s), p50 ttft {:.1} ms, {} fused admissions ({} speculative), {} reroute(s), shard fresh allocs {:?}",
+        "total: {} tokens in {wall:.2}s ({:.1} tok/s), p50 ttft {:.1} ms, {} fused admissions ({} speculative), {} reroute(s), {} rejoin(s), shard fresh allocs {:?}",
         m.tokens,
         m.tokens as f64 / wall,
         m.p50_ttft_ms,
         m.fused_admissions,
         m.speculative_admissions,
         m.reroutes,
+        m.rejoins,
         m.shard_fresh_allocs
+    );
+    println!(
+        "memory: weight_copies={} resident_compressed={} B, {} block(s) spliced by recovery ({:.2} ms stall)",
+        m.weight_copies,
+        m.resident_compressed_bytes,
+        m.recovery_spliced_blocks,
+        m.recovery_stall_ms
     );
     if let Some(plan_faults) = &faults {
         println!(
-            "fault drill: {} scripted fault(s) fired, {} reroute(s), {} request(s) failed",
+            "fault drill: {} scripted fault(s) fired, {} reroute(s), {} rejoin(s), {} request(s) failed",
             plan_faults.fired(),
             m.reroutes,
+            m.rejoins,
             m.failed
         );
     }

@@ -35,10 +35,11 @@ pub struct FaultScript {
 }
 
 /// The shared injection schedule: scripted decode faults plus optional
-/// one-shot prefill faults, each firing at most once.
+/// one-shot prefill and splice faults, each firing at most once.
 pub struct FaultPlan {
     scripts: Mutex<Vec<(FaultScript, bool)>>,
     prefill_shards: Mutex<Vec<usize>>,
+    splice_shards: Mutex<Vec<usize>>,
     fired: AtomicUsize,
 }
 
@@ -47,6 +48,7 @@ impl FaultPlan {
         Arc::new(FaultPlan {
             scripts: Mutex::new(scripts.into_iter().map(|s| (s, false)).collect()),
             prefill_shards: Mutex::new(Vec::new()),
+            splice_shards: Mutex::new(Vec::new()),
             fired: AtomicUsize::new(0),
         })
     }
@@ -77,6 +79,14 @@ impl FaultPlan {
         self.prefill_shards.lock().unwrap().push(shard);
     }
 
+    /// Arm a one-shot fault on `shard`'s next reroute splice
+    /// (`ServingEngine::reopen_blocks` probes before touching state),
+    /// covering the mid-recovery failure path: the splice must abort
+    /// cleanly and leave the engine serving its old range.
+    pub fn fail_next_splice(&self, shard: usize) {
+        self.splice_shards.lock().unwrap().push(shard);
+    }
+
     /// How many injections have fired so far (tests assert the script
     /// actually ran).
     pub fn fired(&self) -> usize {
@@ -96,10 +106,18 @@ impl FaultPlan {
     }
 
     fn fire_prefill(&self, shard: usize) -> bool {
-        let mut shards = self.prefill_shards.lock().unwrap();
+        Self::fire_one_shot(&self.prefill_shards, &self.fired, shard)
+    }
+
+    fn fire_splice(&self, shard: usize) -> bool {
+        Self::fire_one_shot(&self.splice_shards, &self.fired, shard)
+    }
+
+    fn fire_one_shot(armed: &Mutex<Vec<usize>>, fired: &AtomicUsize, shard: usize) -> bool {
+        let mut shards = armed.lock().unwrap();
         if let Some(i) = shards.iter().position(|&s| s == shard) {
             shards.remove(i);
-            self.fired.fetch_add(1, Ordering::Relaxed);
+            fired.fetch_add(1, Ordering::Relaxed);
             return true;
         }
         false
@@ -142,6 +160,8 @@ impl FaultRuntime {
             }
         } else if name.starts_with("block_p_") && self.plan.fire_prefill(self.shard) {
             anyhow::bail!("injected prefill fault: shard {}", self.shard);
+        } else if name.starts_with("splice") && self.plan.fire_splice(self.shard) {
+            anyhow::bail!("injected splice fault: shard {}", self.shard);
         }
         Ok(())
     }
@@ -187,6 +207,19 @@ mod tests {
         s0.check("embed_p_b4_s16").unwrap(); // only block_p triggers
         assert!(s0.check("block_p_b4_s16").is_err());
         s0.check("block_p_b4_s16").unwrap(); // one-shot
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn splice_fault_is_one_shot_and_per_shard() {
+        let plan = FaultPlan::scripted(Vec::new());
+        plan.fail_next_splice(1);
+        let s0 = FaultRuntime::new(Arc::clone(&plan), 0, 2);
+        let s1 = FaultRuntime::new(Arc::clone(&plan), 1, 2);
+        s0.check("splice_reopen").unwrap(); // other shard unaffected
+        s1.check("block_d_b1_c8").unwrap(); // only splice probes trigger
+        assert!(s1.check("splice_reopen").is_err());
+        s1.check("splice_reopen").unwrap(); // one-shot
         assert_eq!(plan.fired(), 1);
     }
 

@@ -268,6 +268,17 @@ impl Runtime {
         self
     }
 
+    /// Consult the armed fault injector (if any) with a synthetic probe
+    /// name — lets non-executable paths (e.g. the reroute splice in
+    /// `ServingEngine::reopen_blocks`) take scripted faults too.  A
+    /// no-op without an injector.
+    pub fn fault_probe(&self, name: &str) -> Result<()> {
+        match &self.fault {
+            Some(f) => f.check(name),
+            None => Ok(()),
+        }
+    }
+
     pub fn is_native(&self) -> bool {
         matches!(self.backend, Backend::Native(_))
     }

@@ -9,7 +9,7 @@
 //! mutex-guarded vec; one push per request, read only at snapshot
 //! time), so the driver's hot loop pays near nothing.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -36,6 +36,20 @@ pub struct ServeMetrics {
     /// shard failures rerouted onto surviving engines (the interrupted
     /// step was replayed; in-flight requests kept their trajectories)
     reroutes: AtomicUsize,
+    /// replacement shards that rejoined after a reroute (a merged range
+    /// re-split, the topology expanded back toward its target)
+    rejoins: AtomicUsize,
+    /// wall time spent inside successful recoveries (reroute splices) —
+    /// the recovery-stall series `benches/serve.rs` tracks, in µs
+    recovery_stall_us: AtomicU64,
+    /// gauge: max distinct storage copies of any compressed block
+    /// across the engine's containers and shard slices; Arc-backed
+    /// sharing keeps this at exactly 1 (the one-copy invariant)
+    weight_copies: AtomicUsize,
+    /// gauge: resident compressed bytes, deduplicated by storage
+    resident_compressed_bytes: AtomicUsize,
+    /// gauge: blocks spliced into survivors by reroutes so far
+    recovery_spliced_blocks: AtomicUsize,
     tokens: AtomicUsize,
     decode_steps: AtomicUsize,
     queue_depth: AtomicUsize,
@@ -59,6 +73,11 @@ pub struct MetricsSnapshot {
     pub adoption_catchup_steps: usize,
     pub adoption_prefills: usize,
     pub reroutes: usize,
+    pub rejoins: usize,
+    pub recovery_stall_ms: f64,
+    pub weight_copies: usize,
+    pub resident_compressed_bytes: usize,
+    pub recovery_spliced_blocks: usize,
     pub tokens: usize,
     pub decode_steps: usize,
     pub queue_depth: usize,
@@ -88,6 +107,13 @@ impl ServeMetrics {
             adoption_catchup_steps: AtomicUsize::new(0),
             adoption_prefills: AtomicUsize::new(0),
             reroutes: AtomicUsize::new(0),
+            rejoins: AtomicUsize::new(0),
+            recovery_stall_us: AtomicU64::new(0),
+            // one logical copy is the ground state even before the
+            // driver's first gauge sweep
+            weight_copies: AtomicUsize::new(1),
+            resident_compressed_bytes: AtomicUsize::new(0),
+            recovery_spliced_blocks: AtomicUsize::new(0),
             tokens: AtomicUsize::new(0),
             decode_steps: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
@@ -134,6 +160,26 @@ impl ServeMetrics {
         self.reroutes.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn inc_rejoins(&self) {
+        self.rejoins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_recovery_stall_us(&self, us: u64) {
+        self.recovery_stall_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn set_weight_copies(&self, copies: usize) {
+        self.weight_copies.store(copies, Ordering::Relaxed);
+    }
+
+    pub fn set_resident_compressed_bytes(&self, bytes: usize) {
+        self.resident_compressed_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn set_recovery_spliced_blocks(&self, blocks: usize) {
+        self.recovery_spliced_blocks.store(blocks, Ordering::Relaxed);
+    }
+
     pub fn add_tokens(&self, n: usize) {
         self.tokens.fetch_add(n, Ordering::Relaxed);
     }
@@ -177,6 +223,11 @@ impl ServeMetrics {
             adoption_catchup_steps: self.adoption_catchup_steps.load(Ordering::Relaxed),
             adoption_prefills: self.adoption_prefills.load(Ordering::Relaxed),
             reroutes: self.reroutes.load(Ordering::Relaxed),
+            rejoins: self.rejoins.load(Ordering::Relaxed),
+            recovery_stall_ms: self.recovery_stall_us.load(Ordering::Relaxed) as f64 / 1e3,
+            weight_copies: self.weight_copies.load(Ordering::Relaxed),
+            resident_compressed_bytes: self.resident_compressed_bytes.load(Ordering::Relaxed),
+            recovery_spliced_blocks: self.recovery_spliced_blocks.load(Ordering::Relaxed),
             tokens,
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
@@ -236,6 +287,11 @@ mod tests {
         m.add_adoption_catchup_steps(4);
         m.inc_adoption_prefills();
         m.inc_reroutes();
+        m.inc_rejoins();
+        m.add_recovery_stall_us(2500);
+        m.set_weight_copies(1);
+        m.set_resident_compressed_bytes(4096);
+        m.set_recovery_spliced_blocks(3);
         m.add_tokens(42);
         m.inc_decode_steps();
         m.set_queue_depth(2);
@@ -253,6 +309,11 @@ mod tests {
         assert_eq!(s.adoption_catchup_steps, 4);
         assert_eq!(s.adoption_prefills, 1);
         assert_eq!(s.reroutes, 1);
+        assert_eq!(s.rejoins, 1);
+        assert!((s.recovery_stall_ms - 2.5).abs() < 1e-9);
+        assert_eq!(s.weight_copies, 1);
+        assert_eq!(s.resident_compressed_bytes, 4096);
+        assert_eq!(s.recovery_spliced_blocks, 3);
         assert_eq!(s.tokens, 42);
         assert_eq!(s.decode_steps, 1);
         assert_eq!(s.queue_depth, 2);

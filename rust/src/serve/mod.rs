@@ -25,11 +25,24 @@
 //! engine or a shard pipeline identically — and, through the native
 //! executor, the whole stack runs end-to-end in CI.
 //!
-//! The stack is **fault-tolerant**: a shard failure mid-batch reroutes
-//! that shard's block range onto survivors (`StepEngine::try_recover`)
-//! and the scheduler replays the interrupted decode step, so in-flight
-//! requests still complete byte-identically; `runtime::fault` injects
-//! deterministic failures to prove it in CI (`rust/tests/serve.rs`).
+//! The stack is **fault-tolerant and elastic**: a shard failure
+//! mid-batch reroutes that shard's block range onto survivors
+//! (`StepEngine::try_recover` — an incremental splice that decodes
+//! only the absorbed range) and the scheduler replays the interrupted
+//! decode step, so in-flight requests still complete byte-identically;
+//! a provisioned replacement later re-splits the merged range back out
+//! (`StepEngine::try_rejoin`, polled between decode steps).
+//! `runtime::fault` injects deterministic failures to prove all of it
+//! in CI (`rust/tests/serve.rs`).
+//!
+//! Weight memory is **shared, not multiplied**: `CompressedModel` is
+//! Arc-backed, so shard slices, the retained reroute container, and
+//! splice merges reference one allocation per block — the
+//! `weight_copies` / `resident_compressed_bytes` gauges pin exactly
+//! one logical copy at any shard count.  The scheduler driver sweeps
+//! these gauges at startup and after every successful reroute/rejoin
+//! (the only events that can move them) — a new topology-mutating
+//! path must refresh them itself.
 
 pub mod metrics;
 pub mod scheduler;
@@ -73,6 +86,37 @@ pub trait StepEngine: Send {
     fn try_recover(&self) -> bool {
         false
     }
+
+    /// Expand a contracted topology (a provisioned replacement shard
+    /// re-splits a merged range).  Polled by the scheduler driver
+    /// between decode steps; the default has nothing to expand.
+    fn try_rejoin(&self) -> bool {
+        false
+    }
+
+    /// `try_rejoin` for a moment the caller knows the engine is idle
+    /// (no in-flight batch, nothing queued): any post-reroute pacing
+    /// delay is waived, since an idle rejoin stalls nobody.
+    fn try_rejoin_idle(&self) -> bool {
+        self.try_rejoin()
+    }
+
+    /// Max distinct storage copies of any compressed block across the
+    /// engine's containers/slices — exactly 1 under Arc-backed sharing
+    /// (the invariant the serve tests pin).
+    fn weight_copies(&self) -> usize {
+        1
+    }
+
+    /// Resident compressed bytes, deduplicated by storage.
+    fn resident_compressed_bytes(&self) -> usize {
+        0
+    }
+
+    /// Blocks spliced into survivors by reroutes so far.
+    fn spliced_blocks(&self) -> usize {
+        0
+    }
 }
 
 impl StepEngine for ServingEngine {
@@ -94,6 +138,14 @@ impl StepEngine for ServingEngine {
 
     fn fresh_allocs_per_shard(&self) -> Vec<usize> {
         vec![self.decode_arena_fresh_allocs()]
+    }
+
+    fn resident_compressed_bytes(&self) -> usize {
+        self.compressed().compressed_stream_bytes()
+    }
+
+    fn spliced_blocks(&self) -> usize {
+        ServingEngine::spliced_blocks(self)
     }
 }
 
@@ -120,5 +172,25 @@ impl StepEngine for ShardedEngine {
 
     fn try_recover(&self) -> bool {
         ShardedEngine::try_recover(self)
+    }
+
+    fn try_rejoin(&self) -> bool {
+        ShardedEngine::try_rejoin(self)
+    }
+
+    fn try_rejoin_idle(&self) -> bool {
+        ShardedEngine::try_rejoin_idle(self)
+    }
+
+    fn weight_copies(&self) -> usize {
+        ShardedEngine::weight_copies(self)
+    }
+
+    fn resident_compressed_bytes(&self) -> usize {
+        ShardedEngine::resident_compressed_bytes(self)
+    }
+
+    fn spliced_blocks(&self) -> usize {
+        ShardedEngine::spliced_blocks(self)
     }
 }

@@ -304,6 +304,10 @@ struct Driver<E: StepEngine> {
 
 impl<E: StepEngine> Driver<E> {
     fn run(mut self, stop: &std::sync::atomic::AtomicBool) {
+        // the shared-storage gauges change only when the topology does
+        // (reroute/rejoin), so they are swept at startup and after
+        // those events — never in the per-step hot loop
+        self.update_memory_gauges();
         while !stop.load(Ordering::SeqCst) {
             if self.shared.paused.load(Ordering::SeqCst) {
                 std::thread::sleep(self.idle);
@@ -328,8 +332,35 @@ impl<E: StepEngine> Driver<E> {
         }
     }
 
+    /// Pin the shared-storage story: exactly one logical copy of the
+    /// compressed blocks (whatever the shard count or reroute/rejoin
+    /// history), the deduplicated resident compressed footprint, and
+    /// how many blocks recoveries have spliced.  Called at driver
+    /// startup and after every successful reroute/rejoin — the only
+    /// events that can move these gauges.
+    fn update_memory_gauges(&self) {
+        let metrics = &self.shared.metrics;
+        metrics.set_weight_copies(self.engine.weight_copies());
+        metrics.set_resident_compressed_bytes(self.engine.resident_compressed_bytes());
+        metrics.set_recovery_spliced_blocks(self.engine.spliced_blocks());
+    }
+
     /// One driver iteration; `Ok(false)` means idle.
     fn tick(&mut self) -> Result<bool> {
+        // contract→expand: between decode steps, let a provisioned
+        // replacement shard rejoin (re-splitting a merged range) — a
+        // no-op unless `arm_rejoin` armed one and a reroute contracted
+        // the topology.  When nothing is in flight or queued, the
+        // rejoin's pacing delay is waived: the step clock cannot
+        // advance while idle, and an idle rejoin stalls nobody.
+        let idle = self.flight.is_none()
+            && self.spec.is_none()
+            && self.shared.queue.lock().unwrap().is_empty();
+        let rejoined = if idle { self.engine.try_rejoin_idle() } else { self.engine.try_rejoin() };
+        if rejoined {
+            self.shared.metrics.inc_rejoins();
+            self.update_memory_gauges();
+        }
         // flush a fully drained flight so fresh batches skip catch-up
         if let Some(fl) = &self.flight {
             if fl.lane_ids.iter().all(Option::is_none) {
@@ -420,14 +451,19 @@ impl<E: StepEngine> Driver<E> {
         }
     }
 
-    /// Attempt engine recovery, counting a successful reroute.  Every
-    /// failure path funnels through here, so a fault attribution is
-    /// always consumed by the error that produced it and can never go
-    /// stale (see `ShardedEngine::try_recover`).
+    /// Attempt engine recovery, counting a successful reroute and the
+    /// wall time it stalled the driver (the recovery-stall series the
+    /// serve bench tracks — splicing only the absorbed range is what
+    /// keeps it small).  Every failure path funnels through here, so a
+    /// fault attribution is always consumed by the error that produced
+    /// it and can never go stale (see `ShardedEngine::try_recover`).
     fn recovered(&self) -> bool {
+        let t0 = Instant::now();
         let ok = self.engine.try_recover();
         if ok {
             self.shared.metrics.inc_reroutes();
+            self.shared.metrics.add_recovery_stall_us(t0.elapsed().as_micros() as u64);
+            self.update_memory_gauges();
         }
         ok
     }

@@ -14,23 +14,39 @@
 //! **Fault tolerance**: a shard whose engine/runtime errors mid-batch
 //! is not fatal.  Every prefill/decode failure is attributed to the
 //! shard it struck, and `try_recover` merges the failed shard's block
-//! range into an adjacent survivor — re-opening the range from the
-//! retained container into that engine's pool and arena
+//! range into an adjacent survivor — splicing the range from the
+//! retained container into that engine's live state
 //! (`ServingEngine::reopen_blocks`) — after which the interrupted step
 //! may simply be replayed: decode steps are resumable (see
 //! `ServingEngine::decode_step`), so in-flight requests complete
-//! byte-identically to an unfaulted run.  The retained pristine
-//! container is the memory price of reroute; at ~2 effective
-//! bits/param it is small next to any resident decode state, and
-//! single-shard engines (no survivor to reroute to) skip it entirely.
+//! byte-identically to an unfaulted run.
+//!
+//! **Elastic topology**: reroute only contracts the shard set;
+//! `try_rejoin` expands it back.  A replacement runtime provisioned
+//! via `arm_rejoin` joins between decode steps: the heaviest
+//! survivor's (merged) range is re-split per
+//! `ShardPlan::balance_sizes`, the donor releases the right half
+//! (`ServingEngine::truncate_blocks`, keeping its warm state for the
+//! kept blocks), and the new engine opens exactly the absorbed blocks
+//! — byte-identical mid-stream, since block math is independent of
+//! shard boundaries.
+//!
+//! **One copy of the weights**: `CompressedModel` is Arc-backed, so the
+//! retained pristine container, every shard slice, and every
+//! reroute/rejoin merge share the same block storage — `weight_copies`
+//! computes the per-block distinct-allocation count (pinned at exactly
+//! 1 by the serve tests), and `resident_compressed_bytes` the
+//! deduplicated resident compressed footprint.
 
-use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState};
+use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState, ShardRole};
 use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
 use crate::runtime::{HostTensor, Runtime};
-use crate::store::container::CompressedModel;
+use crate::store::container::{CompressedBlock, CompressedModel};
 use anyhow::{ensure, Result};
 use std::cell::{Cell, RefCell};
+use std::collections::HashSet;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// A contiguous partition of a model's blocks, balanced by serialized
 /// bitstream bytes (the quantity that drives per-shard ANS decode
@@ -114,22 +130,42 @@ impl ShardPlan {
         self.bytes.remove(failed);
     }
 
-    /// Clone shard `i`'s blocks into a standalone sub-model.  Embed,
-    /// head and final norm ride along in every shard: the first/last
-    /// shards use them, middle shards keep them only so the engine's
-    /// config validation holds (dropping them there is a follow-on) —
-    /// and so that *any* surviving shard can embed or apply the head
-    /// after a reroute removes the original first/last shard.
-    pub fn slice(&self, cm: &CompressedModel, i: usize) -> CompressedModel {
-        CompressedModel {
-            config: cm.config.clone(),
-            fmt: cm.fmt,
-            embed: cm.embed.clone(),
-            head: cm.head.clone(),
-            norm_final: cm.norm_final.clone(),
-            blocks: cm.blocks[self.ranges[i].clone()].to_vec(),
+    /// Split shard `donor`'s range back into two adjacent shards with
+    /// the byte-balanced 2-way partition over `sizes` (the per-block
+    /// byte sizes of the donor's range) — the bookkeeping inverse of
+    /// `merge`, used when a replacement shard rejoins.  Returns the new
+    /// (right) shard's global range, or `None` when the range holds
+    /// fewer than 2 blocks.  Every plan invariant (contiguous,
+    /// disjoint, non-empty, exact cover, byte accounting) survives —
+    /// property-tested in `rust/tests/shard_plan.rs`.
+    pub fn split(&mut self, donor: usize, sizes: &[usize]) -> Option<Range<usize>> {
+        let range = self.ranges[donor].clone();
+        assert_eq!(sizes.len(), range.len(), "split: {} sizes for {range:?}", sizes.len());
+        if range.len() < 2 {
+            return None;
         }
+        let sub = ShardPlan::balance_sizes(sizes, 2);
+        let keep = sub.ranges[0].len();
+        let right = range.start + keep..range.end;
+        self.ranges[donor] = range.start..range.start + keep;
+        self.ranges.insert(donor + 1, right.clone());
+        self.bytes[donor] = sub.bytes[0];
+        self.bytes.insert(donor + 1, sub.bytes[1]);
+        Some(right)
     }
+
+    /// Shard `i`'s blocks as a standalone sub-model — an Arc-bump view
+    /// via `CompressedModel::slice_range`; the engine materializes
+    /// embed/head views only per its `ShardRole`.
+    pub fn slice(&self, cm: &CompressedModel, i: usize) -> CompressedModel {
+        cm.slice_range(self.ranges[i].clone())
+    }
+}
+
+/// The pipeline role a contiguous range implies: embed on the range
+/// touching block 0, head on the range touching the container's end.
+fn role_for(range: &Range<usize>, n_total: usize) -> ShardRole {
+    ShardRole { first: range.start == 0, last: range.end == n_total }
 }
 
 /// N engines over one plan, exposing the same step-wise surface as a
@@ -139,15 +175,30 @@ impl ShardPlan {
 pub struct ShardedEngine {
     shards: RefCell<Vec<ServingEngine>>,
     plan: RefCell<ShardPlan>,
-    /// pristine container, retained so a failed shard's range can be
-    /// re-opened on a survivor — only when there IS a possible
-    /// survivor (`None` for single-shard engines, where reroute can
-    /// never apply and retaining a second copy would just double
-    /// compressed-weight memory)
-    full: Option<CompressedModel>,
+    /// the pristine container: reroutes splice failed ranges from it,
+    /// rejoins open replacement shards from it.  Since blocks and
+    /// shared tensors are Arc-backed, retaining it costs refcounts,
+    /// not a second copy of the weights — `weight_copies` pins this.
+    full: CompressedModel,
+    /// base engine options (roles are derived per shard position)
+    opts: EngineOpts,
+    /// the shard count the plan was born with — `try_rejoin` expands
+    /// back toward it after reroutes contract the set
+    target_shards: usize,
+    /// replacement runtimes provisioned via `arm_rejoin`, each paired
+    /// with the post-reroute delay (in full decode steps) it waits
+    spares: RefCell<Vec<(Runtime, usize)>>,
+    /// `Some(n)` = n full decode steps completed since the last
+    /// reroute; `None` = topology at target, nothing to rejoin
+    steps_since_reroute: Cell<Option<usize>>,
     /// shard index of the most recently attributed failure
     pending_fault: Cell<Option<usize>>,
     reroutes: Cell<usize>,
+    rejoins: Cell<usize>,
+    /// cumulative blocks spliced into survivors across ALL reroutes —
+    /// tracked here (not summed from per-engine counters) so a
+    /// survivor that later fails does not take its history with it
+    spliced_total: Cell<usize>,
 }
 
 impl ShardedEngine {
@@ -167,9 +218,12 @@ impl ShardedEngine {
             runtimes.len(),
             plan.n_shards()
         );
+        let n_total = cm.blocks.len();
         let mut shards = Vec::with_capacity(plan.n_shards());
         for (i, rt) in runtimes.into_iter().enumerate() {
             let mut shard_opts = opts.clone();
+            // middle shards run block phases only: no embed/head views
+            shard_opts.role = role_for(&plan.ranges[i], n_total);
             if shard_opts.residency == Residency::DiskOffload {
                 // per-shard offload directories: block files are named
                 // by shard-local index, so a shared directory would
@@ -179,13 +233,19 @@ impl ShardedEngine {
             }
             shards.push(ServingEngine::new(rt, plan.slice(cm, i), shard_opts)?);
         }
-        let full = if plan.n_shards() > 1 { Some(cm.clone()) } else { None };
+        let target_shards = plan.n_shards();
         Ok(ShardedEngine {
             shards: RefCell::new(shards),
             plan: RefCell::new(plan),
-            full,
+            full: cm.clone(),
+            opts: opts.clone(),
+            target_shards,
+            spares: RefCell::new(Vec::new()),
+            steps_since_reroute: Cell::new(None),
             pending_fault: Cell::new(None),
             reroutes: Cell::new(0),
+            rejoins: Cell::new(0),
+            spliced_total: Cell::new(0),
         })
     }
 
@@ -201,6 +261,68 @@ impl ShardedEngine {
     /// How many shard failures have been rerouted onto survivors.
     pub fn reroutes(&self) -> usize {
         self.reroutes.get()
+    }
+
+    /// How many replacement shards have rejoined (re-splitting a merged
+    /// range).
+    pub fn rejoins(&self) -> usize {
+        self.rejoins.get()
+    }
+
+    /// The maximum, over blocks, of distinct storage allocations
+    /// holding that block's compressed bytes across the retained
+    /// container and every shard slice.  Arc-backed sharing makes this
+    /// exactly 1 — the "one logical copy of the weights" invariant the
+    /// serve tests pin across fault→recover→rejoin cycles.
+    pub fn weight_copies(&self) -> usize {
+        let shards = self.shards.borrow();
+        let plan = self.plan.borrow();
+        let n = self.full.blocks.len();
+        if n == 0 {
+            return 1;
+        }
+        let mut max_copies = 0usize;
+        for g in 0..n {
+            let mut ptrs: HashSet<*const CompressedBlock> = HashSet::new();
+            ptrs.insert(Arc::as_ptr(&self.full.blocks[g]));
+            if let Some(s) = plan.shard_of(g) {
+                let local = g - plan.ranges[s].start;
+                ptrs.insert(Arc::as_ptr(&shards[s].compressed().blocks[local]));
+            }
+            max_copies = max_copies.max(ptrs.len());
+        }
+        max_copies
+    }
+
+    /// Resident compressed bytes, deduplicated by storage: every block
+    /// allocation reachable from the retained container or any shard is
+    /// counted once.  With Arc sharing this equals the container's own
+    /// compressed payload regardless of shard count or reroute history.
+    pub fn resident_compressed_bytes(&self) -> usize {
+        let shards = self.shards.borrow();
+        let mut seen: HashSet<*const CompressedBlock> = HashSet::new();
+        let mut total = 0usize;
+        let shard_blocks = shards.iter().flat_map(|s| s.compressed().blocks.iter());
+        for b in self.full.blocks.iter().chain(shard_blocks) {
+            if seen.insert(Arc::as_ptr(b)) {
+                total += b.bitstream.serialized_len();
+            }
+        }
+        total
+    }
+
+    /// Cumulative blocks spliced into survivors across all reroutes
+    /// (the `recovery_spliced_blocks` gauge) — counted at the reroute,
+    /// so a previously-spliced survivor that later fails itself does
+    /// not erase its contribution.
+    pub fn spliced_blocks(&self) -> usize {
+        self.spliced_total.get()
+    }
+
+    /// Per-shard load-time residency decode counts — the splice tests
+    /// pin that a reroute decodes only the absorbed range.
+    pub fn residency_decodes(&self) -> Vec<usize> {
+        self.shards.borrow().iter().map(ServingEngine::residency_decodes).collect()
     }
 
     /// Per-shard decode-arena fresh allocations (0 per shard in steady
@@ -228,17 +350,18 @@ impl ShardedEngine {
 
     /// Reroute the most recently failed shard's block range onto an
     /// adjacent survivor: the lighter neighbor (by compressed bytes,
-    /// ties to the left) re-opens the range from the retained container
-    /// into its own pool/arena, the failed engine is dropped, and the
-    /// plan contracts.  Returns `true` when recovery succeeded — the
-    /// caller may then replay the interrupted prefill or decode step
-    /// verbatim (steps are resumable; outputs stay byte-identical).
-    /// Returns `false` with the engine untouched when there is no
-    /// attributed failure, no survivor, or the re-open itself failed
-    /// (e.g. the absorbed range is corrupt under a resident mode).
+    /// ties to the left) splices the range from the retained container
+    /// into its live state (only the absorbed blocks are decoded under
+    /// resident/offload modes; untouched blocks and the warm arena are
+    /// preserved), the failed engine is dropped, and the plan
+    /// contracts.  Returns `true` when recovery succeeded — the caller
+    /// may then replay the interrupted prefill or decode step verbatim
+    /// (steps are resumable; outputs stay byte-identical).  Returns
+    /// `false` with the engine untouched when there is no attributed
+    /// failure, no survivor, or the splice itself failed (e.g. the
+    /// absorbed range is corrupt under a resident mode).
     pub fn try_recover(&self) -> bool {
         let Some(k) = self.pending_fault.take() else { return false };
-        let Some(full) = &self.full else { return false };
         let mut shards = self.shards.borrow_mut();
         let mut plan = self.plan.borrow_mut();
         if shards.len() <= 1 || k >= shards.len() {
@@ -259,12 +382,121 @@ impl ShardedEngine {
             (None, None) => return false,
         };
         let range = plan.ranges[k].clone();
-        if shards[target].reopen_blocks(full, range, target > k).is_err() {
+        let absorbed = range.len();
+        if shards[target].reopen_blocks(&self.full, range, target > k).is_err() {
             return false;
         }
         shards.remove(k);
         plan.merge(k, target);
+        self.spliced_total.set(self.spliced_total.get() + absorbed);
+        // the survivor may have been promoted: a merged range touching
+        // the container's edges brings embed/head duty with it (an Arc
+        // bump — the views alias shared storage)
+        let t = if target > k { target - 1 } else { target };
+        shards[t].set_role(role_for(&plan.ranges[t], self.full.blocks.len()));
         self.reroutes.set(self.reroutes.get() + 1);
+        self.steps_since_reroute.set(Some(0));
+        true
+    }
+
+    /// Provision a replacement runtime for the contract→expand cycle:
+    /// it joins `delay_steps` full decode steps after a reroute, the
+    /// next time `try_rejoin` runs (the scheduler driver polls it
+    /// between decode steps; engine-level callers invoke it directly).
+    /// The delay travels with its spare, so differently-paced spares
+    /// coexist (consumed LIFO).
+    pub fn arm_rejoin(&self, rt: Runtime, delay_steps: usize) {
+        self.spares.borrow_mut().push((rt, delay_steps));
+    }
+
+    /// Expand the shard set back out after a reroute: re-split the
+    /// heaviest survivor's (merged) range per
+    /// `ShardPlan::balance_sizes`, open a new engine over exactly the
+    /// absorbed right half (from the shared container — Arc bumps plus
+    /// that range's residency decode, nothing else), and have the donor
+    /// release those blocks while keeping its warm state for the rest.
+    /// The inverse of `try_recover`, safe between decode steps:
+    /// per-block math is independent of shard boundaries, so in-flight
+    /// generations continue byte-identically.  Returns `true` when a
+    /// replacement joined; `false` (topology untouched) when there is
+    /// no spare, no reroute deficit, the post-reroute delay has not
+    /// elapsed, or the replacement engine failed to open (the spare is
+    /// consumed, the serving topology stays as it was).
+    pub fn try_rejoin(&self) -> bool {
+        self.try_rejoin_with(false)
+    }
+
+    /// `try_rejoin` for a moment the caller knows the engine is idle
+    /// (no in-flight work): the post-reroute pacing delay is waived,
+    /// since an idle rejoin stalls nobody — without this, a queue that
+    /// drains before the delay elapses would strand the spare forever
+    /// (the step clock only advances while decoding).
+    pub fn try_rejoin_idle(&self) -> bool {
+        self.try_rejoin_with(true)
+    }
+
+    fn try_rejoin_with(&self, waive_delay: bool) -> bool {
+        // the pending spare's own delay paces its join
+        let delay = match self.spares.borrow().last() {
+            Some((_, d)) => *d,
+            None => return false,
+        };
+        if self.shards.borrow().len() >= self.target_shards {
+            return false;
+        }
+        match self.steps_since_reroute.get() {
+            Some(steps) if waive_delay || steps >= delay => {}
+            _ => return false,
+        }
+        let mut shards = self.shards.borrow_mut();
+        let mut plan = self.plan.borrow_mut();
+        // donor: the heaviest range still splittable (>= 2 blocks) —
+        // after a reroute that is the merged range
+        let Some(donor) = (0..plan.n_shards())
+            .filter(|&i| plan.ranges[i].len() >= 2)
+            .max_by_key(|&i| plan.bytes[i])
+        else {
+            return false;
+        };
+        let donor_range = plan.ranges[donor].clone();
+        let sizes: Vec<usize> = self.full.blocks[donor_range.clone()]
+            .iter()
+            .map(|b| b.bitstream.serialized_len())
+            .collect();
+        // `split` on a scratch plan is the ONE authoritative partition:
+        // the absorb range, the donor's keep count, and the committed
+        // plan all derive from this single computation
+        let mut next_plan = plan.clone();
+        let Some(absorb) = next_plan.split(donor, &sizes) else {
+            return false;
+        };
+        let keep = absorb.start - donor_range.start;
+        let n_total = self.full.blocks.len();
+        let (rt, _) = self.spares.borrow_mut().pop().expect("spare checked above");
+        let mut opts = self.opts.clone();
+        opts.role = role_for(&next_plan.ranges[donor + 1], n_total);
+        if opts.residency == Residency::DiskOffload {
+            // a fresh, never-reused directory per rejoin: no collision
+            // with the original per-shard directories or earlier rejoins
+            let base = crate::coordinator::engine::resolve_offload_dir(&self.opts);
+            opts.offload_dir = Some(format!("{base}/rejoin_{}", self.rejoins.get() + 1));
+        }
+        let sub_model = self.full.slice_range(absorb);
+        // the only fallible step runs first; a failure leaves the
+        // topology exactly as it was
+        let Ok(engine) = ServingEngine::new(rt, sub_model, opts) else {
+            return false;
+        };
+        if shards[donor].truncate_blocks(keep).is_err() {
+            return false;
+        }
+        shards[donor].set_role(role_for(&next_plan.ranges[donor], n_total));
+        shards.insert(donor + 1, engine);
+        *plan = next_plan;
+        self.rejoins.set(self.rejoins.get() + 1);
+        if shards.len() >= self.target_shards {
+            self.steps_since_reroute.set(None);
+        }
         true
     }
 
@@ -334,6 +566,11 @@ impl ShardedEngine {
         let last = shards.len() - 1;
         let logits = self.attr(last, shards[last].head_decode(x, b))?;
         apply_decode_logits(st, &logits, cfg.vocab, t0);
+        // pace the rejoin delay: only FULL steps count, so a replayed
+        // interrupted step never advances the clock
+        if let Some(steps) = self.steps_since_reroute.get() {
+            self.steps_since_reroute.set(Some(steps + 1));
+        }
         Ok(true)
     }
 
@@ -460,6 +697,41 @@ mod tests {
         }
         let want: Vec<usize> = cm.blocks.iter().map(|b| b.n_symbols()).collect();
         assert_eq!(reassembled, want);
+    }
+
+    #[test]
+    fn split_is_the_inverse_bookkeeping_of_merge() {
+        let sizes = [10usize, 20, 30, 40];
+        let mut p = ShardPlan::balance_sizes(&sizes, 2);
+        p.merge(1, 0);
+        assert_eq!(p.n_shards(), 1);
+        let right = p.split(0, &sizes).unwrap();
+        assert_eq!(p.n_shards(), 2);
+        assert_eq!(p.ranges[0].start, 0);
+        assert_eq!(p.ranges[0].end, right.start);
+        assert_eq!(p.ranges[1], right);
+        assert_eq!(right.end, sizes.len());
+        assert_eq!(p.bytes.iter().sum::<usize>(), sizes.iter().sum::<usize>());
+        // a single-block range refuses to split
+        let mut q = ShardPlan::balance_sizes(&[7], 1);
+        assert!(q.split(0, &[7]).is_none());
+        assert_eq!(q.n_shards(), 1);
+    }
+
+    #[test]
+    fn slice_shares_block_storage_with_the_container() {
+        let cm = tiny_compressed(4);
+        let plan = ShardPlan::balance(&cm, 2);
+        for i in 0..plan.n_shards() {
+            let sub = plan.slice(&cm, i);
+            for (local, b) in sub.blocks.iter().enumerate() {
+                let g = plan.ranges[i].start + local;
+                assert!(Arc::ptr_eq(b, &cm.blocks[g]), "block {g} was deep-copied");
+            }
+            assert!(Arc::ptr_eq(&sub.embed.data, &cm.embed.data), "embed copied");
+            assert!(Arc::ptr_eq(&sub.head.data, &cm.head.data), "head copied");
+            assert!(Arc::ptr_eq(&sub.norm_final, &cm.norm_final), "norm copied");
+        }
     }
 
     #[test]

@@ -24,10 +24,49 @@ use crate::store::json::{self, arr, num, obj, s, Value};
 use crate::tensor::Mat;
 use crate::util::crc32;
 use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"EQZ2";
 /// magic + header_len + crc32
 const PREFIX_LEN: usize = 12;
+
+/// A row-major f32 matrix whose storage is reference-counted: slicing
+/// a model per shard, retaining the pristine container across a
+/// reroute, or handing the embed table to an engine bumps a refcount
+/// instead of copying `vocab x d_model` floats.  The serving engines
+/// build zero-copy `HostTensor::F32View`s straight over `data`, so a
+/// tensor exists exactly once in memory however many engines share it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SharedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl SharedMat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> SharedMat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        SharedMat { rows, cols, data: Arc::new(data) }
+    }
+
+    /// Materialize an owned `Mat` (offline-eval paths only; the serving
+    /// stack never needs this copy).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, (*self.data).clone())
+    }
+}
+
+impl From<Mat> for SharedMat {
+    fn from(m: Mat) -> SharedMat {
+        SharedMat { rows: m.rows, cols: m.cols, data: Arc::new(m.data) }
+    }
+}
+
+impl From<&Mat> for SharedMat {
+    fn from(m: &Mat) -> SharedMat {
+        SharedMat { rows: m.rows, cols: m.cols, data: Arc::new(m.data.clone()) }
+    }
+}
 
 #[derive(Clone)]
 pub struct LayerMeta {
@@ -65,14 +104,20 @@ impl CompressedBlock {
     }
 }
 
+/// The in-memory container.  Every weight-bearing field is Arc-backed
+/// (`SharedMat` / `Arc<Vec<f32>>` / `Vec<Arc<CompressedBlock>>`), so
+/// `clone()`, per-shard slicing, and the reroute-retained pristine copy
+/// all share one underlying allocation per tensor/block — the serving
+/// stack's "exactly one logical copy" invariant
+/// (`ShardedEngine::weight_copies`) rests on this.
 #[derive(Clone)]
 pub struct CompressedModel {
     pub config: Config,
     pub fmt: Format,
-    pub embed: Mat,
-    pub head: Mat,
-    pub norm_final: Vec<f32>,
-    pub blocks: Vec<CompressedBlock>,
+    pub embed: SharedMat,
+    pub head: SharedMat,
+    pub norm_final: Arc<Vec<f32>>,
+    pub blocks: Vec<Arc<CompressedBlock>>,
 }
 
 impl CompressedModel {
@@ -99,6 +144,40 @@ impl CompressedModel {
     /// Total size in bytes of the serialized container.
     pub fn total_bytes(&self) -> usize {
         self.serialize().len()
+    }
+
+    /// Serialized bitstream bytes across all blocks — the compressed
+    /// payload a serving process must keep resident (the
+    /// `resident_compressed_bytes` gauge counts these, deduplicated by
+    /// shared storage).
+    pub fn compressed_stream_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bitstream.serialized_len()).sum()
+    }
+
+    /// Mutable access to block `i`, copy-on-write: blocks are shared
+    /// (`Arc`) across container clones and shard slices, so mutating
+    /// through a shared handle first unshares that one block.  Tests
+    /// use this to plant in-memory corruption; production code never
+    /// mutates blocks after compression.
+    pub fn block_mut(&mut self, i: usize) -> &mut CompressedBlock {
+        Arc::make_mut(&mut self.blocks[i])
+    }
+
+    /// A sub-model holding blocks `range` of this container — the one
+    /// authoritative slicing site (shard slices and rejoin sub-models
+    /// both route through it).  Cheap: blocks are `Arc` bumps, and
+    /// embed/head/final-norm ride along as shared handles so any slice
+    /// can later be promoted to first/last pipeline duty without
+    /// touching the container again.
+    pub fn slice_range(&self, range: std::ops::Range<usize>) -> CompressedModel {
+        CompressedModel {
+            config: self.config.clone(),
+            fmt: self.fmt,
+            embed: self.embed.clone(),
+            head: self.head.clone(),
+            norm_final: Arc::clone(&self.norm_final),
+            blocks: self.blocks[range].to_vec(),
+        }
     }
 
     /// Decode block `i`'s symbols into `buf` (len == n_symbols(i)).
@@ -156,10 +235,10 @@ impl CompressedModel {
         }
         Ok(QModel {
             config: self.config.clone(),
-            embed: self.embed.clone(),
+            embed: self.embed.to_mat(),
             blocks,
-            norm_final: self.norm_final.clone(),
-            head: self.head.clone(),
+            norm_final: (*self.norm_final).clone(),
+            head: self.head.to_mat(),
         })
     }
 
@@ -305,9 +384,9 @@ impl CompressedModel {
 
         let (d, v) = (config.d_model, config.vocab);
         let vd = v.checked_mul(d).ok_or(anyhow!("corrupt .eqz: vocab*d_model overflows"))?;
-        let embed = Mat::from_vec(v, d, read_f32s(g(&header, "embed_off")?, vd, "embed")?);
-        let head = Mat::from_vec(v, d, read_f32s(g(&header, "head_off")?, vd, "head")?);
-        let norm_final = read_f32s(g(&header, "norm_final_off")?, d, "norm_final")?;
+        let embed = SharedMat::new(v, d, read_f32s(g(&header, "embed_off")?, vd, "embed")?);
+        let head = SharedMat::new(v, d, read_f32s(g(&header, "head_off")?, vd, "head")?);
+        let norm_final = Arc::new(read_f32s(g(&header, "norm_final_off")?, d, "norm_final")?);
 
         let mut blocks = Vec::new();
         for (bi, bm) in header
@@ -346,12 +425,12 @@ impl CompressedModel {
                     bitstream.n_symbols
                 );
             }
-            blocks.push(CompressedBlock {
+            blocks.push(Arc::new(CompressedBlock {
                 layers,
                 bitstream,
                 norm_attn: read_f32s(g(bm, "norm_attn_off")?, d, "norm_attn")?,
                 norm_mlp: read_f32s(g(bm, "norm_mlp_off")?, d, "norm_mlp")?,
-            });
+            }));
         }
         Ok(CompressedModel { config, fmt, embed, head, norm_final, blocks })
     }
@@ -431,7 +510,7 @@ mod tests {
         let (mut cm, _) = compress_model(&m, &CompressOpts::default()).unwrap();
         // in-memory tamper: layer metadata no longer matches the
         // bitstream symbol count; serialize then reload must reject
-        cm.blocks[0].layers[0].rows += 1;
+        cm.block_mut(0).layers[0].rows += 1;
         let ser = cm.serialize();
         assert!(CompressedModel::deserialize(&ser).is_err());
         // decode on the tampered in-memory struct errors (no panic)

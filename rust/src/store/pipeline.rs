@@ -138,20 +138,23 @@ pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedM
             hist_total[i] += h[i];
         }
         let bitstream = Bitstream::encode_parallel(&symbols, opts.chunk_size, opts.threads);
-        blocks.push(CompressedBlock {
+        blocks.push(std::sync::Arc::new(CompressedBlock {
             layers,
             bitstream,
             norm_attn: bw.norm_attn.clone(),
             norm_mlp: bw.norm_mlp.clone(),
-        });
+        }));
     }
 
+    // Arc-backed shared storage from birth: every downstream consumer
+    // (shard slices, retained reroute containers, engine views) shares
+    // these allocations instead of deep-copying them.
     let cm = CompressedModel {
         config: model.config.clone(),
         fmt: opts.fmt,
-        embed: model.embed.clone(),
-        head: model.head.clone(),
-        norm_final: model.norm_final.clone(),
+        embed: (&model.embed).into(),
+        head: (&model.head).into(),
+        norm_final: std::sync::Arc::new(model.norm_final.clone()),
         blocks,
     };
     let report = CompressionReport {

@@ -195,7 +195,7 @@ fn bit_flipped_block_under_one_shard_fails_requests_never_panics() {
     let mut cm = serve_model(9);
     let plan = ShardPlan::balance(&cm, 2);
     let victim_block = plan.ranges[1].start; // owned by shard 1
-    cm.blocks[victim_block].bitstream.chunk_lens[0] ^= 1;
+    cm.block_mut(victim_block).bitstream.chunk_lens[0] ^= 1;
     let rts: Vec<Runtime> = (0..2).map(|_| serve_rt(&cm)).collect();
     let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).unwrap();
 
@@ -230,7 +230,7 @@ fn bit_flipped_block_under_resident_mode_fails_at_construction() {
     let plan = ShardPlan::balance(&cm, 2);
     let victim_block = plan.ranges[1].start;
     let n = cm.blocks[victim_block].bitstream.payload.len();
-    cm.blocks[victim_block].bitstream.payload[n / 2] ^= 0x10;
+    cm.block_mut(victim_block).bitstream.payload[n / 2] ^= 0x10;
     let rts: Vec<Runtime> = (0..2).map(|_| serve_rt(&cm)).collect();
     let opts = EngineOpts {
         residency: entquant::coordinator::Residency::F8Resident,

@@ -10,7 +10,9 @@
 //! shard count, batch composition, admission order — or shard failure
 //! — served it.
 
-use entquant::coordinator::{pack, Batch, DecodeState, EngineOpts, Request, ServingEngine};
+use entquant::coordinator::{
+    pack, Batch, DecodeState, EngineOpts, Request, Residency, ServingEngine,
+};
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
 use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
@@ -70,6 +72,10 @@ fn sharded(n: usize) -> ShardedEngine {
 /// A sharded engine whose per-shard runtimes are armed with a shared
 /// fault plan (each shard counts its own decode steps).
 fn sharded_with_faults(n: usize, faults: &Arc<FaultPlan>) -> ShardedEngine {
+    sharded_with_faults_opts(n, faults, EngineOpts::default())
+}
+
+fn sharded_with_faults_opts(n: usize, faults: &Arc<FaultPlan>, opts: EngineOpts) -> ShardedEngine {
     let model = cm().clone();
     let plan = ShardPlan::balance(&model, n);
     let rts: Vec<Runtime> = (0..plan.n_shards())
@@ -78,7 +84,7 @@ fn sharded_with_faults(n: usize, faults: &Arc<FaultPlan>) -> ShardedEngine {
                 .with_fault(FaultRuntime::new(Arc::clone(faults), i, plan.ranges[i].len()))
         })
         .collect();
-    ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+    ShardedEngine::new(rts, &model, plan, &opts).unwrap()
 }
 
 /// Counts `prefill_state` calls on the way through to the inner
@@ -470,6 +476,317 @@ fn speculative_admission_adopts_at_zero_cost() {
         "speculation must not add prefill steps ({} vs {})",
         prefill_counts[0], prefill_counts[1]
     );
+}
+
+#[test]
+fn one_weight_copy_at_any_shard_count() {
+    // Arc-backed storage: however many shards slice the container (and
+    // despite the retained pristine copy), every block exists exactly
+    // once in memory, and the deduplicated resident compressed bytes
+    // equal the container's own payload.
+    for shards in [1usize, 2, 3] {
+        let se = sharded(shards);
+        assert_eq!(se.weight_copies(), 1, "shards={shards}");
+        assert_eq!(
+            se.resident_compressed_bytes(),
+            cm().compressed_stream_bytes(),
+            "shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn rejoin_restores_topology_and_stays_byte_identical() {
+    // the contract→expand cycle at the engine level: a scripted fault
+    // kills shard 1 of 3 mid-step, the range reroutes onto a survivor,
+    // and one full step later the armed replacement rejoins —
+    // re-splitting the merged range — all mid-generation, with outputs
+    // byte-identical to the unfaulted single-engine reference and
+    // exactly one logical weight copy at every stage.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(900 + i, 5 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    let se = sharded_with_faults(3, &faults);
+    se.arm_rejoin(native_rt(cm()), 1); // 1 full step after the reroute
+    assert!(!se.try_rejoin(), "no reroute deficit yet: rejoin must refuse");
+    let mut st = se.prefill_state(batch).unwrap();
+    let mut rejoined = false;
+    for _ in 0..7 {
+        loop {
+            match se.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(e) => {
+                    assert!(se.try_recover(), "reroute must succeed: {e:#}");
+                    assert_eq!(se.weight_copies(), 1, "reroute must not copy weights");
+                }
+            }
+        }
+        if se.try_rejoin() {
+            rejoined = true;
+            assert_eq!(se.weight_copies(), 1, "rejoin must not copy weights");
+        }
+    }
+    assert!(rejoined, "the armed replacement never rejoined");
+    assert_eq!(se.rejoins(), 1);
+    assert_eq!(se.reroutes(), 1);
+    assert_eq!(se.n_shards(), 3, "topology must be restored to its target");
+    // the re-split plan is still a contiguous exact cover
+    let plan = se.plan();
+    let mut expect = 0usize;
+    for r in &plan.ranges {
+        assert_eq!(r.start, expect);
+        assert!(r.end > r.start);
+        expect = r.end;
+    }
+    assert_eq!(expect, cm().blocks.len());
+    assert_eq!(se.resident_compressed_bytes(), cm().compressed_stream_bytes());
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged across contract/expand");
+    }
+}
+
+#[test]
+fn idle_rejoin_waives_the_pacing_delay() {
+    // a spare whose step-counted delay can never elapse (the trace
+    // drains first) must not starve: the idle variant — which the
+    // scheduler uses when nothing is in flight or queued — waives the
+    // pacing delay and restores the topology immediately.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(1100 + i, 5 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    let se = sharded_with_faults(2, &faults);
+    se.arm_rejoin(native_rt(cm()), 1_000_000); // unreachable by step count
+    let mut st = se.prefill_state(batch).unwrap();
+    for _ in 0..7 {
+        loop {
+            match se.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(e) => assert!(se.try_recover(), "reroute must succeed: {e:#}"),
+            }
+        }
+        assert!(!se.try_rejoin(), "the step-paced rejoin must wait out its delay");
+    }
+    assert_eq!(se.n_shards(), 1, "still contracted while paced");
+    assert!(se.try_rejoin_idle(), "an idle rejoin must not starve");
+    assert_eq!(se.n_shards(), 2);
+    assert_eq!(se.rejoins(), 1);
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged");
+    }
+}
+
+#[test]
+fn splice_decodes_only_the_absorbed_range_at_container_edges() {
+    // the incremental-residency-rebuild contract, pinned by decode
+    // counts: under resident and offload modes a reroute decodes ONLY
+    // the absorbed range (the survivor's own blocks keep their state),
+    // for an absorbed range at the container's front (victim shard 0)
+    // and at its back (victim shard 1).
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(950 + i, 4 + i as usize * 2)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+    for residency in [Residency::Bf16Resident, Residency::DiskOffload] {
+        for victim in [0usize, 1] {
+            let plan = ShardPlan::balance(cm(), 2);
+            let absorbed_len = plan.ranges[victim].len();
+            let survivor = 1 - victim;
+            let survivor_own = plan.ranges[survivor].len();
+            let faults =
+                FaultPlan::scripted(vec![FaultScript { shard: victim, step: 1, block: 0 }]);
+            let dir = std::env::temp_dir()
+                .join(format!("eq_splice_test_{residency:?}_{victim}"))
+                .to_string_lossy()
+                .into_owned();
+            let opts = EngineOpts { residency, offload_dir: Some(dir), ..Default::default() };
+            let se = sharded_with_faults_opts(2, &faults, opts);
+            // construction decodes exactly each shard's own blocks
+            assert_eq!(
+                se.residency_decodes(),
+                vec![plan.ranges[0].len(), plan.ranges[1].len()],
+                "residency={residency:?} victim={victim}"
+            );
+            let mut st = se.prefill_state(batch).unwrap();
+            let mut rerouted = 0;
+            for _ in 0..7 {
+                loop {
+                    match se.decode_step(&mut st) {
+                        Ok(true) => break,
+                        Ok(false) => panic!("context wall before the trace finished"),
+                        Err(e) => {
+                            assert!(se.try_recover(), "reroute must succeed: {e:#}");
+                            rerouted += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(rerouted, 1, "residency={residency:?} victim={victim}");
+            // the splice decoded ONLY the absorbed range
+            assert_eq!(
+                se.residency_decodes(),
+                vec![survivor_own + absorbed_len],
+                "residency={residency:?} victim={victim}: splice must not re-decode \
+                 the survivor's own blocks"
+            );
+            assert_eq!(se.spliced_blocks(), absorbed_len);
+            assert_eq!(se.weight_copies(), 1);
+            for (lane, w) in want.iter().enumerate() {
+                assert_eq!(
+                    &st.outputs[lane], w,
+                    "residency={residency:?} victim={victim} lane {lane} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_splice_fault_aborts_recovery_and_leaves_the_engine_usable() {
+    // a fault injected INSIDE the recovery splice: try_recover must
+    // fail cleanly (no panic), leave the topology untouched, and — the
+    // injected faults both being one-shot — the interrupted step must
+    // still replay byte-identically on the unrecovered engine.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(970 + i, 6 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    faults.fail_next_splice(0); // the survivor's splice probe
+    let se = sharded_with_faults(2, &faults);
+    let mut st = se.prefill_state(batch).unwrap();
+    let mut recovery_refused = false;
+    for _ in 0..7 {
+        loop {
+            match se.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(_) => {
+                    assert!(!se.try_recover(), "the splice fault must abort recovery");
+                    recovery_refused = true;
+                }
+            }
+        }
+    }
+    assert!(recovery_refused, "the scripted faults never fired");
+    assert_eq!(faults.fired(), 2, "decode fault + splice fault");
+    assert_eq!(se.n_shards(), 2, "failed recovery must leave the topology untouched");
+    assert_eq!(se.reroutes(), 0);
+    assert_eq!(se.spliced_blocks(), 0);
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged across the aborted splice");
+    }
+}
+
+#[test]
+fn mid_splice_fault_under_scheduler_fails_requests_then_keeps_serving() {
+    // the same aborted recovery through the scheduler: the in-flight
+    // batch fails (per-request Failed, never a panic or wrong tokens),
+    // and because the engine is left intact the queue keeps serving —
+    // later submissions complete byte-identically.
+    let engine = single_engine();
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    faults.fail_next_splice(0);
+    let sched = Scheduler::new(
+        sharded_with_faults(2, &faults),
+        SchedulerOpts { paused: true, ..Default::default() },
+    );
+    let doomed: Vec<u64> = (0..4).map(|i| sched.submit(req(980 + i, 5).prompt, 8)).collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for id in &doomed {
+        let (status, _) = sched.poll(*id).unwrap();
+        assert!(
+            matches!(status, Status::Failed(_)),
+            "aborted recovery must fail the in-flight request, got {status:?}"
+        );
+    }
+    let m = sched.metrics();
+    assert_eq!(m.failed, doomed.len(), "{m:?}");
+    assert_eq!(m.reroutes, 0, "{m:?}");
+    // both one-shot faults are spent: the engine serves on
+    let fresh: Vec<(Request, u64)> = (0..2)
+        .map(|i| {
+            let r = req(990 + i, 6);
+            let id = sched.submit(r.prompt.clone(), 5);
+            (r, id)
+        })
+        .collect();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for (r, id) in &fresh {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "the queue must keep serving after the failure");
+        assert_eq!(out, reference(&engine, r, 5), "post-failure request diverged");
+    }
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn scripted_contract_rejoin_trace_is_byte_identical_with_one_weight_copy() {
+    // the acceptance drill, extended to the full contract→expand cycle:
+    // kill a shard at a scripted decode step of a 32-request trace (at
+    // 2 and at 4 shards), let the armed replacement rejoin two steps
+    // later, and require (a) every final token stream byte-identical to
+    // the unfaulted single-engine reference, (b) the topology restored
+    // to its target shard count, and (c) the weight_copies gauge
+    // pinned at exactly 1 at every observation point of the cycle.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..32).map(|i| req(1000 + i, 1 + (i as usize * 5) % 14)).collect();
+    let max_new = |id: u64| 2 + (id as usize % 7);
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, max_new(r.id))).collect();
+    for shards in [2usize, 4] {
+        let faults =
+            FaultPlan::scripted(vec![FaultScript { shard: shards - 1, step: 6, block: 0 }]);
+        let se = sharded_with_faults(shards, &faults);
+        se.arm_rejoin(native_rt(cm()), 2);
+        let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
+        let ids: Vec<u64> =
+            reqs.iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+        sched.resume();
+        // weight_copies == 1 throughout: poll while the trace drains
+        let t0 = std::time::Instant::now();
+        loop {
+            let m = sched.metrics();
+            assert_eq!(m.weight_copies, 1, "shards={shards}: weight copy observed: {m:?}");
+            if ids.iter().all(|id| sched.poll(*id).unwrap().0.is_terminal()) {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(300), "trace stalled");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        for (i, id) in ids.iter().enumerate() {
+            let (status, out) = sched.poll(*id).unwrap();
+            assert_eq!(status, Status::Done, "shards={shards} request {i}");
+            assert_eq!(out, want[i], "shards={shards} request {i} diverged across the cycle");
+        }
+        let m = sched.metrics();
+        assert_eq!(m.completed, 32, "shards={shards}: {m:?}");
+        assert_eq!(m.failed, 0, "shards={shards}: {m:?}");
+        assert!(m.reroutes >= 1, "shards={shards}: the fault never rerouted: {m:?}");
+        assert!(m.rejoins >= 1, "shards={shards}: the replacement never rejoined: {m:?}");
+        assert_eq!(faults.fired(), 1, "shards={shards}");
+        assert_eq!(
+            m.shard_fresh_allocs.len(),
+            shards,
+            "shards={shards}: rejoin must restore the shard count"
+        );
+        assert_eq!(m.weight_copies, 1, "shards={shards}: {m:?}");
+        assert_eq!(
+            m.resident_compressed_bytes,
+            cm().compressed_stream_bytes(),
+            "shards={shards}: resident compressed bytes must stay deduplicated"
+        );
+        assert!(m.recovery_spliced_blocks >= 1, "shards={shards}: {m:?}");
+        sched.shutdown().unwrap();
+    }
 }
 
 #[test]

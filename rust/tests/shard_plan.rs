@@ -141,6 +141,78 @@ fn empty_size_list_degenerates_to_one_empty_shard() {
     assert_eq!(plan.bytes, vec![0]);
 }
 
+/// The plan-level contract→expand cycle: random merges followed by
+/// `split` of the merged shard keep every plan invariant, and the
+/// 2-way split respects the balance bound within the donor's range.
+#[test]
+fn merge_then_split_round_trips_hold_every_invariant() {
+    let seed = base_seed() ^ 0x51DE;
+    eprintln!("merge/split property seed: {seed} (override with SHARD_PLAN_SEED)");
+    let mut rng = Rng::new(seed);
+    for case in 0..300 {
+        let n = 2 + rng.below(48);
+        let k = 2 + rng.below(6);
+        let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.below(1000)).collect();
+        let mut plan = ShardPlan::balance_sizes(&sizes, k);
+        if plan.n_shards() < 2 {
+            continue;
+        }
+        // contract: a random shard fails onto a random adjacent target
+        let failed = rng.below(plan.n_shards());
+        let target = if failed == 0 {
+            1
+        } else if failed == plan.n_shards() - 1 || rng.below(2) == 0 {
+            failed - 1
+        } else {
+            failed + 1
+        };
+        plan.merge(failed, target);
+        let merged = if target > failed { target - 1 } else { target };
+        let merged_range = plan.ranges[merged].clone();
+        let ctx = format!(
+            "seed={seed} case={case} n={n} k={k} failed={failed} target={target} sizes={sizes:?}"
+        );
+        // expand: split the merged shard back out
+        let donor_sizes: Vec<usize> = sizes[merged_range.clone()].to_vec();
+        let split = plan.split(merged, &donor_sizes);
+        if merged_range.len() < 2 {
+            assert!(split.is_none(), "{ctx}: split of a 1-block range must refuse");
+            continue;
+        }
+        let right = split.unwrap_or_else(|| panic!("{ctx}: splittable range refused"));
+        assert_eq!(plan.ranges[merged].end, right.start, "{ctx}: split not adjacent");
+        assert_eq!(right.end, merged_range.end, "{ctx}: split lost blocks");
+        // full invariant sweep on the post-cycle plan: contiguous
+        // exact cover + byte accounting
+        let mut expect = 0usize;
+        for (i, r) in plan.ranges.iter().enumerate() {
+            assert_eq!(r.start, expect, "{ctx}: gap/overlap before shard {i}");
+            assert!(r.end > r.start, "{ctx}: empty shard {i}");
+            expect = r.end;
+        }
+        assert_eq!(expect, n, "{ctx}: blocks not fully covered");
+        let total: usize = sizes.iter().sum();
+        assert_eq!(plan.bytes.iter().sum::<usize>(), total, "{ctx}: bytes drifted");
+        for (i, r) in plan.ranges.iter().enumerate() {
+            assert_eq!(
+                plan.bytes[i],
+                sizes[r.clone()].iter().sum::<usize>(),
+                "{ctx}: shard {i} byte accounting"
+            );
+        }
+        // the 2-way split is balanced within the donor: neither half
+        // exceeds the half-share by more than the largest block
+        let donor_total: usize = donor_sizes.iter().sum();
+        let donor_max = *donor_sizes.iter().max().unwrap();
+        for half in [merged, merged + 1] {
+            assert!(
+                plan.bytes[half] * 2 <= donor_total + 2 * donor_max,
+                "{ctx}: split half {half} outside the balance bound"
+            );
+        }
+    }
+}
+
 #[test]
 fn plans_are_deterministic_for_a_given_input() {
     let mut rng = Rng::new(base_seed() ^ 0xABCD);
