@@ -90,6 +90,8 @@ impl Bitstream {
     /// and divide by zero) before encoding.  The internal
     /// `encode_parallel` path skips this scan — its table comes from
     /// `FreqTable::from_data`, which guarantees coverage.
+    // entlint: allow(no-panic-on-untrusted) — encode path over trusted in-process data;
+    // the coverage scan is u8-indexed into fixed 256-entry arrays
     pub fn encode_with_table_parallel(
         symbols: &[u8],
         chunk_size: usize,
@@ -110,6 +112,8 @@ impl Bitstream {
     }
 
     /// Shared encode core; `table` must cover all present symbols.
+    // entlint: allow(no-panic-on-untrusted) — encode path: `chunks[i]` is indexed by the
+    // pool's job index, which ranges over chunks.len() by construction
     fn encode_chunks(symbols: &[u8], chunk_size: usize, table: FreqTable, threads: usize) -> Self {
         assert!(
             chunk_size > 0 && chunk_size <= MAX_CHUNK,
@@ -231,6 +235,9 @@ impl Bitstream {
     /// Shared decode driver: validate the output size, build (possibly
     /// paired) chunk tasks, and fan them out — `single`/`pair` supply
     /// the per-task decode (byte sink or fused f32 sink).
+    // entlint: hot
+    // entlint: allow(no-panic-on-untrusted) — every payload range sliced here was
+    // bounds-checked against payload.len() by chunk_jobs() before any decode starts
     fn decode_dispatch<T, FS, FP>(
         &self,
         out: &mut [T],
@@ -244,6 +251,8 @@ impl Bitstream {
         FP: Fn(&[u8], &mut [T], &[u8], &mut [T]) -> Result<(), String> + Sync,
     {
         if out.len() != self.n_symbols {
+            // entlint: allow(hot-path-alloc-free) — cold error branch; taken once on
+            // caller misuse, never in the decode steady state
             return Err(format!(
                 "output buffer holds {} elements but stream has {} symbols",
                 out.len(),
@@ -266,6 +275,7 @@ impl Bitstream {
     /// into `out`'s chunk slices).  Chunks decode across `threads`
     /// workers of the shared pool; the result is identical to the
     /// scalar path for any thread count.
+    // entlint: hot
     pub fn decode_into(&self, out: &mut [u8], threads: usize) -> Result<(), String> {
         self.decode_dispatch(
             out,
@@ -279,6 +289,7 @@ impl Bitstream {
     /// codes through a 256-entry LUT — the serving hot path, with no
     /// intermediate symbol buffer.  Output equals `decode_into` mapped
     /// through `lut`, for any thread count.
+    // entlint: hot
     pub fn decode_fused_into(
         &self,
         out: &mut [f32],
@@ -299,6 +310,8 @@ impl Bitstream {
         HEADER_LEN + 4 * self.chunk_lens.len() + FreqTable::serialized_len() + self.payload.len()
     }
 
+    // entlint: allow(no-panic-on-untrusted) — serialization of an in-memory stream; the
+    // crc patch slices a buffer this fn just wrote (always >= HEADER_LEN bytes)
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.serialized_len());
         out.extend_from_slice(MAGIC);
@@ -320,6 +333,9 @@ impl Bitstream {
     /// bytes consumed (trailing data is the caller's business).  All
     /// header fields are cross-validated and the crc32 must match; any
     /// corruption or truncation yields `Err`.
+    // entlint: allow(no-panic-on-untrusted) — every slice offset is checked against
+    // bytes.len() (with overflow-checked arithmetic) before use, and rd_u32's try_into
+    // on an exact 4-byte slice is infallible
     pub fn deserialize(bytes: &[u8]) -> Result<(Self, usize), String> {
         if bytes.len() < HEADER_LEN + FreqTable::serialized_len() || &bytes[..4] != MAGIC {
             return Err("bad bitstream magic or truncated header".into());

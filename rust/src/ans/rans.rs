@@ -43,6 +43,8 @@ pub struct FreqTable {
 }
 
 impl FreqTable {
+    // entlint: allow(no-panic-on-untrusted) — table construction: every index is u8-derived
+    // or bounded by cum[256] == 2^12, asserted before the slot fill
     pub fn from_freqs(freq: [u32; 256]) -> Self {
         let mut cum = [0u32; 257];
         for i in 0..256 {
@@ -59,6 +61,7 @@ impl FreqTable {
         FreqTable { freq, cum, slots }
     }
 
+    // entlint: allow(no-panic-on-untrusted) — writes one fixed index of a local [u32; 256]
     pub fn from_data(data: &[u8]) -> Self {
         if data.is_empty() {
             // degenerate table for empty streams: all mass on symbol 0
@@ -69,6 +72,8 @@ impl FreqTable {
         Self::from_freqs(normalize_freqs(&histogram(data), PROB_BITS))
     }
 
+    // entlint: allow(no-panic-on-untrusted) — callers mask `slot` to PROB_SCALE-1 and the
+    // slot table always holds exactly 2^12 entries
     #[inline]
     pub fn sym_at(&self, slot: u32) -> u8 {
         self.slots[slot as usize].sym
@@ -86,6 +91,7 @@ impl FreqTable {
         }
     }
 
+    // entlint: allow(no-panic-on-untrusted) — all reads sit below the `len() < 512` guard
     pub fn deserialize(bytes: &[u8]) -> Result<Self, String> {
         if bytes.len() < 512 {
             return Err("freq table truncated".into());
@@ -111,6 +117,8 @@ impl FreqTable {
 /// Encode one chunk of symbols with N interleaved rANS states.
 /// Returns the compressed payload (head: 4 x u32 final states, then the
 /// byte stream in *decode order*).
+// entlint: allow(no-panic-on-untrusted) — encode path: input is trusted in-process data and
+// every table access is u8-indexed into fixed 256/257-entry arrays
 pub fn encode_chunk(symbols: &[u8], table: &FreqTable) -> Vec<u8> {
     // rANS encodes in reverse; stream i owns symbols[i], symbols[i+N], ...
     let mut states = [RANS_L; N_STREAMS];
@@ -152,6 +160,9 @@ trait SymbolSink {
 struct ByteSink<'a>(&'a mut [u8]);
 
 impl SymbolSink for ByteSink<'_> {
+    // entlint: hot
+    // entlint: allow(no-panic-on-untrusted) — idx < n_symbols == out.len() by the decode
+    // loop bounds
     #[inline(always)]
     fn put(&mut self, idx: usize, sym: u8) {
         self.0[idx] = sym;
@@ -164,6 +175,9 @@ struct FusedSink<'a> {
 }
 
 impl SymbolSink for FusedSink<'_> {
+    // entlint: hot
+    // entlint: allow(no-panic-on-untrusted) — idx < n_symbols == out.len() by the decode
+    // loop bounds; the LUT is u8-indexed into a fixed 256-entry array
     #[inline(always)]
     fn put(&mut self, idx: usize, sym: u8) {
         self.out[idx] = self.lut[sym as usize];
@@ -171,6 +185,9 @@ impl SymbolSink for FusedSink<'_> {
 }
 
 /// Parse the N_STREAMS initial states off a chunk payload header.
+// entlint: hot
+// entlint: allow(no-panic-on-untrusted) — reads sit below the `len() < 4*N_STREAMS` guard,
+// and try_into on an exact 4-byte slice is infallible
 #[inline]
 fn read_states(payload: &[u8]) -> Result<([u32; N_STREAMS], &[u8]), String> {
     if payload.len() < 4 * N_STREAMS {
@@ -209,6 +226,10 @@ fn check_final(ip: usize, inp_len: usize, states: &[u32; N_STREAMS]) -> Result<(
 /// (no per-symbol modulo, 4 independent dependency chains in flight) and
 /// each symbol costs a single packed SlotEntry load.  Byte pulls stay in
 /// exact program order so the stream layout matches the encoder.
+// entlint: hot
+// entlint: allow(no-panic-on-untrusted) — slot is masked to PROB_SCALE-1 against the
+// 2^12-entry slot table, tail streams index mod N_STREAMS, and renorm byte pulls go
+// through get(); nothing here trusts the payload
 #[inline(always)]
 fn decode_core<S: SymbolSink>(
     payload: &[u8],
@@ -261,6 +282,9 @@ fn decode_core<S: SymbolSink>(
 /// byte-identical to decoding the chunks one after another).  When the
 /// chunks differ in length the longer one drains on the plain 4-chain
 /// loop.
+// entlint: hot
+// entlint: allow(no-panic-on-untrusted) — same bounds story as decode_core: masked slots,
+// mod-N_STREAMS tails, get()-checked byte pulls
 #[inline(always)]
 fn decode_pair_core<S: SymbolSink>(
     a: (&[u8], usize, &mut S),
@@ -362,6 +386,7 @@ pub fn decode_chunk(payload: &[u8], n_symbols: usize, table: &FreqTable) -> Resu
 
 /// Decode `out.len()` symbols from one chunk payload straight into the
 /// caller's slice — the allocation-free serving path.
+// entlint: hot
 pub fn decode_chunk_into(payload: &[u8], out: &mut [u8], table: &FreqTable) -> Result<(), String> {
     let n = out.len();
     decode_core(payload, n, table, &mut ByteSink(out))
@@ -369,6 +394,7 @@ pub fn decode_chunk_into(payload: &[u8], out: &mut [u8], table: &FreqTable) -> R
 
 /// Fused decode->dequant: inflate one chunk straight to f32 codes
 /// through `lut`, with no intermediate symbol buffer.
+// entlint: hot
 pub fn decode_chunk_fused(
     payload: &[u8],
     out: &mut [f32],
@@ -382,6 +408,7 @@ pub fn decode_chunk_fused(
 /// Decode two independent chunks in the 8-chain software-pipelined
 /// joint loop (see `decode_pair_core`); outputs are byte-identical to
 /// two `decode_chunk_into` calls.
+// entlint: hot
 pub fn decode_chunk_pair_into(
     payload_a: &[u8],
     out_a: &mut [u8],
@@ -398,6 +425,7 @@ pub fn decode_chunk_pair_into(
 }
 
 /// Fused 8-chain pair decode: two chunks straight to f32 codes.
+// entlint: hot
 pub fn decode_chunk_pair_fused(
     payload_a: &[u8],
     out_a: &mut [f32],

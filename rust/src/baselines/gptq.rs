@@ -7,6 +7,10 @@
 //! (OBS update), per output row.  Grid: symmetric b-bit, group-wise
 //! scales recomputed along the column walk (g=128 default).
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 use crate::tensor::Mat;
 
 #[derive(Clone, Debug)]

@@ -3,6 +3,10 @@
 //! single `Method` interface so the bench harness treats every method
 //! uniformly.
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 pub mod gptq;
 pub mod hqq;
 pub mod nf4;

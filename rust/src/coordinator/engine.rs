@@ -17,6 +17,14 @@
 //!   * DiskOffload  — weights read from disk per block (the paper's
 //!                    "CPU offload" reference point)
 
+// Kernel-module lint posture (see the note in Cargo.toml): index loops mirror
+// the reference layouts, the executable calling convention needs wide argument
+// lists, and the arena's double-buffer slot type is spelled out once.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_range_contains)]
+
 use super::batcher::Batch;
 
 use crate::runtime::{HostTensor, Runtime};
@@ -91,23 +99,31 @@ impl DecodeArena {
     /// Check block `b`'s buffer out of its slot for exclusive decode
     /// use; falls back to a fresh (counted) allocation if the slot's
     /// previous tenant still has live views.
+    // entlint: hot
     fn acquire(&self, b: usize) -> Arc<Vec<f32>> {
         if let Some(mut arc) = self.slots[b & 1].lock().unwrap().take() {
             if Arc::get_mut(&mut arc).is_some() {
                 return arc;
             }
         }
+        // Relaxed: independent monotonic gauge (allocation-miss count); no other
+        // memory depends on its value
         self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        // entlint: allow(hot-path-alloc-free) — the counted fallback itself: taken only
+        // when a slot's previous views are still live, and the steady-state tests pin
+        // this to zero occurrences
         Arc::new(vec![0.0; self.max_symbols])
     }
 
     /// Return a buffer to its slot so the next `acquire` two blocks
     /// later can recycle it.
+    // entlint: hot
     fn release(&self, b: usize, buf: &Arc<Vec<f32>>) {
         *self.slots[b & 1].lock().unwrap() = Some(Arc::clone(buf));
     }
 
     fn fresh_allocs(&self) -> usize {
+        // Relaxed: gauge read for tests/metrics; no ordering contract with the slots
         self.fresh_allocs.load(Ordering::Relaxed)
     }
 
@@ -597,6 +613,7 @@ impl ServingEngine {
 
     /// Fetch block codes according to the residency mode.
     fn fetch_block(&self, b: usize) -> Result<(Vec<HostTensor>, f64)> {
+        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
         let t0 = std::time::Instant::now();
         let codes = match self.opts.residency {
             Residency::Bf16Resident | Residency::F8Resident => {
@@ -634,6 +651,7 @@ impl ServingEngine {
         crate::parallel::decode_ahead(
             n,
             move |b| {
+                // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
                 let t0 = std::time::Instant::now();
                 let codes = decode_codes(cm, table, arena, b, threads)?;
                 Ok((codes, t0.elapsed().as_secs_f64() * 1e3))
@@ -697,6 +715,7 @@ impl ServingEngine {
         let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(self.cm.blocks.len());
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
+            // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
             let t1 = std::time::Instant::now();
             let inputs = self.block_inputs(blk, x.clone(), codes, vec![starts.clone()]);
             let mut out = self.rt.call(exec_name, &inputs)?;
@@ -728,6 +747,7 @@ impl ServingEngine {
     /// Prefill one packed batch: returns (full logits [B,S,V], caches).
     pub fn prefill(&self, batch: &Batch, metrics: &mut Metrics) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
         let (b, _s) = batch.slot;
+        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
         let t0 = std::time::Instant::now();
         let x = self.embed_prefill(batch)?;
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
@@ -768,6 +788,7 @@ impl ServingEngine {
         let mut x = x0;
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
+            // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
             let t1 = std::time::Instant::now();
             let (kc, vc) = caches[blk].clone();
             let mut inputs = Vec::with_capacity(21);
@@ -804,6 +825,7 @@ impl ServingEngine {
         let cfg = &self.rt.manifest.config;
         let ctx = self.decode_ctx(batch.slot.0)?;
         let mut metrics = Metrics::zero();
+        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
         let t_start = std::time::Instant::now();
         let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
         metrics.ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
@@ -827,6 +849,7 @@ impl ServingEngine {
         }
         let (b, _s) = st.batch.slot;
         let cfg = &self.rt.manifest.config;
+        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
         let t0 = std::time::Instant::now();
         let x = self.embed_decode(&st.next, b)?;
         let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
@@ -1276,25 +1299,30 @@ fn write_offload_block(
 /// backs the views.  Free function (not a method) so the decode-ahead
 /// worker can run it without capturing `&ServingEngine` (whose
 /// executable cache is a single-threaded `RefCell`).
+// entlint: hot
 fn decode_codes(
     cm: &CompressedModel,
     value_table: &[f32; 256],
     arena: Option<&DecodeArena>,
     b: usize,
     threads: usize,
+// entlint: allow(hot-path-alloc-free) — cold error branch (bad block index)
 ) -> std::result::Result<Vec<HostTensor>, String> {
     let cb = cm.blocks.get(b).ok_or_else(|| format!("block {b} out of range"))?;
     let n = cb.n_symbols();
     let mut buf = match arena {
+        // entlint: allow(hot-path-alloc-free) — non-arena fallback (load-time resident / offload decode); the serving arena path never takes this branch, pinned by decode_arena_fresh_allocs == 0
         Some(a) => a.acquire(b),
         None => Arc::new(vec![0.0f32; n]),
     };
     // exclusive by construction: acquire() only hands out buffers whose
     // previous views have all been dropped (or a fresh allocation)
     let dst = Arc::get_mut(&mut buf).expect("arena buffer is exclusively held");
+    // entlint: allow(hot-path-alloc-free) — cold error branch (arena buffer too small)
     let decoded = if dst.len() < n {
         Err(format!("arena buffer holds {} f32s, block {b} needs {n}", dst.len()))
     } else {
+        // entlint: allow(hot-path-alloc-free) — cold error branch (decode failure formatting)
         cm.decode_block_fused_into(b, &mut dst[..n], value_table, threads)
             .map_err(|e| format!("{e:#}"))
     };
@@ -1302,6 +1330,7 @@ fn decode_codes(
     if let Some(a) = arena {
         a.release(b, &buf);
     }
+    // entlint: allow(hot-path-alloc-free) — per-block views vector, bounded by layers.len() (7 views); the block-sized symbol buffer is what the arena eliminates
     decoded?;
     let mut out = Vec::with_capacity(cb.layers.len());
     for ((off, len), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {

@@ -15,6 +15,11 @@
 //! * `serve` — the multi-tenant frontend: sharded engines on a balanced
 //!   block partition plus a continuously-batched admission scheduler
 
+// The tree is unsafe-free and locked that way.  If a future SIMD kernel
+// needs unsafe, relax this to `deny` in that one module — entlint then
+// requires a `// SAFETY:` comment per block.
+#![forbid(unsafe_code)]
+
 pub mod ans;
 pub mod baselines;
 pub mod coordinator;

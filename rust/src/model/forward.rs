@@ -4,6 +4,10 @@
 //! optional dynamic activation quantization implements the paper's W8A8
 //! configuration (Table 4).
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 use super::{BlockWeights, Config, Model};
 use crate::quant::Format;
 use crate::tensor::{dot, log_softmax, rmsnorm, softmax_inplace, Mat};

@@ -22,9 +22,17 @@
 //!   the plain sequential loop on the calling thread — no pool, no
 //!   channels, no overhead on the single-core testbed.
 
+//! * **Explored schedules**: workers call `sched::sched_point()` at
+//!   every atomic/lock acquisition — a no-op in production, a seeded
+//!   yield/delay injector under test, letting the schedule-exploration
+//!   sweep (`parallel::sched`) rerun the pool suites across hundreds of
+//!   perturbed interleavings with exact replay from a printed seed.
+
 pub mod pool;
+pub mod sched;
 
 pub use pool::{decode_ahead, pair_jobs, Pool, Service};
+pub use sched::sched_point;
 
 /// Default worker count for `--threads`-style knobs: the
 /// `ENTQUANT_THREADS` env var when set, else the machine's available

@@ -64,17 +64,23 @@ impl Pool {
                 let tx = tx.clone();
                 let (f, next, abort) = (&f, &next, &abort);
                 scope.spawn(move || loop {
+                    super::sched_point();
+                    // Relaxed: abort is a latching advisory flag; a worker missing one update just runs one extra job, and scope join is the real synchronization point
                     if abort.load(Ordering::Relaxed) {
                         break;
                     }
+                    // Relaxed: pure work-stealing ticket counter; fetch_add uniqueness is the only contract
                     let i = next.fetch_add(1, Ordering::Relaxed);
+                    super::sched_point();
                     if i >= n {
                         break;
                     }
                     let r = f(i);
                     if r.is_err() {
+                        // Relaxed: latching advisory flag (see load above); result delivery goes through the channel
                         abort.store(true, Ordering::Relaxed);
                     }
+                    super::sched_point();
                     if tx.send((i, r)).is_err() {
                         break;
                     }
@@ -140,13 +146,18 @@ impl Pool {
             for _ in 0..workers {
                 let (queue, abort, first_err, f) = (&queue, &abort, &first_err, &f);
                 scope.spawn(move || loop {
+                    super::sched_point();
+                    // Relaxed: abort is a latching advisory flag; the queue mutex and scope join do the real synchronization
                     if abort.load(Ordering::Relaxed) {
                         break;
                     }
+                    super::sched_point();
                     let job = queue.lock().unwrap().pop();
                     let Some((i, job)) = job else { break };
                     if let Err(e) = f(i, job) {
+                        // Relaxed: latching advisory flag; first_err is published under its own mutex
                         abort.store(true, Ordering::Relaxed);
+                        super::sched_point();
                         let mut slot = first_err.lock().unwrap();
                         let replace = match &*slot {
                             Some((j, _)) => i < *j,
@@ -216,6 +227,7 @@ impl Service {
 
     /// Signal the worker loop to exit after its current unit of work.
     pub fn request_stop(&self) {
+        super::sched_point();
         self.stop.store(true, Ordering::SeqCst);
     }
 
@@ -267,6 +279,7 @@ where
         let produce = &produce;
         scope.spawn(move || {
             while let Ok(i) = req_rx.recv() {
+                super::sched_point();
                 if res_tx.send((i, produce(i))).is_err() {
                     break;
                 }

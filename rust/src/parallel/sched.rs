@@ -1,0 +1,254 @@
+//! Seeded schedule exploration — a mini-loom for the offline image.
+//!
+//! `sched_point()` is a shim the pool's workers call at every atomic or
+//! lock acquisition.  In production builds it compiles to nothing.  In
+//! test builds a seeded PRNG decides, per call, whether to inject a
+//! `yield_now` or a micro-sleep — perturbing the thread interleaving so
+//! a sweep over many seeds explores schedules CI would otherwise never
+//! hit (the lost-wakeup/double-claim windows live exactly at these
+//! acquisition points).
+//!
+//! Determinism contract (stated honestly): the *perturbation schedule*
+//! replays exactly — thread `k`'s `j`-th `sched_point` takes the same
+//! action for the same seed, because each thread derives its stream
+//! from `(seed, own hit counter)` only, never from cross-thread state
+//! or registration order.  The OS is still free to interleave
+//! differently around those perturbations; what the sweep guarantees is
+//! that the same pressure pattern is re-applied, which in practice
+//! reproduces pool-level failures reliably.
+//!
+//! Sweep controls (read by the `schedule_sweep` test):
+//! - `ENTQ_SCHED_SEEDS=N`  — number of seeds to sweep (default 200)
+//! - `ENTQ_SCHED_SEED=S`   — replay exactly one seed (takes precedence)
+//!
+//! Every seed is printed before it runs, so a failing sweep's last
+//! printed seed is the replay handle.
+
+/// Schedule-exploration hook; a no-op outside test builds.
+#[cfg(not(test))]
+#[inline(always)]
+pub fn sched_point() {}
+
+/// Schedule-exploration hook; consults the active sweep seed.
+#[cfg(test)]
+pub fn sched_point() {
+    test_impl::hit();
+}
+
+#[cfg(test)]
+pub(crate) mod test_impl {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Active sweep seed; 0 = perturbation disabled.
+    // Relaxed: the seed is a test-wide tuning knob read opportunistically at
+    // perturbation points; no other memory is published through it
+    static SEED: AtomicU64 = AtomicU64::new(0);
+
+    thread_local! {
+        static HITS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub fn set_seed(seed: u64) {
+        // Relaxed: see SEED above
+        SEED.store(seed, Ordering::Relaxed);
+    }
+
+    fn splitmix64(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn hit() {
+        // Relaxed: see SEED above
+        let seed = SEED.load(Ordering::Relaxed);
+        if seed == 0 {
+            return;
+        }
+        let j = HITS.with(|h| {
+            let v = h.get();
+            h.set(v + 1);
+            v
+        });
+        let r = splitmix64(seed ^ splitmix64(j));
+        match r % 8 {
+            // mostly yields: cheap, and a yield at an acquisition point is
+            // exactly the "other thread wins the race" schedule
+            0..=3 => std::thread::yield_now(),
+            // occasional micro-sleep: widens the window enough for a whole
+            // competing critical section to run
+            4 => std::thread::sleep(std::time::Duration::from_micros((r >> 8) % 50)),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_impl::set_seed;
+    use crate::parallel::{pair_jobs, Pool, Service};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn splitmix64(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn seeds_to_run() -> Vec<u64> {
+        if let Ok(s) = std::env::var("ENTQ_SCHED_SEED") {
+            let seed: u64 = s.parse().expect("ENTQ_SCHED_SEED must be a u64");
+            return vec![seed];
+        }
+        let n: u64 = std::env::var("ENTQ_SCHED_SEEDS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(200);
+        // the sweep's seed list is itself fixed: seed i = splitmix64(i),
+        // never wall time — so "seed 137 of the default sweep" names the
+        // same schedule on every machine
+        (1..=n).map(splitmix64).map(|s| s.max(1)).collect()
+    }
+
+    /// `par_map_indexed`: every index computed exactly once, results in
+    /// index order, independent of interleaving.
+    fn scenario_par_map_exactly_once() {
+        let n = 48;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let out = Pool::new(4).par_map_indexed(n, |i| {
+            crate::parallel::sched_point();
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            i * 3
+        });
+        assert_eq!(out, (0..n).map(|i| i * 3).collect::<Vec<_>>(), "index order broken");
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "job {i} not run exactly once");
+        }
+    }
+
+    /// `try_par_map_indexed`: the lowest-index error wins no matter
+    /// which worker observes its error first.
+    fn scenario_try_map_first_error() {
+        let r = Pool::new(4).try_par_map_indexed(48, |i| {
+            crate::parallel::sched_point();
+            if i % 9 == 7 {
+                Err(i)
+            } else {
+                Ok(i)
+            }
+        });
+        assert_eq!(r, Err(7), "first-error determinism broken");
+    }
+
+    /// `try_for_each`: exactly-once job delivery plus lowest-index-error
+    /// reporting under the owned-jobs queue.
+    fn scenario_for_each_first_error() {
+        let n = 48;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let r = Pool::new(4).try_for_each((0..n).collect::<Vec<_>>(), |i, job| {
+            crate::parallel::sched_point();
+            assert_eq!(i, job, "index/job pairing broken");
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            if job == 7 || job == 29 {
+                Err(job)
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(r, Err(7), "lowest-index error must win");
+        for (i, h) in hits.iter().enumerate() {
+            assert!(h.load(Ordering::Relaxed) <= 1, "job {i} ran twice");
+        }
+    }
+
+    /// `Service` stop/abort race: a stop racing the worker's first loop
+    /// iterations must still stop it, join cleanly, and never lose the
+    /// worker's completed increments.
+    fn scenario_service_stop_race() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let svc = Service::spawn("sched-sweep", move |stop| {
+            while !stop.load(Ordering::SeqCst) {
+                crate::parallel::sched_point();
+                c2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        crate::parallel::sched_point();
+        svc.stop().expect("service must join cleanly under any schedule");
+        let settled = count.load(Ordering::SeqCst);
+        // after stop() returns the worker is joined: no further writes
+        assert_eq!(count.load(Ordering::SeqCst), settled, "worker wrote after join");
+    }
+
+    /// `pair_jobs` + `try_for_each` as the decoder drives it: pairing
+    /// must preserve index order under any interleaving.
+    fn scenario_paired_jobs_keep_order() {
+        let jobs = pair_jobs((0..32usize).collect(), 4);
+        let seen: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+        Pool::new(4)
+            .try_for_each(jobs, |_, (a, b)| {
+                crate::parallel::sched_point();
+                seen[a].fetch_add(1, Ordering::Relaxed);
+                if let Some(b) = b {
+                    assert_eq!(b, a + 1, "pairing must keep adjacent index order");
+                    seen[b].fetch_add(1, Ordering::Relaxed);
+                }
+                Ok::<(), ()>(())
+            })
+            .unwrap();
+        assert!(seen.iter().all(|h| h.load(Ordering::Relaxed) == 1), "pair coverage broken");
+    }
+
+    #[test]
+    fn schedule_sweep_holds_pool_invariants() {
+        let seeds = seeds_to_run();
+        println!("sched sweep: {} seed(s); replay any with ENTQ_SCHED_SEED=<seed>", seeds.len());
+        for &seed in &seeds {
+            println!("sched sweep: seed {seed}");
+            set_seed(seed);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                scenario_par_map_exactly_once();
+                scenario_try_map_first_error();
+                scenario_for_each_first_error();
+                scenario_service_stop_race();
+                scenario_paired_jobs_keep_order();
+            }));
+            set_seed(0);
+            if let Err(e) = r {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("non-string panic");
+                panic!(
+                    "schedule sweep failed at seed {seed}: {msg}\n\
+                     replay exactly with: ENTQ_SCHED_SEED={seed} cargo test -q -p entquant --lib parallel::sched"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sched_point_is_inert_without_a_seed() {
+        // seed 0 = disabled: sched_point must be a pure no-op so unrelated
+        // tests in this binary are never perturbed
+        set_seed(0);
+        for _ in 0..1000 {
+            crate::parallel::sched_point();
+        }
+    }
+
+    #[test]
+    fn seed_list_is_reproducible() {
+        // the default sweep's seed i is a pure function of i
+        assert_eq!(splitmix64(1), splitmix64(1));
+        assert_ne!(splitmix64(1), splitmix64(2));
+    }
+}

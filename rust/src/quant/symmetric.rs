@@ -2,6 +2,10 @@
 //! base formats:  W_q = clamp(round_gamma(W / s), -Qmax, Qmax),
 //! dequant  What = s * W_q,  one scale per output channel (matrix row).
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 use super::f8e4m3;
 use crate::tensor::Mat;
 

@@ -3,6 +3,10 @@
 //! per layer over the channel scales (§2.2); history m=8, which is
 //! plenty for the smooth-ish STE landscape.
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 /// Minimize `f` starting from `x0`.  `f(x, grad_out) -> value` must fill
 /// `grad_out` with the gradient.  Returns (x*, f(x*), iterations used).
 pub struct LbfgsOpts {

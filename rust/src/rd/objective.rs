@@ -12,6 +12,10 @@
 //!   inside  |W/s| <= Qmax:  dcodes/ds = -W/s^2,  dWhat/ds = codes - W/s
 //!   clamped |W/s|  > Qmax:  dcodes/ds = 0,       dWhat/ds = codes
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 use crate::quant::Format;
 use crate::tensor::Mat;
 

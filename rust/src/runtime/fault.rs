@@ -90,6 +90,7 @@ impl FaultPlan {
     /// How many injections have fired so far (tests assert the script
     /// actually ran).
     pub fn fired(&self) -> usize {
+        // Relaxed: monotonic injection counter read by test assertions; no ordering contract
         self.fired.load(Ordering::Relaxed)
     }
 
@@ -98,6 +99,7 @@ impl FaultPlan {
         for (s, done) in scripts.iter_mut() {
             if !*done && s.shard == shard && s.step == step && s.block == block {
                 *done = true;
+                // Relaxed: monotonic counter; the script slot itself is guarded by the mutex above
                 self.fired.fetch_add(1, Ordering::Relaxed);
                 return true;
             }
@@ -117,6 +119,7 @@ impl FaultPlan {
         let mut shards = armed.lock().unwrap();
         if let Some(i) = shards.iter().position(|&s| s == shard) {
             shards.remove(i);
+            // Relaxed: monotonic counter; the armed-shard list is guarded by the mutex above
             fired.fetch_add(1, Ordering::Relaxed);
             return true;
         }
@@ -150,6 +153,7 @@ impl FaultRuntime {
     /// Called by `Runtime::call` before dispatch; `Err` = injected.
     pub(crate) fn check(&self, name: &str) -> anyhow::Result<()> {
         if name.starts_with("block_d_") {
+            // Relaxed: per-runtime call counter; single writer path, value only feeds step/block arithmetic here
             let idx = self.block_d_calls.fetch_add(1, Ordering::Relaxed);
             let (step, block) = (idx / self.blocks_owned, idx % self.blocks_owned);
             if self.plan.fire_decode(self.shard, step, block) {

@@ -25,6 +25,10 @@
 //!   bit-for-bit (masked cache tail underflows to exactly 0 in
 //!   softmax).
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 use crate::runtime::HostTensor;
 use crate::tensor::{dot, rmsnorm, softmax_inplace};
 use anyhow::{anyhow, bail, ensure, Result};

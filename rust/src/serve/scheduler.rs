@@ -163,6 +163,7 @@ impl Scheduler {
 
     /// Enqueue a prompt; returns the request id for `poll`/`cancel`.
     pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> u64 {
+        // Relaxed: independent id counter; uniqueness is all that matters, entries map has its own lock
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         self.shared.entries.lock().unwrap().insert(
             id,
@@ -172,6 +173,7 @@ impl Scheduler {
                 status: Status::Queued,
                 output: Vec::new(),
                 cancel_requested: false,
+                // entlint: allow(no-wallclock-in-replay) — queue-latency metric only (time-to-first-token gauge); never branches scheduling
                 submitted_at: Instant::now(),
                 got_first_token: false,
             },
@@ -222,6 +224,7 @@ impl Scheduler {
 
     /// Block until `id` is terminal; `Ok` only for `Done`.
     pub fn wait(&self, id: u64, timeout: Duration) -> Result<Vec<u8>> {
+        // entlint: allow(no-wallclock-in-replay) — caller-facing wait timeout, outside the deterministic step loop
         let t0 = Instant::now();
         loop {
             match self.poll(id) {
@@ -238,6 +241,7 @@ impl Scheduler {
 
     /// Block until every submitted request is terminal.
     pub fn drain(&self, timeout: Duration) -> Result<()> {
+        // entlint: allow(no-wallclock-in-replay) — caller-facing drain timeout, outside the deterministic step loop
         let t0 = Instant::now();
         loop {
             {
@@ -346,6 +350,7 @@ impl<E: StepEngine> Driver<E> {
     }
 
     /// One driver iteration; `Ok(false)` means idle.
+    // entlint: hot
     fn tick(&mut self) -> Result<bool> {
         // contract→expand: between decode steps, let a provisioned
         // replacement shard rejoin (re-splitting a merged range) — a
@@ -373,6 +378,8 @@ impl<E: StepEngine> Driver<E> {
                 // new in-flight batch (it is the oldest admitted
                 // request — FCFS preserved)
                 Some(Spec { id, st }) if self.shared.queue.lock().unwrap().is_empty() => {
+                    // entlint: allow(hot-path-alloc-free) — once-per-promotion lane map
+                    // (a handful of Options), not per-token work
                     let mut lane_ids = vec![None; st.lanes()];
                     lane_ids[0] = Some(id);
                     self.flight = Some(Flight { st, lane_ids });
@@ -458,6 +465,7 @@ impl<E: StepEngine> Driver<E> {
     /// fault attribution is always consumed by the error that produced
     /// it and can never go stale (see `ShardedEngine::try_recover`).
     fn recovered(&self) -> bool {
+        // entlint: allow(no-wallclock-in-replay) — recovery-stall metric only; recovery outcome comes from try_recover()
         let t0 = Instant::now();
         let ok = self.engine.try_recover();
         if ok {

@@ -516,6 +516,7 @@ impl ShardedEngine {
         let cfg = &first.runtime().manifest.config;
         let ctx = first.decode_ctx(b)?;
         let mut metrics = Metrics::zero();
+        // entlint: allow(no-wallclock-in-replay) — prefill_ms/ttft_ms metrics only; never branches the forward pass
         let t0 = std::time::Instant::now();
         let mut x = self.attr(0, first.embed_prefill(batch))?;
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
@@ -553,6 +554,7 @@ impl ShardedEngine {
             n_blocks
         );
         let cfg = &shards[0].runtime().manifest.config;
+        // entlint: allow(no-wallclock-in-replay) — step_ms metric only; never branches the forward pass
         let t0 = std::time::Instant::now();
         let mut x = self.attr(0, shards[0].embed_decode(&st.next, b))?;
         let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);

@@ -159,6 +159,9 @@ impl CompressedModel {
     /// through a shared handle first unshares that one block.  Tests
     /// use this to plant in-memory corruption; production code never
     /// mutates blocks after compression.
+    // entlint: allow(no-panic-on-untrusted) — in-process handle API: `i` is a
+    // caller-chosen block index, not container data; out-of-range is a programming
+    // error and should panic loudly
     pub fn block_mut(&mut self, i: usize) -> &mut CompressedBlock {
         Arc::make_mut(&mut self.blocks[i])
     }
@@ -169,6 +172,9 @@ impl CompressedModel {
     /// embed/head/final-norm ride along as shared handles so any slice
     /// can later be promoted to first/last pipeline duty without
     /// touching the container again.
+    // entlint: allow(no-panic-on-untrusted) — `range` comes from shard planning over
+    // this container's own n_blocks(), not from the wire; a bad plan is a programming
+    // error
     pub fn slice_range(&self, range: std::ops::Range<usize>) -> CompressedModel {
         CompressedModel {
             config: self.config.clone(),
@@ -212,6 +218,9 @@ impl CompressedModel {
 
     /// Offline-eval path: reconstruct the QModel (and from there a
     /// dequantized f32 model).
+    // entlint: allow(no-panic-on-untrusted) — `buf[off..off + n]` offsets come from
+    // layer_offsets(), which sums this block's own layer dims and allocated buf to
+    // exactly that total; untrusted bytes were already validated by deserialize
     pub fn to_qmodel(&self) -> Result<QModel> {
         let mut blocks = Vec::with_capacity(self.blocks.len());
         for (i, cb) in self.blocks.iter().enumerate() {
@@ -249,6 +258,8 @@ impl CompressedModel {
 
     // ------------------------------------------------------------ wire
 
+    // entlint: allow(no-panic-on-untrusted) — serialization of an in-memory container;
+    // the crc patch slices a buffer this fn just wrote (always >= PREFIX_LEN bytes)
     pub fn serialize(&self) -> Vec<u8> {
         let mut f32_region: Vec<u8> = Vec::new();
         let push_f32s = |region: &mut Vec<u8>, vals: &[f32]| -> (usize, usize) {
@@ -333,6 +344,9 @@ impl CompressedModel {
         out
     }
 
+    // entlint: allow(no-panic-on-untrusted) — every region slice sits below the
+    // PREFIX_LEN guard or the overflow-checked `extent <= bytes.len()` check;
+    // try_into on exact 4-/2-byte chunks (chunks_exact) is infallible
     pub fn deserialize(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < PREFIX_LEN || &bytes[..4] != MAGIC {
             bail!("bad .eqz magic (or pre-EQZ2 container)");
@@ -446,6 +460,8 @@ impl CompressedModel {
 
 /// Bounds-checked subslice: `bytes[off..off + len]` or a descriptive
 /// error (never a panic) when the range is out of bounds or overflows.
+// entlint: allow(no-panic-on-untrusted) — this IS the checked-slice helper: the
+// `bytes[off..end]` below is only reached after the overflow and bounds guards
 fn checked_slice<'a>(bytes: &'a [u8], off: usize, len: usize, what: &str) -> Result<&'a [u8]> {
     let end = off
         .checked_add(len)

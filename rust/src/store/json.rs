@@ -102,6 +102,8 @@ struct Parser<'a> {
 }
 
 impl<'a> Parser<'a> {
+    // entlint: allow(no-panic-on-untrusted) — `b[i]` sits behind the `i < b.len()`
+    // guard on the same line
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -147,6 +149,9 @@ impl<'a> Parser<'a> {
         v
     }
 
+    // entlint: allow(no-panic-on-untrusted) — the cursor invariant `i <= b.len()`
+    // holds everywhere (i only advances past bytes peek() saw), so `b[i..]` cannot
+    // panic; starts_with handles the short-tail case
     fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
@@ -156,6 +161,8 @@ impl<'a> Parser<'a> {
         }
     }
 
+    // entlint: allow(no-panic-on-untrusted) — `b[start..i]` with start <= i <= b.len()
+    // by the cursor invariant (i only advances past bytes peek() saw)
     fn number(&mut self) -> Result<Value, String> {
         let start = self.i;
         if self.peek() == Some(b'-') {
@@ -186,6 +193,8 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| format!("bad number at byte {start}"))
     }
 
+    // entlint: allow(no-panic-on-untrusted) — `b[start..i]` with start <= i <= b.len()
+    // by the cursor invariant; every escape branch re-checks peek() before advancing
     fn string(&mut self) -> Result<String, String> {
         self.expect(b'"')?;
         let mut out = String::new();

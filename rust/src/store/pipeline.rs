@@ -60,6 +60,9 @@ pub struct CompressionReport {
 }
 
 /// Compress a model end-to-end.  Data-free: only the weights go in.
+// entlint: allow(no-panic-on-untrusted) — offline compression of an in-memory model:
+// every index ranges over the model's own blocks/jobs vectors built above it; the
+// non-empty ensure() guards the probe-layer access
 pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedModel, CompressionReport)> {
     let t0 = std::time::Instant::now();
     anyhow::ensure!(

@@ -5,6 +5,10 @@
 //! PJRT executables (see `runtime`), so this module only needs to be
 //! correct and reasonably fast for offline evaluation and tests.
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 /// Row-major `rows x cols` f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {

@@ -1,6 +1,10 @@
 //! Small shared utilities: the CRC-32 integrity checksum guarding the
 //! `.eqz` / `EQZB` wire formats against corrupt or truncated bytes.
 
+// Index loops here mirror the JAX/Pallas reference kernel layouts (see the
+// lint-posture note in Cargo.toml).
+#![allow(clippy::needless_range_loop)]
+
 /// Slice-by-8 CRC-32 lookup tables (reflected polynomial 0xEDB88320),
 /// built at compile time.  `TABLES[0]` is the classic byte-at-a-time
 /// table; `TABLES[k][b]` is the CRC of byte `b` followed by `k` zero

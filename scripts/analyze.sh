@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Static-analysis + schedule-exploration gate (tier-1 stage; also
+# runnable standalone):
+#
+#   scripts/analyze.sh                      # entlint + schedule sweep smoke
+#   ENTQ_SCHED_SEEDS=500 scripts/analyze.sh # wider sweep
+#   ENTQ_SCHED_SEED=12345 scripts/analyze.sh# replay one printed seed exactly
+#   MIRI=1 scripts/analyze.sh               # additionally try cargo miri
+#   TSAN=1 scripts/analyze.sh               # additionally try -Zsanitizer=thread
+#
+# entlint is deny-by-default: any rule violation in rust/src exits
+# non-zero, and the only escape is an inline
+# `// entlint: allow(<rule>) — <reason>` whose written reason entlint
+# itself audits.  The miri/tsan stages self-skip when the image's
+# toolchain lacks them (both need nightly components the offline image
+# does not ship); they are belt-and-braces on images that have them.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== entlint (deny-by-default, rust/src) =="
+cargo run -q -p entlint -- rust/src
+
+echo "== entlint self-tests (fixture corpus + self-clean) =="
+cargo test -q -p entlint
+
+echo "== schedule-exploration sweep (parallel/pool invariants) =="
+# ENTQ_SCHED_SEEDS seeds (default 200), each printed for exact replay via
+# ENTQ_SCHED_SEED=<seed>; the sweep perturbs every pool acquisition point
+# with seeded yields/delays and re-asserts exactly-once / first-error /
+# stop-join invariants on every explored schedule.
+cargo test -q -p entquant --lib parallel::sched -- --nocapture
+
+if [[ "${MIRI:-0}" == 1 ]]; then
+    echo "== cargo miri (parallel suites) =="
+    if cargo miri --version >/dev/null 2>&1; then
+        cargo miri test -p entquant --lib parallel::
+    else
+        echo "(miri unavailable in this image; skipping)"
+    fi
+fi
+
+if [[ "${TSAN:-0}" == 1 ]]; then
+    echo "== thread sanitizer (parallel suites) =="
+    if rustc -Zhelp >/dev/null 2>&1 && rustc --print target-list >/dev/null 2>&1 \
+        && rustc +nightly --version >/dev/null 2>&1; then
+        RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -p entquant --lib parallel:: \
+            --target "$(rustc -vV | sed -n 's/^host: //p')"
+    else
+        echo "(nightly -Zsanitizer=thread unavailable in this image; skipping)"
+    fi
+fi
+
+echo "analyze: OK"

@@ -26,18 +26,23 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== static analysis (scripts/analyze.sh) =="
+scripts/analyze.sh
+
 echo "== cargo clippy (-D warnings) =="
 if ! cargo clippy --version >/dev/null 2>&1; then
     echo "(clippy unavailable in this image; skipping lint gate)"
 else
-    cargo clippy -q --all-targets -- -D warnings
+    # entquant + the entlint tool; NOT --workspace (the vendored stubs
+    # are third-party-shaped and not held to this gate)
+    cargo clippy -q -p entquant -p entlint --all-targets -- -D warnings
 fi
 
 echo "== cargo fmt --check =="
 if ! cargo fmt --version >/dev/null 2>&1; then
     echo "(rustfmt unavailable in this image; skipping format check)"
 else
-    cargo fmt --check
+    cargo fmt --check -p entquant -p entlint
 fi
 
 if [[ "${BENCH:-0}" == 1 ]]; then

@@ -1,0 +1,288 @@
+//! Minimal Rust lexer — just enough structure for entlint's rules.
+//!
+//! The offline build image has no `syn`, so this hand-rolls the token
+//! kinds the rules need: comments (kept as tokens — directives live in
+//! them), strings (plain / raw / byte), char-vs-lifetime
+//! disambiguation, identifiers, numbers, and single-char punctuation.
+//! It does not need to be a *complete* Rust lexer; it needs to never
+//! misclassify a comment or string boundary, because everything
+//! downstream keys off those.
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+    Comment,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+pub const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub",
+    "ref", "return", "static", "struct", "trait", "type", "unsafe", "use", "where", "while",
+];
+
+pub fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source.  Comments are emitted as tokens (entlint
+/// directives live inside them); whitespace is dropped.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let text = |from: usize, to: usize| -> String { b[from..to].iter().collect() };
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let mut j = i;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text(i, j), line: start });
+            i = j;
+            continue;
+        }
+        // raw / byte strings: r"...", r#"..."#, br"...", b"...", b'.'
+        let mut c = c;
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            let pfx = b[j];
+            if pfx == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' && j + 1 < n && (b[j + 1] == '#' || b[j + 1] == '"') {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    j += 1;
+                    // find closing `"###...`
+                    let mut end = n;
+                    let mut k = j;
+                    'scan: while k < n {
+                        if b[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && b[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                end = k;
+                                break 'scan;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let stop = (end + 1 + hashes).min(n);
+                    let t = text(i, stop);
+                    let newlines = t.chars().filter(|&c| c == '\n').count();
+                    toks.push(Tok { kind: Kind::Str, text: t, line });
+                    line += newlines;
+                    i = stop;
+                    continue;
+                }
+            }
+            if pfx == 'b' && i + 1 < n && b[i + 1] == '"' {
+                i += 1; // fall through to plain string below
+                c = '"';
+            } else if pfx == 'b' && i + 1 < n && b[i + 1] == '\'' {
+                i += 1;
+                c = '\'';
+            }
+        }
+        // plain string
+        if c == '"' {
+            let start = line;
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                } else if b[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            toks.push(Tok { kind: Kind::Str, text: text(i, j), line: start });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let j = i + 1;
+            if j < n && is_ident_start(b[j]) {
+                let mut k = j;
+                while k < n && is_ident_cont(b[k]) {
+                    k += 1;
+                }
+                if k < n && b[k] == '\'' {
+                    toks.push(Tok { kind: Kind::Char, text: text(i, k + 1), line });
+                    i = k + 1;
+                } else {
+                    toks.push(Tok { kind: Kind::Life, text: text(i, k), line });
+                    i = k;
+                }
+                continue;
+            }
+            // escaped or punctuation char literal
+            let mut j = i + 1;
+            if j < n && b[j] == '\\' {
+                j += 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                j += 1;
+            } else {
+                j += 1;
+                if j < n && b[j] == '\'' {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            toks.push(Tok { kind: Kind::Char, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(b[j]) || b[j] == '.') {
+                // don't swallow `..` (range) or a method call `.foo`
+                if b[j] == '.' {
+                    if j + 1 < n && (b[j + 1] == '.' || is_ident_start(b[j + 1])) {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Num, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_tokens() {
+        let ts = kinds("a // hi\nb /* x /* y */ z */ c");
+        assert_eq!(ts[1], (Kind::Comment, "// hi".to_string()));
+        assert_eq!(ts[3], (Kind::Comment, "/* x /* y */ z */".to_string()));
+        assert_eq!(ts[4].1, "c");
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ts = kinds(r#"let s = "vec![] // not a comment";"#);
+        assert!(ts.iter().all(|(k, _)| *k != Kind::Comment));
+        assert_eq!(ts.iter().filter(|(k, _)| *k == Kind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let ts = kinds(r###"let s = r#"a "quoted" b"#; let t = b"bytes";"###);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == Kind::Str).count(), 2);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let ts = kinds("fn f<'a>(x: &'a u8) { let c = 'x'; let e = '\\n'; }");
+        assert_eq!(ts.iter().filter(|(k, _)| *k == Kind::Life).count(), 2);
+        assert_eq!(ts.iter().filter(|(k, _)| *k == Kind::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges_or_methods() {
+        let ts = kinds("0..x.len(); 1.5f64; 2.clone()");
+        let nums: Vec<&str> =
+            ts.iter().filter(|(k, _)| *k == Kind::Num).map(|(_, t)| t.as_str()).collect();
+        assert_eq!(nums, vec!["0", "1.5f64", "2"]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let ts = lex("a\nb\n\nc");
+        let lines: Vec<usize> = ts.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+}

@@ -1,0 +1,25 @@
+//! entlint — repo-specific invariant linter for entquant.
+//!
+//! The repo's headline guarantees (byte-identical decode at any shard
+//! count, allocation-free serving steady state, no panics on untrusted
+//! containers, deterministic fault replay) are enforced dynamically by
+//! tests; entlint pins the *source-level* invariants behind them so
+//! they cannot silently regress as the concurrency surface grows:
+//!
+//! | rule | what it denies | where |
+//! |---|---|---|
+//! | `no-stray-threads` | `thread::spawn`/`scope`/`Builder` | everywhere except `parallel/` |
+//! | `hot-path-alloc-free` | `Vec::new`/`with_capacity`, `vec!`, `format!`, `.to_vec()`, `.collect()`, `.clone()` | fns marked `// entlint: hot` |
+//! | `no-panic-on-untrusted` | `.unwrap()`, `.expect()`, direct `[..]` indexing | `ans/`, `store/` |
+//! | `no-wallclock-in-replay` | `Instant::now`, `SystemTime` | engine, fault injection, serve replay paths |
+//! | `ordering-audit` | `Ordering::Relaxed` without a justifying comment | everywhere |
+//! | `safety-comment` | `unsafe { .. }` without a `// SAFETY:` comment | everywhere (moot while lib.rs forbids unsafe) |
+//!
+//! Escapes are inline and must carry a written reason (see
+//! [`rules`]).  Offline-image constraint: the lexer is hand-rolled —
+//! no `syn`, no proc-macro machinery, no dependencies at all.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_file_contents, Violation, RULES};

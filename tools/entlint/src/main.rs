@@ -1,0 +1,53 @@
+//! CLI: `entlint [root]` — walk `root` (default `rust/src`), lint every
+//! `.rs` file, print `path:line: [rule] msg` per violation, exit
+//! non-zero if any were found.  Deny-by-default: there is no flag to
+//! downgrade a rule; the only way past a diagnostic is an inline
+//! escape with a written reason, which is itself auditable.
+
+use std::path::{Path, PathBuf};
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "rust/src".to_string());
+    let root = PathBuf::from(root);
+    let mut files = Vec::new();
+    if let Err(e) = walk(&root, &mut files) {
+        eprintln!("entlint: cannot walk {}: {e}", root.display());
+        std::process::exit(2);
+    }
+    let mut bad = 0usize;
+    for path in &files {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("entlint: cannot read {}: {e}", path.display());
+                bad += 1;
+                continue;
+            }
+        };
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        for v in entlint::lint_file_contents(&rel, &src) {
+            println!("{}:{}: [{}] {}", path.display(), v.line, v.rule, v.msg);
+            bad += 1;
+        }
+    }
+    println!("entlint: {} files, {} violation(s)", files.len(), bad);
+    std::process::exit(if bad > 0 { 1 } else { 0 });
+}

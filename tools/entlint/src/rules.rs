@@ -1,0 +1,643 @@
+//! The entlint rule engine: directive parsing, scope resolution, and
+//! the five repo-specific checks.
+//!
+//! Deny-by-default: every hit is a violation unless an inline escape
+//! covers it —
+//!
+//! ```text
+//! // entlint: allow(<rule>[, <rule>]) — <written reason>     (fn- or line-scoped)
+//! // entlint: allow-file(<rule>) — <written reason>          (whole file)
+//! // entlint: hot                                            (marks the next fn hot)
+//! ```
+//!
+//! A directive comment directly above an `fn` item (attributes and
+//! visibility modifiers in between are fine) covers the whole body;
+//! anywhere else it covers the next code line.  Escapes without a
+//! written reason, naming unknown rules, or binding to nothing are
+//! themselves violations (`bad-directive`) — an escape hatch you can't
+//! audit is a hole, not a hatch.
+
+use crate::lexer::{is_keyword, lex, Kind, Tok};
+
+pub const RULES: &[&str] = &[
+    "no-stray-threads",
+    "hot-path-alloc-free",
+    "no-panic-on-untrusted",
+    "no-wallclock-in-replay",
+    "ordering-audit",
+    "safety-comment",
+];
+
+/// Paths (relative to the lint root, `/`-separated) where deterministic
+/// replay must not read wall time.
+const REPLAY_PATHS: &[&str] = &[
+    "coordinator/engine.rs",
+    "runtime/fault.rs",
+    "serve/shard.rs",
+    "serve/scheduler.rs",
+    "parallel/",
+];
+/// Modules that decode untrusted bytes (containers come off disk or
+/// the wire) and therefore must never panic on malformed input.
+const UNTRUSTED_PATHS: &[&str] = &["ans/", "store/"];
+/// The one module allowed to touch `std::thread` directly.
+const THREAD_OK_PATHS: &[&str] = &["parallel/"];
+const THREAD_FNS: &[&str] = &["spawn", "scope", "Builder"];
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub line: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+enum Directive {
+    Hot,
+    Allow(Vec<String>),
+    AllowFile(Vec<String>),
+    Bad(String),
+}
+
+/// Parse an `entlint:` comment; `None` when the comment is unrelated.
+fn parse_directive(comment: &str) -> Option<Directive> {
+    let body = comment
+        .trim_start_matches('/')
+        .trim_start_matches('!')
+        .trim_start_matches('*')
+        .trim();
+    let body = body.strip_prefix("entlint:")?.trim();
+    if body == "hot" || body.starts_with("hot ") {
+        return Some(Directive::Hot);
+    }
+    for kind in ["allow-file", "allow"] {
+        if let Some(rest) = body.strip_prefix(kind) {
+            let rest = rest.trim_start();
+            let Some(rest) = rest.strip_prefix('(') else {
+                return Some(Directive::Bad(format!("malformed {kind} directive (expected `(`)")));
+            };
+            let Some(close) = rest.find(')') else {
+                return Some(Directive::Bad(format!("malformed {kind} directive (unclosed `(`)")));
+            };
+            let rules: Vec<String> = rest[..close]
+                .split(',')
+                .map(str::trim)
+                .filter(|r| !r.is_empty())
+                .map(str::to_string)
+                .collect();
+            if rules.is_empty() {
+                return Some(Directive::Bad(format!("{kind} directive names no rule")));
+            }
+            for r in &rules {
+                if !RULES.contains(&r.as_str()) {
+                    return Some(Directive::Bad(format!("unknown rule `{r}`")));
+                }
+            }
+            let mut reason = rest[close + 1..].trim();
+            // reason separator: em-dash, --, - or :
+            for sep in ["\u{2014}", "--", "-", ":"] {
+                if let Some(r) = reason.strip_prefix(sep) {
+                    reason = r.trim();
+                    break;
+                }
+            }
+            if reason.is_empty() {
+                return Some(Directive::Bad(format!(
+                    "{kind}({}) has no written reason",
+                    rules.join(", ")
+                )));
+            }
+            return Some(if kind == "allow-file" {
+                Directive::AllowFile(rules)
+            } else {
+                Directive::Allow(rules)
+            });
+        }
+    }
+    Some(Directive::Bad(format!("unrecognized entlint directive: `{body}`")))
+}
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel == *p || (p.ends_with('/') && rel.starts_with(p)))
+}
+
+struct FileLint {
+    rel: String,
+    toks: Vec<Tok>,
+    viol: Vec<Violation>,
+    allow_file: Vec<String>,
+    line_allows: Vec<(usize, String)>,            // (line, rule)
+    fn_allows: Vec<(usize, usize, Vec<String>)>,  // (body_open_tok, body_close_tok, rules)
+    hot_fns: Vec<(usize, usize)>,                 // (body_open_tok, body_close_tok)
+    skip_spans: Vec<(usize, usize)>,              // #[cfg(test)] items, token spans
+    comment_lines: Vec<usize>,                    // lines a comment covers
+    safety_lines: Vec<usize>,                     // lines a `SAFETY:` comment covers
+}
+
+impl FileLint {
+    fn new(rel: &str, src: &str) -> Self {
+        FileLint {
+            rel: rel.to_string(),
+            toks: lex(src),
+            viol: Vec::new(),
+            allow_file: Vec::new(),
+            line_allows: Vec::new(),
+            fn_allows: Vec::new(),
+            hot_fns: Vec::new(),
+            skip_spans: Vec::new(),
+            comment_lines: Vec::new(),
+            safety_lines: Vec::new(),
+        }
+    }
+
+    fn err(&mut self, line: usize, rule: &str, msg: String) {
+        self.viol.push(Violation { line, rule: rule.to_string(), msg });
+    }
+
+    // ---- pass 1: directives, cfg(test) spans, fn spans
+    fn structure(&mut self) {
+        let n = self.toks.len();
+        // record comment coverage lines (incl. multi-line block comments)
+        for t in &self.toks {
+            if t.kind == Kind::Comment {
+                let newlines = t.text.chars().filter(|&c| c == '\n').count();
+                let has_safety = t.text.contains("SAFETY:");
+                for ln in t.line..=t.line + newlines {
+                    self.comment_lines.push(ln);
+                    if has_safety {
+                        self.safety_lines.push(ln);
+                    }
+                }
+            }
+        }
+
+        // cfg(test) spans: `#` `[` ... cfg ( test ) ... `]` <item>
+        let mut i = 0usize;
+        while i < n {
+            let t = &self.toks[i];
+            if t.kind == Kind::Punct && t.text == "#" && i + 1 < n && self.toks[i + 1].text == "[" {
+                let mut depth = 0i64;
+                let mut j = i + 1;
+                let mut is_cfg_test = false;
+                while j < n {
+                    let tj = &self.toks[j];
+                    if tj.kind == Kind::Punct && tj.text == "[" {
+                        depth += 1;
+                    } else if tj.kind == Kind::Punct && tj.text == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else if tj.kind == Kind::Ident && tj.text == "cfg" {
+                        if j + 2 < n
+                            && self.toks[j + 1].text == "("
+                            && self.toks[j + 2].text == "test"
+                        {
+                            is_cfg_test = true;
+                        }
+                    }
+                    j += 1;
+                }
+                if is_cfg_test {
+                    let end = self.item_end(j + 1);
+                    self.skip_spans.push((i, end));
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        // directives + fn spans
+        let mut pending: Vec<(bool, Vec<String>, usize)> = Vec::new(); // (is_hot, rules, line)
+        let mut i = 0usize;
+        while i < n {
+            if self.toks[i].kind == Kind::Comment {
+                let (line, text) = (self.toks[i].line, self.toks[i].text.clone());
+                match parse_directive(&text) {
+                    Some(Directive::Bad(msg)) => self.err(line, "bad-directive", msg),
+                    Some(Directive::AllowFile(rules)) => self.allow_file.extend(rules),
+                    Some(Directive::Hot) => pending.push((true, Vec::new(), line)),
+                    Some(Directive::Allow(rules)) => pending.push((false, rules, line)),
+                    None => {}
+                }
+                i += 1;
+                continue;
+            }
+            if !pending.is_empty() {
+                // does an fn item start here (skipping attrs + modifiers)?
+                if let Some(fn_tok) = self.fn_ahead(i) {
+                    let body = self.fn_body_span(fn_tok);
+                    for (is_hot, rules, _) in pending.drain(..) {
+                        if is_hot {
+                            self.hot_fns.push(body);
+                        } else {
+                            self.fn_allows.push((body.0, body.1, rules));
+                        }
+                    }
+                } else {
+                    let line = self.toks[i].line;
+                    for (is_hot, rules, dline) in pending.drain(..) {
+                        if is_hot {
+                            self.err(
+                                dline,
+                                "bad-directive",
+                                "hot marker does not precede a fn".to_string(),
+                            );
+                        } else {
+                            for r in rules {
+                                self.line_allows.push((line, r));
+                            }
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+        for (_, _, dline) in pending {
+            self.err(
+                dline,
+                "bad-directive",
+                "directive at end of file binds to nothing".to_string(),
+            );
+        }
+    }
+
+    /// End token index of the item starting at token `i` (brace-matched,
+    /// or the terminating `;`).
+    fn item_end(&self, i: usize) -> usize {
+        let n = self.toks.len();
+        let mut depth = 0i64;
+        let mut j = i;
+        while j < n {
+            let t = &self.toks[j];
+            if t.kind == Kind::Punct {
+                if t.text == "{" {
+                    depth += 1;
+                } else if t.text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                } else if t.text == ";" && depth == 0 {
+                    return j;
+                }
+            }
+            j += 1;
+        }
+        n.saturating_sub(1)
+    }
+
+    /// If an fn item starts at token `i` (past attrs/modifiers), return
+    /// the index of its `fn` token.
+    fn fn_ahead(&self, i: usize) -> Option<usize> {
+        let n = self.toks.len();
+        let mut j = i;
+        while j < n {
+            let t = &self.toks[j];
+            if t.kind == Kind::Punct && t.text == "#" && j + 1 < n && self.toks[j + 1].text == "[" {
+                let mut depth = 0i64;
+                let mut k = j + 1;
+                while k < n {
+                    if self.toks[k].text == "[" {
+                        depth += 1;
+                    } else if self.toks[k].text == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                j = k + 1;
+                continue;
+            }
+            if t.kind == Kind::Comment {
+                j += 1;
+                continue;
+            }
+            if t.kind == Kind::Ident
+                && ["pub", "const", "async", "unsafe", "extern", "crate"].contains(&t.text.as_str())
+            {
+                j += 1;
+                continue;
+            }
+            if t.kind == Kind::Punct && (t.text == "(" || t.text == ")") {
+                j += 1; // pub(crate)
+                continue;
+            }
+            if t.kind == Kind::Str {
+                j += 1; // extern "C"
+                continue;
+            }
+            if t.kind == Kind::Ident && t.text == "fn" {
+                return Some(j);
+            }
+            return None;
+        }
+        None
+    }
+
+    /// (body_open_tok, body_close_tok) of the fn at `fn_tok`; a bodyless
+    /// trait decl returns `(k, k)` at its `;`.  `(..)`/`[..]` nesting in
+    /// the signature is tracked so `;` inside an array type (e.g.
+    /// `[u32; 256]`) does not terminate the scan early.
+    fn fn_body_span(&self, fn_tok: usize) -> (usize, usize) {
+        let n = self.toks.len();
+        let mut depth = 0i64;
+        let mut j = fn_tok;
+        while j < n {
+            let t = &self.toks[j];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => return (j, self.item_end(j)),
+                    ";" if depth == 0 => return (j, j),
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        (n.saturating_sub(1), n.saturating_sub(1))
+    }
+
+    fn in_skip(&self, i: usize) -> bool {
+        self.skip_spans.iter().any(|&(a, b)| a <= i && i <= b)
+    }
+
+    fn allowed(&self, rule: &str, line: usize, tok_i: usize) -> bool {
+        if self.allow_file.iter().any(|r| r == rule) {
+            return true;
+        }
+        if self
+            .line_allows
+            .iter()
+            .any(|(ln, r)| (*ln == line || *ln + 1 == line) && r == rule)
+        {
+            return true;
+        }
+        self.fn_allows
+            .iter()
+            .any(|(a, b, rules)| *a <= tok_i && tok_i <= *b && rules.iter().any(|r| r == rule))
+    }
+
+    fn in_hot(&self, i: usize) -> bool {
+        self.hot_fns.iter().any(|&(a, b)| a <= i && i <= b)
+    }
+
+    fn has_comment(&self, line: usize) -> bool {
+        self.comment_lines.contains(&line)
+    }
+
+    // ---- pass 2: rule checks over the code token stream
+    fn check(&mut self) {
+        let code: Vec<usize> =
+            (0..self.toks.len()).filter(|&k| self.toks[k].kind != Kind::Comment).collect();
+        let untrusted = in_scope(&self.rel, UNTRUSTED_PATHS);
+        let replay = in_scope(&self.rel, REPLAY_PATHS);
+        let threads_ok = in_scope(&self.rel, THREAD_OK_PATHS);
+        let mut out: Vec<Violation> = Vec::new();
+
+        for (ci, &i) in code.iter().enumerate() {
+            if self.in_skip(i) {
+                continue;
+            }
+            let nxt = |d: usize| code.get(ci + d).map(|&k| &self.toks[k]);
+            let prv = |d: usize| ci.checked_sub(d).map(|idx| &self.toks[code[idx]]);
+            let t = &self.toks[i];
+
+            // no-stray-threads
+            if t.kind == Kind::Ident && t.text == "thread" && !threads_ok {
+                if let (Some(a), Some(b), Some(c)) = (nxt(1), nxt(2), nxt(3)) {
+                    if a.text == ":"
+                        && b.text == ":"
+                        && c.kind == Kind::Ident
+                        && THREAD_FNS.contains(&c.text.as_str())
+                        && !self.allowed("no-stray-threads", t.line, i)
+                    {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "no-stray-threads".to_string(),
+                            msg: format!(
+                                "thread::{} outside parallel/ (route work through the parallel subsystem)",
+                                c.text
+                            ),
+                        });
+                    }
+                }
+            }
+
+            // hot-path-alloc-free
+            if self.in_hot(i) {
+                let mut hit: Option<String> = None;
+                if t.kind == Kind::Ident && t.text == "Vec" {
+                    if let (Some(a), Some(b), Some(c)) = (nxt(1), nxt(2), nxt(3)) {
+                        if a.text == ":"
+                            && b.text == ":"
+                            && (c.text == "new" || c.text == "with_capacity")
+                        {
+                            hit = Some(format!("Vec::{}", c.text));
+                        }
+                    }
+                }
+                if t.kind == Kind::Ident && (t.text == "vec" || t.text == "format") {
+                    if let Some(a) = nxt(1) {
+                        if a.text == "!" {
+                            hit = Some(format!("{}!", t.text));
+                        }
+                    }
+                }
+                if t.kind == Kind::Punct && t.text == "." {
+                    if let Some(a) = nxt(1) {
+                        if a.kind == Kind::Ident
+                            && ["to_vec", "collect", "clone"].contains(&a.text.as_str())
+                        {
+                            if let Some(b) = nxt(2) {
+                                if b.text == "(" || b.text == ":" {
+                                    hit = Some(format!(".{}()", a.text));
+                                }
+                            }
+                        }
+                    }
+                }
+                if let Some(h) = hit {
+                    if !self.allowed("hot-path-alloc-free", t.line, i) {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "hot-path-alloc-free".to_string(),
+                            msg: format!(
+                                "{h} inside a `// entlint: hot` fn (steady-state decode must not allocate)"
+                            ),
+                        });
+                    }
+                }
+            }
+
+            // no-panic-on-untrusted
+            if untrusted {
+                if t.kind == Kind::Punct && t.text == "." {
+                    if let Some(a) = nxt(1) {
+                        if a.kind == Kind::Ident && (a.text == "unwrap" || a.text == "expect") {
+                            // `self.expect(..)` is the parser's own method,
+                            // not Option/Result::expect
+                            let recv_self = prv(1).map_or(false, |p| {
+                                p.kind == Kind::Ident
+                                    && p.text == "self"
+                                    && prv(2).map_or(true, |q| q.text != ".")
+                            });
+                            let meth = a.text.clone();
+                            if nxt(2).map_or(false, |b| b.text == "(")
+                                && !(meth == "expect" && recv_self)
+                                && !self.allowed("no-panic-on-untrusted", t.line, i)
+                            {
+                                out.push(Violation {
+                                    line: t.line,
+                                    rule: "no-panic-on-untrusted".to_string(),
+                                    msg: format!(
+                                        ".{meth}() in an untrusted-decode module (return Result instead)"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+                if t.kind == Kind::Punct && t.text == "[" {
+                    let is_index = prv(1).map_or(false, |p| {
+                        (p.kind == Kind::Ident && !is_keyword(&p.text))
+                            || p.kind == Kind::Num
+                            || (p.kind == Kind::Punct
+                                && (p.text == ")" || p.text == "]" || p.text == "?"))
+                    });
+                    if is_index && !self.allowed("no-panic-on-untrusted", t.line, i) {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "no-panic-on-untrusted".to_string(),
+                            msg: "direct index/slice in an untrusted-decode module \
+                                  (use get()/checked slicing and return Result)"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+
+            // no-wallclock-in-replay
+            if replay {
+                let mut hit: Option<&str> = None;
+                if t.kind == Kind::Ident && t.text == "Instant" {
+                    if let (Some(a), Some(b), Some(c)) = (nxt(1), nxt(2), nxt(3)) {
+                        if a.text == ":" && b.text == ":" && c.text == "now" {
+                            hit = Some("Instant::now");
+                        }
+                    }
+                }
+                if t.kind == Kind::Ident && t.text == "SystemTime" {
+                    hit = Some("SystemTime");
+                }
+                if let Some(h) = hit {
+                    if !self.allowed("no-wallclock-in-replay", t.line, i) {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "no-wallclock-in-replay".to_string(),
+                            msg: format!(
+                                "{h} on a deterministic replay path (wall time may not influence decode/replay)"
+                            ),
+                        });
+                    }
+                }
+            }
+
+            // safety-comment (future-proofing: the tree forbids unsafe today,
+            // but if lib.rs is ever relaxed to `deny` for a SIMD kernel, every
+            // block must carry its proof obligation)
+            if t.kind == Kind::Ident && t.text == "unsafe" {
+                if nxt(1).map_or(false, |a| a.kind == Kind::Punct && a.text == "{") {
+                    let justified = self.safety_lines.contains(&t.line)
+                        || self.safety_lines.contains(&(t.line - 1));
+                    if !justified && !self.allowed("safety-comment", t.line, i) {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "safety-comment".to_string(),
+                            msg: "unsafe block without a `// SAFETY:` comment \
+                                  on this or the previous line"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+
+            // ordering-audit
+            if t.kind == Kind::Ident && t.text == "Ordering" {
+                if let (Some(a), Some(b), Some(c)) = (nxt(1), nxt(2), nxt(3)) {
+                    if a.text == ":" && b.text == ":" && c.kind == Kind::Ident && c.text == "Relaxed"
+                    {
+                        let justified = self.has_comment(t.line) || self.has_comment(t.line - 1);
+                        if !justified && !self.allowed("ordering-audit", t.line, i) {
+                            out.push(Violation {
+                                line: t.line,
+                                rule: "ordering-audit".to_string(),
+                                msg: "Ordering::Relaxed without a justifying comment \
+                                      on this or the previous line"
+                                    .to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        self.viol.extend(out);
+    }
+
+    fn run(mut self) -> Vec<Violation> {
+        self.structure();
+        self.check();
+        self.viol
+    }
+}
+
+/// Lint one file's contents.  `rel` is the path relative to the lint
+/// root (`/`-separated) — rule scopes (`ans/`, `parallel/`, ...) key
+/// off it, so fixtures can exercise any scope by picking a virtual
+/// path.
+pub fn lint_file_contents(rel: &str, src: &str) -> Vec<Violation> {
+    FileLint::new(rel, src).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directive_requires_reason() {
+        let v = lint_file_contents("ans/x.rs", "// entlint: allow(no-panic-on-untrusted)\nfn f() {}\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "bad-directive");
+    }
+
+    #[test]
+    fn directive_rejects_unknown_rule() {
+        let v = lint_file_contents("ans/x.rs", "// entlint: allow(no-such-rule) — why\nfn f() {}\n");
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("unknown rule"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(v: &[u8]) -> u8 { v[0] }\n}\n";
+        assert!(lint_file_contents("ans/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fn_level_allow_covers_body_with_array_type_in_signature() {
+        // the `;` inside `[u32; 256]` must not truncate the fn span
+        let src = "// entlint: allow(no-panic-on-untrusted) — fixed-size table\n\
+                   fn f(t: [u32; 256], i: u8) -> u32 { t[i as usize] }\n";
+        assert!(lint_file_contents("ans/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scopes_only_fire_on_their_paths() {
+        let idx = "fn f(v: &[u8]) -> u8 { v[0] }\n";
+        assert_eq!(lint_file_contents("ans/x.rs", idx).len(), 1);
+        assert!(lint_file_contents("model/x.rs", idx).is_empty());
+    }
+}

@@ -1,0 +1,97 @@
+//! Fixture corpus: each known-bad snippet triggers exactly its one
+//! rule; each escaped (or comment-justified) twin passes clean.  The
+//! `rel` paths are virtual — rule scopes key off the path, so a fixture
+//! can exercise any scope without living there.
+
+use entlint::lint_file_contents;
+
+fn fixture(name: &str) -> String {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// Assert the fixture yields exactly `n` violations, all of rule `rule`.
+fn expect_only(name: &str, rel: &str, rule: &str, n: usize) {
+    let v = lint_file_contents(rel, &fixture(name));
+    assert_eq!(
+        v.len(),
+        n,
+        "{name} as {rel}: want {n} violation(s) of [{rule}], got {v:?}"
+    );
+    for viol in &v {
+        assert_eq!(viol.rule, rule, "{name} as {rel}: unexpected rule in {v:?}");
+    }
+}
+
+fn expect_clean(name: &str, rel: &str) {
+    let v = lint_file_contents(rel, &fixture(name));
+    assert!(v.is_empty(), "{name} as {rel}: want clean, got {v:?}");
+}
+
+#[test]
+fn stray_threads_fires_and_escapes() {
+    expect_only("stray_threads_bad.rs", "serve/fixture.rs", "no-stray-threads", 1);
+    expect_clean("stray_threads_ok.rs", "serve/fixture.rs");
+}
+
+#[test]
+fn stray_threads_is_legal_in_parallel() {
+    // same bad source, but under parallel/ — the one sanctioned home
+    expect_clean("stray_threads_bad.rs", "parallel/fixture.rs");
+}
+
+#[test]
+fn hot_alloc_fires_and_escapes() {
+    expect_only("hot_alloc_bad.rs", "model/fixture.rs", "hot-path-alloc-free", 1);
+    expect_clean("hot_alloc_ok.rs", "model/fixture.rs");
+}
+
+#[test]
+fn untrusted_panic_fires_and_escapes() {
+    expect_only("untrusted_panic_bad.rs", "ans/fixture.rs", "no-panic-on-untrusted", 1);
+    expect_clean("untrusted_panic_ok.rs", "ans/fixture.rs");
+}
+
+#[test]
+fn untrusted_indexing_fires() {
+    expect_only("untrusted_index_bad.rs", "store/fixture.rs", "no-panic-on-untrusted", 1);
+}
+
+#[test]
+fn untrusted_rules_only_fire_in_untrusted_modules() {
+    // the same unwrap is fine outside ans//store/
+    expect_clean("untrusted_panic_bad.rs", "model/fixture.rs");
+}
+
+#[test]
+fn wallclock_fires_and_escapes() {
+    expect_only("wallclock_bad.rs", "coordinator/engine.rs", "no-wallclock-in-replay", 1);
+    expect_clean("wallclock_ok.rs", "coordinator/engine.rs");
+}
+
+#[test]
+fn wallclock_is_legal_outside_replay_paths() {
+    expect_clean("wallclock_bad.rs", "serve/metrics.rs");
+}
+
+#[test]
+fn relaxed_fires_and_a_plain_comment_justifies() {
+    expect_only("relaxed_bad.rs", "model/fixture.rs", "ordering-audit", 1);
+    expect_clean("relaxed_ok.rs", "model/fixture.rs");
+}
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    expect_only("unsafe_bad.rs", "model/fixture.rs", "safety-comment", 1);
+    expect_clean("unsafe_ok.rs", "model/fixture.rs");
+}
+
+#[test]
+fn reasonless_escape_is_itself_a_violation() {
+    expect_only("bad_directive.rs", "model/fixture.rs", "bad-directive", 1);
+}
+
+#[test]
+fn cfg_test_items_are_exempt() {
+    expect_clean("cfg_test_skipped.rs", "ans/fixture.rs");
+}

@@ -1,0 +1,4 @@
+// entlint fixture — an escape with no written reason is itself a
+// violation (`bad-directive`); an unauditable hatch is a hole.
+// entlint: allow(no-panic-on-untrusted)
+pub fn noop() {}

@@ -1,0 +1,14 @@
+// entlint fixture — virtual path `ans/fixture.rs`: #[cfg(test)] items
+// are exempt from every rule (tests may unwrap/index freely).
+pub fn id(x: u8) -> u8 {
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_and_indexes_freely() {
+        let v = vec![1u8, 2];
+        assert_eq!(*v.get(0).unwrap(), v[0]);
+    }
+}

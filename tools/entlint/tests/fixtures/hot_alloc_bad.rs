@@ -1,0 +1,9 @@
+// entlint fixture — virtual path `model/fixture.rs` (hot markers are
+// path-independent).
+// entlint: hot
+pub fn decode_step(out: &mut [f32], n: usize) {
+    let scratch = vec![0.0f32; n];
+    for (o, s) in out.iter_mut().zip(&scratch) {
+        *o = *s;
+    }
+}

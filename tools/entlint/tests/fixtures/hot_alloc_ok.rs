@@ -1,0 +1,9 @@
+// entlint fixture — the escaped twin of hot_alloc_bad.rs.
+// entlint: hot
+pub fn decode_step(out: &mut [f32], n: usize) {
+    // entlint: allow(hot-path-alloc-free) — fixture: cold setup branch
+    let scratch = vec![0.0f32; n];
+    for (o, s) in out.iter_mut().zip(&scratch) {
+        *o = *s;
+    }
+}

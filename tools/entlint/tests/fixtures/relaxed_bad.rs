@@ -1,0 +1,7 @@
+// entlint fixture — virtual path `model/fixture.rs` (ordering-audit is
+// path-independent).
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    c.fetch_add(1, Ordering::Relaxed)
+}

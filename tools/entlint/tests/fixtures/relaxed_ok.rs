@@ -1,0 +1,9 @@
+// entlint fixture — the justified twin of relaxed_bad.rs: a plain
+// comment on the site (or the line above) satisfies ordering-audit; no
+// allow-escape is needed.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    // Relaxed: independent monotonic counter, no cross-variable ordering
+    c.fetch_add(1, Ordering::Relaxed)
+}

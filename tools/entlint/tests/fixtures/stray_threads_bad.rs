@@ -1,0 +1,6 @@
+// entlint fixture — linted with virtual path `serve/fixture.rs`.
+pub fn fan_out(n: usize) {
+    for _ in 0..n {
+        std::thread::spawn(|| {});
+    }
+}

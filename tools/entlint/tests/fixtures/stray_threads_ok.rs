@@ -1,0 +1,7 @@
+// entlint fixture — the escaped twin of stray_threads_bad.rs.
+// entlint: allow(no-stray-threads) — fixture: pretend this is a sanctioned helper
+pub fn fan_out(n: usize) {
+    for _ in 0..n {
+        std::thread::spawn(|| {});
+    }
+}

@@ -1,0 +1,7 @@
+// entlint fixture — virtual path `model/fixture.rs` (safety-comment is
+// path-independent).  Note: rust/src itself carries
+// #![forbid(unsafe_code)]; this rule is the backstop for the day one
+// module relaxes that to `deny` for a SIMD kernel.
+pub fn transmute_len(v: &[u8]) -> usize {
+    unsafe { v.as_ptr().add(v.len()).offset_from(v.as_ptr()) as usize }
+}

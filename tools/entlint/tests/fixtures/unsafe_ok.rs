@@ -1,0 +1,7 @@
+// entlint fixture — the justified twin of unsafe_bad.rs: a SAFETY:
+// comment on the block (or the line directly above) is the proof
+// obligation.
+pub fn transmute_len(v: &[u8]) -> usize {
+    // SAFETY: same allocation; add(len) is one-past-the-end, which offset_from permits
+    unsafe { v.as_ptr().add(v.len()).offset_from(v.as_ptr()) as usize }
+}

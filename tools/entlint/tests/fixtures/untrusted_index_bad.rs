@@ -1,0 +1,5 @@
+// entlint fixture — virtual path `store/fixture.rs` (untrusted scope):
+// direct indexing, the non-method flavor of no-panic-on-untrusted.
+pub fn header_len(bytes: &Vec<u8>) -> usize {
+    bytes[4] as usize
+}

@@ -1,0 +1,4 @@
+// entlint fixture — virtual path `ans/fixture.rs` (untrusted scope).
+pub fn first_byte(payload: &Vec<u8>) -> u8 {
+    payload.get(0).copied().unwrap()
+}

@@ -1,0 +1,5 @@
+// entlint fixture — the escaped twin of untrusted_panic_bad.rs.
+// entlint: allow(no-panic-on-untrusted) — fixture: caller guarantees non-empty
+pub fn first_byte(payload: &Vec<u8>) -> u8 {
+    payload.get(0).copied().unwrap()
+}

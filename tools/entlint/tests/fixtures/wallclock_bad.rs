@@ -1,0 +1,5 @@
+// entlint fixture — virtual path `coordinator/engine.rs` (replay scope).
+pub fn step_with_deadline() -> bool {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis() < 5
+}

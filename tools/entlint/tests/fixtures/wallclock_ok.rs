@@ -1,0 +1,6 @@
+// entlint fixture — the escaped twin of wallclock_bad.rs.
+pub fn step_with_deadline() -> bool {
+    // entlint: allow(no-wallclock-in-replay) — fixture: metrics timing only
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis() < 5
+}

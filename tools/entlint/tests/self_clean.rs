@@ -1,0 +1,44 @@
+//! The shipped tree must be clean: every rule hit in `rust/src/`
+//! carries a written escape.  This is the same walk the CLI does, run
+//! as a test so `cargo test -p entlint` alone catches a regression.
+
+use std::path::{Path, PathBuf};
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn rust_src_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let root = root.canonicalize().expect("rust/src exists relative to tools/entlint");
+    let mut files = Vec::new();
+    walk(&root, &mut files);
+    assert!(files.len() > 20, "walk found only {} files — wrong root?", files.len());
+    let mut report = String::new();
+    let mut bad = 0usize;
+    for path in &files {
+        let src = std::fs::read_to_string(path).unwrap();
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap()
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        for v in entlint::lint_file_contents(&rel, &src) {
+            report.push_str(&format!("{rel}:{}: [{}] {}\n", v.line, v.rule, v.msg));
+            bad += 1;
+        }
+    }
+    assert_eq!(bad, 0, "rust/src is not entlint-clean:\n{report}");
+}
