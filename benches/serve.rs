@@ -83,7 +83,7 @@ fn main() {
                 let len = 2 + (i as usize * 5) % (SEQ - 4);
                 let prompt: Vec<u8> =
                     (0..len).map(|j| ((i as usize * 13 + j * 7) % 64) as u8).collect();
-                sched.submit(prompt, max_new)
+                sched.submit(prompt, max_new).expect_admitted()
             })
             .collect();
         let t0 = std::time::Instant::now();
@@ -148,7 +148,7 @@ fn main() {
             let len = 2 + (i as usize * 5) % (SEQ - 4);
             let prompt: Vec<u8> =
                 (0..len).map(|j| ((i as usize * 13 + j * 7) % 64) as u8).collect();
-            sched.submit(prompt, max_new);
+            sched.submit(prompt, max_new).expect_admitted();
         }
         let t0 = std::time::Instant::now();
         sched.resume();

@@ -71,7 +71,10 @@ fn main() -> anyhow::Result<()> {
     let max_new = 24usize;
     let t1 = std::time::Instant::now();
     let ids: Vec<u64> = (0..8)
-        .map(|i| scheduler.submit(valid[i * 120..i * 120 + 64].to_vec(), max_new))
+        .map(|i| {
+            let prompt = valid[i * 120..i * 120 + 64].to_vec();
+            scheduler.submit(prompt, max_new).expect_admitted()
+        })
         .collect();
     println!("[4/4] submitted {} requests; decoding continuously ...", ids.len());
     let mut total_tokens = 0usize;
@@ -119,7 +122,7 @@ fn main() -> anyhow::Result<()> {
     engine.arm_rejoin(Runtime::new(&art)?, 2);
     let drill = Scheduler::new(engine, SchedulerOpts::default());
     let drill_ids: Vec<u64> = (0..4)
-        .map(|i| drill.submit(valid[i * 120..i * 120 + 64].to_vec(), max_new))
+        .map(|i| drill.submit(valid[i * 120..i * 120 + 64].to_vec(), max_new).expect_admitted())
         .collect();
     for id in &drill_ids {
         drill.wait(*id, std::time::Duration::from_secs(600))?;

@@ -549,6 +549,13 @@ impl ServingEngine {
             "truncate_blocks: keep {keep} of {} blocks",
             self.cm.blocks.len()
         );
+        if keep == self.cm.blocks.len() {
+            return Ok(());
+        }
+        // scripted mid-release faults (the supervisor's backoff drills)
+        // are taken before any state is touched — same contract as the
+        // reopen probe: a faulted release leaves the engine as it was
+        self.rt.fault_probe("splice_truncate")?;
         self.cm.blocks.truncate(keep);
         self.consts.truncate(keep);
         if let Some(rc) = self.resident_codes.as_mut() {
@@ -558,6 +565,33 @@ impl ServingEngine {
             for p in self.offload_paths.drain(keep..) {
                 let _ = std::fs::remove_file(p);
             }
+        }
+        Ok(())
+    }
+
+    /// Release this engine's LEADING blocks, keeping local indices
+    /// `n..len` — the mirror of `truncate_blocks` for a donor whose
+    /// range shrinks from the left during a general rebalance.  State
+    /// for kept blocks is untouched; released offload files are removed
+    /// best-effort.
+    pub fn drop_front_blocks(&mut self, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n < self.cm.blocks.len(),
+            "drop_front_blocks: drop {n} of {} blocks",
+            self.cm.blocks.len()
+        );
+        if n == 0 {
+            return Ok(());
+        }
+        self.rt.fault_probe("splice_truncate")?; // see truncate_blocks
+        self.cm.blocks.drain(..n);
+        self.consts.drain(..n);
+        if let Some(rc) = self.resident_codes.as_mut() {
+            rc.drain(..n);
+        }
+        let take = n.min(self.offload_paths.len());
+        for p in self.offload_paths.drain(..take) {
+            let _ = std::fs::remove_file(p);
         }
         Ok(())
     }
@@ -1196,10 +1230,13 @@ fn build_consts(cm: &CompressedModel) -> Vec<BlockConsts> {
 fn build_consts_range(cm: &CompressedModel, range: std::ops::Range<usize>) -> Vec<BlockConsts> {
     let mut consts = Vec::with_capacity(range.len());
     for cb in &cm.blocks[range] {
+        // view, not clone: every shard's consts alias the container's
+        // Arc-backed scale vectors — the last weight-derived per-shard
+        // copies (the `weight_copies == 1` tests pin the sharing)
         let scales = cb
             .layers
             .iter()
-            .map(|l| HostTensor::f32(l.scales.clone(), &[l.rows]))
+            .map(|l| HostTensor::f32_view(Arc::clone(&l.scales), 0, l.scales.len(), &[l.rows]))
             .collect();
         consts.push(BlockConsts {
             scales,

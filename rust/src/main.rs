@@ -5,11 +5,15 @@ use anyhow::{anyhow, bail, Result};
 
 use entquant::coordinator::{EngineOpts, Residency};
 use entquant::eval::{perplexity, TaskSuite};
-use entquant::model::load_eqw;
+use entquant::model::loader::synthetic_model;
+use entquant::model::{load_eqw, Config};
 use entquant::quant::Format;
 use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
-use entquant::runtime::Runtime;
-use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
+use entquant::runtime::{Manifest, Runtime};
+use entquant::serve::{
+    Admission, Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status, Supervisor,
+    SupervisorOpts,
+};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
 
@@ -25,6 +29,12 @@ fn usage() -> ! {
                     [--fault-shard K --fault-step S]  (fault drill: kill shard K at decode step S; reroutes + completes)\n\
                     [--rejoin-shard N --rejoin-step S] (rejoin drill: N replacement runtime(s) — a COUNT, default 1 —\n\
                      join S decode steps after a reroute, re-splitting the merged range: the contract->expand cycle)\n\
+           serve-stdio [--synthetic L] [--shards N] [--max-queue-depth D] [--max-inflight-tokens T]\n\
+                    [--min-healthy-shards H] [--step-budget B] [--fault-shard K --fault-step S]\n\
+                    [--supervisor-spares N] [--evict-after F] [--threads N]\n\
+                    (chaos-harness server: a self-contained synthetic stack driven line-by-line over\n\
+                     stdin/stdout — SUBMIT <cid> <max_new> <hexprompt> | QUIT in; READY, ADMITTED/SHED,\n\
+                     FIRST, DONE/EXPIRED/FAILED, STATS <json> out; see tools/chaosbench)\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
            ablate-blockwise | report-all\n\
          --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
@@ -60,6 +70,7 @@ fn main() -> Result<()> {
         "compress" => cmd_compress(&args[1..]),
         "eval" => cmd_eval(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
+        "serve-stdio" => cmd_serve_stdio(&args[1..]),
         "table1" => tables::table1(),
         "table2" => tables::table2(),
         "table3" => tables::table3(),
@@ -231,7 +242,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let scheduler = Scheduler::new(engine, SchedulerOpts::default());
     let t0 = std::time::Instant::now();
     let ids: Vec<u64> = (0..n_prompts)
-        .map(|i| scheduler.submit(valid[i * 100..i * 100 + 48].to_vec(), max_new))
+        .map(|i| {
+            let prompt = valid[i * 100..i * 100 + 48].to_vec();
+            scheduler.submit(prompt, max_new).expect_admitted()
+        })
         .collect();
     for (i, id) in ids.iter().enumerate() {
         let out = scheduler.wait(*id, std::time::Duration::from_secs(600))?;
@@ -269,4 +283,267 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     scheduler.shutdown().map_err(|e| anyhow!(e))?;
     Ok(())
+}
+
+/// The chaos-harness server (`tools/chaosbench` spawns this as a child
+/// process): a self-contained synthetic serving stack — synthetic
+/// checkpoint compressed in-process, sharded over native runtimes,
+/// optionally under a recovery `Supervisor` — driven line-by-line over
+/// stdin/stdout so an external harness can apply open-loop load, inject
+/// faults (`--fault-shard/--fault-step`), kill -9 the whole process,
+/// and measure shed/expiry/latency behavior from the outside.
+///
+/// Protocol (one event per line, flushed immediately):
+///   in:  `SUBMIT <cid> <max_new> <hexprompt>` | `QUIT`
+///   out: `READY <shards>`, then per request `ADMITTED <cid>` or
+///        `SHED <cid> <retry_after_steps>`, later `FIRST <cid>` once
+///        tokens exist and a terminal `DONE <cid> <hexout>` /
+///        `EXPIRED <cid> <hexout>` / `FAILED <cid> <msg>`; after QUIT
+///        drains, one final `STATS <json>`.
+fn cmd_serve_stdio(args: &[String]) -> Result<()> {
+    use std::io::{BufRead, Write};
+
+    let n_layers: usize =
+        arg_val(args, "--synthetic").map(|v| v.parse()).transpose()?.unwrap_or(6);
+    let shards: usize = arg_val(args, "--shards").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let max_queue_depth: usize =
+        arg_val(args, "--max-queue-depth").map(|v| v.parse()).transpose()?.unwrap_or(usize::MAX);
+    let max_inflight_tokens: usize = arg_val(args, "--max-inflight-tokens")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(usize::MAX);
+    let min_healthy_shards: usize =
+        arg_val(args, "--min-healthy-shards").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let step_budget: Option<usize> =
+        arg_val(args, "--step-budget").map(|v| v.parse()).transpose()?;
+    let fault_shard: Option<usize> =
+        arg_val(args, "--fault-shard").map(|v| v.parse()).transpose()?;
+    let fault_step: usize =
+        arg_val(args, "--fault-step").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let spares: usize =
+        arg_val(args, "--supervisor-spares").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let evict_after: usize =
+        arg_val(args, "--evict-after").map(|v| v.parse()).transpose()?.unwrap_or(1);
+
+    // the same tiny synthetic stack the serve bench uses: compress a
+    // deterministic checkpoint in-process, no artifacts needed
+    const SEQ: usize = 24;
+    const CTX: usize = 48;
+    let model = synthetic_model(
+        Config {
+            name: "chaos".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers,
+            n_heads: 4,
+            d_ff: 48,
+            max_ctx: 64,
+        },
+        71,
+    );
+    let threads = arg_threads(args)?;
+    let (cm, _) = compress_model(
+        &model,
+        &CompressOpts { lam: 0.3, max_iters: 6, threads, ..Default::default() },
+    )?;
+    let native = |cm: &CompressedModel| {
+        Runtime::native(Manifest::synthetic(
+            cm.config.clone(),
+            vec![(1, SEQ), (2, SEQ), (4, SEQ), (8, SEQ)],
+            vec![(1, CTX), (2, CTX), (4, CTX), (8, CTX)],
+        ))
+    };
+    let plan = ShardPlan::balance(&cm, shards);
+    let n_shards = plan.n_shards();
+    let faults = fault_shard
+        .map(|k| FaultPlan::scripted(vec![FaultScript { shard: k, step: fault_step, block: 0 }]));
+    let rts: Vec<Runtime> = (0..n_shards)
+        .map(|i| {
+            let rt = native(&cm);
+            match &faults {
+                Some(f) => rt.with_fault(FaultRuntime::new(
+                    std::sync::Arc::clone(f),
+                    i,
+                    plan.ranges[i].len(),
+                )),
+                None => rt,
+            }
+        })
+        .collect();
+    let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default())?;
+    let opts = SchedulerOpts {
+        max_queue_depth,
+        max_inflight_tokens,
+        min_healthy_shards,
+        step_budget,
+        ..Default::default()
+    };
+    let sched = if spares > 0 {
+        let pool: Vec<Runtime> = (0..spares).map(|_| native(&cm)).collect();
+        let sopts = SupervisorOpts { evict_after, ..Default::default() };
+        Scheduler::new(Supervisor::new(engine, pool, sopts), opts)
+    } else {
+        Scheduler::new(engine, opts)
+    };
+
+    // stdin on its own thread: the main loop must keep publishing
+    // progress events while waiting for the next command line
+    let (tx, rx) = std::sync::mpsc::channel::<String>();
+    // entlint: allow(no-stray-threads) — blocking stdin reader for the chaos
+    // protocol; no work routes through it, so the parallel subsystem does not apply
+    std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            let quit = line.trim() == "QUIT";
+            if tx.send(line).is_err() || quit {
+                break;
+            }
+        }
+    });
+
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    writeln!(out, "READY {n_shards}")?;
+    out.flush()?;
+
+    let mut live: Vec<(u64, String, bool)> = Vec::new(); // (id, cid, first-token seen)
+    let mut quitting = false;
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(line) => {
+                    let mut it = line.split_whitespace();
+                    match it.next() {
+                        Some("SUBMIT") => handle_submit(&sched, &mut out, &mut live, it)?,
+                        Some("QUIT") => quitting = true,
+                        Some(other) => writeln!(out, "ERR unknown command {other}")?,
+                        None => {}
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    quitting = true;
+                    break;
+                }
+            }
+        }
+        live.retain_mut(|(id, cid, first)| {
+            let Some((status, output)) = sched.poll(*id) else { return false };
+            if !*first && !output.is_empty() {
+                *first = true;
+                let _ = writeln!(out, "FIRST {cid}");
+            }
+            match status {
+                Status::Done => {
+                    let _ = writeln!(out, "DONE {cid} {}", hex_encode(&output));
+                    false
+                }
+                Status::Expired => {
+                    let _ = writeln!(out, "EXPIRED {cid} {}", hex_encode(&output));
+                    false
+                }
+                Status::Cancelled => {
+                    let _ = writeln!(out, "CANCELLED {cid}");
+                    false
+                }
+                Status::Failed(msg) => {
+                    let _ = writeln!(out, "FAILED {cid} {}", msg.replace(['\n', '\r'], " "));
+                    false
+                }
+                Status::Queued | Status::Decoding => true,
+            }
+        });
+        out.flush()?;
+        if quitting && live.is_empty() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    let m = sched.metrics();
+    writeln!(out, "STATS {}", stats_json(&m))?;
+    out.flush()?;
+    sched.shutdown().map_err(|e| anyhow!(e))?;
+    Ok(())
+}
+
+/// One `SUBMIT <cid> <max_new> <hexprompt>` line: admit through the
+/// scheduler and answer `ADMITTED <cid>` or `SHED <cid> <retry>`.
+fn handle_submit(
+    sched: &Scheduler,
+    out: &mut impl std::io::Write,
+    live: &mut Vec<(u64, String, bool)>,
+    mut fields: std::str::SplitWhitespace,
+) -> Result<()> {
+    let (Some(cid), Some(mn), Some(hex)) = (fields.next(), fields.next(), fields.next()) else {
+        writeln!(out, "ERR malformed SUBMIT")?;
+        return Ok(());
+    };
+    let max_new: usize = mn.parse()?;
+    let prompt = hex_decode(hex)?;
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt for {cid}");
+    match sched.submit(prompt, max_new) {
+        Admission::Admitted(id) => {
+            writeln!(out, "ADMITTED {cid}")?;
+            live.push((id, cid.to_string(), false));
+        }
+        Admission::Shed { retry_after_steps } => {
+            writeln!(out, "SHED {cid} {retry_after_steps}")?;
+        }
+    }
+    Ok(())
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    anyhow::ensure!(s.len() % 2 == 0, "odd-length hex string");
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|e| anyhow!("bad hex byte at {i}: {e}"))
+        })
+        .collect()
+}
+
+fn stats_json(m: &entquant::serve::MetricsSnapshot) -> String {
+    format!(
+        concat!(
+            "{{\"submitted\": {}, \"completed\": {}, \"failed\": {}, \"cancelled\": {}, ",
+            "\"shed\": {}, \"expired\": {}, \"tokens\": {}, \"decode_steps\": {}, ",
+            "\"reroutes\": {}, \"rejoins\": {}, \"backoff_retries\": {}, ",
+            "\"healthy_shards\": {}, \"degraded_shards\": {}, \"evicted_shards\": {}, ",
+            "\"degradation_tier\": {}, \"weight_copies\": {}, \"queue_depth\": {}, ",
+            "\"p50_ttft_ms\": {:.3}, \"p99_ttft_ms\": {:.3}, \"p999_ttft_ms\": {:.3}, ",
+            "\"tokens_per_s\": {:.1}}}"
+        ),
+        m.submitted,
+        m.completed,
+        m.failed,
+        m.cancelled,
+        m.shed,
+        m.expired,
+        m.tokens,
+        m.decode_steps,
+        m.reroutes,
+        m.rejoins,
+        m.backoff_retries,
+        m.healthy_shards,
+        m.degraded_shards,
+        m.evicted_shards,
+        m.degradation_tier,
+        m.weight_copies,
+        m.queue_depth,
+        m.p50_ttft_ms,
+        m.p99_ttft_ms,
+        m.p999_ttft_ms,
+        m.tokens_per_s,
+    )
 }

@@ -1,0 +1,254 @@
+//! Admission control & backpressure — the bounded front door of the
+//! scheduler.
+//!
+//! `Scheduler::submit` no longer accepts unconditionally: every
+//! submission passes through an `AdmissionCtl` that enforces a bounded
+//! queue (`max_queue_depth`), a committed-work budget
+//! (`max_inflight_tokens`: the sum of `max_new` over every
+//! non-terminal request), and the degradation policy (once reroutes
+//! leave fewer than `min_healthy_shards` healthy shards, new
+//! admissions are shed before anything else is sacrificed).  A refused
+//! submission returns `Admission::Shed { retry_after_steps }` — a
+//! deterministic hint derived from the *observed* queue drain rate
+//! (completed requests per decode step), denominated in decode steps,
+//! never wall time, so a client replaying the same trace gets the same
+//! hints.
+//!
+//! Degradation tiers (`tier` = healthy-shard deficit):
+//!
+//! * tier 0 — healthy: admit normally.
+//! * tier 1 — below `min_healthy_shards`: shed every new admission;
+//!   in-flight and queued requests keep their capacity.
+//! * tier ≥ 2 — deeper deficit: additionally shrink the max batch (the
+//!   driver stops upsizing and halves fresh-batch groups), trading
+//!   throughput for per-step latency on the survivors.
+//!
+//! Everything here is Relaxed atomics: each knob/counter is an
+//! independent bound checked opportunistically at submit time; no
+//! cross-variable ordering invariant exists (the queue lock, held by
+//! the caller across the decision, is what makes depth checks exact).
+
+// entlint: allow-file(ordering-audit) — independent admission counters and
+// gauges; the submit-side queue lock provides the only ordering that matters
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The outcome of a `submit`: either a request id to `poll`/`wait` on,
+/// or a shed with a deterministic retry hint in decode steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admitted(u64),
+    Shed { retry_after_steps: usize },
+}
+
+impl Admission {
+    /// The admitted request id, `None` when shed.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Admission::Admitted(id) => Some(*id),
+            Admission::Shed { .. } => None,
+        }
+    }
+
+    /// The shed retry hint, `None` when admitted.
+    pub fn retry_after(&self) -> Option<usize> {
+        match self {
+            Admission::Admitted(_) => None,
+            Admission::Shed { retry_after_steps } => Some(*retry_after_steps),
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Admission::Shed { .. })
+    }
+
+    /// Unwrap the id; panics on a shed (tests and trusting callers).
+    pub fn expect_admitted(self) -> u64 {
+        match self {
+            Admission::Admitted(id) => id,
+            Admission::Shed { retry_after_steps } => {
+                panic!("request shed (retry after {retry_after_steps} steps)")
+            }
+        }
+    }
+}
+
+/// The admission knobs, split out of `SchedulerOpts` so the controller
+/// is testable without a scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionOpts {
+    /// Queue-depth bound: submissions beyond it are shed.  The default
+    /// (`usize::MAX`) preserves the historical unbounded queue.
+    pub max_queue_depth: usize,
+    /// Committed-work bound: the sum of `max_new` over every
+    /// non-terminal request may not exceed this.
+    pub max_inflight_tokens: usize,
+    /// Degradation threshold: with fewer healthy shards than this, new
+    /// admissions are shed (tier 1); two or more below, the driver also
+    /// shrinks the max batch (tier 2).  0 disables degradation.
+    pub min_healthy_shards: usize,
+}
+
+impl Default for AdmissionOpts {
+    fn default() -> Self {
+        AdmissionOpts {
+            max_queue_depth: usize::MAX,
+            max_inflight_tokens: usize::MAX,
+            min_healthy_shards: 0,
+        }
+    }
+}
+
+/// The shared admission state: bounds from `AdmissionOpts`, the
+/// committed-token ledger, and the driver-maintained healthy-shard
+/// gauge.
+pub(crate) struct AdmissionCtl {
+    opts: AdmissionOpts,
+    /// sum of `max_new` over non-terminal requests — incremented under
+    /// the queue lock at admission, decremented at terminalization
+    inflight_tokens: AtomicUsize,
+    /// driver-updated: the engine's current shard count
+    healthy_shards: AtomicUsize,
+}
+
+impl AdmissionCtl {
+    pub fn new(opts: AdmissionOpts) -> AdmissionCtl {
+        AdmissionCtl {
+            opts,
+            inflight_tokens: AtomicUsize::new(0),
+            // optimistic until the driver's first sweep: degradation
+            // never fires before the engine has reported its topology
+            healthy_shards: AtomicUsize::new(usize::MAX),
+        }
+    }
+
+    /// Decide one submission.  Call with the queue lock held (so
+    /// `queue_depth` cannot be raced past its bound); on `Ok` the
+    /// request's `max_new` has been charged to the inflight ledger.
+    /// `completed`/`decode_steps` are the drain-rate observations the
+    /// retry hint is derived from.
+    pub fn try_admit(
+        &self,
+        max_new: usize,
+        queue_depth: usize,
+        completed: usize,
+        decode_steps: usize,
+    ) -> Result<(), usize> {
+        if self.tier() >= 1 {
+            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+        }
+        if queue_depth >= self.opts.max_queue_depth {
+            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+        }
+        let committed = self.inflight_tokens.load(Ordering::Relaxed);
+        if committed.saturating_add(max_new) > self.opts.max_inflight_tokens {
+            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+        }
+        self.inflight_tokens.fetch_add(max_new, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release a terminal request's committed tokens.
+    pub fn on_terminal(&self, max_new: usize) {
+        // saturating: a double-release bug must not wrap the ledger
+        let mut cur = self.inflight_tokens.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(max_new);
+            match self.inflight_tokens.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn set_healthy_shards(&self, n: usize) {
+        self.healthy_shards.store(n, Ordering::Relaxed);
+    }
+
+    /// Current degradation tier: the healthy-shard deficit (0 = none).
+    pub fn tier(&self) -> usize {
+        self.opts.min_healthy_shards.saturating_sub(self.healthy_shards.load(Ordering::Relaxed))
+    }
+
+    /// Committed inflight tokens (diagnostic; tests pin the ledger
+    /// returns to 0 after drain).
+    pub fn inflight_tokens(&self) -> usize {
+        self.inflight_tokens.load(Ordering::Relaxed)
+    }
+}
+
+/// The deterministic retry hint: how many decode steps until the
+/// scheduler has plausibly drained one queue slot, from the observed
+/// drain rate (`decode_steps / completed` = steps per retirement).
+/// Before any request has completed there is no observation, so the
+/// fallback is proportional to the backlog itself (at least 1) — still
+/// deterministic, still wall-clock-free.
+pub fn retry_after_steps(queue_depth: usize, completed: usize, decode_steps: usize) -> usize {
+    if completed == 0 || decode_steps == 0 {
+        return queue_depth.max(1);
+    }
+    // ceil(decode_steps / completed): one retirement's worth of steps
+    decode_steps.div_ceil(completed).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_queue_sheds_past_depth() {
+        let ctl = AdmissionCtl::new(AdmissionOpts { max_queue_depth: 2, ..Default::default() });
+        assert!(ctl.try_admit(4, 0, 0, 0).is_ok());
+        assert!(ctl.try_admit(4, 1, 0, 0).is_ok());
+        let hint = ctl.try_admit(4, 2, 0, 0).unwrap_err();
+        assert!(hint >= 1, "shed must always carry a usable hint");
+    }
+
+    #[test]
+    fn inflight_token_budget_is_charged_and_released() {
+        let ctl =
+            AdmissionCtl::new(AdmissionOpts { max_inflight_tokens: 10, ..Default::default() });
+        assert!(ctl.try_admit(6, 0, 0, 0).is_ok());
+        assert_eq!(ctl.inflight_tokens(), 6);
+        assert!(ctl.try_admit(6, 0, 0, 0).is_err(), "6+6 > 10 must shed");
+        assert!(ctl.try_admit(4, 0, 0, 0).is_ok());
+        assert_eq!(ctl.inflight_tokens(), 10);
+        ctl.on_terminal(6);
+        assert!(ctl.try_admit(6, 0, 0, 0).is_ok());
+        ctl.on_terminal(6);
+        ctl.on_terminal(4);
+        assert_eq!(ctl.inflight_tokens(), 0);
+        // double release saturates instead of wrapping
+        ctl.on_terminal(100);
+        assert_eq!(ctl.inflight_tokens(), 0);
+    }
+
+    #[test]
+    fn degradation_tier_follows_healthy_deficit() {
+        let ctl = AdmissionCtl::new(AdmissionOpts { min_healthy_shards: 3, ..Default::default() });
+        assert_eq!(ctl.tier(), 0, "optimistic before the first driver sweep");
+        ctl.set_healthy_shards(3);
+        assert_eq!(ctl.tier(), 0);
+        assert!(ctl.try_admit(1, 0, 0, 0).is_ok());
+        ctl.set_healthy_shards(2);
+        assert_eq!(ctl.tier(), 1);
+        assert!(ctl.try_admit(1, 0, 0, 0).is_err(), "tier 1 sheds new admissions");
+        ctl.set_healthy_shards(1);
+        assert_eq!(ctl.tier(), 2);
+    }
+
+    #[test]
+    fn retry_hint_tracks_observed_drain_rate() {
+        // no observation yet: backlog-proportional fallback
+        assert_eq!(retry_after_steps(0, 0, 0), 1);
+        assert_eq!(retry_after_steps(7, 0, 12), 7);
+        // observed: ceil(steps per completed request)
+        assert_eq!(retry_after_steps(5, 10, 100), 10);
+        assert_eq!(retry_after_steps(5, 3, 100), 34);
+        assert_eq!(retry_after_steps(5, 100, 7), 1, "fast drain still hints >= 1");
+    }
+}

@@ -42,6 +42,25 @@ pub struct ServeMetrics {
     /// replacement shards that rejoined after a reroute (a merged range
     /// re-split, the topology expanded back toward its target)
     rejoins: AtomicUsize,
+    /// submissions refused by admission control (bounded queue /
+    /// inflight-token budget / degradation tier) — every shed response
+    /// carries a `retry_after_steps` hint
+    shed: AtomicUsize,
+    /// requests that hit their step-budget deadline (tick-counted, never
+    /// wall-clock) and were expired between decode steps
+    expired: AtomicUsize,
+    /// supervisor rejoin attempts that failed and were re-scheduled
+    /// under tick-counted exponential backoff
+    backoff_retries: AtomicUsize,
+    /// gauge: shards the supervisor currently counts Healthy
+    healthy_shards: AtomicUsize,
+    /// gauge: shards currently Degraded (failed, below evict threshold)
+    degraded_shards: AtomicUsize,
+    /// cumulative shards evicted (rerouted away by the supervisor)
+    evicted_shards: AtomicUsize,
+    /// gauge: current degradation tier (0 = none; 1 = shedding new
+    /// admissions; >= 2 = also shrinking max batch)
+    degradation_tier: AtomicUsize,
     /// wall time spent inside successful recoveries (reroute splices) —
     /// the recovery-stall series `benches/serve.rs` tracks, in µs
     recovery_stall_us: AtomicU64,
@@ -77,6 +96,13 @@ pub struct MetricsSnapshot {
     pub adoption_prefills: usize,
     pub reroutes: usize,
     pub rejoins: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub backoff_retries: usize,
+    pub healthy_shards: usize,
+    pub degraded_shards: usize,
+    pub evicted_shards: usize,
+    pub degradation_tier: usize,
     pub recovery_stall_ms: f64,
     pub weight_copies: usize,
     pub resident_compressed_bytes: usize,
@@ -86,6 +112,8 @@ pub struct MetricsSnapshot {
     pub queue_depth: usize,
     pub inflight_lanes: usize,
     pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub p999_ttft_ms: f64,
     pub mean_ttft_ms: f64,
     pub elapsed_s: f64,
     pub tokens_per_s: f64,
@@ -111,6 +139,13 @@ impl ServeMetrics {
             adoption_prefills: AtomicUsize::new(0),
             reroutes: AtomicUsize::new(0),
             rejoins: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+            backoff_retries: AtomicUsize::new(0),
+            healthy_shards: AtomicUsize::new(0),
+            degraded_shards: AtomicUsize::new(0),
+            evicted_shards: AtomicUsize::new(0),
+            degradation_tier: AtomicUsize::new(0),
             recovery_stall_us: AtomicU64::new(0),
             // one logical copy is the ground state even before the
             // driver's first gauge sweep
@@ -167,6 +202,32 @@ impl ServeMetrics {
         self.rejoins.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn inc_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn inc_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Swept from `StepEngine::backoff_retries` by the driver (the
+    /// supervisor owns the authoritative count), hence a set not an inc.
+    pub fn set_backoff_retries(&self, n: usize) {
+        self.backoff_retries.store(n, Ordering::Relaxed);
+    }
+
+    /// Supervisor health gauges in one sweep (healthy/degraded are
+    /// point-in-time; evicted is a cumulative tally).
+    pub fn set_shard_health(&self, healthy: usize, degraded: usize, evicted: usize) {
+        self.healthy_shards.store(healthy, Ordering::Relaxed);
+        self.degraded_shards.store(degraded, Ordering::Relaxed);
+        self.evicted_shards.store(evicted, Ordering::Relaxed);
+    }
+
+    pub fn set_degradation_tier(&self, tier: usize) {
+        self.degradation_tier.store(tier, Ordering::Relaxed);
+    }
+
     pub fn add_recovery_stall_us(&self, us: u64) {
         self.recovery_stall_us.fetch_add(us, Ordering::Relaxed);
     }
@@ -211,9 +272,24 @@ impl ServeMetrics {
         self.fused_admissions.load(Ordering::Relaxed)
     }
 
+    /// Completed-request tally — one half of the observed drain rate the
+    /// admission controller derives `retry_after_steps` from.
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Decode-step tally — the scheduler's deterministic clock: step
+    /// budgets and shed retry hints are denominated in it (never wall
+    /// time, so replay and the entlint `no-wallclock-in-replay` rule
+    /// both survive).
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let ttft = self.ttft_ms.lock().unwrap().clone();
         let (p50, mean) = percentile_and_mean(&ttft);
+        let (p99, p999) = (percentile(&ttft, 0.99), percentile(&ttft, 0.999));
         let tokens = self.tokens.load(Ordering::Relaxed);
         let elapsed_s = self.started.elapsed().as_secs_f64();
         MetricsSnapshot {
@@ -227,6 +303,13 @@ impl ServeMetrics {
             adoption_prefills: self.adoption_prefills.load(Ordering::Relaxed),
             reroutes: self.reroutes.load(Ordering::Relaxed),
             rejoins: self.rejoins.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            backoff_retries: self.backoff_retries.load(Ordering::Relaxed),
+            healthy_shards: self.healthy_shards.load(Ordering::Relaxed),
+            degraded_shards: self.degraded_shards.load(Ordering::Relaxed),
+            evicted_shards: self.evicted_shards.load(Ordering::Relaxed),
+            degradation_tier: self.degradation_tier.load(Ordering::Relaxed),
             recovery_stall_ms: self.recovery_stall_us.load(Ordering::Relaxed) as f64 / 1e3,
             weight_copies: self.weight_copies.load(Ordering::Relaxed),
             resident_compressed_bytes: self.resident_compressed_bytes.load(Ordering::Relaxed),
@@ -236,6 +319,8 @@ impl ServeMetrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             inflight_lanes: self.inflight_lanes.load(Ordering::Relaxed),
             p50_ttft_ms: p50,
+            p99_ttft_ms: p99,
+            p999_ttft_ms: p999,
             mean_ttft_ms: mean,
             elapsed_s,
             tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
@@ -291,6 +376,12 @@ mod tests {
         m.inc_adoption_prefills();
         m.inc_reroutes();
         m.inc_rejoins();
+        m.inc_shed();
+        m.inc_shed();
+        m.inc_expired();
+        m.set_backoff_retries(1);
+        m.set_shard_health(2, 1, 1);
+        m.set_degradation_tier(1);
         m.add_recovery_stall_us(2500);
         m.set_weight_copies(1);
         m.set_resident_compressed_bytes(4096);
@@ -313,6 +404,13 @@ mod tests {
         assert_eq!(s.adoption_prefills, 1);
         assert_eq!(s.reroutes, 1);
         assert_eq!(s.rejoins, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.backoff_retries, 1);
+        assert_eq!(s.healthy_shards, 2);
+        assert_eq!(s.degraded_shards, 1);
+        assert_eq!(s.evicted_shards, 1);
+        assert_eq!(s.degradation_tier, 1);
         assert!((s.recovery_stall_ms - 2.5).abs() < 1e-9);
         assert_eq!(s.weight_copies, 1);
         assert_eq!(s.resident_compressed_bytes, 4096);
@@ -322,6 +420,8 @@ mod tests {
         assert_eq!(s.queue_depth, 2);
         assert_eq!(s.inflight_lanes, 3);
         assert_eq!(s.p50_ttft_ms, 20.0);
+        assert_eq!(s.p99_ttft_ms, 30.0);
+        assert_eq!(s.p999_ttft_ms, 30.0);
         assert!((s.mean_ttft_ms - 20.0).abs() < 1e-9);
         assert_eq!(s.shard_fresh_allocs, vec![0, 0]);
         assert!(s.tokens_per_s >= 0.0);

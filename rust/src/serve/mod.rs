@@ -1,5 +1,5 @@
 //! The serve subsystem — a sharded, continuously-batched serving
-//! frontend over the one-shot `coordinator` engine, in three pieces:
+//! frontend over the one-shot `coordinator` engine:
 //!
 //! * **`shard`** — `ShardPlan` splits a `CompressedModel`'s blocks into
 //!   contiguous ranges balanced by compressed byte size;
@@ -14,9 +14,17 @@
 //!   between decode steps (solo prefill + catch-up, then
 //!   `DecodeState::adopt_lane`), and re-slots the batch through the
 //!   `batcher` tables as occupancy changes — FCFS throughout.
+//! * **`admission`** — the bounded front door: queue-depth and
+//!   inflight-token caps turn `submit` into `Admitted | Shed` with a
+//!   deterministic, decode-step-denominated retry hint, plus
+//!   degradation tiers keyed off shard health.
+//! * **`supervisor`** — the self-healing wrapper: per-shard
+//!   consecutive-failure eviction, a spare-`Runtime` pool, and
+//!   tick-counted (seeded-jitter) backoff between rejoin attempts.
 //! * **`metrics`** — queue depth, lifecycle tallies, time-to-first-
-//!   token, token throughput and per-shard decode-arena gauges,
-//!   snapshotted lock-free from any thread.
+//!   token, token throughput, health/eviction/backoff gauges and
+//!   per-shard decode-arena gauges, snapshotted lock-free from any
+//!   thread.
 //!
 //! The split mirrors the serving designs in Heilper & Singer 2025 and
 //! Mao et al. 2024: decode-on-demand weights partitioned across
@@ -44,13 +52,17 @@
 //! (the only events that can move them) — a new topology-mutating
 //! path must refresh them itself.
 
+pub mod admission;
 pub mod metrics;
 pub mod scheduler;
 pub mod shard;
+pub mod supervisor;
 
+pub use admission::{Admission, AdmissionOpts};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use scheduler::{Scheduler, SchedulerOpts, Status};
 pub use shard::{ShardPlan, ShardedEngine};
+pub use supervisor::{ShardHealth, Supervisor, SupervisorOpts};
 
 use crate::coordinator::engine::DecodeState;
 use crate::coordinator::{Batch, ServingEngine};
@@ -115,6 +127,20 @@ pub trait StepEngine: Send {
 
     /// Blocks spliced into survivors by reroutes so far.
     fn spliced_blocks(&self) -> usize {
+        0
+    }
+
+    /// Shard health as `(healthy, degraded, evicted)` counts, swept by
+    /// the scheduler driver every tick into `serve::metrics` and the
+    /// admission controller (degradation tiers key off `healthy`).
+    /// The default — no health tracking — reports every shard healthy.
+    fn shard_health(&self) -> (usize, usize, usize) {
+        (self.n_shards(), 0, 0)
+    }
+
+    /// Rejoin attempts that failed and were backoff-rescheduled so far
+    /// (the supervisor's retry counter, exported as a metric).
+    fn backoff_retries(&self) -> usize {
         0
     }
 }

@@ -154,6 +154,17 @@ impl ShardPlan {
         Some(right)
     }
 
+    /// Recompute this plan as the byte-balanced partition over `sizes`
+    /// at its current shard count — the general inverse of any sequence
+    /// of `merge`/`split` bookkeeping: however the ranges drifted, one
+    /// `rebalance` restores the `balance_sizes` bound
+    /// (`max(bytes) <= total/k + max(sizes)`), property-tested in
+    /// `rust/tests/shard_plan.rs`.  The engine-level counterpart
+    /// (`ShardedEngine::rebalance`) moves the live block state to match.
+    pub fn rebalance(&mut self, sizes: &[usize]) {
+        *self = ShardPlan::balance_sizes(sizes, self.n_shards());
+    }
+
     /// Shard `i`'s blocks as a standalone sub-model — an Arc-bump view
     /// via `CompressedModel::slice_range`; the engine materializes
     /// embed/head views only per its `ShardRole`.
@@ -317,6 +328,25 @@ impl ShardedEngine {
     /// not erase its contribution.
     pub fn spliced_blocks(&self) -> usize {
         self.spliced_total.get()
+    }
+
+    /// The shard count the engine was built for — `try_rejoin` expands
+    /// back toward it after reroutes contract the set (the supervisor
+    /// reads the deficit to decide when to spend a spare).
+    pub fn target_shards(&self) -> usize {
+        self.target_shards
+    }
+
+    /// The shard index of the most recently attributed (unconsumed)
+    /// failure — the supervisor peeks it to update per-shard health
+    /// before deciding whether to reroute or absorb.
+    pub fn last_fault(&self) -> Option<usize> {
+        self.pending_fault.get()
+    }
+
+    /// Replacement runtimes currently armed via `arm_rejoin`.
+    pub fn spare_count(&self) -> usize {
+        self.spares.borrow().len()
     }
 
     /// Per-shard load-time residency decode counts — the splice tests
@@ -497,7 +527,88 @@ impl ShardedEngine {
         if shards.len() >= self.target_shards {
             self.steps_since_reroute.set(None);
         }
+        // converge the WHOLE plan back to the byte-balanced partition:
+        // the 2-way split above only halves the donor, so repeated
+        // contract→expand cycles would otherwise drift ever further
+        // from `ShardPlan::balance`.  A rebalance failure is non-fatal
+        // — boundaries commit one at a time, so the plan stays a
+        // consistent contiguous cover and the rejoin itself stands.
+        let _ = self.rebalance_locked(&mut shards, &mut plan);
         true
+    }
+
+    /// Move live block state so the current plan matches the
+    /// byte-balanced partition at the current shard count (the
+    /// engine-level counterpart of `ShardPlan::rebalance`).  Walks the
+    /// shard boundaries left to right, absorbing from the shared
+    /// container on the growing side (`reopen_blocks` — Arc bumps plus
+    /// the moved range's residency decode) before releasing on the
+    /// shrinking side (`truncate_blocks`/`drop_front_blocks`), so block
+    /// ownership is never lost; a failed release rolls the absorb back.
+    /// A boundary can move at most to its neighbor's last block per
+    /// pass (an engine never goes empty), so the walk loops until the
+    /// plan reaches the target — each pass strictly advances, so it
+    /// terminates.  Safe between decode steps: block math is
+    /// independent of shard boundaries, in-flight generations continue
+    /// byte-identically.
+    pub fn rebalance(&self) -> Result<()> {
+        let mut shards = self.shards.borrow_mut();
+        let mut plan = self.plan.borrow_mut();
+        self.rebalance_locked(&mut shards, &mut plan)
+    }
+
+    fn rebalance_locked(&self, shards: &mut [ServingEngine], plan: &mut ShardPlan) -> Result<()> {
+        let sizes: Vec<usize> =
+            self.full.blocks.iter().map(|b| b.bitstream.serialized_len()).collect();
+        let target = ShardPlan::balance_sizes(&sizes, plan.n_shards());
+        loop {
+            let mut progressed = false;
+            for i in 1..plan.n_shards() {
+                let c = plan.ranges[i].start;
+                let goal = target.ranges[i].start;
+                // clamp so neither neighbor goes empty this pass; later
+                // passes finish the move once the far boundary has made
+                // room
+                let t = if goal < c {
+                    goal.max(plan.ranges[i - 1].start + 1)
+                } else {
+                    goal.min(plan.ranges[i].end - 1)
+                };
+                if t == c {
+                    continue;
+                }
+                if t < c {
+                    // boundary moves left: shard i absorbs [t, c) at its
+                    // front, then shard i-1 releases the same blocks
+                    shards[i].reopen_blocks(&self.full, t..c, true)?;
+                    if let Err(e) = shards[i - 1].truncate_blocks(t - plan.ranges[i - 1].start) {
+                        shards[i]
+                            .drop_front_blocks(c - t)
+                            .map_err(|e2| e2.context("rebalance rollback failed"))?;
+                        return Err(e);
+                    }
+                } else {
+                    // boundary moves right: shard i-1 absorbs [c, t) at
+                    // its back, then shard i releases them from its front
+                    shards[i - 1].reopen_blocks(&self.full, c..t, false)?;
+                    if let Err(e) = shards[i].drop_front_blocks(t - c) {
+                        shards[i - 1]
+                            .truncate_blocks(c - plan.ranges[i - 1].start)
+                            .map_err(|e2| e2.context("rebalance rollback failed"))?;
+                        return Err(e);
+                    }
+                }
+                plan.ranges[i - 1].end = t;
+                plan.ranges[i].start = t;
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        plan.bytes =
+            plan.ranges.iter().map(|r| sizes[r.clone()].iter().sum::<usize>()).collect();
+        Ok(())
     }
 
     /// Prefill a batch across all shards: embed on the first, blocks in

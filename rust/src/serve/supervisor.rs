@@ -1,0 +1,320 @@
+//! The self-healing recovery supervisor — the autonomous replacement
+//! for the manual `arm_rejoin` drill.
+//!
+//! A `Supervisor` wraps a `ShardedEngine` behind the same `StepEngine`
+//! surface and adds three things the scheduler driver gets for free by
+//! driving the wrapper:
+//!
+//! * **Per-shard health**: every attributed failure advances that
+//!   shard's consecutive-failure count (`Healthy → Degraded`); at
+//!   `evict_after` the supervisor lets the engine reroute the shard
+//!   away (`Evicted`).  Below the threshold the failure is *absorbed*:
+//!   `try_recover` reports success without touching the topology, and
+//!   the caller replays the interrupted (resumable) step — transient
+//!   faults cost one replay, not a shard.  A fully successful pipeline
+//!   step resets every live shard to `Healthy` (the counts are
+//!   consecutive).
+//! * **A spare pool**: replacement `Runtime`s handed to the supervisor
+//!   up front (or added later) are spent automatically whenever the
+//!   topology is below target — no human calls `arm_rejoin` anymore.
+//! * **Deterministic backoff**: a failed rejoin attempt re-schedules
+//!   under tick-counted exponential backoff plus seeded splitmix64
+//!   jitter.  The clock is the driver's `try_rejoin` poll count —
+//!   never wall time, so a replayed trace retries at exactly the same
+//!   ticks (`no-wallclock-in-replay` survives).
+//!
+//! All transitions surface through `serve::metrics`: the driver sweeps
+//! `shard_health()` into the healthy/degraded/evicted gauges (which
+//! also feed the admission degradation tiers) and `backoff_retries()`
+//! into its counter, every tick.
+
+use super::shard::ShardedEngine;
+use super::StepEngine;
+use crate::coordinator::engine::DecodeState;
+use crate::coordinator::Batch;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::cell::{Cell, RefCell};
+
+/// A shard slot's health as the supervisor sees it.  `Evicted` never
+/// appears in the live listing (the slot is gone); it exists for the
+/// cumulative tally and for callers matching on transition reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    Healthy,
+    /// at least one consecutive failure, below the evict threshold
+    Degraded,
+    Evicted,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorOpts {
+    /// Consecutive attributed failures before a shard is evicted
+    /// (rerouted away).  1 — the default — preserves the historical
+    /// reroute-on-first-failure behavior; higher values absorb
+    /// transient faults by replaying the resumable step in place.
+    pub evict_after: usize,
+    /// First backoff delay after a failed rejoin attempt, in
+    /// `try_rejoin` polls (the driver ticks once per loop iteration).
+    pub backoff_base: usize,
+    /// Exponential backoff ceiling, in ticks (jitter applies on top).
+    pub backoff_cap: usize,
+    /// Seed for the splitmix64 jitter — same seed, same retry ticks.
+    pub jitter_seed: u64,
+}
+
+impl Default for SupervisorOpts {
+    fn default() -> Self {
+        SupervisorOpts { evict_after: 1, backoff_base: 2, backoff_cap: 64, jitter_seed: 0x5eed }
+    }
+}
+
+/// The deterministic retry schedule: `base * 2^attempt`, capped, plus
+/// a seeded jitter in `[0, delay/2]` so a fleet of supervisors sharing
+/// a failure mode (but not a seed) would not retry in lockstep.  Pure
+/// — the unit tests pin the exact schedule.
+pub fn backoff_ticks(base: usize, cap: usize, attempt: u32, seed: u64) -> usize {
+    let exp = base.max(1).saturating_mul(1usize << attempt.min(16)).min(cap.max(1));
+    let jitter = (splitmix64(seed ^ u64::from(attempt)) % (exp as u64 / 2 + 1)) as usize;
+    exp + jitter
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `ShardedEngine` + health state machine + spare pool + backoff.
+/// Interior mutability mirrors the engine it wraps: all of this runs
+/// on the single scheduler-driver thread.
+pub struct Supervisor {
+    inner: ShardedEngine,
+    opts: SupervisorOpts,
+    /// consecutive attributed failures per live shard slot (parallel to
+    /// the engine's current shard vector)
+    fails: RefCell<Vec<usize>>,
+    /// replacement runtimes, spent LIFO as the topology contracts
+    pool: RefCell<Vec<Runtime>>,
+    /// the supervisor's clock: `try_rejoin` polls seen so far
+    ticks: Cell<usize>,
+    /// tick at (or after) which the next rejoin attempt may run
+    next_attempt: Cell<usize>,
+    /// failed-attempt count since the last successful rejoin
+    attempt: Cell<u32>,
+    backoff_retries: Cell<usize>,
+    evicted: Cell<usize>,
+}
+
+impl Supervisor {
+    pub fn new(inner: ShardedEngine, spares: Vec<Runtime>, opts: SupervisorOpts) -> Supervisor {
+        let fails = vec![0; inner.n_shards()];
+        Supervisor {
+            inner,
+            opts,
+            fails: RefCell::new(fails),
+            pool: RefCell::new(spares),
+            ticks: Cell::new(0),
+            next_attempt: Cell::new(0),
+            attempt: Cell::new(0),
+            backoff_retries: Cell::new(0),
+            evicted: Cell::new(0),
+        }
+    }
+
+    /// Hand the supervisor another replacement runtime.
+    pub fn add_spare(&self, rt: Runtime) {
+        self.pool.borrow_mut().push(rt);
+    }
+
+    /// The wrapped engine (tests inspect its plan and counters).
+    pub fn engine(&self) -> &ShardedEngine {
+        &self.inner
+    }
+
+    /// Live per-slot health, in shard order.
+    pub fn health(&self) -> Vec<ShardHealth> {
+        self.fails
+            .borrow()
+            .iter()
+            .map(|&f| if f == 0 { ShardHealth::Healthy } else { ShardHealth::Degraded })
+            .collect()
+    }
+
+    /// Rejoin attempts that failed and were backoff-rescheduled.
+    pub fn backoff_retries(&self) -> usize {
+        self.backoff_retries.get()
+    }
+
+    /// Shards evicted (rerouted away) so far — cumulative.
+    pub fn evicted(&self) -> usize {
+        self.evicted.get()
+    }
+
+    fn clear_fails(&self) {
+        for f in self.fails.borrow_mut().iter_mut() {
+            *f = 0;
+        }
+    }
+
+    fn poll_rejoin(&self, idle: bool) -> bool {
+        let now = self.ticks.get() + 1;
+        self.ticks.set(now);
+        if self.inner.n_shards() >= self.inner.target_shards() {
+            return false;
+        }
+        if now < self.next_attempt.get() {
+            return false;
+        }
+        // arm a spare from the pool unless one is already waiting in
+        // the engine (a prior attempt that failed before spending it)
+        if self.inner.spare_count() == 0 {
+            let Some(rt) = self.pool.borrow_mut().pop() else { return false };
+            self.inner.arm_rejoin(rt, 0);
+        }
+        let ok = if idle { self.inner.try_rejoin_idle() } else { self.inner.try_rejoin() };
+        if ok {
+            // the rejoin rebalanced every boundary, so the whole
+            // topology was just revalidated: start its health fresh
+            *self.fails.borrow_mut() = vec![0; self.inner.n_shards()];
+            self.attempt.set(0);
+            self.next_attempt.set(now);
+        } else {
+            let a = self.attempt.get();
+            self.backoff_retries.set(self.backoff_retries.get() + 1);
+            let delay = backoff_ticks(
+                self.opts.backoff_base,
+                self.opts.backoff_cap,
+                a,
+                self.opts.jitter_seed,
+            );
+            self.next_attempt.set(now + delay);
+            self.attempt.set(a + 1);
+        }
+        ok
+    }
+}
+
+impl StepEngine for Supervisor {
+    fn prefill_state(&self, batch: &Batch) -> Result<DecodeState> {
+        let r = self.inner.prefill_state(batch);
+        if r.is_ok() {
+            self.clear_fails(); // consecutive counts: full success resets
+        }
+        r
+    }
+
+    fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
+        let r = self.inner.decode_step(st);
+        if r.is_ok() {
+            self.clear_fails();
+        }
+        r
+    }
+
+    fn prefill_slots(&self) -> Vec<(usize, usize)> {
+        self.inner.prefill_slots()
+    }
+
+    fn decode_slots(&self) -> Vec<(usize, usize)> {
+        self.inner.decode_slots()
+    }
+
+    fn fresh_allocs_per_shard(&self) -> Vec<usize> {
+        self.inner.fresh_allocs()
+    }
+
+    /// The health state machine: an attributed failure advances its
+    /// shard's consecutive count; below `evict_after` the failure is
+    /// absorbed (recovery reported, topology untouched, caller replays
+    /// the resumable step); at the threshold the engine reroutes the
+    /// shard away and a rejoin attempt is scheduled immediately.
+    fn try_recover(&self) -> bool {
+        let Some(k) = self.inner.last_fault() else { return false };
+        let mut fails = self.fails.borrow_mut();
+        if k >= fails.len() {
+            drop(fails);
+            return self.inner.try_recover();
+        }
+        fails[k] += 1;
+        if fails[k] < self.opts.evict_after {
+            // transient tolerance — the stale attribution is cleared at
+            // the start of the next engine operation
+            return true;
+        }
+        drop(fails);
+        if self.inner.try_recover() {
+            self.fails.borrow_mut().remove(k);
+            self.evicted.set(self.evicted.get() + 1);
+            // a deficit exists now: first rejoin attempt is immediate
+            self.attempt.set(0);
+            self.next_attempt.set(self.ticks.get());
+            true
+        } else {
+            false
+        }
+    }
+
+    fn try_rejoin(&self) -> bool {
+        self.poll_rejoin(false)
+    }
+
+    fn try_rejoin_idle(&self) -> bool {
+        self.poll_rejoin(true)
+    }
+
+    fn weight_copies(&self) -> usize {
+        self.inner.weight_copies()
+    }
+
+    fn resident_compressed_bytes(&self) -> usize {
+        self.inner.resident_compressed_bytes()
+    }
+
+    fn spliced_blocks(&self) -> usize {
+        self.inner.spliced_blocks()
+    }
+
+    fn shard_health(&self) -> (usize, usize, usize) {
+        let fails = self.fails.borrow();
+        let healthy = fails.iter().filter(|&&f| f == 0).count();
+        (healthy, fails.len() - healthy, self.evicted.get())
+    }
+
+    fn backoff_retries(&self) -> usize {
+        self.backoff_retries.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_exponential_capped_and_deterministic() {
+        let base = 2;
+        let cap = 64;
+        let seed = 0x5eed;
+        let a: Vec<usize> = (0..10).map(|i| backoff_ticks(base, cap, i, seed)).collect();
+        let b: Vec<usize> = (0..10).map(|i| backoff_ticks(base, cap, i, seed)).collect();
+        assert_eq!(a, b, "same seed must schedule the same retries");
+        for (i, &d) in a.iter().enumerate() {
+            let exp = (base << i.min(16)).min(cap);
+            assert!(d >= exp, "attempt {i}: delay {d} below exponential floor {exp}");
+            assert!(d <= exp + exp / 2, "attempt {i}: jitter exceeds delay/2");
+        }
+        // the exponential floor caps out
+        assert!(backoff_ticks(base, cap, 30, seed) <= cap + cap / 2);
+        // a different seed jitters differently somewhere in the schedule
+        let c: Vec<usize> = (0..10).map(|i| backoff_ticks(base, cap, i, seed ^ 7)).collect();
+        assert_ne!(a, c, "jitter must depend on the seed");
+    }
+
+    #[test]
+    fn backoff_survives_degenerate_knobs() {
+        assert!(backoff_ticks(0, 0, 0, 0) >= 1);
+        assert!(backoff_ticks(usize::MAX, usize::MAX, 40, 1) >= 1);
+    }
+}

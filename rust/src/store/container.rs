@@ -73,7 +73,11 @@ pub struct LayerMeta {
     pub name: String,
     pub rows: usize,
     pub cols: usize,
-    pub scales: Vec<f32>,
+    /// Arc-backed so engine `BlockConsts` can view the same allocation
+    /// (`HostTensor::f32_view`) instead of cloning per shard — the last
+    /// weight-derived per-shard copies (`weight_copies == 1` tests pin
+    /// the sharing)
+    pub scales: Arc<Vec<f32>>,
     /// super-weight exclusion: quantized at plain AbsMax (still ANS coded)
     pub excluded: bool,
 }
@@ -233,7 +237,7 @@ impl CompressedModel {
                     cols: l.cols,
                     fmt: self.fmt,
                     symbols: buf[off..off + n].to_vec(),
-                    scales: l.scales.clone(),
+                    scales: (*l.scales).clone(),
                 });
             }
             blocks.push(QBlock {
@@ -427,7 +431,7 @@ impl CompressedModel {
                     name: lm.get("name").and_then(|x| x.as_str()).unwrap_or("?").to_string(),
                     rows,
                     cols,
-                    scales: read_bf16s(g(lm, "scales_off")?, rows, "scales")?,
+                    scales: Arc::new(read_bf16s(g(lm, "scales_off")?, rows, "scales")?),
                     excluded: lm.get("excluded").and_then(|x| x.as_bool()).unwrap_or(false),
                 });
             }

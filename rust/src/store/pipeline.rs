@@ -128,7 +128,7 @@ pub fn compress_model(model: &Model, opts: &CompressOpts) -> Result<(CompressedM
                 name: name.to_string(),
                 rows: q.rows,
                 cols: q.cols,
-                scales: q.scales.clone(),
+                scales: std::sync::Arc::new(q.scales.clone()),
                 excluded: name == "w_down" && excluded_blocks.contains(&b),
             });
             per_layer.push((format!("blocks.{b}.{name}"), stats.clone()));

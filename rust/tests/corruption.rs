@@ -201,7 +201,10 @@ fn bit_flipped_block_under_one_shard_fails_requests_never_panics() {
 
     let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
     let ids: Vec<u64> = (0..6)
-        .map(|i| sched.submit((0..4 + i as usize).map(|j| (j % 64) as u8).collect(), 4))
+        .map(|i| {
+            let prompt: Vec<u8> = (0..4 + i as usize).map(|j| (j % 64) as u8).collect();
+            sched.submit(prompt, 4).expect_admitted()
+        })
         .collect();
     sched.resume();
     sched.drain(Duration::from_secs(120)).unwrap();

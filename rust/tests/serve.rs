@@ -17,7 +17,10 @@ use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
 use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
 use entquant::runtime::{Manifest, Runtime};
-use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status, StepEngine};
+use entquant::serve::{
+    Admission, MetricsSnapshot, Scheduler, SchedulerOpts, ShardPlan, ShardedEngine, Status,
+    StepEngine, Supervisor, SupervisorOpts,
+};
 use entquant::store::container::CompressedModel;
 use entquant::store::pipeline::{compress_model, CompressOpts};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -170,12 +173,14 @@ fn trace_of_64_requests_through_scheduler_matches_single_engine() {
 
     let sched = Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
     // 56 requests queue up-front; the last 8 arrive mid-trace
-    let mut ids: Vec<u64> =
-        reqs[..56].iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+    let mut ids: Vec<u64> = reqs[..56]
+        .iter()
+        .map(|r| sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted())
+        .collect();
     sched.resume();
     std::thread::sleep(Duration::from_millis(5));
     for r in &reqs[56..] {
-        ids.push(sched.submit(r.prompt.clone(), max_new(r.id)));
+        ids.push(sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted());
     }
     sched.drain(Duration::from_secs(300)).unwrap();
 
@@ -216,8 +221,8 @@ fn mid_trace_request_fuses_before_initial_batch_drains() {
 
     let sched = Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
     let first_ids: Vec<u64> =
-        first.iter().map(|(r, mn)| sched.submit(r.prompt.clone(), *mn)).collect();
-    let late_id = sched.submit(late.prompt.clone(), late_max);
+        first.iter().map(|(r, mn)| sched.submit(r.prompt.clone(), *mn).expect_admitted()).collect();
+    let late_id = sched.submit(late.prompt.clone(), late_max).expect_admitted();
     sched.resume();
     // soft overlap probe: watch for the late request decoding while an
     // initial request is still in flight (asserted structurally below
@@ -266,8 +271,9 @@ fn cancel_lifecycle_queued_and_mid_decode() {
         Scheduler::new(single_engine(), SchedulerOpts { paused: true, ..Default::default() });
     // a full batch plus one queued victim: cancelling while queued is
     // immediate and the driver must skip it at admission time
-    let keep: Vec<u64> = (0..4).map(|i| sched.submit(req(300 + i, 5).prompt, 4)).collect();
-    let victim = sched.submit(req(310, 5).prompt, 4);
+    let keep: Vec<u64> =
+        (0..4).map(|i| sched.submit(req(300 + i, 5).prompt, 4).expect_admitted()).collect();
+    let victim = sched.submit(req(310, 5).prompt, 4).expect_admitted();
     sched.cancel(victim);
     assert_eq!(sched.poll(victim).unwrap().0, Status::Cancelled);
     sched.resume();
@@ -286,7 +292,7 @@ fn cancel_lifecycle_queued_and_mid_decode() {
 
     // mid-decode cancel (best effort: on a fast machine the request may
     // finish first, which is also a legal outcome)
-    let long = sched.submit(req(320, 6).prompt, 12);
+    let long = sched.submit(req(320, 6).prompt, 12).expect_admitted();
     let t0 = std::time::Instant::now();
     while t0.elapsed() < Duration::from_secs(30) {
         let (status, out) = sched.poll(long).unwrap();
@@ -363,8 +369,10 @@ fn scripted_shard_kill_mid_trace_stays_byte_identical() {
             FaultPlan::scripted(vec![FaultScript { shard: shards - 1, step: 6, block: 0 }]);
         let se = sharded_with_faults(shards, &faults);
         let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
-        let ids: Vec<u64> =
-            reqs.iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|r| sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted())
+            .collect();
         sched.resume();
         sched.drain(Duration::from_secs(300)).unwrap();
         for (i, id) in ids.iter().enumerate() {
@@ -398,7 +406,8 @@ fn prefill_fault_reroutes_and_the_batch_replays() {
     faults.fail_next_prefill(0);
     let se = sharded_with_faults(2, &faults);
     let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
-    let ids: Vec<u64> = reqs.iter().map(|r| sched.submit(r.prompt.clone(), 6)).collect();
+    let ids: Vec<u64> =
+        reqs.iter().map(|r| sched.submit(r.prompt.clone(), 6).expect_admitted()).collect();
     sched.resume();
     sched.drain(Duration::from_secs(120)).unwrap();
     for (i, id) in ids.iter().enumerate() {
@@ -439,9 +448,11 @@ fn speculative_admission_adopts_at_zero_cost() {
             eng,
             SchedulerOpts { paused: true, speculative, ..Default::default() },
         );
-        let ids: Vec<u64> =
-            firsts.iter().map(|(r, mn)| sched.submit(r.prompt.clone(), *mn)).collect();
-        let late_id = sched.submit(late.prompt.clone(), late_max);
+        let ids: Vec<u64> = firsts
+            .iter()
+            .map(|(r, mn)| sched.submit(r.prompt.clone(), *mn).expect_admitted())
+            .collect();
+        let late_id = sched.submit(late.prompt.clone(), late_max).expect_admitted();
         sched.resume();
         sched.drain(Duration::from_secs(120)).unwrap();
         let m = sched.metrics();
@@ -493,6 +504,51 @@ fn one_weight_copy_at_any_shard_count() {
             "shards={shards}"
         );
     }
+    // Arc-level pin of the scale dedup: engine consts must VIEW the
+    // container's per-layer scale vectors (the strong count rises),
+    // never deep-copy them (which would leave it untouched).  A private
+    // container, so concurrently running tests cannot race the counts.
+    let m = synthetic_model(
+        Config {
+            name: "dedup".into(),
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_ctx: 32,
+        },
+        52,
+    );
+    let (model, _) =
+        compress_model(&m, &CompressOpts { lam: 0.3, max_iters: 4, ..Default::default() })
+            .unwrap();
+    let before: Vec<Vec<usize>> = model
+        .blocks
+        .iter()
+        .map(|b| b.layers.iter().map(|l| Arc::strong_count(&l.scales)).collect())
+        .collect();
+    let plan = ShardPlan::balance(&model, 2);
+    let rts: Vec<Runtime> = (0..plan.n_shards())
+        .map(|_| {
+            Runtime::native(Manifest::synthetic(
+                model.config.clone(),
+                vec![(1, SEQ), (2, SEQ), (4, SEQ)],
+                vec![(1, CTX), (2, CTX), (4, CTX)],
+            ))
+        })
+        .collect();
+    let se = ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap();
+    for (b, counts) in model.blocks.iter().zip(&before) {
+        for (l, &was) in b.layers.iter().zip(counts) {
+            assert!(
+                Arc::strong_count(&l.scales) > was,
+                "layer {} scales were copied instead of aliased",
+                l.name
+            );
+        }
+    }
+    drop(se);
 }
 
 #[test]
@@ -699,7 +755,8 @@ fn mid_splice_fault_under_scheduler_fails_requests_then_keeps_serving() {
         sharded_with_faults(2, &faults),
         SchedulerOpts { paused: true, ..Default::default() },
     );
-    let doomed: Vec<u64> = (0..4).map(|i| sched.submit(req(980 + i, 5).prompt, 8)).collect();
+    let doomed: Vec<u64> =
+        (0..4).map(|i| sched.submit(req(980 + i, 5).prompt, 8).expect_admitted()).collect();
     sched.resume();
     sched.drain(Duration::from_secs(120)).unwrap();
     for id in &doomed {
@@ -716,7 +773,7 @@ fn mid_splice_fault_under_scheduler_fails_requests_then_keeps_serving() {
     let fresh: Vec<(Request, u64)> = (0..2)
         .map(|i| {
             let r = req(990 + i, 6);
-            let id = sched.submit(r.prompt.clone(), 5);
+            let id = sched.submit(r.prompt.clone(), 5).expect_admitted();
             (r, id)
         })
         .collect();
@@ -748,8 +805,10 @@ fn scripted_contract_rejoin_trace_is_byte_identical_with_one_weight_copy() {
         let se = sharded_with_faults(shards, &faults);
         se.arm_rejoin(native_rt(cm()), 2);
         let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
-        let ids: Vec<u64> =
-            reqs.iter().map(|r| sched.submit(r.prompt.clone(), max_new(r.id))).collect();
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|r| sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted())
+            .collect();
         sched.resume();
         // weight_copies == 1 throughout: poll while the trace drains
         let t0 = std::time::Instant::now();
@@ -795,10 +854,279 @@ fn unknown_ids_and_double_cancel_are_benign() {
         Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
     assert!(sched.poll(999).is_none());
     sched.cancel(999); // no-op
-    let id = sched.submit(req(400, 4).prompt, 3);
+    let id = sched.submit(req(400, 4).prompt, 3).expect_admitted();
     sched.cancel(id);
     sched.cancel(id); // idempotent
     assert_eq!(sched.poll(id).unwrap().0, Status::Cancelled);
     assert_eq!(sched.metrics().cancelled, 1);
+    sched.shutdown().unwrap();
+}
+
+/// Snapshot metrics once the driver has swept the lane/queue gauges:
+/// they publish at the end of the tick that terminalized the last
+/// request — a moment after `drain` observes the statuses.  A leaked
+/// lane never settles, so the caller's `== 0` expectations still bite.
+fn settled_metrics(sched: &Scheduler) -> MetricsSnapshot {
+    let t0 = std::time::Instant::now();
+    loop {
+        let m = sched.metrics();
+        if m.inflight_lanes == 0 && m.queue_depth == 0 {
+            return m;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "gauges never settled: {m:?}");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[test]
+fn bounded_queue_sheds_the_burst_and_serves_admitted_work_byte_identically() {
+    // the overload-burst acceptance drill, deterministic edition: a
+    // paused scheduler (so queue depth grows monotonically) takes a
+    // 12-request burst into a depth-4 queue — exactly 4 admit, 8 shed
+    // with retry hints >= 1 — and the admitted work then completes
+    // byte-identical to the single-engine reference, untouched by the
+    // shedding.
+    let engine = single_engine();
+    let sched = Scheduler::new(
+        sharded(2),
+        SchedulerOpts { paused: true, max_queue_depth: 4, ..Default::default() },
+    );
+    let mut admitted: Vec<(Request, u64)> = Vec::new();
+    let mut hints: Vec<usize> = Vec::new();
+    for i in 0..12u64 {
+        let r = req(1500 + i, 3 + i as usize % 5);
+        match sched.submit(r.prompt.clone(), 6) {
+            Admission::Admitted(id) => admitted.push((r, id)),
+            Admission::Shed { retry_after_steps } => hints.push(retry_after_steps),
+        }
+    }
+    assert_eq!(admitted.len(), 4, "exactly the queue bound admits");
+    assert_eq!(hints.len(), 8, "everything past the bound sheds");
+    assert!(hints.iter().all(|&h| h >= 1), "a shed must carry a usable hint: {hints:?}");
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for (r, id) in &admitted {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done);
+        assert_eq!(out, reference(&engine, r, 6), "admitted work diverged under shedding");
+    }
+    // the queue has drained: the same client retrying now gets in
+    let late = req(1520, 4);
+    let late_id = sched.submit(late.prompt.clone(), 6).expect_admitted();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    let (status, out) = sched.poll(late_id).unwrap();
+    assert_eq!(status, Status::Done);
+    assert_eq!(out, reference(&engine, &late, 6));
+    let m = settled_metrics(&sched);
+    assert_eq!(m.shed, 8, "{m:?}");
+    assert_eq!(m.submitted, 5, "shed requests must not count as submitted: {m:?}");
+    assert_eq!(m.completed, 5, "{m:?}");
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn inflight_token_budget_sheds_independently_of_queue_depth() {
+    // the committed-work bound: 8 + 8 tokens fit a 20-token budget, a
+    // third 8 does not (shed with a hint), a smaller 4 still does —
+    // and the budget frees as requests retire, so after the drain the
+    // same 8-token ask admits again.
+    let sched = Scheduler::new(
+        sharded(2),
+        SchedulerOpts { paused: true, max_inflight_tokens: 20, ..Default::default() },
+    );
+    assert!(!sched.submit(req(1530, 4).prompt, 8).is_shed());
+    assert!(!sched.submit(req(1531, 5).prompt, 8).is_shed());
+    let over = sched.submit(req(1532, 6).prompt, 8);
+    assert!(over.is_shed(), "16 committed + 8 > 20 must shed, got {over:?}");
+    assert!(over.retry_after().unwrap() >= 1, "a shed must carry a usable hint");
+    assert!(!sched.submit(req(1533, 4).prompt, 4).is_shed(), "a smaller ask still fits");
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    assert!(!sched.submit(req(1534, 4).prompt, 8).is_shed(), "retired budgets must free");
+    sched.drain(Duration::from_secs(120)).unwrap();
+    let m = settled_metrics(&sched);
+    assert_eq!(m.completed, 4, "{m:?}");
+    assert_eq!(m.shed, 1, "{m:?}");
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn step_budget_deadlines_expire_requests_with_reference_prefix_outputs() {
+    // deadline budgets are tick-counted decode steps, never wall time:
+    // admitted together at step 0 with a 3-step budget, an 8-token
+    // request cannot finish — every lane expires, each keeping the
+    // tokens it earned, byte-for-byte a prefix of the unbudgeted
+    // reference.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..4).map(|i| req(1600 + i, 4 + i as usize)).collect();
+    let sched = Scheduler::new(
+        sharded(2),
+        SchedulerOpts { paused: true, step_budget: Some(3), ..Default::default() },
+    );
+    let ids: Vec<u64> =
+        reqs.iter().map(|r| sched.submit(r.prompt.clone(), 8).expect_admitted()).collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for (r, id) in reqs.iter().zip(&ids) {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Expired, "a 3-step budget cannot yield 8 tokens");
+        let want = reference(&engine, r, 8);
+        assert!(want.starts_with(&out), "an expired output must be a reference prefix");
+        assert!(!out.is_empty(), "the budget still buys the first tokens");
+        assert!(out.len() < 8, "expiry must precede completion");
+    }
+    let m = settled_metrics(&sched);
+    assert_eq!(m.expired, 4, "{m:?}");
+    assert_eq!(m.completed, 0, "{m:?}");
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn degraded_topology_sheds_new_admissions_below_min_healthy_shards() {
+    // graceful degradation, tier 1: with no spare provisioned, a
+    // reroute leaves 1 healthy shard below `min_healthy_shards = 2`.
+    // Work admitted before the fault still completes byte-identically
+    // (in-flight capacity is never sacrificed); every NEW admission is
+    // shed with a deterministic retry hint.
+    let engine = single_engine();
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    let sched = Scheduler::new(
+        sharded_with_faults(2, &faults),
+        SchedulerOpts { paused: true, min_healthy_shards: 2, ..Default::default() },
+    );
+    let firsts: Vec<(Request, u64)> = (0..3u64)
+        .map(|i| {
+            let r = req(1400 + i, 4 + i as usize);
+            let id = sched.submit(r.prompt.clone(), 6).expect_admitted();
+            (r, id)
+        })
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(120)).unwrap();
+    for (r, id) in &firsts {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "in-flight work must survive the reroute");
+        assert_eq!(out, reference(&engine, r, 6), "in-flight work diverged across the reroute");
+    }
+    let m = settled_metrics(&sched);
+    assert!(m.reroutes >= 1, "the scripted fault never rerouted: {m:?}");
+    assert_eq!(m.healthy_shards, 1, "{m:?}");
+    assert_eq!(m.degradation_tier, 1, "{m:?}");
+    let shed = sched.submit(req(1410, 4).prompt, 6);
+    assert!(shed.is_shed(), "tier 1 must shed new admissions, got {shed:?}");
+    assert!(shed.retry_after().unwrap() >= 1, "a shed must carry a usable hint");
+    assert_eq!(sched.metrics().shed, 1);
+    sched.shutdown().unwrap();
+}
+
+#[test]
+fn supervisor_evicts_backs_off_and_rejoins_from_the_spare_pool() {
+    // the recovery supervisor's full lifecycle, driven deterministically
+    // at the engine level: a scripted decode fault trips the
+    // consecutive-failure threshold (`evict_after = 1`), the supervisor
+    // evicts the shard and spends its first pool spare on an immediate
+    // rejoin attempt; a splice fault armed AFTER the reroute sabotages
+    // that attempt, so the supervisor backs off (tick-counted with
+    // seeded jitter — no wall clock anywhere) and the retry lands from
+    // the second spare.  The whole drill stays byte-identical to the
+    // single-engine reference, and the rejoin's rebalance converges the
+    // plan back to the canonical byte-balanced partition.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..2).map(|i| req(1200 + i, 5 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 0 }]);
+    let sup = Supervisor::new(
+        sharded_with_faults(2, &faults),
+        vec![native_rt(cm()), native_rt(cm())],
+        SupervisorOpts { evict_after: 1, ..Default::default() },
+    );
+    let mut st = sup.prefill_state(batch).unwrap();
+    let mut evicted_seen = false;
+    for _ in 0..7 {
+        loop {
+            match sup.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(e) => {
+                    assert!(sup.try_recover(), "evict-threshold reroute must succeed: {e:#}");
+                    evicted_seen = true;
+                    // armed only now, AFTER the reroute spent its own
+                    // splice probe: the supervisor's first rejoin
+                    // attempt must fail on the donor's truncate probe
+                    // and schedule a backoff
+                    faults.fail_next_splice(0);
+                }
+            }
+        }
+        sup.try_rejoin();
+    }
+    assert!(evicted_seen, "the scripted fault never fired");
+    assert_eq!(sup.evicted(), 1);
+    assert!(sup.backoff_retries() >= 1, "the sabotaged first attempt must back off");
+    // the backoff clock is poll-counted: keep polling (the trace has
+    // drained, so the idle variant applies) until the capped schedule
+    // readmits the attempt and the second pool spare lands it
+    let mut polls = 0;
+    while sup.engine().n_shards() < 2 {
+        assert!(polls < 64, "the backed-off rejoin never landed");
+        sup.try_rejoin_idle();
+        polls += 1;
+    }
+    assert_eq!(sup.engine().rejoins(), 1);
+    assert_eq!(sup.engine().reroutes(), 1);
+    assert_eq!(sup.backoff_retries(), 1, "exactly the sabotaged attempt backed off");
+    assert_eq!(sup.shard_health(), (2, 0, 1), "restored health, one eviction on record");
+    assert_eq!(sup.weight_copies(), 1, "the drill must never copy weights");
+    assert_eq!(faults.fired(), 2, "the decode fault + the sabotaged splice probe");
+    // the post-rejoin rebalance converged the plan back to canonical
+    assert_eq!(sup.engine().plan().ranges, ShardPlan::balance(cm(), 2).ranges);
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged across the drill");
+    }
+}
+
+#[test]
+fn scheduler_metrics_surface_supervisor_health_through_a_fault_storm() {
+    // the supervisor drill end-to-end THROUGH the scheduler: a
+    // supervised engine loses a shard mid-trace, evicts it, and
+    // auto-rejoins from the spare pool between decode steps, while the
+    // driver sweeps the health gauges into `serve::metrics` — and every
+    // request still completes byte-identical to the reference.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..24).map(|i| req(1300 + i, 1 + (i as usize * 5) % 12)).collect();
+    let max_new = |id: u64| 2 + (id as usize % 6);
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, max_new(r.id))).collect();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 4, block: 0 }]);
+    let sup = Supervisor::new(
+        sharded_with_faults(2, &faults),
+        vec![native_rt(cm())],
+        SupervisorOpts { evict_after: 1, ..Default::default() },
+    );
+    let sched = Scheduler::new(sup, SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|r| sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted())
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(300)).unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "request {i}");
+        assert_eq!(out, want[i], "request {i} diverged across evict/rejoin");
+    }
+    let m = settled_metrics(&sched);
+    assert_eq!(m.completed, reqs.len(), "{m:?}");
+    assert_eq!(m.failed, 0, "{m:?}");
+    assert!(m.reroutes >= 1, "the fault never rerouted: {m:?}");
+    assert!(m.rejoins >= 1, "the spare never rejoined: {m:?}");
+    assert_eq!(m.evicted_shards, 1, "{m:?}");
+    assert_eq!(m.healthy_shards, 2, "post-rejoin health must be fully restored: {m:?}");
+    assert_eq!(m.degraded_shards, 0, "{m:?}");
+    assert_eq!(m.degradation_tier, 0, "{m:?}");
+    assert_eq!(m.weight_copies, 1, "{m:?}");
+    assert_eq!(faults.fired(), 1);
     sched.shutdown().unwrap();
 }

@@ -225,3 +225,52 @@ fn plans_are_deterministic_for_a_given_input() {
         );
     }
 }
+
+/// The recovery supervisor's bookkeeping contract: however far a
+/// cascade of reroutes (repeated random `merge`s) drifts the plan from
+/// balance, one `rebalance` at the surviving shard count restores the
+/// canonical partition — and with it the documented bound
+/// `max(bytes) <= total/k + max(sizes)`.  This is the plan-level half
+/// of `ShardedEngine::rebalance`, which the rejoin path runs after
+/// every topology expansion.
+#[test]
+fn repeated_merges_then_rebalance_restores_the_balance_bound() {
+    let seed = base_seed() ^ 0x4EBA;
+    eprintln!("merge^k/rebalance property seed: {seed} (override with SHARD_PLAN_SEED)");
+    let mut rng = Rng::new(seed);
+    for case in 0..300 {
+        let n = 2 + rng.below(48);
+        let k = 2 + rng.below(8);
+        let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.below(1000)).collect();
+        let mut plan = ShardPlan::balance_sizes(&sizes, k);
+        // contract repeatedly: up to all-but-one shard fails, each onto
+        // an adjacent survivor (left when one exists, right otherwise)
+        let merges = rng.below(plan.n_shards());
+        for _ in 0..merges {
+            let failed = rng.below(plan.n_shards());
+            let target = if failed == 0 { 1 } else { failed - 1 };
+            plan.merge(failed, target);
+        }
+        let survivors = plan.n_shards();
+        let ctx = format!("seed={seed} case={case} n={n} k={k} merges={merges} sizes={sizes:?}");
+        plan.rebalance(&sizes);
+        assert_eq!(plan.n_shards(), survivors, "{ctx}: rebalance must keep the shard count");
+        // rebalance is canonical: identical to balancing from scratch
+        assert_eq!(
+            plan,
+            ShardPlan::balance_sizes(&sizes, survivors),
+            "{ctx}: rebalance is not the canonical partition"
+        );
+        // and therefore the full invariant sweep holds again, balance
+        // bound included, however unbalanced the merged plan had become
+        check_plan(&sizes, survivors, &ctx);
+        let total: usize = sizes.iter().sum();
+        let max_size = *sizes.iter().max().unwrap();
+        for (i, &b) in plan.bytes.iter().enumerate() {
+            assert!(
+                b * survivors <= total + survivors * max_size,
+                "{ctx}: shard {i} holds {b} bytes past the restored balance bound"
+            );
+        }
+    }
+}

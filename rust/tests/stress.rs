@@ -124,7 +124,7 @@ fn seeded_random_workload_terminates_exactly_once_and_leaks_nothing() {
     let mut cancels: Vec<(u64, Instant)> = Vec::new(); // (id, due)
     for job in &jobs {
         std::thread::sleep(Duration::from_micros(job.arrival_gap_us));
-        let id = sched.submit(job.prompt.clone(), job.max_new);
+        let id = sched.submit(job.prompt.clone(), job.max_new).expect_admitted();
         if let Some(after) = job.cancel_after_us {
             cancels.push((id, Instant::now() + Duration::from_micros(after)));
         }
@@ -229,7 +229,8 @@ fn seeded_fault_plan_under_load_never_leaks_or_corrupts() {
         .collect();
     let se = ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap();
     let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
-    let ids: Vec<u64> = jobs.iter().map(|j| sched.submit(j.prompt.clone(), j.max_new)).collect();
+    let ids: Vec<u64> =
+        jobs.iter().map(|j| sched.submit(j.prompt.clone(), j.max_new).expect_admitted()).collect();
     sched.resume();
     sched.drain(Duration::from_secs(300)).unwrap();
 
@@ -273,8 +274,10 @@ fn paused_burst_workload_is_deterministic_across_runs() {
     for _run in 0..2 {
         let sched =
             Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
-        let ids: Vec<u64> =
-            jobs.iter().map(|j| sched.submit(j.prompt.clone(), j.max_new)).collect();
+        let ids: Vec<u64> = jobs
+            .iter()
+            .map(|j| sched.submit(j.prompt.clone(), j.max_new).expect_admitted())
+            .collect();
         sched.resume();
         sched.drain(Duration::from_secs(300)).unwrap();
         all_outputs.push(ids.iter().map(|id| sched.poll(*id).unwrap()).collect());

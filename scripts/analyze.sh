@@ -21,6 +21,9 @@ cd "$(dirname "$0")/.."
 echo "== entlint (deny-by-default, rust/src) =="
 cargo run -q -p entlint -- rust/src
 
+echo "== entlint (deny-by-default, tools/chaosbench/src) =="
+cargo run -q -p entlint -- tools/chaosbench/src
+
 echo "== entlint self-tests (fixture corpus + self-clean) =="
 cargo test -q -p entlint
 
@@ -30,6 +33,13 @@ echo "== schedule-exploration sweep (parallel/pool invariants) =="
 # with seeded yields/delays and re-asserts exactly-once / first-error /
 # stop-join invariants on every explored schedule.
 cargo test -q -p entquant --lib parallel::sched -- --nocapture
+
+echo "== schedule-exploration sweep (serve lane state machine) =="
+# same seed controls; the sweep perturbs admission/speculation/adoption/
+# expiry/shed against the driver loop and re-asserts the ledger, the
+# retry hints, the no-lane-leak gauge, and byte identity vs the
+# unperturbed single-shard reference on every explored schedule.
+cargo test -q -p entquant --lib serve::scheduler::sweep -- --nocapture
 
 if [[ "${MIRI:-0}" == 1 ]]; then
     echo "== cargo miri (parallel suites) =="

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Process-level chaos gate (tools/chaosbench): spawns the release
+# binary's `serve-stdio` mode as child processes and drives seeded
+# open-loop scenarios against it strictly from the outside — steady
+# state, a 2x overload burst into a bounded queue, a scripted fault
+# storm under the recovery supervisor, and a SIGKILL + cold restart
+# mid-trace.  Pass criteria are timing-independent (ledger balance,
+# byte identity against a single-engine reference, shed evidence with
+# retry hints); latency percentiles are recorded, not judged.  Emits
+# BENCH_chaos.json (BENCH_chaos.smoke.json under CHAOS_SMOKE=1, which
+# also skips the inter-arrival sleeps for a fast deterministic tier —
+# this is what tier1.sh runs behind BENCH=1).
+#
+#   scripts/chaos.sh               # full scenarios
+#   CHAOS_SMOKE=1 scripts/chaos.sh # fast deterministic smoke tier
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release (server binary + chaos harness) =="
+cargo build --release -p entquant -p chaosbench
+
+echo "== chaosbench (CHAOS_SMOKE=${CHAOS_SMOKE:-0}) =="
+./target/release/chaosbench

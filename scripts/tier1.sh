@@ -33,21 +33,23 @@ echo "== cargo clippy (-D warnings) =="
 if ! cargo clippy --version >/dev/null 2>&1; then
     echo "(clippy unavailable in this image; skipping lint gate)"
 else
-    # entquant + the entlint tool; NOT --workspace (the vendored stubs
-    # are third-party-shaped and not held to this gate)
-    cargo clippy -q -p entquant -p entlint --all-targets -- -D warnings
+    # entquant + the entlint/chaosbench tools; NOT --workspace (the
+    # vendored stubs are third-party-shaped and not held to this gate)
+    cargo clippy -q -p entquant -p entlint -p chaosbench --all-targets -- -D warnings
 fi
 
 echo "== cargo fmt --check =="
 if ! cargo fmt --version >/dev/null 2>&1; then
     echo "(rustfmt unavailable in this image; skipping format check)"
 else
-    cargo fmt --check -p entquant -p entlint
+    cargo fmt --check -p entquant -p entlint -p chaosbench
 fi
 
 if [[ "${BENCH:-0}" == 1 ]]; then
     echo "== bench smoke (BENCH=1) =="
     BENCH_SMOKE=1 scripts/bench.sh
+    echo "== chaos smoke (BENCH=1) =="
+    CHAOS_SMOKE=1 scripts/chaos.sh
 fi
 
 echo "tier-1: OK"
