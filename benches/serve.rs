@@ -37,6 +37,11 @@ struct TracePoint {
     wall_s: f64,
     tokens_per_s: f64,
     p50_ttft_ms: f64,
+    p99_ttft_ms: f64,
+    p999_ttft_ms: f64,
+    p50_step_us: f64,
+    p99_step_us: f64,
+    p999_step_us: f64,
     fused: usize,
     speculative: usize,
 }
@@ -94,8 +99,14 @@ fn main() {
         assert_eq!(m.completed, ids.len(), "trace must complete");
         let tokens_per_s = m.tokens as f64 / wall_s;
         println!(
-            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, p50 ttft {:.1} ms, {} fused admissions ({} speculative)",
-            m.tokens, m.p50_ttft_ms, m.fused_admissions, m.speculative_admissions
+            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, ttft p50/p99/p999 {:.1}/{:.1}/{:.1} ms, step p99 {:.0} us, {} fused admissions ({} speculative)",
+            m.tokens,
+            m.p50_ttft_ms,
+            m.p99_ttft_ms,
+            m.p999_ttft_ms,
+            m.p99_step_us,
+            m.fused_admissions,
+            m.speculative_admissions
         );
         points.push(TracePoint {
             shards,
@@ -103,6 +114,11 @@ fn main() {
             wall_s,
             tokens_per_s,
             p50_ttft_ms: m.p50_ttft_ms,
+            p99_ttft_ms: m.p99_ttft_ms,
+            p999_ttft_ms: m.p999_ttft_ms,
+            p50_step_us: m.p50_step_us,
+            p99_step_us: m.p99_step_us,
+            p999_step_us: m.p999_step_us,
             fused: m.fused_admissions,
             speculative: m.speculative_admissions,
         });
@@ -191,8 +207,24 @@ fn main() {
             series.push_str(",\n");
         }
         series.push_str(&format!(
-            "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, \"p50_ttft_ms\": {:.2}, \"fused_admissions\": {}, \"speculative_admissions\": {}}}",
-            p.shards, p.tokens, p.wall_s, p.tokens_per_s, p.p50_ttft_ms, p.fused, p.speculative
+            concat!(
+                "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, ",
+                "\"p50_ttft_ms\": {:.2}, \"p99_ttft_ms\": {:.2}, \"p999_ttft_ms\": {:.2}, ",
+                "\"p50_step_us\": {:.1}, \"p99_step_us\": {:.1}, \"p999_step_us\": {:.1}, ",
+                "\"fused_admissions\": {}, \"speculative_admissions\": {}}}"
+            ),
+            p.shards,
+            p.tokens,
+            p.wall_s,
+            p.tokens_per_s,
+            p.p50_ttft_ms,
+            p.p99_ttft_ms,
+            p.p999_ttft_ms,
+            p.p50_step_us,
+            p.p99_step_us,
+            p.p999_step_us,
+            p.fused,
+            p.speculative
         ));
     }
     let json = format!(

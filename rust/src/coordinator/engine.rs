@@ -27,6 +27,7 @@
 
 use super::batcher::Batch;
 
+use crate::obs::Stopwatch;
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::container::{CompressedBlock, CompressedModel, SharedMat};
 use anyhow::{anyhow, Result};
@@ -647,8 +648,7 @@ impl ServingEngine {
 
     /// Fetch block codes according to the residency mode.
     fn fetch_block(&self, b: usize) -> Result<(Vec<HostTensor>, f64)> {
-        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start(); // metrics timing only; never branches decode
         let codes = match self.opts.residency {
             Residency::Bf16Resident | Residency::F8Resident => {
                 self.resident_codes.as_ref().unwrap()[b].clone()
@@ -656,7 +656,7 @@ impl ServingEngine {
             Residency::EntQuant => self.decode_block_codes(b)?,
             Residency::DiskOffload => self.offload_block_codes(b)?,
         };
-        Ok((codes, t0.elapsed().as_secs_f64() * 1e3))
+        Ok((codes, t0.elapsed_ms()))
     }
 
     /// Run all blocks of one phase with the decode-ahead pipeline.
@@ -685,10 +685,9 @@ impl ServingEngine {
         crate::parallel::decode_ahead(
             n,
             move |b| {
-                // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-                let t0 = std::time::Instant::now();
+                let t0 = Stopwatch::start(); // metrics timing only; never branches decode
                 let codes = decode_codes(cm, table, arena, b, threads)?;
-                Ok((codes, t0.elapsed().as_secs_f64() * 1e3))
+                Ok((codes, t0.elapsed_ms()))
             },
             |b, (codes, ms): (Vec<HostTensor>, f64)| {
                 *ans_ms += ms; // decode wall (overlapped with prior exec)
@@ -749,15 +748,14 @@ impl ServingEngine {
         let mut caches: Vec<(HostTensor, HostTensor)> = Vec::with_capacity(self.cm.blocks.len());
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
-            // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-            let t1 = std::time::Instant::now();
+            let t1 = Stopwatch::start(); // metrics timing only; never branches decode
             let inputs = self.block_inputs(blk, x.clone(), codes, vec![starts.clone()]);
             let mut out = self.rt.call(exec_name, &inputs)?;
             x = out.remove(0);
             let k = out.remove(0);
             let v = out.remove(0);
             caches.push((k, v));
-            metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
+            metrics.exec_ms += t1.elapsed_ms();
             Ok(())
         })?;
         metrics.ans_decode_ms += ans_ms;
@@ -781,13 +779,12 @@ impl ServingEngine {
     /// Prefill one packed batch: returns (full logits [B,S,V], caches).
     pub fn prefill(&self, batch: &Batch, metrics: &mut Metrics) -> Result<(HostTensor, Vec<(HostTensor, HostTensor)>)> {
         let (b, _s) = batch.slot;
-        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start(); // metrics timing only; never branches decode
         let x = self.embed_prefill(batch)?;
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
         let (x, caches) = self.prefill_blocks(x, &starts, batch.slot, metrics)?;
         let logits = self.head_prefill(x, batch.slot)?;
-        metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        metrics.prefill_ms += t0.elapsed_ms();
         Ok((logits, caches))
     }
 
@@ -822,8 +819,7 @@ impl ServingEngine {
         let mut x = x0;
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
-            // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-            let t1 = std::time::Instant::now();
+            let t1 = Stopwatch::start(); // metrics timing only; never branches decode
             let (kc, vc) = caches[blk].clone();
             let mut inputs = Vec::with_capacity(21);
             inputs.push(x.clone());
@@ -838,7 +834,7 @@ impl ServingEngine {
             let mut out = rt.call(block_name, &inputs)?;
             x = out.remove(0);
             caches[blk] = (out.remove(0), out.remove(0));
-            metrics.exec_ms += t1.elapsed().as_secs_f64() * 1e3;
+            metrics.exec_ms += t1.elapsed_ms();
             Ok(())
         })?;
         metrics.ans_decode_ms += ans_ms;
@@ -859,10 +855,9 @@ impl ServingEngine {
         let cfg = &self.rt.manifest.config;
         let ctx = self.decode_ctx(batch.slot.0)?;
         let mut metrics = Metrics::zero();
-        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-        let t_start = std::time::Instant::now();
+        let t_start = Stopwatch::start(); // metrics timing only; never branches decode
         let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
-        metrics.ttft_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        metrics.ttft_ms = t_start.elapsed_ms();
         Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
     }
 
@@ -883,8 +878,7 @@ impl ServingEngine {
         }
         let (b, _s) = st.batch.slot;
         let cfg = &self.rt.manifest.config;
-        // entlint: allow(no-wallclock-in-replay) — metrics timing only (ans_ms / prefill_ms / ttft_ms gauges); never branches decode
-        let t0 = std::time::Instant::now();
+        let t0 = Stopwatch::start(); // metrics timing only; never branches decode
         let x = self.embed_decode(&st.next, b)?;
         let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
         let pos = st.pos as i32;
@@ -1113,7 +1107,7 @@ pub(crate) fn apply_decode_logits(
     st: &mut DecodeState,
     logits: &HostTensor,
     vsize: usize,
-    t0: std::time::Instant,
+    t0: Stopwatch,
 ) {
     let b = st.batch.slot.0;
     let lf = logits.as_f32();
@@ -1124,7 +1118,7 @@ pub(crate) fn apply_decode_logits(
         o.push(st.next[bi] as u8);
     }
     st.metrics.decode_tokens += 1;
-    st.metrics.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+    st.metrics.decode_ms += t0.elapsed_ms();
     st.pos += 1;
 }
 

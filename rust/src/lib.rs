@@ -14,6 +14,8 @@
 //!   native executor when PJRT is unavailable)
 //! * `serve` — the multi-tenant frontend: sharded engines on a balanced
 //!   block partition plus a continuously-batched admission scheduler
+//! * `obs` — tick-domain tracing and log2 latency histograms threaded
+//!   through the serve stack, with JSONL/Chrome-trace exporters
 
 // The tree is unsafe-free and locked that way.  If a future SIMD kernel
 // needs unsafe, relax this to `deny` in that one module — entlint then
@@ -26,6 +28,7 @@ pub mod coordinator;
 pub mod entropy;
 pub mod eval;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod quant;
 pub mod rd;

@@ -26,15 +26,16 @@ fn usage() -> ! {
            compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P] [--threads N]\n\
            eval     --model <size|path> [--compressed P] [--windows N]\n\
            serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N] [--shards N]\n\
+                    [--trace-out P]  (write the run's tick-domain trace as Chrome trace-event JSON)\n\
                     [--fault-shard K --fault-step S]  (fault drill: kill shard K at decode step S; reroutes + completes)\n\
                     [--rejoin-shard N --rejoin-step S] (rejoin drill: N replacement runtime(s) — a COUNT, default 1 —\n\
                      join S decode steps after a reroute, re-splitting the merged range: the contract->expand cycle)\n\
            serve-stdio [--synthetic L] [--shards N] [--max-queue-depth D] [--max-inflight-tokens T]\n\
                     [--min-healthy-shards H] [--step-budget B] [--fault-shard K --fault-step S]\n\
-                    [--supervisor-spares N] [--evict-after F] [--threads N]\n\
+                    [--supervisor-spares N] [--evict-after F] [--threads N] [--trace-out P]\n\
                     (chaos-harness server: a self-contained synthetic stack driven line-by-line over\n\
-                     stdin/stdout — SUBMIT <cid> <max_new> <hexprompt> | QUIT in; READY, ADMITTED/SHED,\n\
-                     FIRST, DONE/EXPIRED/FAILED, STATS <json> out; see tools/chaosbench)\n\
+                     stdin/stdout — SUBMIT <cid> <max_new> <hexprompt> | TRACE <path> | QUIT in; READY,\n\
+                     ADMITTED/SHED, FIRST, DONE/EXPIRED/FAILED, TRACED, STATS <json> out; see tools/chaosbench)\n\
            table1 | table2 | table3 | table4 | fig1 | fig4 | fig5 | fig6 | figA1 | figB1\n\
            ablate-blockwise | report-all\n\
          --threads defaults to ENTQUANT_THREADS or the machine's available parallelism"
@@ -281,8 +282,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             m.failed
         );
     }
+    if let Some(path) = arg_val(args, "--trace-out") {
+        let (events, dropped) = write_trace(&scheduler, &path)?;
+        println!("trace: {events} event(s) -> {path} ({dropped} dropped)");
+    }
     scheduler.shutdown().map_err(|e| anyhow!(e))?;
     Ok(())
+}
+
+/// Export the scheduler's trace as Chrome trace-event JSON (loadable
+/// in Perfetto / chrome://tracing; `ts` is the decode-step tick, not
+/// wall time).  Returns `(events, dropped)` for the caller's report.
+fn write_trace(sched: &Scheduler, path: &str) -> Result<(usize, u64)> {
+    let tracer = sched.tracer();
+    std::fs::write(path, tracer.export_chrome())?;
+    Ok((tracer.len(), tracer.dropped()))
 }
 
 /// The chaos-harness server (`tools/chaosbench` spawns this as a child
@@ -294,12 +308,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// and measure shed/expiry/latency behavior from the outside.
 ///
 /// Protocol (one event per line, flushed immediately):
-///   in:  `SUBMIT <cid> <max_new> <hexprompt>` | `QUIT`
+///   in:  `SUBMIT <cid> <max_new> <hexprompt>` | `TRACE <path>` | `QUIT`
 ///   out: `READY <shards>`, then per request `ADMITTED <cid>` or
 ///        `SHED <cid> <retry_after_steps>`, later `FIRST <cid>` once
 ///        tokens exist and a terminal `DONE <cid> <hexout>` /
-///        `EXPIRED <cid> <hexout>` / `FAILED <cid> <msg>`; after QUIT
-///        drains, one final `STATS <json>`.
+///        `EXPIRED <cid> <hexout>` / `FAILED <cid> <msg>`; `TRACE`
+///        writes the Chrome trace-event JSON collected so far and
+///        answers `TRACED <path> <events> <dropped>` (`--trace-out P`
+///        does the same implicitly after QUIT drains); finally one
+///        `STATS <json>`.
 fn cmd_serve_stdio(args: &[String]) -> Result<()> {
     use std::io::{BufRead, Write};
 
@@ -324,6 +341,7 @@ fn cmd_serve_stdio(args: &[String]) -> Result<()> {
         arg_val(args, "--supervisor-spares").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let evict_after: usize =
         arg_val(args, "--evict-after").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let trace_out = arg_val(args, "--trace-out");
 
     // the same tiny synthetic stack the serve bench uses: compress a
     // deterministic checkpoint in-process, no artifacts needed
@@ -416,6 +434,15 @@ fn cmd_serve_stdio(args: &[String]) -> Result<()> {
                     let mut it = line.split_whitespace();
                     match it.next() {
                         Some("SUBMIT") => handle_submit(&sched, &mut out, &mut live, it)?,
+                        Some("TRACE") => match it.next() {
+                            Some(path) => match write_trace(&sched, path) {
+                                Ok((n, d)) => writeln!(out, "TRACED {path} {n} {d}")?,
+                                Err(e) => {
+                                    writeln!(out, "ERR trace export: {}", fmt_oneline(&e))?
+                                }
+                            },
+                            None => writeln!(out, "ERR TRACE needs a path")?,
+                        },
                         Some("QUIT") => quitting = true,
                         Some(other) => writeln!(out, "ERR unknown command {other}")?,
                         None => {}
@@ -460,11 +487,21 @@ fn cmd_serve_stdio(args: &[String]) -> Result<()> {
         }
         std::thread::sleep(std::time::Duration::from_micros(200));
     }
+    if let Some(path) = &trace_out {
+        let (n, d) = write_trace(&sched, path)?;
+        writeln!(out, "TRACED {path} {n} {d}")?;
+    }
     let m = sched.metrics();
     writeln!(out, "STATS {}", stats_json(&m))?;
     out.flush()?;
     sched.shutdown().map_err(|e| anyhow!(e))?;
     Ok(())
+}
+
+/// Collapse an error chain onto one line (the stdio protocol is
+/// line-delimited).
+fn fmt_oneline(e: &anyhow::Error) -> String {
+    format!("{e:#}").replace(['\n', '\r'], " ")
 }
 
 /// One `SUBMIT <cid> <max_new> <hexprompt>` line: admit through the
@@ -522,6 +559,7 @@ fn stats_json(m: &entquant::serve::MetricsSnapshot) -> String {
             "\"healthy_shards\": {}, \"degraded_shards\": {}, \"evicted_shards\": {}, ",
             "\"degradation_tier\": {}, \"weight_copies\": {}, \"queue_depth\": {}, ",
             "\"p50_ttft_ms\": {:.3}, \"p99_ttft_ms\": {:.3}, \"p999_ttft_ms\": {:.3}, ",
+            "\"p50_step_us\": {:.3}, \"p99_step_us\": {:.3}, \"p999_step_us\": {:.3}, ",
             "\"tokens_per_s\": {:.1}}}"
         ),
         m.submitted,
@@ -544,6 +582,9 @@ fn stats_json(m: &entquant::serve::MetricsSnapshot) -> String {
         m.p50_ttft_ms,
         m.p99_ttft_ms,
         m.p999_ttft_ms,
+        m.p50_step_us,
+        m.p99_step_us,
+        m.p999_step_us,
         m.tokens_per_s,
     )
 }

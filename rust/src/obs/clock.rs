@@ -1,0 +1,63 @@
+//! The one sanctioned wall-clock in replay-adjacent code.
+//!
+//! Tick-domain events (`obs::Event`) carry the scheduler's decode-step
+//! counter and never a wall time — that's what keeps replay
+//! deterministic.  Wall time is still wanted for *annotation*: phase
+//! durations in `coordinator::engine::Metrics`, TTFT and step-latency
+//! histograms in `serve::metrics`.  `Stopwatch` is that annotation
+//! surface: measured durations flow into metrics and exports only, and
+//! **must never branch replayed computation** — which is why the
+//! wall-clock escape lives here, once, instead of scattered through
+//! every engine/scheduler timing site.
+//
+// entlint: allow-file(no-wallclock-in-replay) — durations measured here
+// annotate metrics/exports only; no measured value feeds back into
+// decode, scheduling, or replay decisions.
+
+use std::time::{Duration, Instant};
+
+/// A started timer.  `Copy`, allocation-free, and readable many times.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    #[inline]
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    #[inline]
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Elapsed milliseconds as `f64` — the unit `coordinator::engine`'s
+    /// phase accounting accumulates.
+    #[inline]
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Elapsed whole microseconds — the unit the serve histograms record.
+    #[inline]
+    pub fn elapsed_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_agree() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let ms = sw.elapsed_ms();
+        let us = sw.elapsed_us();
+        assert!(ms >= 2.0);
+        assert!(us >= 2000);
+        // Microseconds and milliseconds read the same monotonic source.
+        assert!((us as f64) <= sw.elapsed_ms() * 1000.0 + 1.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Fixed-size trace event records.
+//!
+//! Every event is five `u64` words — `[tick, kind, id, a, b]` — so the
+//! ring buffer can store them in fixed slots with no pointers and no
+//! allocation on the record path.  `tick` is the scheduler's decode-step
+//! counter (the only clock that exists on replay paths); `id` is a
+//! request id for request-lifecycle kinds and a shard index for
+//! shard-lifecycle kinds; `a`/`b` are kind-specific payload words
+//! (documented per variant).
+
+/// What happened.  The discriminant is the on-ring encoding, so new
+/// kinds must be appended, never reordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request entered `submit` (`a` = prompt tokens, `b` = max new tokens).
+    Submit = 0,
+    /// Admission accepted the request.
+    Admit = 1,
+    /// Admission shed the request (`a` = `ShedReason` discriminant,
+    /// `b` = retry-after hint in decode steps; `id` is `u64::MAX` —
+    /// a shed request never received one).
+    Shed = 2,
+    /// Prefill began for the request (`a` = `u64::MAX` for a batch
+    /// prefill — lanes are assigned per-request afterwards — or 0 for
+    /// a solo-slot prefill).
+    PrefillStart = 3,
+    /// Prefill finished (`a` as in `PrefillStart`; `b` = 1 when the
+    /// prefill errored — the span stays balanced either way).
+    PrefillEnd = 4,
+    /// Speculative prefill started while the batch was mid-decode.
+    SpecPrefill = 5,
+    /// Catch-up decode replaying the batch's progress onto a solo
+    /// prefill (`a` = steps replayed).
+    Catchup = 6,
+    /// Lane adoption into the live batch (`a` = lane,
+    /// `b` = 1 if the prefill was speculative/fused).
+    Adopt = 7,
+    /// First output token surfaced to the client (`a` = tokens
+    /// mirrored so far).
+    FirstToken = 8,
+    /// Terminal: completed normally (`a` = tokens produced).
+    Done = 9,
+    /// Terminal: deadline budget exhausted (`a` = tokens produced).
+    Expired = 10,
+    /// Terminal: cancelled by the client (`a` = tokens produced).
+    Cancelled = 11,
+    /// Terminal: failed after unrecoverable engine error (`a` = tokens).
+    Failed = 12,
+    /// Request began occupying a decode lane (`a` = lane).
+    LaneStart = 13,
+    /// Request released its decode lane (`a` = lane).
+    LaneEnd = 14,
+    /// Admitted request was pushed back to the queue front (engine
+    /// failure before adoption).
+    Requeue = 15,
+    /// Shard `id` faulted (recorded at fault attribution).
+    ShardFault = 16,
+    /// Shard `id`'s range rerouted onto a survivor (`a` = from shard,
+    /// `b` = to shard).
+    Reroute = 17,
+    /// Survivor shard `id` began splicing an absorbed range
+    /// (`a` = blocks).
+    SpliceStart = 18,
+    /// Splice finished on shard `id` (`b` = 1 when the splice failed).
+    SpliceEnd = 19,
+    /// Replacement shard `id` rejoined the topology (`a` = blocks
+    /// absorbed from the donor).
+    Rejoin = 20,
+    /// Shard `id` evicted after repeated failures (`a` = the
+    /// consecutive-failure threshold that tripped).
+    Evict = 21,
+    /// Rejoin attempt for shard slot `id` backoff-rescheduled
+    /// (`a` = attempt, `b` = delay ticks).
+    Backoff = 22,
+    /// One driver tick (`a` = active lanes, `b` = queue depth).
+    DecodeStep = 23,
+}
+
+pub const EVENT_KINDS: usize = 24;
+
+impl EventKind {
+    pub fn from_u64(v: u64) -> Option<EventKind> {
+        use EventKind::*;
+        const ALL: [EventKind; EVENT_KINDS] = [
+            Submit,
+            Admit,
+            Shed,
+            PrefillStart,
+            PrefillEnd,
+            SpecPrefill,
+            Catchup,
+            Adopt,
+            FirstToken,
+            Done,
+            Expired,
+            Cancelled,
+            Failed,
+            LaneStart,
+            LaneEnd,
+            Requeue,
+            ShardFault,
+            Reroute,
+            SpliceStart,
+            SpliceEnd,
+            Rejoin,
+            Evict,
+            Backoff,
+            DecodeStep,
+        ];
+        ALL.get(v as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            Submit => "submit",
+            Admit => "admit",
+            Shed => "shed",
+            PrefillStart => "prefill_start",
+            PrefillEnd => "prefill_end",
+            SpecPrefill => "spec_prefill",
+            Catchup => "catchup",
+            Adopt => "adopt",
+            FirstToken => "first_token",
+            Done => "done",
+            Expired => "expired",
+            Cancelled => "cancelled",
+            Failed => "failed",
+            LaneStart => "lane_start",
+            LaneEnd => "lane_end",
+            Requeue => "requeue",
+            ShardFault => "shard_fault",
+            Reroute => "reroute",
+            SpliceStart => "splice_start",
+            SpliceEnd => "splice_end",
+            Rejoin => "rejoin",
+            Evict => "evict",
+            Backoff => "backoff",
+            DecodeStep => "decode_step",
+        }
+    }
+
+    /// Terminal request-lifecycle kinds — each request records exactly
+    /// one of these (pinned by `rust/tests/obs.rs`).
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            EventKind::Done | EventKind::Expired | EventKind::Cancelled | EventKind::Failed
+        )
+    }
+
+    /// Kinds whose `id` is a shard index (rendered on the shard tracks).
+    pub fn is_shard(self) -> bool {
+        matches!(
+            self,
+            EventKind::ShardFault
+                | EventKind::Reroute
+                | EventKind::SpliceStart
+                | EventKind::SpliceEnd
+                | EventKind::Rejoin
+                | EventKind::Evict
+                | EventKind::Backoff
+        )
+    }
+}
+
+/// One trace record.  `Copy` and exactly five words so the ring can
+/// move it without touching the heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Scheduler decode-step counter at record time (tick domain).
+    pub tick: u64,
+    pub kind: EventKind,
+    /// Request id or shard index, per `kind`.
+    pub id: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Event {
+    pub fn to_words(self) -> [u64; 5] {
+        [self.tick, self.kind as u64, self.id, self.a, self.b]
+    }
+
+    pub fn from_words(w: [u64; 5]) -> Option<Event> {
+        Some(Event { tick: w[0], kind: EventKind::from_u64(w[1])?, id: w[2], a: w[3], b: w[4] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_roundtrip_every_kind() {
+        for k in 0..EVENT_KINDS as u64 {
+            let kind = EventKind::from_u64(k).unwrap();
+            let e = Event { tick: 7, kind, id: 3, a: 11, b: 13 };
+            assert_eq!(Event::from_words(e.to_words()), Some(e));
+        }
+        assert_eq!(EventKind::from_u64(EVENT_KINDS as u64), None);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for k in 0..EVENT_KINDS as u64 {
+            assert!(seen.insert(EventKind::from_u64(k).unwrap().name()));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Fixed-bucket log2 histograms (HDR-style, no sample storage).
+//!
+//! Values land in one of at most [`N_BUCKETS`] buckets: exact buckets
+//! for `v < 32`, then 32 sub-buckets per power of two above that, so
+//! the reported quantile (a bucket's upper bound) is within ~3.2%
+//! relative error of the true value at any magnitude.  Recording is a
+//! single `fetch_add` — lock-free, allocation-free, mergeable — which
+//! is what lets it replace the mutex-guarded TTFT sample reservoir on
+//! the serve hot path with *bounded* memory (the reservoir grew one
+//! `f64` per request, forever).
+//!
+//! `count`/`sum`/`max` are tracked exactly, so `mean()` has no bucket
+//! error; only quantiles are bucket-quantised.
+//
+// entlint: allow-file(ordering-audit) — every atomic here is an independent
+// monotone counter; snapshots tolerate tearing between cells by design.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per power of two.
+const SUB_BITS: usize = 5;
+const SUB: usize = 1 << SUB_BITS;
+
+/// 32 exact buckets + 32 per exponent group for msb 5..=63.
+pub const N_BUCKETS: usize = SUB + (64 - SUB_BITS) * SUB;
+
+/// Bucket index for a value — exact below 32, log2-with-5-sub-bits above.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as usize;
+        let shift = msb - SUB_BITS;
+        let sub = ((v >> shift) as usize) - SUB;
+        SUB + shift * SUB + sub
+    }
+}
+
+/// Inclusive `(lower, upper)` value range of bucket `i` — the inverse
+/// of [`bucket_index`]; `upper` is the quantile representative.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB {
+        (i as u64, i as u64)
+    } else {
+        let group = (i - SUB) / SUB;
+        let sub = (i - SUB) % SUB;
+        let lower = ((SUB + sub) as u64) << group;
+        (lower, lower + (1u64 << group) - 1)
+    }
+}
+
+pub struct Log2Hist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Log2Hist::new()
+    }
+}
+
+impl Log2Hist {
+    pub fn new() -> Log2Hist {
+        let buckets: Vec<AtomicU64> = (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Log2Hist {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value.  Lock-free and allocation-free.
+    // entlint: hot
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy; bucket cells may tear against concurrent
+    /// records, which only misplaces in-flight samples between buckets.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable histogram copy — mergeable across shards/processes and
+/// queryable for nearest-rank quantiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot::empty()
+    }
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { counts: vec![0; N_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Merging snapshots is exactly equivalent to recording both
+    /// sample streams into one histogram (pinned by property test).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the upper
+    /// bound of the bucket holding the ranked sample — the same
+    /// smallest-element-with-rank `>= ceil(q*n)` convention as
+    /// `serve::metrics::percentile`, quantised to bucket resolution.
+    /// Empty histogram reports 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Exact mean (from the exact running sum, not bucket bounds).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_region_is_exact() {
+        for v in 0..32u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v));
+        }
+    }
+
+    #[test]
+    fn bounds_invert_index_everywhere() {
+        // Every bucket's bounds map back to that bucket, and the next
+        // value after `upper` starts the next bucket.
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(bucket_index(lo), i, "lower bound of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "upper bound of bucket {i}");
+            if hi < u64::MAX {
+                assert_eq!(bucket_index(hi + 1), i + 1, "successor of bucket {i}");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        for &v in &[33u64, 100, 1000, 12345, 7_500_000, u64::MAX / 3] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v <= hi);
+            let err = (hi - v) as f64 / v as f64;
+            assert!(err <= 1.0 / 32.0 + 1e-12, "v={v} err={err}");
+        }
+    }
+}

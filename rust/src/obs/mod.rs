@@ -1,0 +1,34 @@
+//! Tick-domain observability: request/shard tracing, log2 latency
+//! histograms, and trace exporters.
+//!
+//! The serve stack's answer to "which phase ate the time": every
+//! request-lifecycle transition (submit → admit/shed → prefill →
+//! adoption → per-decode-step → terminal) and shard-lifecycle event
+//! (fault, reroute, splice, rejoin, evict, backoff) is recorded as a
+//! fixed-size [`Event`] into a bounded lock-free [`EventRing`], stamped
+//! with the scheduler's **tick counter** — never a wall clock — so
+//! traces from seeded scenarios are byte-identical across runs and the
+//! `no-wallclock-in-replay` invariant holds with a single audited
+//! escape ([`clock`]).
+//!
+//! Latency distributions use [`Log2Hist`] — fixed-bucket HDR-style
+//! histograms with mergeable snapshots and ~3.2%-accurate
+//! p50/p99/p999 — instead of unbounded sample reservoirs; recording is
+//! one `fetch_add`, allocation-free, safe on the decode hot path.
+//!
+//! [`Tracer`] ties it together and exports JSONL or Chrome trace-event
+//! JSON (Perfetto-loadable; one track per request, lane, and shard).
+//! Wall-clock annotation happens only at export, supplied by callers
+//! outside the replay paths.
+
+pub mod clock;
+pub mod event;
+pub mod hist;
+pub mod ring;
+pub mod trace;
+
+pub use clock::Stopwatch;
+pub use event::{Event, EventKind};
+pub use hist::{bucket_bounds, bucket_index, HistSnapshot, Log2Hist, N_BUCKETS};
+pub use ring::EventRing;
+pub use trace::{export_chrome_events, Tracer};

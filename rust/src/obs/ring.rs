@@ -1,0 +1,198 @@
+//! Bounded lock-free MPMC ring of fixed-size event records.
+//!
+//! A safe-Rust Vyukov-style bounded queue: each slot carries a sequence
+//! number that encodes whether it is free for the producer at a given
+//! head position or full for the consumer at a given tail position, so
+//! producers never block and the record path never allocates.  Payloads
+//! are five `u64` words stored through `AtomicU64` cells (the crate is
+//! `#![forbid(unsafe_code)]`, so no `UnsafeCell` payload tricks); the
+//! slot's Release/Acquire sequence handshake orders the payload words.
+//!
+//! Overflow policy is **drop-newest**: when the ring is full the push
+//! fails and a dropped counter increments, so the *earliest* events —
+//! the ones that open spans — are the ones retained.  Draining
+//! (`pop`) is single-consumer by contract; `Tracer` enforces that by
+//! only popping under its archive mutex.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct Slot {
+    /// Vyukov sequence: `== pos` means free for the producer claiming
+    /// `pos`; `== pos + 1` means full for the consumer at `pos`.
+    seq: AtomicU64,
+    w: [AtomicU64; 5],
+}
+
+pub struct EventRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    /// Next position a producer will claim.
+    head: AtomicU64,
+    /// Next position the (single) consumer will read.
+    tail: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl EventRing {
+    /// `cap` must be a power of two (masked indexing).
+    pub fn new(cap: usize) -> EventRing {
+        assert!(cap.is_power_of_two() && cap >= 2, "ring capacity must be a power of two >= 2");
+        let slots: Vec<Slot> = (0..cap)
+            .map(|i| Slot { seq: AtomicU64::new(i as u64), w: Default::default() })
+            .collect();
+        EventRing {
+            slots: slots.into_boxed_slice(),
+            mask: cap as u64 - 1,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events rejected because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        // Relaxed: monotone gauge read, no payload depends on it
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one event.  Lock-free, allocation-free; returns `false`
+    /// (and counts a drop) when the ring is full.
+    // entlint: hot
+    pub fn push(&self, words: [u64; 5]) -> bool {
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let slot = &self.slots[(head & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == head {
+                // Slot free at our position: claim it by advancing head.
+                if self
+                    .head
+                    .compare_exchange_weak(head, head + 1, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    for (cell, &w) in slot.w.iter().zip(words.iter()) {
+                        // Relaxed: the seq Release store below publishes the payload
+                        cell.store(w, Ordering::Relaxed);
+                    }
+                    slot.seq.store(head + 1, Ordering::Release);
+                    return true;
+                }
+                // Lost the claim race — retry with the new head.
+            } else if seq < head {
+                // Slot still holds an unconsumed event a full lap back:
+                // ring is full.  Drop-newest.
+                // Relaxed: drop counter only, nothing orders against it
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            // seq > head: another producer claimed this position first; retry.
+        }
+    }
+
+    /// Take the oldest event, if any.  **Single consumer only** — the
+    /// caller must serialise pops externally (see `Tracer::drain`).
+    pub fn pop(&self) -> Option<[u64; 5]> {
+        let tail = self.tail.load(Ordering::Acquire);
+        let slot = &self.slots[(tail & self.mask) as usize];
+        if slot.seq.load(Ordering::Acquire) != tail + 1 {
+            return None; // empty, or the producer is mid-publish
+        }
+        let mut words = [0u64; 5];
+        for (out, cell) in words.iter_mut().zip(slot.w.iter()) {
+            // Relaxed: the seq Acquire load above synchronised with the
+            // producer's Release publish of these words
+            *out = cell.load(Ordering::Relaxed);
+        }
+        // Mark the slot free for the producer one lap ahead.
+        slot.seq.store(tail + self.slots.len() as u64, Ordering::Release);
+        self.tail.store(tail + 1, Ordering::Release);
+        Some(words)
+    }
+
+    /// Events currently buffered (racy under concurrent pushes; exact
+    /// when quiescent).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Acquire);
+        let tail = self.tail.load(Ordering::Acquire);
+        head.saturating_sub(tail) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_within_capacity() {
+        let r = EventRing::new(8);
+        for i in 0..5u64 {
+            assert!(r.push([i, 0, 0, 0, 0]));
+        }
+        assert_eq!(r.len(), 5);
+        for i in 0..5u64 {
+            assert_eq!(r.pop().unwrap()[0], i);
+        }
+        assert!(r.pop().is_none());
+    }
+
+    #[test]
+    fn overflow_drops_newest_and_counts() {
+        let r = EventRing::new(4);
+        for i in 0..4u64 {
+            assert!(r.push([i, 0, 0, 0, 0]));
+        }
+        assert!(!r.push([99, 0, 0, 0, 0]));
+        assert!(!r.push([100, 0, 0, 0, 0]));
+        assert_eq!(r.dropped(), 2);
+        // The earliest four survive; the overflowing two are gone.
+        let got: Vec<u64> = std::iter::from_fn(|| r.pop()).map(|w| w[0]).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn wraps_many_laps() {
+        let r = EventRing::new(4);
+        for lap in 0..100u64 {
+            for i in 0..3 {
+                assert!(r.push([lap * 3 + i, 0, 0, 0, 0]));
+            }
+            for i in 0..3 {
+                assert_eq!(r.pop().unwrap()[0], lap * 3 + i);
+            }
+        }
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing_under_capacity() {
+        use std::sync::Arc;
+        let r = Arc::new(EventRing::new(1 << 12));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..512u64 {
+                        assert!(r.push([(t << 32) | i, 0, 0, 0, 0]));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut got: Vec<u64> = std::iter::from_fn(|| r.pop()).map(|w| w[0]).collect();
+        assert_eq!(got.len(), 4 * 512);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 4 * 512, "no duplicated or torn records");
+    }
+}

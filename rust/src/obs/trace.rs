@@ -1,0 +1,382 @@
+//! The tracer: tick-stamped event recording + JSONL / Chrome exporters.
+//!
+//! `Tracer` owns a bounded [`EventRing`] fed from the hot paths and a
+//! bounded archive the ring drains into between decode steps.  The
+//! record path is lock-free and allocation-free; the drain path runs
+//! under a mutex (which also serialises the ring's single consumer).
+//!
+//! **Clock domains.**  Events carry only the scheduler tick
+//! (`decode_steps`), so the recorded stream is byte-identical across
+//! runs of the same seeded scenario.  Wall-clock annotation — a unix
+//! anchor for correlating a trace with external logs — is applied only
+//! at export time and only when the *caller* (e.g. `main.rs`, outside
+//! the replay paths) supplies one; nothing in `obs/` reads a wall
+//! clock except [`super::clock`].
+//!
+//! **Chrome export.**  `export_chrome` emits Chrome trace-event JSON
+//! (one event per line) loadable in Perfetto / `chrome://tracing`:
+//! pid 0 = one track per request (full lifecycle span + phase spans +
+//! instants), pid 1 = one track per decode lane (occupancy spans),
+//! pid 2 = one track per shard (fault/reroute/rejoin instants, splice
+//! spans), pid 3 = driver counters (active lanes, queue depth).  `ts`
+//! is the tick, microsecond-denominated, so one tick renders as 1µs.
+
+use super::event::{Event, EventKind};
+use super::ring::EventRing;
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct Tracer {
+    enabled: AtomicBool,
+    /// Scheduler decode-step counter, mirrored here by the driver so
+    /// producers on any thread can stamp events without reaching into
+    /// scheduler state.
+    tick: AtomicU64,
+    ring: EventRing,
+    /// Drained events in record order, capped at `archive_cap`.
+    archive: Mutex<Vec<Event>>,
+    archive_cap: usize,
+    archive_dropped: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new(1 << 12, 1 << 16)
+    }
+}
+
+impl Tracer {
+    /// `ring_cap` bounds in-flight (undrained) events and must be a
+    /// power of two; `archive_cap` bounds total retained events.
+    pub fn new(ring_cap: usize, archive_cap: usize) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(true),
+            tick: AtomicU64::new(0),
+            ring: EventRing::new(ring_cap),
+            archive: Mutex::new(Vec::with_capacity(archive_cap.min(1 << 20))),
+            archive_cap,
+            archive_dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        // Relaxed: a lone on/off flag, no ordering with event payloads
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        // Relaxed: see set_enabled
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Advance the tick mirror (driver-only, once per decode step).
+    pub fn set_tick(&self, t: u64) {
+        // Relaxed: the tick is an annotation stamp; cross-thread skew
+        // only staggers stamps, never replayed computation
+        self.tick.store(t, Ordering::Relaxed);
+    }
+
+    pub fn tick(&self) -> u64 {
+        // Relaxed: see set_tick
+        self.tick.load(Ordering::Relaxed)
+    }
+
+    /// Record one event stamped with the current tick.  Lock-free and
+    /// allocation-free (pinned by `rust/tests/obs.rs`).
+    // entlint: hot
+    pub fn record(&self, kind: EventKind, id: u64, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let tick = self.tick();
+        self.ring.push([tick, kind as u64, id, a, b]);
+    }
+
+    /// Total events lost to ring overflow or archive cap.
+    pub fn dropped(&self) -> u64 {
+        // Relaxed: monotone gauges
+        self.ring.dropped() + self.archive_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Move everything buffered in the ring into the archive.  Called
+    /// by the scheduler driver between decode steps and by exporters;
+    /// the archive mutex also serialises the ring's single consumer.
+    pub fn drain(&self) {
+        let mut archive = self.archive.lock().unwrap();
+        while let Some(words) = self.ring.pop() {
+            if archive.len() >= self.archive_cap {
+                // Relaxed: drop counter only
+                self.archive_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if let Some(e) = Event::from_words(words) {
+                archive.push(e);
+            }
+        }
+    }
+
+    /// Drain, then copy the archived stream (record order).
+    pub fn events(&self) -> Vec<Event> {
+        self.drain();
+        self.archive.lock().unwrap().clone()
+    }
+
+    /// Archived event count (after an implicit drain).
+    pub fn len(&self) -> usize {
+        self.drain();
+        self.archive.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSONL export: one `{"tick":..,"kind":..,"id":..,"a":..,"b":..}`
+    /// object per line.  `wall_anchor_us` (unix µs at export, supplied
+    /// by the caller so `obs/` itself stays wall-clock-free) prepends a
+    /// `{"anchor_unix_us":..}` header line; replay-path callers pass
+    /// `None` and the output is byte-identical across seeded runs.
+    pub fn export_jsonl(&self, wall_anchor_us: Option<u64>) -> String {
+        let events = self.events();
+        let mut out = String::with_capacity(64 * (events.len() + 1));
+        if let Some(us) = wall_anchor_us {
+            let _ = writeln!(out, "{{\"anchor_unix_us\":{us},\"dropped\":{}}}", self.dropped());
+        }
+        for e in &events {
+            let _ = writeln!(
+                out,
+                "{{\"tick\":{},\"kind\":\"{}\",\"id\":{},\"a\":{},\"b\":{}}}",
+                e.tick,
+                e.kind.name(),
+                e.id,
+                e.a,
+                e.b
+            );
+        }
+        out
+    }
+
+    /// Chrome trace-event export (see module docs for the track
+    /// layout).  Deterministic: no wall clock, stable metadata order,
+    /// one traceEvent per line.
+    pub fn export_chrome(&self) -> String {
+        export_chrome_events(&self.events())
+    }
+}
+
+/// Render an event stream as Chrome trace-event JSON.  Split out from
+/// [`Tracer`] so tests and tools can render captured streams directly.
+pub fn export_chrome_events(events: &[Event]) -> String {
+    let mut requests: BTreeSet<u64> = BTreeSet::new();
+    let mut lanes: BTreeSet<u64> = BTreeSet::new();
+    let mut shards: BTreeSet<u64> = BTreeSet::new();
+    for e in events {
+        match e.kind {
+            EventKind::LaneStart | EventKind::LaneEnd => {
+                requests.insert(e.id);
+                lanes.insert(e.a);
+            }
+            EventKind::DecodeStep | EventKind::Shed => {}
+            k if k.is_shard() => {
+                shards.insert(e.id);
+                if k == EventKind::Reroute {
+                    shards.insert(e.b);
+                }
+            }
+            _ => {
+                requests.insert(e.id);
+            }
+        }
+    }
+
+    let mut out = String::with_capacity(96 * (events.len() + 16));
+    out.push_str("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push_line = |out: &mut String, line: &str| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(line);
+    };
+
+    // Process / thread naming metadata (stable order: pid, then tid).
+    let mut line = String::new();
+    for (pid, name) in
+        [(0u32, "requests"), (1, "lanes"), (2, "shards"), (3, "driver")]
+    {
+        line.clear();
+        let _ = write!(
+            line,
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\"args\":{{\"name\":\"{name}\"}}}}"
+        );
+        push_line(&mut out, &line);
+    }
+    for (pid, ids, label) in
+        [(0u32, &requests, "request"), (1, &lanes, "lane"), (2, &shards, "shard")]
+    {
+        for &tid in ids.iter() {
+            line.clear();
+            let _ = write!(
+                line,
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\"{label} {tid}\"}}}}"
+            );
+            push_line(&mut out, &line);
+        }
+    }
+
+    for e in events {
+        line.clear();
+        let ts = e.tick;
+        let (id, a, b) = (e.id, e.a, e.b);
+        match e.kind {
+            EventKind::Submit => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"B\",\"pid\":0,\"tid\":{id},\"ts\":{ts},\"name\":\"request\",\"args\":{{\"prompt\":{a},\"max_new\":{b}}}}}"
+                );
+            }
+            k if k.is_terminal() => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"E\",\"pid\":0,\"tid\":{id},\"ts\":{ts},\"name\":\"request\",\"args\":{{\"outcome\":\"{}\",\"tokens\":{a}}}}}",
+                    k.name()
+                );
+            }
+            EventKind::PrefillStart => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"B\",\"pid\":0,\"tid\":{id},\"ts\":{ts},\"name\":\"prefill\",\"args\":{{\"lane\":{a}}}}}"
+                );
+            }
+            EventKind::PrefillEnd => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"E\",\"pid\":0,\"tid\":{id},\"ts\":{ts},\"name\":\"prefill\"}}"
+                );
+            }
+            EventKind::LaneStart => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"B\",\"pid\":1,\"tid\":{a},\"ts\":{ts},\"name\":\"occupy\",\"args\":{{\"req\":{id}}}}}"
+                );
+            }
+            EventKind::LaneEnd => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"E\",\"pid\":1,\"tid\":{a},\"ts\":{ts},\"name\":\"occupy\"}}"
+                );
+            }
+            EventKind::SpliceStart => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"B\",\"pid\":2,\"tid\":{id},\"ts\":{ts},\"name\":\"splice\",\"args\":{{\"blocks\":{a}}}}}"
+                );
+            }
+            EventKind::SpliceEnd => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"E\",\"pid\":2,\"tid\":{id},\"ts\":{ts},\"name\":\"splice\"}}"
+                );
+            }
+            EventKind::DecodeStep => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"C\",\"pid\":3,\"tid\":0,\"ts\":{ts},\"name\":\"driver\",\"args\":{{\"active\":{a},\"queue\":{b}}}}}"
+                );
+            }
+            // sheds have no request id: they render as driver-track
+            // instants so refusals are visible next to the counters
+            EventKind::Shed => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"i\",\"pid\":3,\"tid\":0,\"ts\":{ts},\"s\":\"t\",\"name\":\"shed\",\"args\":{{\"reason\":{a},\"retry_after\":{b}}}}}"
+                );
+            }
+            k if k.is_shard() => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"i\",\"pid\":2,\"tid\":{id},\"ts\":{ts},\"s\":\"t\",\"name\":\"{}\",\"args\":{{\"a\":{a},\"b\":{b}}}}}",
+                    k.name()
+                );
+            }
+            k => {
+                let _ = write!(
+                    line,
+                    "{{\"ph\":\"i\",\"pid\":0,\"tid\":{id},\"ts\":{ts},\"s\":\"t\",\"name\":\"{}\",\"args\":{{\"a\":{a},\"b\":{b}}}}}",
+                    k.name()
+                );
+            }
+        }
+        push_line(&mut out, &line);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_drain_export_roundtrip() {
+        let t = Tracer::new(16, 64);
+        t.set_tick(3);
+        t.record(EventKind::Submit, 1, 10, 20);
+        t.record(EventKind::Admit, 1, 0, 0);
+        t.set_tick(5);
+        t.record(EventKind::Done, 1, 7, 0);
+        let ev = t.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, EventKind::Submit);
+        assert_eq!(ev[0].tick, 3);
+        assert_eq!(ev[2].tick, 5);
+
+        let jsonl = t.export_jsonl(None);
+        assert_eq!(jsonl.lines().count(), 3);
+        assert!(jsonl.contains("\"kind\":\"submit\""));
+        let anchored = t.export_jsonl(Some(42));
+        assert!(anchored.starts_with("{\"anchor_unix_us\":42"));
+
+        let chrome = t.export_chrome();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.contains("\"ph\":\"B\""));
+        assert!(chrome.contains("\"ph\":\"E\""));
+        // One traceEvent per line, comma-led continuation lines.
+        assert!(chrome.lines().any(|l| l.starts_with(",{\"ph\":")));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(16, 64);
+        t.set_enabled(false);
+        t.record(EventKind::Submit, 1, 0, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn archive_cap_drops_and_counts() {
+        let t = Tracer::new(16, 4);
+        for i in 0..6 {
+            t.record(EventKind::DecodeStep, 0, i, 0);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let mk = || {
+            let t = Tracer::new(32, 64);
+            t.record(EventKind::Submit, 2, 4, 8);
+            t.set_tick(1);
+            t.record(EventKind::Reroute, 1, 1, 0);
+            t.record(EventKind::Done, 2, 3, 0);
+            (t.export_chrome(), t.export_jsonl(None))
+        };
+        assert_eq!(mk(), mk());
+    }
+}

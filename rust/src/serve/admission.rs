@@ -72,6 +72,32 @@ impl Admission {
     }
 }
 
+/// Why a submission was shed — carried on the `shed` trace event so an
+/// operator reading a Chrome trace can tell backpressure (queue/token
+/// bounds) apart from degradation (shard deficit) without correlating
+/// against supervisor logs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ShedReason {
+    /// Healthy-shard deficit put the controller at tier >= 1.
+    Degraded = 0,
+    /// The bounded queue is at `max_queue_depth`.
+    QueueFull = 1,
+    /// Admitting would push the committed-token ledger past
+    /// `max_inflight_tokens`.
+    TokenBudget = 2,
+}
+
+impl ShedReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::Degraded => "degraded",
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::TokenBudget => "token_budget",
+        }
+    }
+}
+
 /// The admission knobs, split out of `SchedulerOpts` so the controller
 /// is testable without a scheduler.
 #[derive(Clone, Copy, Debug)]
@@ -125,23 +151,27 @@ impl AdmissionCtl {
     /// `queue_depth` cannot be raced past its bound); on `Ok` the
     /// request's `max_new` has been charged to the inflight ledger.
     /// `completed`/`decode_steps` are the drain-rate observations the
-    /// retry hint is derived from.
+    /// retry hint is derived from; `Err` carries the hint plus the
+    /// reason the submission was refused.
     pub fn try_admit(
         &self,
         max_new: usize,
         queue_depth: usize,
         completed: usize,
         decode_steps: usize,
-    ) -> Result<(), usize> {
+    ) -> Result<(), (usize, ShedReason)> {
         if self.tier() >= 1 {
-            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+            let hint = retry_after_steps(queue_depth, completed, decode_steps);
+            return Err((hint, ShedReason::Degraded));
         }
         if queue_depth >= self.opts.max_queue_depth {
-            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+            let hint = retry_after_steps(queue_depth, completed, decode_steps);
+            return Err((hint, ShedReason::QueueFull));
         }
         let committed = self.inflight_tokens.load(Ordering::Relaxed);
         if committed.saturating_add(max_new) > self.opts.max_inflight_tokens {
-            return Err(retry_after_steps(queue_depth, completed, decode_steps));
+            let hint = retry_after_steps(queue_depth, completed, decode_steps);
+            return Err((hint, ShedReason::TokenBudget));
         }
         self.inflight_tokens.fetch_add(max_new, Ordering::Relaxed);
         Ok(())
@@ -204,8 +234,9 @@ mod tests {
         let ctl = AdmissionCtl::new(AdmissionOpts { max_queue_depth: 2, ..Default::default() });
         assert!(ctl.try_admit(4, 0, 0, 0).is_ok());
         assert!(ctl.try_admit(4, 1, 0, 0).is_ok());
-        let hint = ctl.try_admit(4, 2, 0, 0).unwrap_err();
+        let (hint, reason) = ctl.try_admit(4, 2, 0, 0).unwrap_err();
         assert!(hint >= 1, "shed must always carry a usable hint");
+        assert_eq!(reason, ShedReason::QueueFull);
     }
 
     #[test]
@@ -214,7 +245,8 @@ mod tests {
             AdmissionCtl::new(AdmissionOpts { max_inflight_tokens: 10, ..Default::default() });
         assert!(ctl.try_admit(6, 0, 0, 0).is_ok());
         assert_eq!(ctl.inflight_tokens(), 6);
-        assert!(ctl.try_admit(6, 0, 0, 0).is_err(), "6+6 > 10 must shed");
+        let (_, reason) = ctl.try_admit(6, 0, 0, 0).unwrap_err();
+        assert_eq!(reason, ShedReason::TokenBudget, "6+6 > 10 must shed");
         assert!(ctl.try_admit(4, 0, 0, 0).is_ok());
         assert_eq!(ctl.inflight_tokens(), 10);
         ctl.on_terminal(6);
@@ -236,7 +268,8 @@ mod tests {
         assert!(ctl.try_admit(1, 0, 0, 0).is_ok());
         ctl.set_healthy_shards(2);
         assert_eq!(ctl.tier(), 1);
-        assert!(ctl.try_admit(1, 0, 0, 0).is_err(), "tier 1 sheds new admissions");
+        let (_, reason) = ctl.try_admit(1, 0, 0, 0).unwrap_err();
+        assert_eq!(reason, ShedReason::Degraded, "tier 1 sheds new admissions");
         ctl.set_healthy_shards(1);
         assert_eq!(ctl.tier(), 2);
     }

@@ -5,16 +5,19 @@
 //! fresh-alloc gauges (which must stay 0 in steady state, same
 //! contract as the engine's `decode_arena_fresh_allocs`).
 //!
-//! Everything is lock-free atomics except the TTFT reservoir (a short
-//! mutex-guarded vec; one push per request, read only at snapshot
-//! time), so the driver's hot loop pays near nothing.
+//! Everything is lock-free: the latency distributions (ttft,
+//! queue-wait, per-decode-step, recovery-stall) are `obs::Log2Hist`
+//! fixed-bucket histograms — bounded memory however many requests pass
+//! (the unbounded mutex-guarded TTFT sample vec they replaced grew one
+//! `f64` per request forever), recordable from the driver's hot loop,
+//! and snapshotted as mergeable `HistSnapshot`s with p50/p99/p999.
 
 // entlint: allow-file(ordering-audit) — this module is nothing but independent
 // monotonic counters and point-in-time gauges; no cross-variable ordering
 // invariants exist here, so Relaxed is correct at every site
+use crate::obs::{HistSnapshot, Log2Hist, Stopwatch};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
 
 pub struct ServeMetrics {
     submitted: AtomicUsize,
@@ -78,9 +81,17 @@ pub struct ServeMetrics {
     /// occupied lanes of the in-flight batch (gauge; must return to 0
     /// once every request is terminal — the lane-leak check)
     inflight_lanes: AtomicUsize,
-    ttft_ms: Mutex<Vec<f64>>,
+    /// time-to-first-token distribution in µs — bounded log2 buckets,
+    /// the unbounded per-request sample vec's successor
+    ttft_us: Log2Hist,
+    /// decode steps spent queued before entering a batch (tick domain)
+    queue_wait_steps: Log2Hist,
+    /// wall µs per driver decode step (annotation only)
+    step_us: Log2Hist,
+    /// wall µs per successful recovery splice (annotation only)
+    recovery_stall_dist_us: Log2Hist,
     shard_fresh_allocs: Mutex<Vec<usize>>,
-    started: Instant,
+    started: Stopwatch,
 }
 
 /// A plain-data copy of the counters at one instant.
@@ -115,6 +126,17 @@ pub struct MetricsSnapshot {
     pub p99_ttft_ms: f64,
     pub p999_ttft_ms: f64,
     pub mean_ttft_ms: f64,
+    pub p50_step_us: f64,
+    pub p99_step_us: f64,
+    pub p999_step_us: f64,
+    pub mean_step_us: f64,
+    pub p50_queue_wait_steps: u64,
+    pub p99_queue_wait_steps: u64,
+    /// full mergeable distributions (bucket counts + exact count/sum/max)
+    pub ttft_hist: HistSnapshot,
+    pub queue_wait_hist: HistSnapshot,
+    pub step_hist: HistSnapshot,
+    pub recovery_stall_hist: HistSnapshot,
     pub elapsed_s: f64,
     pub tokens_per_s: f64,
     pub shard_fresh_allocs: Vec<usize>,
@@ -156,9 +178,12 @@ impl ServeMetrics {
             decode_steps: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
             inflight_lanes: AtomicUsize::new(0),
-            ttft_ms: Mutex::new(Vec::new()),
+            ttft_us: Log2Hist::new(),
+            queue_wait_steps: Log2Hist::new(),
+            step_us: Log2Hist::new(),
+            recovery_stall_dist_us: Log2Hist::new(),
             shard_fresh_allocs: Mutex::new(Vec::new()),
-            started: Instant::now(),
+            started: Stopwatch::start(),
         }
     }
 
@@ -230,6 +255,7 @@ impl ServeMetrics {
 
     pub fn add_recovery_stall_us(&self, us: u64) {
         self.recovery_stall_us.fetch_add(us, Ordering::Relaxed);
+        self.recovery_stall_dist_us.record(us);
     }
 
     pub fn set_weight_copies(&self, copies: usize) {
@@ -261,11 +287,27 @@ impl ServeMetrics {
     }
 
     pub fn record_ttft_ms(&self, ms: f64) {
-        self.ttft_ms.lock().unwrap().push(ms);
+        self.ttft_us.record((ms * 1e3).max(0.0) as u64);
     }
 
-    pub fn set_shard_fresh_allocs(&self, allocs: Vec<usize>) {
-        *self.shard_fresh_allocs.lock().unwrap() = allocs;
+    /// Decode steps a request waited in the queue before entering a
+    /// batch (tick domain — deterministic under replay).
+    pub fn record_queue_wait_steps(&self, steps: u64) {
+        self.queue_wait_steps.record(steps);
+    }
+
+    /// Wall µs one driver decode step took (annotation only).
+    pub fn record_step_us(&self, us: u64) {
+        self.step_us.record(us);
+    }
+
+    /// Gauge sweep into the retained buffer: no allocation once its
+    /// capacity covers the shard count (the driver passes a scratch
+    /// slice it also reuses — no per-tick Vec changes hands).
+    pub fn set_shard_fresh_allocs(&self, allocs: &[usize]) {
+        let mut g = self.shard_fresh_allocs.lock().unwrap();
+        g.clear();
+        g.extend_from_slice(allocs);
     }
 
     pub fn fused_admissions(&self) -> usize {
@@ -287,9 +329,10 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let ttft = self.ttft_ms.lock().unwrap().clone();
-        let (p50, mean) = percentile_and_mean(&ttft);
-        let (p99, p999) = (percentile(&ttft, 0.99), percentile(&ttft, 0.999));
+        let ttft = self.ttft_us.snapshot();
+        let step = self.step_us.snapshot();
+        let queue_wait = self.queue_wait_steps.snapshot();
+        let recovery = self.recovery_stall_dist_us.snapshot();
         let tokens = self.tokens.load(Ordering::Relaxed);
         let elapsed_s = self.started.elapsed().as_secs_f64();
         MetricsSnapshot {
@@ -318,10 +361,20 @@ impl ServeMetrics {
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             inflight_lanes: self.inflight_lanes.load(Ordering::Relaxed),
-            p50_ttft_ms: p50,
-            p99_ttft_ms: p99,
-            p999_ttft_ms: p999,
-            mean_ttft_ms: mean,
+            p50_ttft_ms: ttft.percentile(0.5) as f64 / 1e3,
+            p99_ttft_ms: ttft.percentile(0.99) as f64 / 1e3,
+            p999_ttft_ms: ttft.percentile(0.999) as f64 / 1e3,
+            mean_ttft_ms: ttft.mean() / 1e3,
+            p50_step_us: step.percentile(0.5) as f64,
+            p99_step_us: step.percentile(0.99) as f64,
+            p999_step_us: step.percentile(0.999) as f64,
+            mean_step_us: step.mean(),
+            p50_queue_wait_steps: queue_wait.percentile(0.5),
+            p99_queue_wait_steps: queue_wait.percentile(0.99),
+            ttft_hist: ttft,
+            queue_wait_hist: queue_wait,
+            step_hist: step,
+            recovery_stall_hist: recovery,
             elapsed_s,
             tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
             shard_fresh_allocs: self.shard_fresh_allocs.lock().unwrap().clone(),
@@ -335,8 +388,10 @@ impl ServeMetrics {
 /// interpolation), deterministic, and well-defined at the edges:
 /// empty -> 0.0, a single sample -> that sample, `q <= 0` -> the
 /// minimum, `q >= 1` -> the maximum.  For `q = 0.5` over an even count
-/// this is the LOWER middle element — the ttft p50 semantics the serve
-/// stress tests pin.
+/// this is the LOWER middle element.  This is also the exact reference
+/// the `obs::Log2Hist` bucket quantiles are property-tested against
+/// (rust/tests/obs.rs): the histogram reports a bucket upper bound
+/// within 1/32 relative of this function's answer on the same samples.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
@@ -347,15 +402,6 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let rank = (q * n as f64).ceil() as isize; // 1-based
     let idx = rank.clamp(1, n as isize) as usize - 1;
     sorted[idx]
-}
-
-/// (p50, mean) of a sample; (0, 0) when empty (never NaN).
-fn percentile_and_mean(samples: &[f64]) -> (f64, f64) {
-    if samples.is_empty() {
-        return (0.0, 0.0);
-    }
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    (percentile(samples, 0.5), mean)
 }
 
 #[cfg(test)]
@@ -393,7 +439,9 @@ mod tests {
         m.record_ttft_ms(10.0);
         m.record_ttft_ms(30.0);
         m.record_ttft_ms(20.0);
-        m.set_shard_fresh_allocs(vec![0, 0]);
+        m.record_step_us(1000);
+        m.record_queue_wait_steps(3);
+        m.set_shard_fresh_allocs(&[0, 0]);
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 1);
@@ -419,10 +467,19 @@ mod tests {
         assert_eq!(s.decode_steps, 1);
         assert_eq!(s.queue_depth, 2);
         assert_eq!(s.inflight_lanes, 3);
-        assert_eq!(s.p50_ttft_ms, 20.0);
+        // histogram quantiles are bucket-quantised: within 1/32 relative
+        assert!((s.p50_ttft_ms - 20.0).abs() <= 20.0 / 32.0 + 1e-9, "p50 {}", s.p50_ttft_ms);
+        // the top-ranked sample clamps to the exact recorded max
         assert_eq!(s.p99_ttft_ms, 30.0);
         assert_eq!(s.p999_ttft_ms, 30.0);
+        // the mean is exact: it comes from the histogram's running sum
         assert!((s.mean_ttft_ms - 20.0).abs() < 1e-9);
+        assert_eq!(s.p50_step_us, 1000.0); // single sample: max-clamped, exact
+        assert_eq!(s.p50_queue_wait_steps, 3); // below 32: exact bucket
+        assert_eq!(s.ttft_hist.count, 3);
+        assert_eq!(s.step_hist.count, 1);
+        assert_eq!(s.queue_wait_hist.count, 1);
+        assert_eq!(s.recovery_stall_hist.count, 1);
         assert_eq!(s.shard_fresh_allocs, vec![0, 0]);
         assert!(s.tokens_per_s >= 0.0);
     }

@@ -21,10 +21,17 @@
 //! * **`supervisor`** — the self-healing wrapper: per-shard
 //!   consecutive-failure eviction, a spare-`Runtime` pool, and
 //!   tick-counted (seeded-jitter) backoff between rejoin attempts.
-//! * **`metrics`** — queue depth, lifecycle tallies, time-to-first-
-//!   token, token throughput, health/eviction/backoff gauges and
-//!   per-shard decode-arena gauges, snapshotted lock-free from any
-//!   thread.
+//! * **`metrics`** — queue depth, lifecycle tallies, token throughput,
+//!   health/eviction/backoff gauges, per-shard decode-arena gauges, and
+//!   `obs::Log2Hist` latency distributions (ttft, queue wait, per-step,
+//!   recovery stall), snapshotted lock-free from any thread.
+//!
+//! The whole stack is traced: the scheduler owns an `obs::Tracer` and
+//! hands it to the engine via `StepEngine::set_tracer`, so request
+//! lifecycle events (scheduler-side) and shard lifecycle events
+//! (engine-side) interleave in one tick-stamped ring, exportable as
+//! JSONL or Chrome trace-event JSON (`serve --trace-out`, the
+//! `serve-stdio` `TRACE` command).
 //!
 //! The split mirrors the serving designs in Heilper & Singer 2025 and
 //! Mao et al. 2024: decode-on-demand weights partitioned across
@@ -58,7 +65,7 @@ pub mod scheduler;
 pub mod shard;
 pub mod supervisor;
 
-pub use admission::{Admission, AdmissionOpts};
+pub use admission::{Admission, AdmissionOpts, ShedReason};
 pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use scheduler::{Scheduler, SchedulerOpts, Status};
 pub use shard::{ShardPlan, ShardedEngine};
@@ -66,7 +73,9 @@ pub use supervisor::{ShardHealth, Supervisor, SupervisorOpts};
 
 use crate::coordinator::engine::DecodeState;
 use crate::coordinator::{Batch, ServingEngine};
+use crate::obs::Tracer;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// The step-wise engine surface the scheduler drives: prefill a batch
 /// into a `DecodeState`, then advance it one token at a time so
@@ -85,6 +94,23 @@ pub trait StepEngine: Send {
     /// Decode-arena fresh allocations per shard (one entry per shard; 0
     /// each in steady state).
     fn fresh_allocs_per_shard(&self) -> Vec<usize>;
+
+    /// Allocation-free variant of `fresh_allocs_per_shard`: overwrite
+    /// `out` with one entry per shard.  The scheduler driver calls this
+    /// every tick with a reused scratch buffer, so steady-state ticks
+    /// stay allocation-free; engines should override the default (which
+    /// falls back to the allocating form).
+    fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.fresh_allocs_per_shard());
+    }
+
+    /// Install the scheduler's tracer so engine-side lifecycle events
+    /// (shard faults, reroutes, splices, rejoins, evictions) land in
+    /// the same tick-stamped ring as the scheduler's request events.
+    /// The default — a plain engine with no shard lifecycle — records
+    /// nothing and ignores the tracer.
+    fn set_tracer(&self, _tracer: &Arc<Tracer>) {}
 
     fn n_shards(&self) -> usize {
         self.fresh_allocs_per_shard().len()
@@ -166,6 +192,11 @@ impl StepEngine for ServingEngine {
         vec![self.decode_arena_fresh_allocs()]
     }
 
+    fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.push(self.decode_arena_fresh_allocs());
+    }
+
     fn resident_compressed_bytes(&self) -> usize {
         self.compressed().compressed_stream_bytes()
     }
@@ -194,6 +225,14 @@ impl StepEngine for ShardedEngine {
 
     fn fresh_allocs_per_shard(&self) -> Vec<usize> {
         self.fresh_allocs()
+    }
+
+    fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
+        ShardedEngine::fresh_allocs_into(self, out)
+    }
+
+    fn set_tracer(&self, tracer: &Arc<Tracer>) {
+        ShardedEngine::set_tracer(self, tracer)
     }
 
     fn try_recover(&self) -> bool {

@@ -59,18 +59,28 @@
 //! requests complete byte-identically to an unfaulted run
 //! (`reroutes` counts recoveries).  Only an unrecoverable error fails
 //! the in-flight requests — and even then the queue keeps serving.
+//!
+//! **Observability**: the scheduler owns an `obs::Tracer`; every
+//! lifecycle transition above records a tick-stamped event (submit,
+//! admit/shed, prefill, adoption, lane occupancy, requeue, terminal),
+//! and the engine records shard-lifecycle events into the same ring
+//! via `StepEngine::set_tracer`.  Latency gauges (ttft, queue wait,
+//! per-step, recovery stall) land in `obs::Log2Hist` histograms —
+//! recording is allocation-free on the hot path.  `Scheduler::tracer`
+//! hands the stream to exporters.
 
 use super::admission::{Admission, AdmissionCtl, AdmissionOpts};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::StepEngine;
 use crate::coordinator::batcher::{pack, Request};
 use crate::coordinator::engine::DecodeState;
+use crate::obs::{EventKind, Stopwatch, Tracer};
 use crate::parallel::{sched_point, Service};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Request lifecycle as observed through `poll`.
 ///
@@ -147,7 +157,12 @@ struct Entry {
     status: Status,
     output: Vec<u8>,
     cancel_requested: bool,
-    submitted_at: Instant,
+    /// wall stopwatch behind the ttft gauge — annotation only; the
+    /// scheduler's decisions run on the decode-step clock below
+    submitted_at: Stopwatch,
+    /// decode-step clock value at submission; queue wait is measured
+    /// in ticks against this when the request is popped for decoding
+    submitted_step: usize,
     got_first_token: bool,
     /// absolute decode-step clock value at which this request expires
     /// (`None` = no deadline) — tick-counted, never wall-clock
@@ -160,25 +175,42 @@ struct Shared {
     next_id: AtomicU64,
     paused: AtomicBool,
     metrics: ServeMetrics,
+    tracer: Arc<Tracer>,
     admission: AdmissionCtl,
 }
 
 impl Shared {
     /// The single terminalization funnel: set a terminal status, bump
-    /// its lifecycle counter, and release the request's committed
-    /// tokens back to the admission budget — exactly once (a no-op on
-    /// an already-terminal entry).
-    fn set_terminal(&self, entry: &mut Entry, status: Status) {
+    /// its lifecycle counter, record the terminal trace event, and
+    /// release the request's committed tokens back to the admission
+    /// budget — exactly once (a no-op on an already-terminal entry).
+    /// Being the only path to a terminal status is what guarantees the
+    /// exactly-one-terminal-event-per-request trace invariant
+    /// `rust/tests/obs.rs` pins.
+    fn set_terminal(&self, id: u64, entry: &mut Entry, status: Status) {
         if entry.status.is_terminal() {
             return;
         }
-        match &status {
-            Status::Done => self.metrics.inc_completed(),
-            Status::Cancelled => self.metrics.inc_cancelled(),
-            Status::Expired => self.metrics.inc_expired(),
-            Status::Failed(_) => self.metrics.inc_failed(),
+        let kind = match &status {
+            Status::Done => {
+                self.metrics.inc_completed();
+                EventKind::Done
+            }
+            Status::Cancelled => {
+                self.metrics.inc_cancelled();
+                EventKind::Cancelled
+            }
+            Status::Expired => {
+                self.metrics.inc_expired();
+                EventKind::Expired
+            }
+            Status::Failed(_) => {
+                self.metrics.inc_failed();
+                EventKind::Failed
+            }
             Status::Queued | Status::Decoding => unreachable!("set_terminal with {status:?}"),
-        }
+        };
+        self.tracer.record(kind, id, entry.output.len() as u64, 0);
         entry.status = status;
         self.admission.on_terminal(entry.max_new);
     }
@@ -206,12 +238,17 @@ impl Scheduler {
             next_id: AtomicU64::new(0),
             paused: AtomicBool::new(opts.paused),
             metrics: ServeMetrics::new(),
+            tracer: Arc::new(Tracer::default()),
             admission: AdmissionCtl::new(AdmissionOpts {
                 max_queue_depth: opts.max_queue_depth,
                 max_inflight_tokens: opts.max_inflight_tokens,
                 min_healthy_shards: opts.min_healthy_shards,
             }),
         });
+        // hand the tracer to the engine before the driver spawns, so
+        // shard-lifecycle events (faults, reroutes, splices, rejoins)
+        // land in the same tick-stamped ring as the scheduler's
+        engine.set_tracer(&shared.tracer);
         let step_budget = opts.step_budget;
         let drv_shared = Arc::clone(&shared);
         let idle = opts.idle;
@@ -232,6 +269,7 @@ impl Scheduler {
                 speculative,
                 solo_admission_broken: false,
                 degradation_tier: 0,
+                fresh_allocs_scratch: Vec::new(),
             }
             .run(stop)
         });
@@ -261,15 +299,25 @@ impl Scheduler {
         // bound is exact (two racing submits cannot both squeeze into
         // the last slot)
         let mut queue = self.shared.queue.lock().unwrap();
-        if let Err(retry_after_steps) =
+        if let Err((retry_after_steps, reason)) =
             self.shared.admission.try_admit(max_new, queue.len(), m.completed(), m.decode_steps())
         {
             drop(queue);
             m.inc_shed();
+            // no id was ever assigned: the event carries the reason and
+            // the retry hint under a sentinel id instead
+            self.shared.tracer.record(
+                EventKind::Shed,
+                u64::MAX,
+                reason as u64,
+                retry_after_steps as u64,
+            );
             return Admission::Shed { retry_after_steps };
         }
         // Relaxed: independent id counter; uniqueness is all that matters, entries map has its own lock
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let prompt_len = prompt.len();
+        let now_step = m.decode_steps();
         self.shared.entries.lock().unwrap().insert(
             id,
             Entry {
@@ -278,16 +326,19 @@ impl Scheduler {
                 status: Status::Queued,
                 output: Vec::new(),
                 cancel_requested: false,
-                // entlint: allow(no-wallclock-in-replay) — queue-latency metric only (time-to-first-token gauge); never branches scheduling
-                submitted_at: Instant::now(),
+                submitted_at: Stopwatch::start(),
+                submitted_step: now_step,
                 got_first_token: false,
-                deadline_step: step_budget.map(|b| m.decode_steps().saturating_add(b.max(1))),
+                deadline_step: step_budget.map(|b| now_step.saturating_add(b.max(1))),
             },
         );
         queue.push_back(id);
-        self.shared.metrics.set_queue_depth(queue.len());
+        let depth = queue.len();
+        self.shared.metrics.set_queue_depth(depth);
         drop(queue);
         self.shared.metrics.inc_submitted();
+        self.shared.tracer.record(EventKind::Submit, id, prompt_len as u64, max_new as u64);
+        self.shared.tracer.record(EventKind::Admit, id, depth as u64, 0);
         Admission::Admitted(id)
     }
 
@@ -309,7 +360,7 @@ impl Scheduler {
         let mut entries = self.shared.entries.lock().unwrap();
         if let Some(e) = entries.get_mut(&id) {
             if e.status == Status::Queued {
-                self.shared.set_terminal(e, Status::Cancelled);
+                self.shared.set_terminal(id, e, Status::Cancelled);
             } else if e.status == Status::Decoding {
                 e.cancel_requested = true;
             }
@@ -328,10 +379,16 @@ impl Scheduler {
         self.shared.metrics.snapshot()
     }
 
+    /// The scheduler's tracer — shared with the engine; drain/export
+    /// from any thread (`export_jsonl`, `export_chrome`).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        Arc::clone(&self.shared.tracer)
+    }
+
     /// Block until `id` is terminal; `Ok` only for `Done`.
     pub fn wait(&self, id: u64, timeout: Duration) -> Result<Vec<u8>> {
-        // entlint: allow(no-wallclock-in-replay) — caller-facing wait timeout, outside the deterministic step loop
-        let t0 = Instant::now();
+        // caller-facing wait timeout, outside the deterministic step loop
+        let t0 = Stopwatch::start();
         loop {
             match self.poll(id) {
                 None => anyhow::bail!("unknown request {id}"),
@@ -350,8 +407,8 @@ impl Scheduler {
 
     /// Block until every submitted request is terminal.
     pub fn drain(&self, timeout: Duration) -> Result<()> {
-        // entlint: allow(no-wallclock-in-replay) — caller-facing drain timeout, outside the deterministic step loop
-        let t0 = Instant::now();
+        // caller-facing drain timeout, outside the deterministic step loop
+        let t0 = Stopwatch::start();
         loop {
             {
                 let entries = self.shared.entries.lock().unwrap();
@@ -417,6 +474,10 @@ struct Driver<E: StepEngine> {
     /// shard deficit vs `min_healthy_shards`): at `>= 2` the driver
     /// stops upsizing and halves fresh-batch groups.
     degradation_tier: usize,
+    /// Reused buffer for the per-tick fresh-alloc sweep
+    /// (`StepEngine::fresh_allocs_into`), so the steady-state tick
+    /// allocates nothing.
+    fresh_allocs_scratch: Vec<usize>,
 }
 
 impl<E: StepEngine> Driver<E> {
@@ -526,12 +587,27 @@ impl<E: StepEngine> Driver<E> {
         self.admit()?;
         self.maybe_compact()?;
         let stepped = match self.flight.as_mut() {
-            Some(fl) => self.engine.decode_step(&mut fl.st)?,
+            Some(fl) => {
+                let t0 = Stopwatch::start();
+                let stepped = self.engine.decode_step(&mut fl.st)?;
+                self.shared.metrics.record_step_us(t0.elapsed_us());
+                stepped
+            }
             // admission can drain the flight-forming path entirely
             None => return Ok(true),
         };
         if stepped {
             self.shared.metrics.inc_decode_steps();
+            // mirror the step clock into the tracer so events recorded
+            // from any thread carry the tick they happened under
+            let step = self.shared.metrics.decode_steps() as u64;
+            self.shared.tracer.set_tick(step);
+            let active = self
+                .flight
+                .as_ref()
+                .map_or(0, |fl| fl.lane_ids.iter().filter(|l| l.is_some()).count());
+            let depth = self.shared.queue.lock().unwrap().len();
+            self.shared.tracer.record(EventKind::DecodeStep, 0, active as u64, depth as u64);
             self.sync_flight_lanes();
         } else {
             // decode context exhausted: every still-active lane is as
@@ -539,7 +615,9 @@ impl<E: StepEngine> Driver<E> {
             self.finish_flight();
         }
         self.speculate();
-        self.shared.metrics.set_shard_fresh_allocs(self.engine.fresh_allocs_per_shard());
+        self.engine.fresh_allocs_into(&mut self.fresh_allocs_scratch);
+        self.shared.metrics.set_shard_fresh_allocs(&self.fresh_allocs_scratch);
+        self.shared.tracer.drain();
         Ok(true)
     }
 
@@ -558,11 +636,20 @@ impl<E: StepEngine> Driver<E> {
         let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
         let batches = pack(&reqs, &self.prefill_slots);
         let batch = &batches[0]; // group size <= max slot capacity
-        match self.engine.prefill_state(batch) {
+        for id in &ids {
+            self.shared.tracer.record(EventKind::PrefillStart, *id, u64::MAX, 0);
+        }
+        let res = self.engine.prefill_state(batch);
+        // balanced even on failure, so request spans always nest
+        for id in &ids {
+            self.shared.tracer.record(EventKind::PrefillEnd, *id, u64::MAX, res.is_err() as u64);
+        }
+        match res {
             Ok(st) => {
                 let mut lane_ids = vec![None; st.lanes()];
                 for (lane, r) in batch.requests.iter().enumerate() {
                     lane_ids[lane] = Some(r.id);
+                    self.shared.tracer.record(EventKind::LaneStart, r.id, lane as u64, 0);
                 }
                 self.flight = Some(Flight { st, lane_ids });
                 self.solo_admission_broken = false; // fresh batch, fresh try
@@ -594,19 +681,27 @@ impl<E: StepEngine> Driver<E> {
     /// fault attribution is always consumed by the error that produced
     /// it and can never go stale (see `ShardedEngine::try_recover`).
     fn recovered(&self) -> bool {
-        // entlint: allow(no-wallclock-in-replay) — recovery-stall metric only; recovery outcome comes from try_recover()
-        let t0 = Instant::now();
+        // recovery-stall metric only; recovery outcome comes from try_recover()
+        let t0 = Stopwatch::start();
         let ok = self.engine.try_recover();
         if ok {
             self.shared.metrics.inc_reroutes();
-            self.shared.metrics.add_recovery_stall_us(t0.elapsed().as_micros() as u64);
+            self.shared.metrics.add_recovery_stall_us(t0.elapsed_us());
             self.update_memory_gauges();
         }
         ok
     }
 
-    /// Solo prefill with one recovery retry (reroute + replay).
+    /// Solo prefill with one recovery retry (reroute + replay), traced
+    /// as a balanced prefill span on the request's track.
     fn solo_prefill(&mut self, req: &Request, slot: (usize, usize)) -> Result<DecodeState> {
+        self.shared.tracer.record(EventKind::PrefillStart, req.id, 0, 0);
+        let res = self.solo_prefill_inner(req, slot);
+        self.shared.tracer.record(EventKind::PrefillEnd, req.id, 0, res.is_err() as u64);
+        res
+    }
+
+    fn solo_prefill_inner(&mut self, req: &Request, slot: (usize, usize)) -> Result<DecodeState> {
         let batches = pack(std::slice::from_ref(req), &[slot]);
         match self.engine.prefill_state(&batches[0]) {
             Ok(st) => Ok(st),
@@ -690,6 +785,8 @@ impl<E: StepEngine> Driver<E> {
                         return Err(e);
                     }
                     fl.lane_ids[lane] = Some(id);
+                    self.shared.tracer.record(EventKind::Adopt, id, lane as u64, 1);
+                    self.shared.tracer.record(EventKind::LaneStart, id, lane as u64, 0);
                     self.shared.metrics.inc_fused();
                     self.shared.metrics.inc_speculative();
                     continue;
@@ -723,11 +820,13 @@ impl<E: StepEngine> Driver<E> {
             };
             self.shared.metrics.inc_adoption_prefills();
             let mut done = self.sync_solo(id, &solo);
+            let mut catchup_steps = 0u64;
             let target = self.flight.as_ref().map(|fl| fl.st.pos).unwrap_or(solo.pos);
             while !done && solo.pos < target {
                 match self.solo_step(&mut solo) {
                     Ok(true) => {
                         self.shared.metrics.add_adoption_catchup_steps(1);
+                        catchup_steps += 1;
                         done = self.sync_solo(id, &solo);
                     }
                     Ok(false) => {
@@ -742,6 +841,9 @@ impl<E: StepEngine> Driver<E> {
                     }
                 }
             }
+            if catchup_steps > 0 {
+                self.shared.tracer.record(EventKind::Catchup, id, catchup_steps, 0);
+            }
             if done {
                 continue; // lane still free; try the next queued request
             }
@@ -752,6 +854,8 @@ impl<E: StepEngine> Driver<E> {
                     return Err(e);
                 }
                 fl.lane_ids[lane] = Some(id);
+                self.shared.tracer.record(EventKind::Adopt, id, lane as u64, 0);
+                self.shared.tracer.record(EventKind::LaneStart, id, lane as u64, 0);
                 self.shared.metrics.inc_fused();
             } else {
                 self.finish_request(id);
@@ -779,6 +883,7 @@ impl<E: StepEngine> Driver<E> {
                 let id = req.id;
                 match self.solo_prefill(&req, solo_slot) {
                     Ok(st) => {
+                        self.shared.tracer.record(EventKind::SpecPrefill, id, 0, 0);
                         // the prefill token may already satisfy a
                         // 1-token deadline (or a queued cancel landed)
                         if !self.sync_solo(id, &st) {
@@ -881,6 +986,13 @@ impl<E: StepEngine> Driver<E> {
         let mut lane_ids = vec![None; nb];
         for (dst, &src) in active.iter().enumerate() {
             lane_ids[dst] = fl.lane_ids[src];
+            let Some(id) = lane_ids[dst] else { continue };
+            if dst != src {
+                // the request migrated lanes: close the old occupancy
+                // span and open one on the new lane track
+                self.shared.tracer.record(EventKind::LaneEnd, id, src as u64, 0);
+                self.shared.tracer.record(EventKind::LaneStart, id, dst as u64, 0);
+            }
         }
         self.flight = Some(Flight { st, lane_ids });
         Ok(())
@@ -909,10 +1021,12 @@ impl<E: StepEngine> Driver<E> {
                 continue;
             }
             if Shared::deadline_passed(entry, now) {
-                self.shared.set_terminal(entry, Status::Expired);
+                self.shared.set_terminal(id, entry, Status::Expired);
                 continue;
             }
             entry.status = Status::Decoding;
+            let waited = now.saturating_sub(entry.submitted_step) as u64;
+            self.shared.metrics.record_queue_wait_steps(waited);
             out.push(Request { id, prompt: entry.prompt.clone(), max_new_tokens: entry.max_new });
         }
         self.shared.metrics.set_queue_depth(queue.len());
@@ -926,6 +1040,7 @@ impl<E: StepEngine> Driver<E> {
         }
         queue.push_front(id);
         self.shared.metrics.set_queue_depth(queue.len());
+        self.shared.tracer.record(EventKind::Requeue, id, queue.len() as u64, 0);
     }
 
     /// Mirror a solo (catch-up or speculative) state into its entry.
@@ -936,17 +1051,17 @@ impl<E: StepEngine> Driver<E> {
         let now = self.shared.metrics.decode_steps();
         let mut entries = self.shared.entries.lock().unwrap();
         let Some(entry) = entries.get_mut(&id) else { return true };
-        Self::mirror_output(&self.shared.metrics, entry, &solo.outputs[0]);
+        Self::mirror_output(&self.shared, id, entry, &solo.outputs[0]);
         if entry.cancel_requested {
-            self.shared.set_terminal(entry, Status::Cancelled);
+            self.shared.set_terminal(id, entry, Status::Cancelled);
             return true;
         }
         if entry.output.len() >= entry.max_new {
-            self.shared.set_terminal(entry, Status::Done);
+            self.shared.set_terminal(id, entry, Status::Done);
             return true;
         }
         if Shared::deadline_passed(entry, now) {
-            self.shared.set_terminal(entry, Status::Expired);
+            self.shared.set_terminal(id, entry, Status::Expired);
             return true;
         }
         entry.status = Status::Decoding;
@@ -966,18 +1081,22 @@ impl<E: StepEngine> Driver<E> {
             let Some(id) = fl.lane_ids[lane] else { continue };
             let Some(entry) = entries.get_mut(&id) else {
                 fl.lane_ids[lane] = None;
+                self.shared.tracer.record(EventKind::LaneEnd, id, lane as u64, 0);
                 continue;
             };
-            Self::mirror_output(&self.shared.metrics, entry, &fl.st.outputs[lane]);
+            Self::mirror_output(&self.shared, id, entry, &fl.st.outputs[lane]);
             if entry.cancel_requested {
-                self.shared.set_terminal(entry, Status::Cancelled);
+                self.shared.set_terminal(id, entry, Status::Cancelled);
                 fl.lane_ids[lane] = None;
+                self.shared.tracer.record(EventKind::LaneEnd, id, lane as u64, 0);
             } else if entry.output.len() >= entry.max_new {
-                self.shared.set_terminal(entry, Status::Done);
+                self.shared.set_terminal(id, entry, Status::Done);
                 fl.lane_ids[lane] = None;
+                self.shared.tracer.record(EventKind::LaneEnd, id, lane as u64, 0);
             } else if Shared::deadline_passed(entry, now) {
-                self.shared.set_terminal(entry, Status::Expired);
+                self.shared.set_terminal(id, entry, Status::Expired);
                 fl.lane_ids[lane] = None;
+                self.shared.tracer.record(EventKind::LaneEnd, id, lane as u64, 0);
             } else {
                 entry.status = Status::Decoding;
             }
@@ -987,15 +1106,16 @@ impl<E: StepEngine> Driver<E> {
     /// Extend-only: a lane that is re-deriving a requeued request's
     /// deterministic trajectory (shorter `lane_out` than what was
     /// already mirrored) never shrinks the observable output.
-    fn mirror_output(metrics: &ServeMetrics, entry: &mut Entry, lane_out: &[u8]) {
+    fn mirror_output(shared: &Shared, id: u64, entry: &mut Entry, lane_out: &[u8]) {
         let take = lane_out.len().min(entry.max_new);
         if take > entry.output.len() {
-            metrics.add_tokens(take - entry.output.len());
+            shared.metrics.add_tokens(take - entry.output.len());
             entry.output = lane_out[..take].to_vec();
         }
         if !entry.got_first_token && !entry.output.is_empty() {
             entry.got_first_token = true;
-            metrics.record_ttft_ms(entry.submitted_at.elapsed().as_secs_f64() * 1e3);
+            shared.metrics.record_ttft_ms(entry.submitted_at.elapsed_ms());
+            shared.tracer.record(EventKind::FirstToken, id, entry.output.len() as u64, 0);
         }
     }
 
@@ -1003,37 +1123,43 @@ impl<E: StepEngine> Driver<E> {
     fn finish_request(&self, id: u64) {
         let mut entries = self.shared.entries.lock().unwrap();
         if let Some(entry) = entries.get_mut(&id) {
-            self.shared.set_terminal(entry, Status::Done);
+            self.shared.set_terminal(id, entry, Status::Done);
         }
     }
 
     fn fail_request(&self, id: u64, msg: &str) {
         let mut entries = self.shared.entries.lock().unwrap();
         if let Some(entry) = entries.get_mut(&id) {
-            self.shared.set_terminal(entry, Status::Failed(msg.to_string()));
+            self.shared.set_terminal(id, entry, Status::Failed(msg.to_string()));
         }
+    }
+
+    /// Release every occupied lane, closing its occupancy span, and
+    /// return the evicted request ids in lane order.
+    fn release_lanes(&mut self) -> Vec<u64> {
+        let Some(fl) = &mut self.flight else { return Vec::new() };
+        let mut ids = Vec::new();
+        for (lane, slot) in fl.lane_ids.iter_mut().enumerate() {
+            if let Some(id) = slot.take() {
+                self.shared.tracer.record(EventKind::LaneEnd, id, lane as u64, 0);
+                ids.push(id);
+            }
+        }
+        ids
     }
 
     /// Context exhausted: finalize every active lane as done, drop the
     /// batch.
     fn finish_flight(&mut self) {
         self.sync_flight_lanes();
-        let ids: Vec<u64> = match &mut self.flight {
-            Some(fl) => fl.lane_ids.iter_mut().filter_map(Option::take).collect(),
-            None => Vec::new(),
-        };
-        for id in ids {
+        for id in self.release_lanes() {
             self.finish_request(id);
         }
         self.flight = None;
     }
 
     fn fail_flight(&mut self, msg: &str) {
-        let ids: Vec<u64> = match &mut self.flight {
-            Some(fl) => fl.lane_ids.iter_mut().filter_map(Option::take).collect(),
-            None => Vec::new(),
-        };
-        for id in ids {
+        for id in self.release_lanes() {
             self.fail_request(id, msg);
         }
         // the speculative request itself is healthy (its solo state just

@@ -40,13 +40,14 @@
 
 use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState, ShardRole};
 use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
+use crate::obs::{EventKind, Stopwatch, Tracer};
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::container::{CompressedBlock, CompressedModel};
 use anyhow::{ensure, Result};
 use std::cell::{Cell, RefCell};
 use std::collections::HashSet;
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// A contiguous partition of a model's blocks, balanced by serialized
 /// bitstream bytes (the quantity that drives per-shard ANS decode
@@ -210,6 +211,10 @@ pub struct ShardedEngine {
     /// tracked here (not summed from per-engine counters) so a
     /// survivor that later fails does not take its history with it
     spliced_total: Cell<usize>,
+    /// scheduler-installed tracer for shard-lifecycle events (fault,
+    /// reroute, splice, rejoin); absent until `set_tracer`, and every
+    /// record site tolerates that
+    tracer: OnceLock<Arc<Tracer>>,
 }
 
 impl ShardedEngine {
@@ -257,7 +262,22 @@ impl ShardedEngine {
             reroutes: Cell::new(0),
             rejoins: Cell::new(0),
             spliced_total: Cell::new(0),
+            tracer: OnceLock::new(),
         })
+    }
+
+    /// Install the scheduler's tracer so fault/reroute/splice/rejoin
+    /// events land in its tick-stamped ring (see
+    /// `StepEngine::set_tracer`).  First caller wins; later calls are
+    /// ignored.
+    pub fn set_tracer(&self, tracer: &Arc<Tracer>) {
+        let _ = self.tracer.set(Arc::clone(tracer));
+    }
+
+    fn trace(&self, kind: EventKind, id: u64, a: u64, b: u64) {
+        if let Some(t) = self.tracer.get() {
+            t.record(kind, id, a, b);
+        }
     }
 
     /// A snapshot of the current plan (reroutes re-shape it).
@@ -361,6 +381,16 @@ impl ShardedEngine {
         self.shards.borrow().iter().map(|s| s.decode_arena_fresh_allocs()).collect()
     }
 
+    /// `fresh_allocs` into a reused buffer: the scheduler driver calls
+    /// this every tick, and after the first call the buffer's capacity
+    /// covers the shard count, so steady-state sweeps allocate nothing.
+    pub fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        for s in self.shards.borrow().iter() {
+            out.push(s.decode_arena_fresh_allocs());
+        }
+    }
+
     pub fn prefill_slots(&self) -> Vec<(usize, usize)> {
         self.shards.borrow()[0].runtime().manifest.prefill_slots.clone()
     }
@@ -374,6 +404,7 @@ impl ShardedEngine {
     fn attr<T>(&self, shard: usize, r: Result<T>) -> Result<T> {
         if r.is_err() {
             self.pending_fault.set(Some(shard));
+            self.trace(EventKind::ShardFault, shard as u64, 0, 0);
         }
         r
     }
@@ -413,11 +444,15 @@ impl ShardedEngine {
         };
         let range = plan.ranges[k].clone();
         let absorbed = range.len();
+        self.trace(EventKind::SpliceStart, target as u64, absorbed as u64, 0);
         if shards[target].reopen_blocks(&self.full, range, target > k).is_err() {
+            self.trace(EventKind::SpliceEnd, target as u64, absorbed as u64, 1);
             return false;
         }
+        self.trace(EventKind::SpliceEnd, target as u64, absorbed as u64, 0);
         shards.remove(k);
         plan.merge(k, target);
+        self.trace(EventKind::Reroute, k as u64, k as u64, target as u64);
         self.spliced_total.set(self.spliced_total.get() + absorbed);
         // the survivor may have been promoted: a merged range touching
         // the container's edges brings embed/head duty with it (an Arc
@@ -511,6 +546,7 @@ impl ShardedEngine {
             let base = crate::coordinator::engine::resolve_offload_dir(&self.opts);
             opts.offload_dir = Some(format!("{base}/rejoin_{}", self.rejoins.get() + 1));
         }
+        let absorb_len = absorb.len();
         let sub_model = self.full.slice_range(absorb);
         // the only fallible step runs first; a failure leaves the
         // topology exactly as it was
@@ -523,6 +559,7 @@ impl ShardedEngine {
         shards[donor].set_role(role_for(&next_plan.ranges[donor], n_total));
         shards.insert(donor + 1, engine);
         *plan = next_plan;
+        self.trace(EventKind::Rejoin, (donor + 1) as u64, absorb_len as u64, 0);
         self.rejoins.set(self.rejoins.get() + 1);
         if shards.len() >= self.target_shards {
             self.steps_since_reroute.set(None);
@@ -627,8 +664,8 @@ impl ShardedEngine {
         let cfg = &first.runtime().manifest.config;
         let ctx = first.decode_ctx(b)?;
         let mut metrics = Metrics::zero();
-        // entlint: allow(no-wallclock-in-replay) — prefill_ms/ttft_ms metrics only; never branches the forward pass
-        let t0 = std::time::Instant::now();
+        // prefill_ms/ttft_ms metrics only; never branches the forward pass
+        let t0 = Stopwatch::start();
         let mut x = self.attr(0, first.embed_prefill(batch))?;
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
         let mut prefill_caches = Vec::with_capacity(cfg.n_layers);
@@ -640,8 +677,8 @@ impl ShardedEngine {
         }
         let last = shards.len() - 1;
         let logits = self.attr(last, shards[last].head_prefill(x, batch.slot))?;
-        metrics.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
-        metrics.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.prefill_ms += t0.elapsed_ms();
+        metrics.ttft_ms = t0.elapsed_ms();
         Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
     }
 
@@ -665,8 +702,8 @@ impl ShardedEngine {
             n_blocks
         );
         let cfg = &shards[0].runtime().manifest.config;
-        // entlint: allow(no-wallclock-in-replay) — step_ms metric only; never branches the forward pass
-        let t0 = std::time::Instant::now();
+        // step_ms metric only; never branches the forward pass
+        let t0 = Stopwatch::start();
         let mut x = self.attr(0, shards[0].embed_decode(&st.next, b))?;
         let starts = HostTensor::i32(st.batch.starts.clone(), &[b]);
         for (i, (shard, range)) in shards.iter().zip(plan.ranges.iter()).enumerate() {

@@ -32,9 +32,11 @@ use super::shard::ShardedEngine;
 use super::StepEngine;
 use crate::coordinator::engine::DecodeState;
 use crate::coordinator::Batch;
+use crate::obs::{EventKind, Tracer};
 use crate::runtime::Runtime;
 use anyhow::Result;
 use std::cell::{Cell, RefCell};
+use std::sync::{Arc, OnceLock};
 
 /// A shard slot's health as the supervisor sees it.  `Evicted` never
 /// appears in the live listing (the slot is gone); it exists for the
@@ -106,6 +108,10 @@ pub struct Supervisor {
     attempt: Cell<u32>,
     backoff_retries: Cell<usize>,
     evicted: Cell<usize>,
+    /// Scheduler tracer, absent until `set_tracer`; the supervisor
+    /// records its own transitions (evictions, backoff reschedules) and
+    /// forwards the tracer to the inner engine for shard events.
+    tracer: OnceLock<Arc<Tracer>>,
 }
 
 impl Supervisor {
@@ -121,6 +127,13 @@ impl Supervisor {
             attempt: Cell::new(0),
             backoff_retries: Cell::new(0),
             evicted: Cell::new(0),
+            tracer: OnceLock::new(),
+        }
+    }
+
+    fn trace(&self, kind: EventKind, id: u64, a: u64, b: u64) {
+        if let Some(t) = self.tracer.get() {
+            t.record(kind, id, a, b);
         }
     }
 
@@ -192,6 +205,15 @@ impl Supervisor {
             );
             self.next_attempt.set(now + delay);
             self.attempt.set(a + 1);
+            // id = the slot the rejoin would create (one past the live
+            // shards), so the backoff track lines up with the eventual
+            // Rejoin event
+            self.trace(
+                EventKind::Backoff,
+                self.inner.n_shards() as u64,
+                u64::from(a),
+                delay as u64,
+            );
         }
         ok
     }
@@ -226,6 +248,15 @@ impl StepEngine for Supervisor {
         self.inner.fresh_allocs()
     }
 
+    fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
+        self.inner.fresh_allocs_into(out)
+    }
+
+    fn set_tracer(&self, tracer: &Arc<Tracer>) {
+        let _ = self.tracer.set(Arc::clone(tracer));
+        self.inner.set_tracer(tracer);
+    }
+
     /// The health state machine: an attributed failure advances its
     /// shard's consecutive count; below `evict_after` the failure is
     /// absorbed (recovery reported, topology untouched, caller replays
@@ -248,6 +279,7 @@ impl StepEngine for Supervisor {
         if self.inner.try_recover() {
             self.fails.borrow_mut().remove(k);
             self.evicted.set(self.evicted.get() + 1);
+            self.trace(EventKind::Evict, k as u64, self.opts.evict_after as u64, 0);
             // a deficit exists now: first rejoin attempt is immediate
             self.attempt.set(0);
             self.next_attempt.set(self.ticks.get());

@@ -1,0 +1,400 @@
+//! Integration tests for the `obs` tracing subsystem, end-to-end on
+//! the native executor:
+//!
+//! * histogram properties — bucket bounds, merge == concatenated
+//!   recording, percentile monotonicity, and agreement with the exact
+//!   nearest-rank `serve::metrics::percentile` within the documented
+//!   1/32 relative bucket error;
+//! * ring wrap/overflow behavior surfaced through the `Tracer`;
+//! * the steady-state allocation-free pin on the record path, measured
+//!   by a counting global allocator (per-thread, so parallel tests
+//!   cannot perturb the count);
+//! * a scripted serve run: every request records exactly one terminal
+//!   event, spans nest (prefill B/E and lane occupancy balance), and
+//!   two runs of the same scripted scenario export byte-identical
+//!   traces — the tick domain carries no wall-clock jitter;
+//! * the committed sample trace (`rust/tests/data/sample_trace.json`)
+//!   pins the Chrome export format byte-for-byte
+//!   (`OBS_BLESS_SAMPLE=1` regenerates it after a deliberate change).
+
+use entquant::coordinator::EngineOpts;
+use entquant::model::loader::synthetic_model;
+use entquant::model::Config;
+use entquant::obs::{
+    bucket_bounds, bucket_index, export_chrome_events, Event, EventKind, EventRing, Log2Hist,
+    N_BUCKETS, Tracer,
+};
+use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
+use entquant::runtime::{Manifest, Runtime};
+use entquant::serve::metrics::percentile;
+use entquant::serve::{Scheduler, SchedulerOpts, ShardPlan, ShardedEngine};
+use entquant::store::container::CompressedModel;
+use entquant::store::pipeline::{compress_model, CompressOpts};
+use std::cell::Cell;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+// ------------------------------------------------- counting allocator
+
+/// Counts heap allocations per thread, so the alloc-free pin below is
+/// immune to other test threads allocating concurrently.  The counter
+/// is a const-initialised `Cell<u64>` thread-local: no destructor, no
+/// lazy init, hence no allocation from inside `alloc` itself.
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(Cell::get)
+}
+
+unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        std::alloc::System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+        std::alloc::System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ------------------------------------------------------ test fixtures
+
+const SEQ: usize = 16;
+const CTX: usize = 28;
+
+fn cm() -> &'static CompressedModel {
+    static CM: OnceLock<CompressedModel> = OnceLock::new();
+    CM.get_or_init(|| {
+        let m = synthetic_model(
+            Config {
+                name: "T".into(),
+                vocab: 64,
+                d_model: 16,
+                n_layers: 6,
+                n_heads: 2,
+                d_ff: 24,
+                max_ctx: 32,
+            },
+            51,
+        );
+        compress_model(&m, &CompressOpts { lam: 0.3, max_iters: 6, ..Default::default() })
+            .unwrap()
+            .0
+    })
+}
+
+fn native_rt(model: &CompressedModel) -> Runtime {
+    Runtime::native(Manifest::synthetic(
+        model.config.clone(),
+        vec![(1, SEQ), (2, SEQ), (4, SEQ)],
+        vec![(1, CTX), (2, CTX), (4, CTX)],
+    ))
+}
+
+fn sharded(n: usize) -> ShardedEngine {
+    let model = cm().clone();
+    let plan = ShardPlan::balance(&model, n);
+    let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&model)).collect();
+    ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// -------------------------------------------------- histogram properties
+
+#[test]
+fn hist_buckets_contain_their_values() {
+    let mut seed = 7u64;
+    for _ in 0..4096 {
+        let v = splitmix64(&mut seed) >> (splitmix64(&mut seed) % 64);
+        let i = bucket_index(v);
+        assert!(i < N_BUCKETS);
+        let (lo, hi) = bucket_bounds(i);
+        assert!((lo..=hi).contains(&v), "v={v} outside bucket {i} [{lo}, {hi}]");
+    }
+}
+
+#[test]
+fn hist_merge_equals_concatenated_recording() {
+    let mut seed = 11u64;
+    let a: Vec<u64> = (0..500).map(|_| splitmix64(&mut seed) % 1_000_000).collect();
+    let b: Vec<u64> = (0..300).map(|_| splitmix64(&mut seed) % 50).collect();
+    let (ha, hb, hall) = (Log2Hist::new(), Log2Hist::new(), Log2Hist::new());
+    for &v in &a {
+        ha.record(v);
+        hall.record(v);
+    }
+    for &v in &b {
+        hb.record(v);
+        hall.record(v);
+    }
+    let mut merged = ha.snapshot();
+    merged.merge(&hb.snapshot());
+    assert_eq!(merged, hall.snapshot(), "merge must equal recording both streams");
+}
+
+#[test]
+fn hist_percentiles_match_nearest_rank_within_bucket_error() {
+    let mut seed = 13u64;
+    let samples: Vec<u64> = (0..2000).map(|_| splitmix64(&mut seed) % 3_000_000).collect();
+    let h = Log2Hist::new();
+    for &v in &samples {
+        h.record(v);
+    }
+    let snap = h.snapshot();
+    let as_f64: Vec<f64> = samples.iter().map(|&v| v as f64).collect();
+    let mut prev = 0u64;
+    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+        let exact = percentile(&as_f64, q);
+        let approx = snap.percentile(q);
+        // the histogram reports the ranked sample's bucket upper bound:
+        // never below the exact nearest-rank value, and within the
+        // documented 1/32 relative error above it
+        assert!(approx as f64 >= exact, "q={q}: {approx} < exact {exact}");
+        assert!(
+            approx as f64 <= exact + exact / 32.0 + 1.0,
+            "q={q}: {approx} exceeds exact {exact} + 1/32"
+        );
+        assert!(approx >= prev, "q={q}: percentiles must be monotone");
+        prev = approx;
+    }
+    // the top rank is exact (max-clamped), as is a single sample
+    assert_eq!(snap.percentile(1.0), *samples.iter().max().unwrap());
+    let one = Log2Hist::new();
+    one.record(123_457);
+    assert_eq!(one.snapshot().percentile(0.5), 123_457);
+}
+
+// --------------------------------------------------- ring via tracer
+
+#[test]
+fn tracer_survives_ring_wrap_and_counts_overflow() {
+    // ring of 8: drain every few records and nothing is lost across
+    // many laps
+    let t = Tracer::new(8, 1 << 12);
+    for i in 0..100u64 {
+        t.record(EventKind::DecodeStep, 0, i, 0);
+        if i % 3 == 0 {
+            t.drain();
+        }
+    }
+    let ev = t.events();
+    assert_eq!(ev.len(), 100);
+    assert!(ev.iter().enumerate().all(|(i, e)| e.a == i as u64), "FIFO across laps");
+    assert_eq!(t.dropped(), 0);
+
+    // without draining, a full ring drops newest and counts it
+    let t = Tracer::new(8, 1 << 12);
+    for i in 0..12u64 {
+        t.record(EventKind::DecodeStep, 0, i, 0);
+    }
+    assert_eq!(t.dropped(), 4);
+    let ev = t.events();
+    assert_eq!(ev.len(), 8, "earliest events are the ones retained");
+    assert!(ev.iter().enumerate().all(|(i, e)| e.a == i as u64));
+}
+
+#[test]
+fn ring_rejects_non_power_of_two() {
+    let r = EventRing::new(16);
+    assert_eq!(r.capacity(), 16);
+    let result = std::panic::catch_unwind(|| EventRing::new(12));
+    assert!(result.is_err(), "non-power-of-two capacity must be rejected");
+}
+
+// ------------------------------------------------------ alloc-free pin
+
+#[test]
+fn record_path_is_allocation_free_in_steady_state() {
+    let t = Tracer::new(1 << 10, 1 << 12);
+    let h = Log2Hist::new();
+    t.set_tick(1);
+    // warm-up (first records touch nothing lazily, but keep the pin
+    // honest about *steady state*)
+    t.record(EventKind::DecodeStep, 0, 0, 0);
+    h.record(1);
+    let before = thread_allocs();
+    for i in 0..512u64 {
+        t.set_tick(i);
+        t.record(EventKind::DecodeStep, 0, i, i % 7);
+        h.record(i * 31);
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0, "record path must not allocate");
+}
+
+// ------------------------------------------------- scripted serve trace
+
+/// Run a deterministic scripted scenario — paused scheduler,
+/// sequential submits, resume, drain — and return the submitted ids
+/// plus the tracer's event stream and both exports.
+fn scripted_run(n_requests: u64, max_new: usize) -> (Vec<u64>, Vec<Event>, String, String) {
+    let sched = Scheduler::new(sharded(2), SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = (0..n_requests)
+        .map(|i| {
+            let len = 2 + (i as usize * 5) % (SEQ - 4);
+            let prompt: Vec<u8> =
+                (0..len).map(|j| ((i as usize * 13 + j * 7) % 64) as u8).collect();
+            sched.submit(prompt, max_new).expect_admitted()
+        })
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(600)).expect("drain");
+    let tracer = sched.tracer();
+    let events = tracer.events();
+    let jsonl = tracer.export_jsonl(None);
+    let chrome = tracer.export_chrome();
+    sched.shutdown().expect("driver shutdown");
+    (ids, events, jsonl, chrome)
+}
+
+#[test]
+fn scripted_trace_has_exactly_one_terminal_event_per_request() {
+    let (ids, events, _, _) = scripted_run(5, 4);
+    for &id in &ids {
+        let terminals: Vec<&Event> =
+            events.iter().filter(|e| e.id == id && e.kind.is_terminal()).collect();
+        assert_eq!(terminals.len(), 1, "request {id}: exactly one terminal event");
+        assert_eq!(terminals[0].kind, EventKind::Done, "scripted run completes normally");
+        let submit = events.iter().find(|e| e.id == id && e.kind == EventKind::Submit).unwrap();
+        assert!(submit.tick <= terminals[0].tick, "submit precedes the terminal");
+        assert_eq!(submit.b, 4, "submit carries max_new");
+    }
+    // the driver tick counter advanced and was recorded
+    assert!(events.iter().any(|e| e.kind == EventKind::DecodeStep && e.tick > 0));
+}
+
+#[test]
+fn scripted_trace_spans_nest() {
+    let (ids, events, _, _) = scripted_run(5, 4);
+    for &id in &ids {
+        // prefill B/E balance, scanning depth never negative
+        let mut depth = 0i64;
+        for e in events.iter().filter(|e| e.id == id) {
+            match e.kind {
+                EventKind::PrefillStart => depth += 1,
+                EventKind::PrefillEnd => {
+                    depth -= 1;
+                    assert!(depth >= 0, "request {id}: PrefillEnd without PrefillStart");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "request {id}: prefill spans must balance");
+    }
+    // lane occupancy balances per lane, and every occupied lane frees
+    let mut lane_depth = std::collections::HashMap::new();
+    for e in &events {
+        match e.kind {
+            EventKind::LaneStart => *lane_depth.entry(e.a).or_insert(0i64) += 1,
+            EventKind::LaneEnd => {
+                let d = lane_depth.entry(e.a).or_insert(0i64);
+                *d -= 1;
+                assert!(*d >= 0, "lane {}: LaneEnd without LaneStart", e.a);
+            }
+            _ => {}
+        }
+    }
+    assert!(lane_depth.values().all(|&d| d == 0), "every lane span must close");
+    assert!(!lane_depth.is_empty(), "the scripted run must occupy lanes");
+}
+
+#[test]
+fn scripted_trace_is_byte_identical_across_runs() {
+    let (_, _, jsonl_a, chrome_a) = scripted_run(5, 4);
+    let (_, _, jsonl_b, chrome_b) = scripted_run(5, 4);
+    assert_eq!(jsonl_a, jsonl_b, "tick-domain JSONL must replay byte-identically");
+    assert_eq!(chrome_a, chrome_b, "Chrome export must replay byte-identically");
+}
+
+#[test]
+fn fault_trace_records_shard_lifecycle_and_requests_survive() {
+    let model = cm().clone();
+    let plan = ShardPlan::balance(&model, 2);
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 3, block: 0 }]);
+    let rts: Vec<Runtime> = (0..plan.n_shards())
+        .map(|i| {
+            native_rt(&model)
+                .with_fault(FaultRuntime::new(Arc::clone(&faults), i, plan.ranges[i].len()))
+        })
+        .collect();
+    let engine = ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap();
+    let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = (0..4u64)
+        .map(|i| {
+            let prompt: Vec<u8> = (0..4).map(|j| ((i * 13 + j * 7) % 64) as u8).collect();
+            sched.submit(prompt, 6).expect_admitted()
+        })
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(600)).expect("drain");
+    let events = sched.tracer().events();
+    sched.shutdown().expect("driver shutdown");
+
+    assert!(events.iter().any(|e| e.kind == EventKind::ShardFault), "fault recorded");
+    let reroute = events.iter().find(|e| e.kind == EventKind::Reroute).expect("reroute");
+    assert_eq!(reroute.a, 1, "shard 1 was the rerouted source");
+    assert!(
+        events.iter().any(|e| e.kind == EventKind::SpliceStart)
+            == events.iter().any(|e| e.kind == EventKind::SpliceEnd),
+        "splice spans balance"
+    );
+    for &id in &ids {
+        let terminals: Vec<&Event> =
+            events.iter().filter(|e| e.id == id && e.kind.is_terminal()).collect();
+        assert_eq!(terminals.len(), 1, "request {id}: exactly one terminal even under faults");
+        assert_eq!(terminals[0].kind, EventKind::Done, "requests survive the reroute");
+    }
+}
+
+// ------------------------------------------------- committed sample pin
+
+/// The committed sample trace pins the Chrome export format: a fixed
+/// event stream must render byte-for-byte as
+/// `rust/tests/data/sample_trace.json`.  After a deliberate format
+/// change, regenerate with `OBS_BLESS_SAMPLE=1 cargo test -q sample`.
+#[test]
+fn sample_trace_format_is_pinned() {
+    let mk = |tick, kind, id, a, b| Event { tick, kind, id, a, b };
+    let events = [
+        mk(0, EventKind::Submit, 1, 4, 8),
+        mk(0, EventKind::Admit, 1, 1, 0),
+        mk(0, EventKind::Shed, u64::MAX, 1, 6),
+        mk(0, EventKind::PrefillStart, 1, u64::MAX, 0),
+        mk(0, EventKind::PrefillEnd, 1, u64::MAX, 0),
+        mk(0, EventKind::LaneStart, 1, 0, 0),
+        mk(1, EventKind::DecodeStep, 0, 1, 0),
+        mk(1, EventKind::FirstToken, 1, 1, 0),
+        mk(2, EventKind::ShardFault, 1, 0, 0),
+        mk(2, EventKind::Reroute, 1, 1, 0),
+        mk(2, EventKind::SpliceStart, 0, 3, 0),
+        mk(2, EventKind::SpliceEnd, 0, 3, 0),
+        mk(3, EventKind::LaneEnd, 1, 0, 0),
+        mk(3, EventKind::Done, 1, 3, 0),
+    ];
+    let rendered = export_chrome_events(&events);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/sample_trace.json");
+    if std::env::var("OBS_BLESS_SAMPLE").as_deref() == Ok("1") {
+        std::fs::write(path, &rendered).expect("blessing sample trace");
+        return;
+    }
+    let committed = std::fs::read_to_string(path).expect("committed sample trace");
+    assert_eq!(
+        rendered, committed,
+        "Chrome export format drifted from the committed sample \
+         (OBS_BLESS_SAMPLE=1 to regenerate after a deliberate change)"
+    );
+}

@@ -5,6 +5,7 @@
 #   scripts/tier1.sh --fast    # skip the release build (tests only)
 #   BENCH=1 scripts/tier1.sh   # additionally smoke the tracked benches
 #                              # (scripts/bench.sh -> BENCH_decode.json)
+#   BENCH=1 TRACE_SMOKE=1 ...  # + trace-export smoke (scripts/trace_smoke.sh)
 #
 # Integration tests that need trained artifacts (`make artifacts`)
 # self-skip with a note; the unit suites (ANS, container, parallel
@@ -50,6 +51,10 @@ if [[ "${BENCH:-0}" == 1 ]]; then
     BENCH_SMOKE=1 scripts/bench.sh
     echo "== chaos smoke (BENCH=1) =="
     CHAOS_SMOKE=1 scripts/chaos.sh
+    if [[ "${TRACE_SMOKE:-0}" == 1 ]]; then
+        echo "== trace smoke (TRACE_SMOKE=1) =="
+        scripts/trace_smoke.sh
+    fi
 fi
 
 echo "tier-1: OK"

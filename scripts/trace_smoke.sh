@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Trace-export smoke: drives the release binary's `serve-stdio` mode
+# with `--trace-out`, submits one request, quits, then asserts the
+# implicit `TRACED` report line appeared and that the written file is
+# Chrome trace-event JSON carrying a request span with a terminal
+# outcome.  tier1.sh runs this behind BENCH=1 TRACE_SMOKE=1; it is
+# also runnable standalone after `cargo build --release`.
+#
+#   scripts/trace_smoke.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=./target/release/entquant
+[[ -x "$BIN" ]] || { echo "trace smoke: build target/release/entquant first" >&2; exit 1; }
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+trace="$tmp/trace.json"
+
+out="$(printf 'SUBMIT 1 4 0102030405\nQUIT\n' \
+    | "$BIN" serve-stdio --synthetic 4 --shards 2 --trace-out "$trace")"
+echo "$out" | grep -q "^READY" || { echo "trace smoke: no READY"; echo "$out"; exit 1; }
+echo "$out" | grep -q "^DONE 1 " || { echo "trace smoke: request incomplete"; echo "$out"; exit 1; }
+echo "$out" | grep -q "^TRACED " || { echo "trace smoke: no TRACED line"; echo "$out"; exit 1; }
+grep -q '"traceEvents"' "$trace" || { echo "trace smoke: not a Chrome trace: $trace"; exit 1; }
+grep -q '"name":"request"' "$trace" || { echo "trace smoke: no request span"; exit 1; }
+grep -q '"outcome":"done"' "$trace" || { echo "trace smoke: no terminal event"; exit 1; }
+echo "trace smoke: OK ($(grep -c '"ph"' "$trace") event line(s))"

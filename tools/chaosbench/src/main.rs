@@ -25,6 +25,14 @@
 //! recorded, not judged.  Emits `BENCH_chaos.json`
 //! (`BENCH_chaos.smoke.json` under `CHAOS_SMOKE=1`, which also skips
 //! the inter-arrival sleeps; `CHAOS_JSON` overrides the path).
+//!
+//! Each load scenario also pulls the server's tick-domain trace
+//! (`--trace-out`, written as Chrome trace-event JSON after the drain)
+//! into `trace_chaos_<scenario>.json` — load one in Perfetto to see
+//! request spans, lane occupancy, and shard lifecycle side by side.
+//! The fault-storm trace is judged, not just recorded: some request's
+//! span must contain a reroute instant (a request that was in flight
+//! while its shard's range moved, and still completed).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -265,13 +273,19 @@ struct Scenario {
     wall_s: f64,
     restart_ready_ms: f64,
     server_ok: bool,
+    /// file name of the pulled Chrome trace, when the scenario asked
+    /// for one (`--trace-out`)
+    trace_file: Option<String>,
 }
 
 // ------------------------------------------------------------ runners
 
 /// Open-loop load: submit the trace with seeded exponential gaps (mean
 /// `mean_gap_ms`; 0 = back-to-back burst), QUIT, then read events until
-/// the terminal STATS line.
+/// the terminal STATS line.  `trace_out` makes the server write its
+/// Chrome trace there after the drain (it answers `TRACED` before
+/// `STATS`).
+#[allow(clippy::too_many_arguments)] // a scenario is one flat knob list
 fn run_open_loop(
     name: &'static str,
     bin: &str,
@@ -280,8 +294,14 @@ fn run_open_loop(
     trace: &[Request],
     mean_gap_ms: f64,
     seed: u64,
+    trace_out: Option<&str>,
 ) -> Scenario {
-    let mut srv = Server::spawn(bin, n_layers, extra);
+    let mut args: Vec<&str> = extra.to_vec();
+    if let Some(p) = trace_out {
+        args.push("--trace-out");
+        args.push(p);
+    }
+    let mut srv = Server::spawn(bin, n_layers, &args);
     println!("  [{name}] server up: {} shard(s), ready in {:.0} ms", srv.shards, srv.ready_ms);
     let mut tr = Tracker::default();
     let mut rng = Rng::new(seed);
@@ -310,7 +330,17 @@ fn run_open_loop(
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let server_ok = srv.wait_success();
-    Scenario { name, requests: trace.len(), tracker: tr, wall_s, restart_ready_ms: 0.0, server_ok }
+    let trace_file =
+        trace_out.map(|p| p.rsplit('/').next().unwrap_or(p).to_string());
+    Scenario {
+        name,
+        requests: trace.len(),
+        tracker: tr,
+        wall_s,
+        restart_ready_ms: 0.0,
+        server_ok,
+        trace_file,
+    }
 }
 
 /// SIGKILL mid-decode, then cold-restart and resubmit everything the
@@ -371,6 +401,7 @@ fn run_kill9(bin: &str, n_layers: usize, first: &[Request], second: &[Request]) 
         wall_s,
         restart_ready_ms,
         server_ok,
+        trace_file: None,
     }
 }
 
@@ -418,6 +449,61 @@ fn stat_u64(stats: &str, key: &str) -> u64 {
     stat_f64(stats, key) as u64
 }
 
+/// Pull one numeric field out of a single Chrome trace-event line
+/// (the exporter writes one event per line, unquoted integer values).
+fn line_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// The fault-storm trace judgment: the pulled Chrome trace must show a
+/// `reroute` instant whose tick falls *inside* some request's
+/// `B`..`E` span on the requests track — a request that was in flight
+/// while its shard's block range moved to a survivor, and still
+/// reached a terminal state.
+fn check_cross_shard_trace(name: &str, path: &str, v: &mut Vec<String>) {
+    let json = match std::fs::read_to_string(path) {
+        Ok(j) => j,
+        Err(e) => {
+            v.push(format!("{name}: trace {path} unreadable: {e}"));
+            return;
+        }
+    };
+    let mut reroute_ts: Vec<u64> = Vec::new();
+    let mut spans: HashMap<u64, (Option<u64>, Option<u64>)> = HashMap::new();
+    for line in json.lines() {
+        if line.contains("\"name\":\"reroute\"") {
+            if let Some(ts) = line_u64(line, "ts") {
+                reroute_ts.push(ts);
+            }
+        } else if line.contains("\"name\":\"request\"") && line.contains("\"pid\":0") {
+            let (Some(tid), Some(ts)) = (line_u64(line, "tid"), line_u64(line, "ts")) else {
+                continue;
+            };
+            let span = spans.entry(tid).or_insert((None, None));
+            if line.contains("\"ph\":\"B\"") {
+                span.0 = Some(ts);
+            } else if line.contains("\"ph\":\"E\"") {
+                span.1 = Some(ts);
+            }
+        }
+    }
+    if reroute_ts.is_empty() {
+        v.push(format!("{name}: no reroute event in the pulled trace {path}"));
+        return;
+    }
+    let crossed = spans.values().any(|&(b, e)| match (b, e) {
+        (Some(b), Some(e)) => reroute_ts.iter().any(|&t| b <= t && t <= e),
+        _ => false,
+    });
+    if !crossed {
+        v.push(format!("{name}: no request span crosses a reroute tick in {path}"));
+    }
+}
+
 // ------------------------------------------------------------ report
 
 fn scenario_json(sc: &Scenario) -> String {
@@ -431,12 +517,22 @@ fn scenario_json(sc: &Scenario) -> String {
         tt[rank - 1]
     };
     let stats = sc.tracker.stats.clone().unwrap_or_else(|| "null".into());
+    let trace = match &sc.trace_file {
+        Some(f) => format!("\"{f}\""),
+        None => "null".into(),
+    };
+    // hist_* percentiles come from the server's own log2-histogram
+    // metrics (tick-side truth); the bare p* ttft fields stay the
+    // harness's outside-the-process wall-clock view
     format!(
         concat!(
             "    {{\"scenario\": \"{}\", \"requests\": {}, \"admitted\": {}, \"shed\": {}, ",
             "\"done\": {}, \"expired\": {}, \"failed\": {}, \"wall_s\": {:.3}, ",
             "\"restart_ready_ms\": {:.1}, \"p50_ttft_ms\": {:.2}, \"p99_ttft_ms\": {:.2}, ",
-            "\"p999_ttft_ms\": {:.2}, \"tokens_per_s\": {:.1},\n     \"server\": {}}}"
+            "\"p999_ttft_ms\": {:.2}, \"hist_p50_ttft_ms\": {:.3}, \"hist_p99_ttft_ms\": {:.3}, ",
+            "\"hist_p999_ttft_ms\": {:.3}, \"hist_p50_step_us\": {:.3}, ",
+            "\"hist_p99_step_us\": {:.3}, \"hist_p999_step_us\": {:.3}, ",
+            "\"tokens_per_s\": {:.1}, \"trace\": {},\n     \"server\": {}}}"
         ),
         sc.name,
         sc.requests,
@@ -450,7 +546,14 @@ fn scenario_json(sc: &Scenario) -> String {
         p(0.50),
         p(0.99),
         p(0.999),
+        stat_f64(&stats, "p50_ttft_ms"),
+        stat_f64(&stats, "p99_ttft_ms"),
+        stat_f64(&stats, "p999_ttft_ms"),
+        stat_f64(&stats, "p50_step_us"),
+        stat_f64(&stats, "p99_step_us"),
+        stat_f64(&stats, "p999_step_us"),
         stat_f64(&stats, "tokens_per_s"),
+        trace,
         stats,
     )
 }
@@ -481,12 +584,15 @@ fn main() {
     let (steady_n, overload_n, kill_n) = if smoke { (16, 24, 16) } else { (32, 48, 32) };
     let fault_n = 24usize;
     let gap = |full_ms: f64| if smoke { 0.0 } else { full_ms };
+    let suffix = if smoke { ".smoke" } else { "" };
+    let trace_path = |n: &str| format!("{root}/trace_chaos_{n}{suffix}.json");
     let mut v: Vec<String> = Vec::new();
 
     // every DONE below is judged against this one: a single engine, no
     // bounds, no faults — the plain sequential truth
     println!("== reference: 1 shard, unbounded ({n_master} requests, {n_layers} layers) ==");
-    let refr = run_open_loop("reference", &bin, n_layers, &["--shards", "1"], &trace, 0.0, 1);
+    let refr =
+        run_open_loop("reference", &bin, n_layers, &["--shards", "1"], &trace, 0.0, 1, None);
     report(&refr);
     if refr.tracker.count(Outcome::Done) != n_master {
         v.push("reference: not every request completed".into());
@@ -501,6 +607,7 @@ fn main() {
         .collect();
 
     println!("== scenario: steady ({steady_n} requests, gentle arrivals) ==");
+    let steady_trace = trace_path("steady");
     let steady = run_open_loop(
         "steady",
         &bin,
@@ -509,6 +616,7 @@ fn main() {
         &trace[..steady_n],
         gap(25.0),
         2,
+        Some(&steady_trace),
     );
     report(&steady);
     if steady.tracker.count(Outcome::Shed) != 0 {
@@ -531,6 +639,7 @@ fn main() {
         "--step-budget",
         "12",
     ];
+    let overload_trace = trace_path("overload_burst");
     let ov = run_open_loop(
         "overload_burst",
         &bin,
@@ -539,6 +648,7 @@ fn main() {
         &trace[..overload_n],
         gap(1.0),
         3,
+        Some(&overload_trace),
     );
     report(&ov);
     if ov.tracker.count(Outcome::Shed) == 0 {
@@ -572,6 +682,7 @@ fn main() {
         "--evict-after",
         "1",
     ];
+    let fault_trace = trace_path("fault_storm");
     let fs = run_open_loop(
         "fault_storm",
         &bin,
@@ -580,8 +691,10 @@ fn main() {
         &trace[..fault_n],
         gap(5.0),
         4,
+        Some(&fault_trace),
     );
     report(&fs);
+    check_cross_shard_trace("fault_storm", &fault_trace, &mut v);
     let fstats = fs.tracker.stats.clone().unwrap_or_default();
     if stat_u64(&fstats, "reroutes") == 0 {
         v.push("fault_storm: the scripted fault produced no reroute".into());

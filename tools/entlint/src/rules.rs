@@ -36,6 +36,7 @@ const REPLAY_PATHS: &[&str] = &[
     "serve/shard.rs",
     "serve/scheduler.rs",
     "parallel/",
+    "obs/",
 ];
 /// Modules that decode untrusted bytes (containers come off disk or
 /// the wire) and therefore must never panic on malformed input.
