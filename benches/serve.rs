@@ -1,14 +1,18 @@
 //! Bench: the serve subsystem under a synthetic request trace —
 //! scheduler throughput (tokens/s) and p50 time-to-first-token at
-//! 1/2/4 shards, end-to-end on the native executor (compress a
-//! synthetic checkpoint, shard it, drive the continuous-batching
-//! scheduler), plus fault drills (a scripted shard kill mid-trace)
-//! that track reroute behavior, the recovery stall of the incremental
-//! splice versus the legacy full reopen, the contract→expand rejoin,
-//! and the shared-storage memory gauges (`weight_copies`,
-//! `resident_compressed_bytes`).  Emits the tracked `BENCH_serve.json`
-//! (`BENCH_serve.smoke.json` under `BENCH_SMOKE=1`, which also shrinks
-//! the trace; `BENCH_SERVE_JSON` overrides the path).
+//! 1/2/4 shards with stage pipelining on and off, end-to-end on the
+//! native executor (compress a synthetic checkpoint, shard it, drive
+//! the continuous-batching scheduler), a decode-only series (a full
+//! 8-lane batch stepped to context exhaustion — the isolated
+//! cross-request pipeline-parallelism measurement, reported as
+//! `pipeline_speedup_4shards`), plus fault drills (a scripted shard
+//! kill mid-trace) that track reroute behavior, the recovery stall of
+//! the incremental splice versus the legacy full reopen, the
+//! contract→expand rejoin, and the shared-storage memory gauges
+//! (`weight_copies`, `resident_compressed_bytes`).  Emits the tracked
+//! `BENCH_serve.json` (`BENCH_serve.smoke.json` under `BENCH_SMOKE=1`,
+//! which also shrinks the trace; `BENCH_SERVE_JSON` overrides the
+//! path).
 
 use entquant::coordinator::EngineOpts;
 use entquant::model::loader::synthetic_model;
@@ -33,6 +37,7 @@ fn native_rt(cm: &CompressedModel) -> Runtime {
 
 struct TracePoint {
     shards: usize,
+    pipelined: bool,
     tokens: usize,
     wall_s: f64,
     tokens_per_s: f64,
@@ -76,12 +81,15 @@ fn main() {
         rep.effective_bits_per_param
     );
 
-    println!("\n== scheduler trace: {n_requests} requests, max_new {max_new}, shards 1/2/4 ==");
+    println!(
+        "\n== scheduler trace: {n_requests} requests, max_new {max_new}, shards 1/2/4, pipelining off/on =="
+    );
     let mut points: Vec<TracePoint> = Vec::new();
-    for shards in [1usize, 2, 4] {
+    for (shards, pipelined) in [(1usize, false), (2, false), (2, true), (4, false), (4, true)] {
         let plan = ShardPlan::balance(&cm, shards);
         let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&cm)).collect();
-        let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default()).expect("shards");
+        let opts = EngineOpts { stage_pipeline: pipelined, ..Default::default() };
+        let engine = ShardedEngine::new(rts, &cm, plan, &opts).expect("shards");
         let sched = Scheduler::new(engine, SchedulerOpts { paused: true, ..Default::default() });
         let ids: Vec<u64> = (0..n_requests as u64)
             .map(|i| {
@@ -99,7 +107,7 @@ fn main() {
         assert_eq!(m.completed, ids.len(), "trace must complete");
         let tokens_per_s = m.tokens as f64 / wall_s;
         println!(
-            "shards={shards}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, ttft p50/p99/p999 {:.1}/{:.1}/{:.1} ms, step p99 {:.0} us, {} fused admissions ({} speculative)",
+            "shards={shards} pipelined={pipelined}: {} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s, ttft p50/p99/p999 {:.1}/{:.1}/{:.1} ms, step p99 {:.0} us, {} fused admissions ({} speculative)",
             m.tokens,
             m.p50_ttft_ms,
             m.p99_ttft_ms,
@@ -110,6 +118,7 @@ fn main() {
         );
         points.push(TracePoint {
             shards,
+            pipelined,
             tokens: m.tokens,
             wall_s,
             tokens_per_s,
@@ -124,6 +133,64 @@ fn main() {
         });
         sched.shutdown().expect("driver shutdown");
     }
+
+    // decode-only series: one full 8-lane batch stepped to context
+    // exhaustion through the engine API — no admission, prefill, or
+    // queueing in the measurement, so this isolates exactly what
+    // cross-request pipeline parallelism accelerates (the acceptance
+    // bar: pipelined >= 1.3x sequential at 4 shards)
+    println!("\n== decode-only: 8 lanes to context exhaustion, shards 1/2/4, pipelining off/on ==");
+    struct DecodePoint {
+        shards: usize,
+        pipelined: bool,
+        tokens: usize,
+        wall_s: f64,
+        tokens_per_s: f64,
+    }
+    let decode_reqs: Vec<entquant::coordinator::batcher::Request> = (0..8u64)
+        .map(|i| entquant::coordinator::batcher::Request {
+            id: i,
+            prompt: (0..2 + (i as usize * 5) % (SEQ - 4))
+                .map(|j| ((i as usize * 13 + j * 7) % 64) as u8)
+                .collect(),
+            max_new_tokens: CTX,
+        })
+        .collect();
+    let decode_batch = entquant::coordinator::batcher::pack(&decode_reqs, &[(8, SEQ)]).remove(0);
+    let mut decode_points: Vec<DecodePoint> = Vec::new();
+    for (shards, pipelined) in [(1usize, false), (2, false), (2, true), (4, false), (4, true)] {
+        let plan = ShardPlan::balance(&cm, shards);
+        let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&cm)).collect();
+        let opts = EngineOpts { stage_pipeline: pipelined, ..Default::default() };
+        let engine = ShardedEngine::new(rts, &cm, plan, &opts).expect("shards");
+        let mut st = engine.prefill_state(&decode_batch).expect("prefill");
+        let t0 = std::time::Instant::now();
+        let mut tokens = 0usize;
+        while engine.decode_step(&mut st).expect("decode step") {
+            tokens += decode_batch.requests.len();
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let tokens_per_s = tokens as f64 / wall_s;
+        println!(
+            "decode shards={shards} pipelined={pipelined}: {tokens} tokens in {wall_s:.2}s = {tokens_per_s:.1} tok/s"
+        );
+        decode_points.push(DecodePoint { shards, pipelined, tokens, wall_s, tokens_per_s });
+    }
+    let decode_rate = |shards: usize, pipelined: bool| -> f64 {
+        decode_points
+            .iter()
+            .find(|p| p.shards == shards && p.pipelined == pipelined)
+            .map_or(0.0, |p| p.tokens_per_s)
+    };
+    let speedup_4 = {
+        let seq = decode_rate(4, false);
+        if seq > 0.0 {
+            decode_rate(4, true) / seq
+        } else {
+            0.0
+        }
+    };
+    println!("pipeline speedup at 4 shards: {speedup_4:.2}x");
 
     // fault drills: kill one shard at a scripted decode step mid-trace
     // on a 2-shard stack — the trace must still complete with zero
@@ -208,12 +275,13 @@ fn main() {
         }
         series.push_str(&format!(
             concat!(
-                "    {{\"shards\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, ",
+                "    {{\"shards\": {}, \"stage_pipeline\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}, ",
                 "\"p50_ttft_ms\": {:.2}, \"p99_ttft_ms\": {:.2}, \"p999_ttft_ms\": {:.2}, ",
                 "\"p50_step_us\": {:.1}, \"p99_step_us\": {:.1}, \"p999_step_us\": {:.1}, ",
                 "\"fused_admissions\": {}, \"speculative_admissions\": {}}}"
             ),
             p.shards,
+            p.pipelined,
             p.tokens,
             p.wall_s,
             p.tokens_per_s,
@@ -227,6 +295,16 @@ fn main() {
             p.speculative
         ));
     }
+    let mut decode_series = String::new();
+    for (i, p) in decode_points.iter().enumerate() {
+        if i > 0 {
+            decode_series.push_str(",\n");
+        }
+        decode_series.push_str(&format!(
+            "    {{\"shards\": {}, \"stage_pipeline\": {}, \"tokens\": {}, \"wall_s\": {:.3}, \"tokens_per_s\": {:.1}}}",
+            p.shards, p.pipelined, p.tokens, p.wall_s, p.tokens_per_s
+        ));
+    }
     let json = format!(
         concat!(
             "{{\n",
@@ -235,6 +313,8 @@ fn main() {
             "  \"requests\": {requests},\n",
             "  \"max_new\": {max_new},\n",
             "  \"trace\": [\n{series}\n  ],\n",
+            "  \"decode\": [\n{decode_series}\n  ],\n",
+            "  \"pipeline_speedup_4shards\": {speedup_4:.3},\n",
             "  \"memory\": {{\"weight_copies\": {copies}, \"resident_compressed_bytes\": {resident}}},\n",
             "  \"fault_drill\": {{\"shards\": 2, \"requests\": {drill_requests}, \"reroutes\": {drill_reroutes}, \"rejoins\": {drill_rejoins}, \"spliced_blocks\": {drill_spliced}, \"recovery_stall_ms_splice\": {stall_splice:.3}, \"recovery_stall_ms_full\": {stall_full:.3}, \"wall_s\": {drill_wall:.3}}}\n",
             "}}\n"
@@ -243,6 +323,8 @@ fn main() {
         requests = n_requests,
         max_new = max_new,
         series = series,
+        decode_series = decode_series,
+        speedup_4 = speedup_4,
         copies = drill.weight_copies,
         resident = drill.resident_compressed_bytes,
         drill_requests = drill.requests,

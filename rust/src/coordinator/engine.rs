@@ -31,7 +31,7 @@ use crate::obs::Stopwatch;
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::container::{CompressedBlock, CompressedModel, SharedMat};
 use anyhow::{anyhow, Result};
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -168,6 +168,13 @@ pub struct EngineOpts {
     /// resident/offload modes) — kept for the recovery-stall bench
     /// comparison in `benches/serve.rs`.
     pub splice: bool,
+    /// cross-request pipeline parallelism: at shard counts > 1, a
+    /// sharded decode step splits the batch into per-shard micro-batches
+    /// and streams them through the shard chain (shard *i* computes
+    /// micro-batch *b* while shard *i+1* computes micro-batch *b−1*).
+    /// `false` forces the sequential shard walk — kept for the
+    /// pipelined-vs-sequential series in `benches/serve.rs`.
+    pub stage_pipeline: bool,
 }
 
 impl Default for EngineOpts {
@@ -179,6 +186,7 @@ impl Default for EngineOpts {
             offload_dir: None,
             role: ShardRole::default(),
             splice: true,
+            stage_pipeline: true,
         }
     }
 }
@@ -319,6 +327,14 @@ pub struct ServingEngine {
     /// blocks absorbed through `reopen_blocks` (the
     /// `recovery_spliced_blocks` gauge)
     spliced: Cell<usize>,
+    /// persistent per-block code buffers for the micro-batched
+    /// (stage-pipelined) sharded decode: each pipelined step
+    /// ANS-decodes every block ONCE into these and reuses the views
+    /// across micro-batches, bypassing the two-slot arena (which cannot
+    /// hold all blocks of a shard live at once without counted fresh
+    /// allocations).  Lazily sized on first use, recycled across steps,
+    /// cleared whenever the block set changes (splice/truncate/reopen).
+    stage_codes: RefCell<Vec<Arc<Vec<f32>>>>,
 }
 
 impl ServingEngine {
@@ -358,6 +374,7 @@ impl ServingEngine {
             names,
             residency_decodes: Cell::new(decodes),
             spliced: Cell::new(0),
+            stage_codes: RefCell::new(Vec::new()),
         })
     }
 
@@ -510,6 +527,7 @@ impl ServingEngine {
             arena.ensure_capacity(cm.blocks.iter().map(|b| b.n_symbols()).max().unwrap_or(0));
         }
         self.cm = cm;
+        self.stage_codes.borrow_mut().clear(); // block set changed
         self.residency_decodes.set(self.residency_decodes.get() + decodes);
         self.spliced.set(self.spliced.get() + n_abs);
         Ok(())
@@ -533,6 +551,7 @@ impl ServingEngine {
         self.arena = arena;
         self.resident_codes = resident_codes;
         self.offload_paths = offload_paths;
+        self.stage_codes.borrow_mut().clear(); // block set changed
         self.residency_decodes.set(self.residency_decodes.get() + decodes);
         self.spliced.set(self.spliced.get() + n_abs);
         Ok(())
@@ -558,6 +577,7 @@ impl ServingEngine {
         // reopen probe: a faulted release leaves the engine as it was
         self.rt.fault_probe("splice_truncate")?;
         self.cm.blocks.truncate(keep);
+        self.stage_codes.borrow_mut().clear(); // block set changed
         self.consts.truncate(keep);
         if let Some(rc) = self.resident_codes.as_mut() {
             rc.truncate(keep);
@@ -586,6 +606,7 @@ impl ServingEngine {
         }
         self.rt.fault_probe("splice_truncate")?; // see truncate_blocks
         self.cm.blocks.drain(..n);
+        self.stage_codes.borrow_mut().clear(); // block set changed
         self.consts.drain(..n);
         if let Some(rc) = self.resident_codes.as_mut() {
             rc.drain(..n);
@@ -784,7 +805,17 @@ impl ServingEngine {
         let starts = HostTensor::i32(batch.starts.clone(), &[b]);
         let (x, caches) = self.prefill_blocks(x, &starts, batch.slot, metrics)?;
         let logits = self.head_prefill(x, batch.slot)?;
-        metrics.prefill_ms += t0.elapsed_ms();
+        // one stopwatch sample feeds both gauges: ttft IS the first
+        // prefill's wall time (the first token is greedy-picked from
+        // these logits with no further compute), and later catch-up /
+        // speculative prefill groups accumulating into the same
+        // `Metrics` must not overwrite it — first-token time happens
+        // once per request
+        let prefill_ms = t0.elapsed_ms();
+        metrics.prefill_ms += prefill_ms;
+        if metrics.ttft_ms == 0.0 {
+            metrics.ttft_ms = prefill_ms;
+        }
         Ok((logits, caches))
     }
 
@@ -841,6 +872,104 @@ impl ServingEngine {
         Ok(x)
     }
 
+    /// Fetch every block's codes for one stage-pipelined decode step,
+    /// returning per-block layer views plus the fetch wall time.  Under
+    /// EntQuant the ANS decode lands in the persistent per-block stage
+    /// buffers (allocated on first use, recycled across steps) instead
+    /// of the two-slot arena: the pipelined step runs this shard's
+    /// whole block range once per micro-batch, so all blocks' views
+    /// must stay live at once — cycling them through two arena slots
+    /// would force a counted fresh allocation per block and break the
+    /// alloc-free steady state the arena tests pin.  Other residencies
+    /// go through their normal `fetch_block` path; either way the
+    /// per-STEP fetch cost matches the monolithic walk exactly (one
+    /// fetch per block per step, reused across micro-batches).
+    pub(crate) fn stage_block_codes(&self) -> Result<(Vec<Vec<HostTensor>>, f64)> {
+        let t0 = Stopwatch::start(); // metrics timing only; never branches decode
+        let n = self.cm.blocks.len();
+        let mut all = Vec::with_capacity(n);
+        if self.opts.residency != Residency::EntQuant {
+            for b in 0..n {
+                let (codes, _) = self.fetch_block(b)?;
+                all.push(codes);
+            }
+            return Ok((all, t0.elapsed_ms()));
+        }
+        let mut bufs = self.stage_codes.borrow_mut();
+        if bufs.len() != n {
+            *bufs =
+                self.cm.blocks.iter().map(|cb| Arc::new(vec![0.0f32; cb.n_symbols()])).collect();
+        }
+        for (b, buf) in bufs.iter_mut().enumerate() {
+            let cb = &self.cm.blocks[b];
+            let n_sym = cb.n_symbols();
+            // exclusive by construction: the previous step's views all
+            // dropped when its executor calls completed; a still-held
+            // view (never on the serving path) forces a fresh buffer
+            if Arc::get_mut(buf).map_or(true, |d| d.len() < n_sym) {
+                *buf = Arc::new(vec![0.0f32; n_sym]);
+            }
+            let dst = Arc::get_mut(buf).expect("fresh stage buffer is exclusively held");
+            let threads = self.pool.threads();
+            self.cm
+                .decode_block_fused_into(b, &mut dst[..n_sym], &self.value_table, threads)
+                .map_err(|e| anyhow!("stage decode of block {b}: {e:#}"))?;
+            let mut views = Vec::with_capacity(cb.layers.len());
+            for ((off, len), l) in cb.layer_offsets().into_iter().zip(&cb.layers) {
+                views.push(HostTensor::f32_view(Arc::clone(buf), off, len, &[l.rows, l.cols]));
+            }
+            all.push(views);
+        }
+        Ok((all, t0.elapsed_ms()))
+    }
+
+    /// `decode_blocks` over pre-fetched per-block codes — the
+    /// stage-pipelined path decodes once per step via
+    /// `stage_block_codes` and replays the views for every micro-batch.
+    /// The executor calls, their input layout, and the cache handling
+    /// are identical to `decode_blocks`; byte-identity between the two
+    /// walks is what the micro-batched serve tests pin.
+    pub(crate) fn decode_blocks_with_codes(
+        &self,
+        x0: HostTensor,
+        codes: &[Vec<HostTensor>],
+        caches: &mut [(HostTensor, HostTensor)],
+        pos: i32,
+        starts: &HostTensor,
+        slot_b: usize,
+        ctx: usize,
+        metrics: &mut Metrics,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(
+            caches.len() == self.cm.blocks.len() && codes.len() == self.cm.blocks.len(),
+            "decode_blocks_with_codes: {} caches / {} code sets for {} blocks",
+            caches.len(),
+            codes.len(),
+            self.cm.blocks.len()
+        );
+        let block_name = self.names.block_d(slot_b, ctx)?;
+        let mut x = x0;
+        for blk in 0..self.cm.blocks.len() {
+            let t1 = Stopwatch::start(); // metrics timing only; never branches decode
+            let (kc, vc) = caches[blk].clone();
+            let mut inputs = Vec::with_capacity(21);
+            inputs.push(x);
+            inputs.extend(codes[blk].iter().cloned());
+            inputs.extend(self.consts[blk].scales.iter().cloned());
+            inputs.push(self.consts[blk].norm_attn.clone());
+            inputs.push(self.consts[blk].norm_mlp.clone());
+            inputs.push(kc);
+            inputs.push(vc);
+            inputs.push(HostTensor::scalar_i32(pos));
+            inputs.push(starts.clone());
+            let mut out = self.rt.call(block_name, &inputs)?;
+            x = out.remove(0);
+            caches[blk] = (out.remove(0), out.remove(0));
+            metrics.exec_ms += t1.elapsed_ms();
+        }
+        Ok(x)
+    }
+
     /// Final norm + LM head for one decode step.
     pub(crate) fn head_decode(&self, x: HostTensor, b: usize) -> Result<HostTensor> {
         let (norm, head) = self.head_views()?;
@@ -855,9 +984,9 @@ impl ServingEngine {
         let cfg = &self.rt.manifest.config;
         let ctx = self.decode_ctx(batch.slot.0)?;
         let mut metrics = Metrics::zero();
-        let t_start = Stopwatch::start(); // metrics timing only; never branches decode
+        // `prefill` samples one stopwatch for both prefill_ms and
+        // ttft_ms (first prefill only) — no second sample here
         let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
-        metrics.ttft_ms = t_start.elapsed_ms();
         Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
     }
 
@@ -898,8 +1027,7 @@ impl ServingEngine {
                 break;
             }
         }
-        let outputs = st.outputs.into_iter().take(batch.requests.len()).collect();
-        Ok((outputs, st.metrics))
+        Ok((truncate_outputs(st.outputs, batch.requests.len(), max_new), st.metrics))
     }
 
     /// Approximate resident weight bytes for this residency mode (the
@@ -1098,6 +1226,28 @@ pub(crate) fn state_from_prefill(
         o.push(next[bi] as u8);
     }
     DecodeState { batch: batch.clone(), caches, next, outputs, pos: s, ctx, metrics }
+}
+
+/// The one `generate` output contract, shared by the single engine and
+/// the shard pipeline so it can never drift between them: per-request
+/// outputs, each capped at `max_new` tokens.  `max_new == 0` therefore
+/// yields empty outputs even though the prefill already greedy-picked a
+/// first token — callers wanting at least the prefill token ask for
+/// `max_new >= 1` (the scheduler's submit path clamps exactly so, and
+/// documents why).
+pub(crate) fn truncate_outputs(
+    outputs: Vec<Vec<u8>>,
+    n_requests: usize,
+    max_new: usize,
+) -> Vec<Vec<u8>> {
+    outputs
+        .into_iter()
+        .take(n_requests)
+        .map(|mut o| {
+            o.truncate(max_new);
+            o
+        })
+        .collect()
 }
 
 /// Fold one decode step's logits into the state (greedy pick, output

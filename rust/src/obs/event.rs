@@ -75,9 +75,15 @@ pub enum EventKind {
     Backoff = 22,
     /// One driver tick (`a` = active lanes, `b` = queue depth).
     DecodeStep = 23,
+    /// Pipeline stage `id` (a shard index) ran one micro-batch of a
+    /// pipelined decode step (`a` = micro-batch index within the step,
+    /// `b` = lanes in the micro-batch) — the per-stage lane-occupancy
+    /// signal that makes the shard-overlap visible on Perfetto shard
+    /// tracks.
+    StageRun = 24,
 }
 
-pub const EVENT_KINDS: usize = 24;
+pub const EVENT_KINDS: usize = 25;
 
 impl EventKind {
     pub fn from_u64(v: u64) -> Option<EventKind> {
@@ -107,6 +113,7 @@ impl EventKind {
             Evict,
             Backoff,
             DecodeStep,
+            StageRun,
         ];
         ALL.get(v as usize).copied()
     }
@@ -138,6 +145,7 @@ impl EventKind {
             Evict => "evict",
             Backoff => "backoff",
             DecodeStep => "decode_step",
+            StageRun => "stage_run",
         }
     }
 
@@ -161,6 +169,7 @@ impl EventKind {
                 | EventKind::Rejoin
                 | EventKind::Evict
                 | EventKind::Backoff
+                | EventKind::StageRun
         )
     }
 }

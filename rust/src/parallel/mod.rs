@@ -31,7 +31,7 @@
 pub mod pool;
 pub mod sched;
 
-pub use pool::{decode_ahead, pair_jobs, Pool, Service};
+pub use pool::{decode_ahead, pair_jobs, stage_pipeline, Pool, Service, StageError};
 pub use sched::sched_point;
 
 /// Default worker count for `--threads`-style knobs: the

@@ -317,6 +317,127 @@ where
     })
 }
 
+/// Error from a `stage_pipeline` run: which stage failed, on which
+/// item, and the error itself.  When several stages fail concurrently
+/// the error kept is the one with the lowest item index (deterministic
+/// reporting, the same convention as `try_par_map_indexed`).
+#[derive(Debug)]
+pub struct StageError<E> {
+    /// Index of the stage whose callback returned the error.
+    pub stage: usize,
+    /// Index of the item the stage was processing.
+    pub item: usize,
+    pub error: E,
+}
+
+/// Micro-batch stage pipeline: stream `items` through `ctxs.len()`
+/// stages so stage `s` processes item `i` while stage `s+1` processes
+/// item `i-1` — the cross-request pipeline-parallel decode step (shard
+/// *i* computes micro-batch *b* while shard *i+1* computes micro-batch
+/// *b−1*).
+///
+/// One scoped worker per stage (threads live only here, in
+/// `parallel/`), each with exclusive ownership of its `C` for the whole
+/// run — `C` only needs `Send`, never `Sync`, which is what lets the
+/// serve layer hand each worker a `&mut` shard engine.  Items flow
+/// stage-to-stage over channels in index order; each stage is a FIFO,
+/// so the per-stage call sequence (and with it any per-stage fault
+/// scripting) is deterministic regardless of thread interleaving, and
+/// the returned items keep their original order.
+///
+/// On error the failing stage stops: upstream stages stop at their next
+/// handoff, downstream stages drain what already arrived, and the
+/// lowest-item error is returned.  Degenerate shapes (one stage or one
+/// item) run inline on the caller's thread with the same stage/item
+/// order.
+pub fn stage_pipeline<C, T, E, F>(
+    ctxs: Vec<C>,
+    items: Vec<T>,
+    f: F,
+) -> Result<Vec<T>, StageError<E>>
+where
+    C: Send,
+    T: Send,
+    E: Send,
+    F: Fn(usize, usize, &mut C, &mut T) -> Result<(), E> + Sync,
+{
+    let n_stages = ctxs.len();
+    let n_items = items.len();
+    if n_stages == 0 || n_items == 0 {
+        return Ok(items);
+    }
+    if n_stages == 1 || n_items == 1 {
+        let mut ctxs = ctxs;
+        let mut items = items;
+        for (i, item) in items.iter_mut().enumerate() {
+            for (s, ctx) in ctxs.iter_mut().enumerate() {
+                f(s, i, ctx, item).map_err(|error| StageError { stage: s, item: i, error })?;
+            }
+        }
+        return Ok(items);
+    }
+
+    let first_err: Mutex<Option<StageError<E>>> = Mutex::new(None);
+    let record = |stage: usize, item: usize, error: E| {
+        let mut slot = first_err.lock().unwrap();
+        let replace = match &*slot {
+            Some(prev) => item < prev.item,
+            None => true,
+        };
+        if replace {
+            *slot = Some(StageError { stage, item, error });
+        }
+    };
+
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n_items);
+    slots.resize_with(n_items, || None);
+    std::thread::scope(|scope| {
+        // channel `s` feeds stage `s`; the final channel feeds the
+        // collector.  Stage 0's queue is seeded with every item up
+        // front (channels are unbounded; backpressure comes from each
+        // stage being a single FIFO worker).
+        let (tx0, rx0) = mpsc::channel::<(usize, T)>();
+        for pair in items.into_iter().enumerate() {
+            tx0.send(pair).expect("stage 0 input queue");
+        }
+        drop(tx0);
+        let mut rx = rx0;
+        for (s, mut ctx) in ctxs.into_iter().enumerate() {
+            let (tx, next_rx) = mpsc::channel::<(usize, T)>();
+            let in_rx = std::mem::replace(&mut rx, next_rx);
+            let (f, record) = (&f, &record);
+            scope.spawn(move || {
+                while let Ok((i, mut item)) = in_rx.recv() {
+                    super::sched_point();
+                    if let Err(error) = f(s, i, &mut ctx, &mut item) {
+                        record(s, i, error);
+                        // dropping in_rx fails upstream handoffs, which
+                        // stops the stages behind this one
+                        break;
+                    }
+                    super::sched_point();
+                    if tx.send((i, item)).is_err() {
+                        break; // downstream stage stopped
+                    }
+                }
+            });
+        }
+        // collect on the caller's thread; FIFO stages deliver in index
+        // order, but place by index anyway so the output contract never
+        // rests on channel ordering
+        while let Ok((i, item)) = rx.recv() {
+            slots[i] = Some(item);
+        }
+    });
+    if let Some(err) = first_err.into_inner().unwrap() {
+        return Err(err);
+    }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("stage pipeline: every item passed every stage"))
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -501,6 +622,74 @@ mod tests {
         let svc = Service::spawn("panic-service", |_| panic!("worker died"));
         let err = svc.stop().unwrap_err();
         assert!(err.contains("panic"), "{err}");
+    }
+
+    #[test]
+    fn stage_pipeline_applies_every_stage_in_order() {
+        for (n_stages, n_items) in [(1usize, 5usize), (3, 1), (3, 8), (4, 4)] {
+            let ctxs: Vec<usize> = (0..n_stages).collect();
+            let items: Vec<Vec<usize>> = (0..n_items).map(|i| vec![i]).collect();
+            let out = stage_pipeline(ctxs, items, |s, i, ctx, item| {
+                assert_eq!(*ctx, s, "each worker owns its own context");
+                assert_eq!(item[0], i, "items keep their identity through stages");
+                item.push(s);
+                Ok::<(), String>(())
+            })
+            .unwrap();
+            for (i, item) in out.iter().enumerate() {
+                let mut want = vec![i];
+                want.extend(0..n_stages);
+                assert_eq!(item, &want, "stages={n_stages} items={n_items}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_pipeline_stages_are_fifo_and_contexts_exclusive() {
+        // each context tracks the next item index it expects; the stage
+        // mutates it with no synchronization at all — exclusivity and
+        // per-stage FIFO order are the contract being pinned
+        let n_items = 16usize;
+        let out = stage_pipeline(vec![0usize; 3], (0..n_items).collect(), |s, i, next, item| {
+            assert_eq!(i, *next, "stage {s} must see items in FIFO order");
+            *next += 1;
+            *item += 1;
+            Ok::<(), String>(())
+        })
+        .unwrap();
+        assert_eq!(out, (3..n_items + 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stage_pipeline_reports_failing_stage_and_item() {
+        let r = stage_pipeline(vec![(); 3], (0..10usize).collect(), |s, i, _, item| {
+            if s == 1 && i == 4 {
+                Err(format!("stage {s} item {i}"))
+            } else {
+                *item += 1;
+                Ok(())
+            }
+        });
+        let err = r.unwrap_err();
+        assert_eq!((err.stage, err.item), (1, 4));
+        assert_eq!(err.error, "stage 1 item 4");
+    }
+
+    #[test]
+    fn stage_pipeline_degenerate_shapes_run_inline() {
+        let out = stage_pipeline(vec![1usize, 2, 3], vec![10usize], |_, _, c, item| {
+            *item += *c;
+            Ok::<(), String>(())
+        })
+        .unwrap();
+        assert_eq!(out, vec![16]);
+        let none: Vec<u8> = Vec::new();
+        assert!(stage_pipeline(vec![(); 3], none, |_, _, _, _: &mut u8| Ok::<(), String>(()))
+            .unwrap()
+            .is_empty());
+        let out = stage_pipeline(Vec::<()>::new(), vec![5u8], |_, _, _, _| Ok::<(), String>(()))
+            .unwrap();
+        assert_eq!(out, vec![5]);
     }
 
     #[test]

@@ -284,4 +284,30 @@ mod tests {
         assert_eq!(retry_after_steps(5, 3, 100), 34);
         assert_eq!(retry_after_steps(5, 100, 7), 1, "fast drain still hints >= 1");
     }
+
+    /// Property sweep over the (queue_depth, completed, decode_steps)
+    /// grid, cold-start corners included: the shed hint must always be
+    /// finite (usize), nonzero, deterministic call-to-call, and match
+    /// the documented two-regime formula exactly.
+    #[test]
+    fn retry_hint_holds_over_the_input_grid() {
+        const DEPTHS: &[usize] = &[0, 1, 2, 7, 63, 1024, usize::MAX / 2];
+        const COMPLETED: &[usize] = &[0, 1, 2, 5, 100, 10_000];
+        const STEPS: &[usize] = &[0, 1, 2, 9, 1_000, 1_000_000];
+        for &q in DEPTHS {
+            for &c in COMPLETED {
+                for &s in STEPS {
+                    let hint = retry_after_steps(q, c, s);
+                    assert!(hint >= 1, "zero hint at q={q} c={c} s={s}");
+                    assert_eq!(
+                        hint,
+                        retry_after_steps(q, c, s),
+                        "hint must be deterministic at q={q} c={c} s={s}"
+                    );
+                    let want = if c == 0 || s == 0 { q.max(1) } else { s.div_ceil(c).max(1) };
+                    assert_eq!(hint, want, "regime mismatch at q={q} c={c} s={s}");
+                }
+            }
+        }
+    }
 }

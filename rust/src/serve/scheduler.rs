@@ -293,6 +293,12 @@ impl Scheduler {
         step_budget: Option<usize>,
     ) -> Admission {
         sched_point();
+        // the serving contract for token counts: a request always
+        // yields at least one token, so `max_new = 0` is clamped to 1
+        // HERE, at the single entry point — the engines underneath
+        // (`ServingEngine::generate` / `ShardedEngine::generate`)
+        // honor `max_new = 0` literally and return empty outputs
+        // (pinned in rust/tests/serve.rs)
         let max_new = max_new.max(1);
         let m = &self.shared.metrics;
         // the admission decision runs under the queue lock so the depth
@@ -1185,6 +1191,112 @@ impl<E: StepEngine> Driver<E> {
     }
 }
 
+/// Split an in-flight decode batch of `b` lanes into the contiguous
+/// per-shard micro-batches a pipelined decode step streams through the
+/// shard chain (`ShardedEngine::decode_step_pipelined`).
+///
+/// Micro-batch sizes must be decode-slot batch sizes at the SAME
+/// context as the running batch (`(db, ctx)` with `db <= b`) — the AOT
+/// slot tables are the only shapes the executor can run.  The split
+/// targets `min(n_shards, b)` parts (enough to keep every stage busy
+/// without shrinking micro-batches further than overlap requires),
+/// assigning each part the largest admissible slot not exceeding the
+/// even share of the lanes that remain.
+///
+/// Returns `None` when no pipelining is possible or profitable — one
+/// shard, one lane, or no admissible slot covering some remainder —
+/// in which case the caller falls back to the monolithic step.  The
+/// returned ranges are contiguous, disjoint, in lane order, and cover
+/// `0..b` exactly, which is what makes the re-interleave of micro-batch
+/// results a plain concatenation.
+pub fn form_micro_batches(
+    b: usize,
+    n_shards: usize,
+    decode_slots: &[(usize, usize)],
+    ctx: usize,
+) -> Option<Vec<std::ops::Range<usize>>> {
+    if n_shards < 2 || b < 2 {
+        return None;
+    }
+    let mut sizes: Vec<usize> = decode_slots
+        .iter()
+        .filter(|&&(db, dc)| dc == ctx && db <= b)
+        .map(|&(db, _)| db)
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    if sizes.is_empty() {
+        return None;
+    }
+    let target = n_shards.min(b);
+    let mut parts = Vec::with_capacity(target);
+    let mut start = 0usize;
+    while start < b {
+        let remaining = b - start;
+        let parts_left = target.saturating_sub(parts.len()).max(1);
+        let share = remaining.div_ceil(parts_left).min(remaining);
+        let size = *sizes.iter().rev().find(|&&s| s <= share)?;
+        parts.push(start..start + size);
+        start += size;
+    }
+    if parts.len() < 2 {
+        return None;
+    }
+    Some(parts)
+}
+
+#[cfg(test)]
+mod micro_batch_tests {
+    use super::form_micro_batches;
+
+    const SLOTS: &[(usize, usize)] = &[(1, 20), (2, 20), (4, 20)];
+
+    fn sizes(parts: &Option<Vec<std::ops::Range<usize>>>) -> Vec<usize> {
+        parts.as_ref().expect("expected a split").iter().map(|r| r.len()).collect()
+    }
+
+    #[test]
+    fn splits_cover_the_batch_contiguously() {
+        for b in 2..=8usize {
+            for shards in 2..=4usize {
+                let Some(parts) = form_micro_batches(b, shards, SLOTS, 20) else {
+                    continue;
+                };
+                let mut expect = 0usize;
+                for r in &parts {
+                    assert_eq!(r.start, expect, "b={b} shards={shards} {parts:?}");
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+                assert_eq!(expect, b, "b={b} shards={shards} {parts:?}");
+                assert!(parts.len() >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn splits_match_the_even_share_over_admissible_slots() {
+        assert_eq!(sizes(&form_micro_batches(4, 4, SLOTS, 20)), vec![1, 1, 1, 1]);
+        assert_eq!(sizes(&form_micro_batches(8, 4, SLOTS, 20)), vec![2, 2, 2, 2]);
+        assert_eq!(sizes(&form_micro_batches(4, 2, SLOTS, 20)), vec![2, 2]);
+        assert_eq!(sizes(&form_micro_batches(2, 4, SLOTS, 20)), vec![1, 1]);
+        assert_eq!(sizes(&form_micro_batches(4, 3, SLOTS, 20)), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn degenerate_inputs_fall_back_to_the_monolithic_step() {
+        // one shard / one lane: nothing to overlap
+        assert_eq!(form_micro_batches(4, 1, SLOTS, 20), None);
+        assert_eq!(form_micro_batches(1, 4, SLOTS, 20), None);
+        // no slot at the running context
+        assert_eq!(form_micro_batches(4, 4, SLOTS, 28), None);
+        // only the full-batch slot exists: no smaller shapes to stream
+        assert_eq!(form_micro_batches(4, 4, &[(4, 20)], 20), None);
+        // a remainder no admissible slot covers
+        assert_eq!(form_micro_batches(3, 2, &[(2, 20)], 20), None);
+    }
+}
+
 /// Seeded schedule exploration over the lane state machine — the PR 6
 /// mini-loom (`parallel::sched`) pointed at the scheduler: the driver
 /// tick, submit/poll/cancel, group formation, and the solo/flight sync
@@ -1370,6 +1482,36 @@ mod sweep {
         sched.shutdown().expect("driver must shut down cleanly under any schedule");
     }
 
+    /// One perturbed pass over the pipelined decode path itself: the
+    /// stage workers in `parallel::stage_pipeline` hit `sched_point()`
+    /// before each micro-batch and before each handoff send, so the
+    /// seed perturbs the stage-handoff ordering (which stage runs,
+    /// stalls, or hands off first).  Whatever the interleaving, the
+    /// micro-batched 2-shard generation must stay byte-identical to
+    /// the sequential walk over the same shards.
+    fn scenario_stage_handoff(cm: &CompressedModel) {
+        use crate::coordinator::batcher::{pack, Request};
+        let reqs: Vec<Request> = (0..4u8)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: (0..3 + i).map(|j| ((i * 5 + j * 3) % 48)).collect(),
+                max_new_tokens: 6,
+            })
+            .collect();
+        let batch = pack(&reqs, &[(4, 12)]).remove(0);
+        let sequential = {
+            let plan = ShardPlan::balance(cm, 2);
+            let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| rt(cm)).collect();
+            let opts = EngineOpts { stage_pipeline: false, ..Default::default() };
+            ShardedEngine::new(rts, cm, plan, &opts).unwrap().generate(&batch, 6).unwrap().0
+        };
+        let pipelined = engine(cm, 2).generate(&batch, 6).unwrap().0;
+        assert_eq!(
+            pipelined, sequential,
+            "pipelined decode diverged from the sequential walk under a perturbed handoff order"
+        );
+    }
+
     #[test]
     fn schedule_sweep_holds_lane_state_machine_invariants() {
         let (cm, reference) = ctx();
@@ -1380,6 +1522,7 @@ mod sweep {
             set_seed(seed);
             let r = catch_unwind(AssertUnwindSafe(|| {
                 scenario_lane_lifecycle(cm, reference);
+                scenario_stage_handoff(cm);
             }));
             set_seed(0);
             if let Err(e) = r {

@@ -11,6 +11,16 @@
 //! to the monolithic `ServingEngine` — `rust/tests/serve.rs` pins 1-,
 //! 2- and 3-shard generations against `ServingEngine::generate`.
 //!
+//! **Cross-request pipeline parallelism**: with
+//! `EngineOpts::stage_pipeline` (the default), a decode step splits
+//! the batch into per-shard micro-batches that stream through the
+//! shard chain (`decode_step_pipelined`), overlapping shard *i* on
+//! micro-batch *b* with shard *i+1* on micro-batch *b−1* — the raw
+//! tokens/s lever that makes shard count buy throughput.  Determinism
+//! and byte-identity survive because the executor computes each output
+//! row from that lane's inputs alone and micro-batch results
+//! re-interleave in lane order.
+//!
 //! **Fault tolerance**: a shard whose engine/runtime errors mid-batch
 //! is not fatal.  Every prefill/decode failure is attributed to the
 //! shard it struck, and `try_recover` merges the failed shard's block
@@ -38,7 +48,9 @@
 //! 1 by the serve tests), and `resident_compressed_bytes` the
 //! deduplicated resident compressed footprint.
 
-use crate::coordinator::engine::{apply_decode_logits, state_from_prefill, DecodeState, ShardRole};
+use crate::coordinator::engine::{
+    apply_decode_logits, state_from_prefill, truncate_outputs, DecodeState, ShardRole,
+};
 use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
 use crate::obs::{EventKind, Stopwatch, Tracer};
 use crate::runtime::{HostTensor, Runtime};
@@ -215,6 +227,13 @@ pub struct ShardedEngine {
     /// reroute, splice, rejoin); absent until `set_tracer`, and every
     /// record site tolerates that
     tracer: OnceLock<Arc<Tracer>>,
+    /// per-stage recycled activation/cache-handoff buffers for the
+    /// pipelined decode path: micro-batch cache gathers pop from their
+    /// stage's pool and every scattered-back executor output pushes its
+    /// storage back, so steady-state pipelined steps reuse the same
+    /// allocations arena-style (each stage touches only its own pool —
+    /// no cross-thread sharing)
+    stage_pools: RefCell<Vec<Vec<Vec<f32>>>>,
 }
 
 impl ShardedEngine {
@@ -263,6 +282,7 @@ impl ShardedEngine {
             rejoins: Cell::new(0),
             spliced_total: Cell::new(0),
             tracer: OnceLock::new(),
+            stage_pools: RefCell::new(Vec::new()),
         })
     }
 
@@ -677,8 +697,16 @@ impl ShardedEngine {
         }
         let last = shards.len() - 1;
         let logits = self.attr(last, shards[last].head_prefill(x, batch.slot))?;
-        metrics.prefill_ms += t0.elapsed_ms();
-        metrics.ttft_ms = t0.elapsed_ms();
+        // one stopwatch sample feeds both gauges, so ttft_ms equals the
+        // prefill_ms component it mirrors; ttft is first-token time, so
+        // only the FIRST prefill of a state may set it — later catch-up
+        // or speculative prefill groups merged into this state must not
+        // overwrite it
+        let prefill_ms = t0.elapsed_ms();
+        metrics.prefill_ms += prefill_ms;
+        if metrics.ttft_ms == 0.0 {
+            metrics.ttft_ms = prefill_ms;
+        }
         Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
     }
 
@@ -686,11 +714,42 @@ impl ShardedEngine {
     /// like `ServingEngine::decode_step`: after a mid-step shard
     /// failure (and a successful `try_recover`), replaying the step on
     /// the same state completes it byte-identically.
+    ///
+    /// With `EngineOpts::stage_pipeline` (the default) and more than
+    /// one shard, the step runs **pipeline-parallel across requests**:
+    /// the batch splits into per-shard micro-batches
+    /// (`scheduler::form_micro_batches`) that stream through the shard
+    /// chain, so shard *i* computes micro-batch *b* while shard *i+1*
+    /// computes micro-batch *b−1*.  Emitted tokens re-interleave
+    /// deterministically (micro-batch logits concatenate in lane
+    /// order), and every lane's row is bit-identical to the monolithic
+    /// step's because the executor computes each output row from that
+    /// lane's inputs alone (`lanes_are_batch_invariant`).  When no
+    /// micro-batch split exists (one shard, one lane, or no matching
+    /// decode slots) the step falls back to the sequential walk.
     pub fn decode_step(&self, st: &mut DecodeState) -> Result<bool> {
         if st.pos >= st.ctx {
             return Ok(false);
         }
         self.pending_fault.set(None); // see prefill_state
+        let (b, _s) = st.batch.slot;
+        let parts = if self.opts.stage_pipeline {
+            let n_shards = self.shards.borrow().len();
+            let slots = self.decode_slots();
+            super::scheduler::form_micro_batches(b, n_shards, &slots, st.ctx)
+        } else {
+            None
+        };
+        match parts {
+            Some(parts) => self.decode_step_pipelined(st, &parts),
+            None => self.decode_step_sequential(st),
+        }
+    }
+
+    /// The monolithic decode walk: the whole batch through each shard
+    /// in turn.  The reference semantics the pipelined path must match
+    /// byte-for-byte.
+    fn decode_step_sequential(&self, st: &mut DecodeState) -> Result<bool> {
         let shards = self.shards.borrow();
         let plan = self.plan.borrow();
         let (b, _s) = st.batch.slot;
@@ -724,8 +783,116 @@ impl ShardedEngine {
         Ok(true)
     }
 
+    /// The pipelined decode walk: micro-batches stream through the
+    /// shard chain via `parallel::stage_pipeline` (one in-flight stage
+    /// job per shard, threads scoped inside `parallel/`).  Each stage
+    /// owns its shard exclusively (`&mut ServingEngine`), its slice of
+    /// the decode caches (disjoint `split_at_mut` ranges), and its
+    /// recycled buffer pool, so stages share nothing mutable.  Per-step
+    /// ANS decode cost matches the sequential walk: the first
+    /// micro-batch through a stage decodes that shard's blocks once
+    /// (`stage_block_codes`) and later micro-batches replay the views.
+    ///
+    /// A failed stage is attributed exactly like the sequential path
+    /// (`pending_fault` = stage index, `ShardFault` traced):
+    /// micro-batches already scattered back rewrote their cache lanes
+    /// with the same deterministic values a replay recomputes, and
+    /// `next`/`outputs`/`pos` only advance after every micro-batch
+    /// lands, so replay-after-recover stays byte-identical.
+    fn decode_step_pipelined(&self, st: &mut DecodeState, parts: &[Range<usize>]) -> Result<bool> {
+        let mut shards = self.shards.borrow_mut();
+        let plan = self.plan.borrow();
+        let (b, _s) = st.batch.slot;
+        let n_blocks: usize = plan.ranges.iter().map(|r| r.len()).sum();
+        ensure!(
+            st.caches.len() == n_blocks,
+            "decode_step: {} caches for {} planned blocks",
+            st.caches.len(),
+            n_blocks
+        );
+        let n_stages = shards.len();
+        let vocab = shards[0].runtime().manifest.config.vocab;
+        // step_ms metric only; never branches the forward pass
+        let t0 = Stopwatch::start();
+        let mut pools = self.stage_pools.borrow_mut();
+        if pools.len() < n_stages {
+            pools.resize_with(n_stages, Vec::new);
+        }
+        let mut stage_metrics = vec![Metrics::zero(); n_stages];
+        let tracer = self.tracer.get().map(|t| &**t);
+        let mut ctxs = Vec::with_capacity(n_stages);
+        {
+            let mut cache_rest: &mut [(HostTensor, HostTensor)] = &mut st.caches;
+            let mut pool_iter = pools.iter_mut();
+            let mut metric_iter = stage_metrics.iter_mut();
+            for (s, shard) in shards.iter_mut().enumerate() {
+                let (mine, rest) = cache_rest.split_at_mut(plan.ranges[s].len());
+                cache_rest = rest;
+                ctxs.push(StageCtx {
+                    shard,
+                    caches: mine,
+                    codes: None,
+                    pool: pool_iter.next().expect("one pool per stage"),
+                    metrics: metric_iter.next().expect("one metrics slot per stage"),
+                    tracer,
+                    pos: st.pos as i32,
+                    ctx_len: st.ctx,
+                    first: s == 0,
+                    last: s == n_stages - 1,
+                });
+            }
+        }
+        let items: Vec<StageItem> = parts
+            .iter()
+            .map(|r| StageItem {
+                lanes: r.clone(),
+                x: None,
+                starts: HostTensor::i32(st.batch.starts[r.clone()].to_vec(), &[r.len()]),
+                next: st.next[r.clone()].to_vec(),
+                logits: None,
+            })
+            .collect();
+        let run = crate::parallel::stage_pipeline(ctxs, items, |s, i, c, item| {
+            step_stage(s, i, c, item)
+        });
+        let items = match run {
+            Ok(items) => items,
+            Err(se) => {
+                self.pending_fault.set(Some(se.stage));
+                self.trace(EventKind::ShardFault, se.stage as u64, 0, 0);
+                return Err(se.error.context(format!(
+                    "pipelined decode step: shard {} failed on micro-batch {}",
+                    se.stage, se.item
+                )));
+            }
+        };
+        // merge per-stage timing in stage order (deterministic totals)
+        for m in &stage_metrics {
+            st.metrics.ans_decode_ms += m.ans_decode_ms;
+            st.metrics.exec_ms += m.exec_ms;
+        }
+        // deterministic re-interleave: micro-batch logits concatenate
+        // in lane order, recovering the monolithic [B, 1, vocab] layout
+        let mut lf = Vec::with_capacity(b * vocab);
+        for item in &items {
+            lf.extend_from_slice(item.logits.as_ref().expect("last stage sets logits").as_f32());
+        }
+        let logits = HostTensor::f32(lf, &[b, 1, vocab]);
+        apply_decode_logits(st, &logits, vocab, t0);
+        // pace the rejoin delay: only FULL steps count (see the
+        // sequential walk)
+        if let Some(steps) = self.steps_since_reroute.get() {
+            self.steps_since_reroute.set(Some(steps + 1));
+        }
+        Ok(true)
+    }
+
     /// Greedy-generate `max_new` tokens through the shard pipeline —
-    /// same contract as `ServingEngine::generate`.
+    /// same contract as `ServingEngine::generate`: exactly
+    /// `min(max_new, ctx budget)` tokens per request, so `max_new = 0`
+    /// yields empty outputs (the prefill token is computed but not
+    /// emitted) on both engines.  `Scheduler::submit_with` clamps to
+    /// `max_new >= 1` before either engine sees the request.
     pub fn generate(&self, batch: &Batch, max_new: usize) -> Result<(Vec<Vec<u8>>, Metrics)> {
         let mut st = self.prefill_state(batch)?;
         for _ in 0..max_new.saturating_sub(1) {
@@ -733,9 +900,128 @@ impl ShardedEngine {
                 break;
             }
         }
-        let outputs = st.outputs.into_iter().take(batch.requests.len()).collect();
-        Ok((outputs, st.metrics))
+        Ok((truncate_outputs(st.outputs, batch.requests.len(), max_new), st.metrics))
     }
+}
+
+/// Exclusive per-stage state for one pipelined decode step: the
+/// shard's engine, its disjoint slice of the decode caches, its
+/// recycled buffer pool, and a private metrics accumulator.  Built
+/// fresh each step; `codes` memoizes the shard's block-weight views
+/// after the first micro-batch so later micro-batches skip the ANS
+/// decode.
+struct StageCtx<'a> {
+    shard: &'a mut ServingEngine,
+    caches: &'a mut [(HostTensor, HostTensor)],
+    codes: Option<Vec<Vec<HostTensor>>>,
+    pool: &'a mut Vec<Vec<f32>>,
+    metrics: &'a mut Metrics,
+    tracer: Option<&'a Tracer>,
+    pos: i32,
+    ctx_len: usize,
+    first: bool,
+    last: bool,
+}
+
+/// One micro-batch flowing through the shard chain: its contiguous
+/// lane range, the activation handed from the previous stage (`None`
+/// entering stage 0, which embeds), and the logits the last stage
+/// leaves behind.
+struct StageItem {
+    lanes: Range<usize>,
+    x: Option<HostTensor>,
+    starts: HostTensor,
+    next: Vec<i32>,
+    logits: Option<HostTensor>,
+}
+
+/// Run micro-batch `item` through stage `s`: embed on the first
+/// stage, this shard's blocks over the micro-batch's gathered cache
+/// lanes, head on the last.  The cache gather/scatter is two slice
+/// copies per tensor — lanes are the outermost cache dimension, so a
+/// contiguous lane range is a contiguous slice.
+fn step_stage(s: usize, i: usize, c: &mut StageCtx<'_>, item: &mut StageItem) -> Result<()> {
+    let mb = item.lanes.len();
+    let mut x = if c.first {
+        c.shard.embed_decode(&item.next, mb)?
+    } else {
+        item.x.take().expect("activation handed off from the previous stage")
+    };
+    if c.codes.is_none() {
+        let (codes, ans_ms) = c.shard.stage_block_codes()?;
+        c.metrics.ans_decode_ms += ans_ms;
+        c.codes = Some(codes);
+    }
+    let codes = c.codes.as_ref().expect("codes memoized above");
+    let mut scratch = Vec::with_capacity(c.caches.len());
+    for (k, v) in c.caches.iter() {
+        scratch.push((gather_lanes(k, &item.lanes, c.pool), gather_lanes(v, &item.lanes, c.pool)));
+    }
+    x = c.shard.decode_blocks_with_codes(
+        x,
+        codes,
+        &mut scratch,
+        c.pos,
+        &item.starts,
+        mb,
+        c.ctx_len,
+        c.metrics,
+    )?;
+    for ((k, v), (sk, sv)) in c.caches.iter_mut().zip(scratch) {
+        scatter_lanes(k, &item.lanes, sk, c.pool)?;
+        scatter_lanes(v, &item.lanes, sv, c.pool)?;
+    }
+    if let Some(t) = c.tracer {
+        t.record(EventKind::StageRun, s as u64, i as u64, mb as u64);
+    }
+    if c.last {
+        item.logits = Some(c.shard.head_decode(x, mb)?);
+    } else {
+        item.x = Some(x);
+    }
+    Ok(())
+}
+
+/// Copy a contiguous lane range of a `[B, H, C, hd]` cache tensor into
+/// a `[mb, H, C, hd]` micro-batch tensor backed by a pool-recycled
+/// buffer.
+fn gather_lanes(full: &HostTensor, lanes: &Range<usize>, pool: &mut Vec<Vec<f32>>) -> HostTensor {
+    let d = full.dims();
+    let stride: usize = d[1..].iter().product();
+    let mut buf = pool.pop().unwrap_or_default();
+    buf.clear();
+    buf.extend_from_slice(&full.as_f32()[lanes.start * stride..lanes.end * stride]);
+    HostTensor::f32(buf, &[lanes.len(), d[1], d[2], d[3]])
+}
+
+/// Copy a `[mb, H, C, hd]` micro-batch cache back into its lane range
+/// of the full tensor, recycling the micro-batch storage into the
+/// stage pool.
+fn scatter_lanes(
+    full: &mut HostTensor,
+    lanes: &Range<usize>,
+    part: HostTensor,
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    let stride: usize = full.dims()[1..].iter().product();
+    {
+        let src = part.as_f32();
+        ensure!(
+            src.len() == lanes.len() * stride,
+            "scatter: {} values for {} lanes of stride {stride}",
+            src.len(),
+            lanes.len()
+        );
+        let dst = match full {
+            HostTensor::F32 { data, .. } => data,
+            _ => anyhow::bail!("pipelined decode caches must be owned f32 tensors"),
+        };
+        dst[lanes.start * stride..lanes.end * stride].copy_from_slice(src);
+    }
+    if let HostTensor::F32 { data, .. } = part {
+        pool.push(data);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -3,7 +3,9 @@
 //! a 64-request synthetic trace through the continuous-batching
 //! scheduler on 2 shards, fused mid-flight admission, the cancel
 //! lifecycle, scripted shard-failure reroutes (decode and prefill),
-//! and zero-cost speculative admission.
+//! zero-cost speculative admission, and cross-request pipeline
+//! parallelism (micro-batched decode vs the sequential walk, with a
+//! mid-step fault while micro-batches are in flight).
 //!
 //! The load-bearing invariant everywhere: a request's generation is
 //! byte-identical to a solo `ServingEngine::generate` run, whatever
@@ -66,10 +68,14 @@ fn single_engine() -> ServingEngine {
 }
 
 fn sharded(n: usize) -> ShardedEngine {
+    sharded_opts(n, EngineOpts::default())
+}
+
+fn sharded_opts(n: usize, opts: EngineOpts) -> ShardedEngine {
     let model = cm().clone();
     let plan = ShardPlan::balance(&model, n);
     let rts: Vec<Runtime> = (0..plan.n_shards()).map(|_| native_rt(&model)).collect();
-    ShardedEngine::new(rts, &model, plan, &EngineOpts::default()).unwrap()
+    ShardedEngine::new(rts, &model, plan, &opts).unwrap()
 }
 
 /// A sharded engine whose per-shard runtimes are armed with a shared
@@ -1129,4 +1135,113 @@ fn scheduler_metrics_surface_supervisor_health_through_a_fault_storm() {
     assert_eq!(m.weight_copies, 1, "{m:?}");
     assert_eq!(faults.fired(), 1);
     sched.shutdown().unwrap();
+}
+
+#[test]
+fn pipelined_micro_batched_decode_is_byte_identical_across_shard_counts() {
+    // the tentpole pin: with `stage_pipeline` on (the default), decode
+    // steps split the batch into per-shard micro-batches streamed
+    // through the shard chain — and the re-interleaved token streams
+    // must equal BOTH the monolithic sequential walk over the same
+    // shards and the solo single-engine reference, at every shard
+    // count. Two rounds per engine exercise handoff-buffer recycling.
+    let reqs: Vec<Request> = (0..4).map(|i| req(1400 + i, 4 + i as usize * 3)).collect();
+    let batch = &pack(&reqs, &[(4, SEQ)])[0];
+    let engine = single_engine();
+    let (want, want_m) = engine.generate(batch, 8).unwrap();
+    for shards in [2usize, 3, 4] {
+        let pipelined = sharded(shards);
+        let sequential =
+            sharded_opts(shards, EngineOpts { stage_pipeline: false, ..Default::default() });
+        for round in 0..2 {
+            let (got_p, m_p) = pipelined.generate(batch, 8).unwrap();
+            let (got_s, m_s) = sequential.generate(batch, 8).unwrap();
+            assert_eq!(got_p, want, "pipelined shards={shards} round={round}");
+            assert_eq!(got_s, want, "sequential shards={shards} round={round}");
+            assert_eq!(m_p.decode_tokens, want_m.decode_tokens, "shards={shards}");
+            assert_eq!(m_s.decode_tokens, want_m.decode_tokens, "shards={shards}");
+        }
+        let allocs = pipelined.fresh_allocs();
+        assert!(
+            allocs.iter().all(|&a| a == 0),
+            "shards={shards}: pipelined fresh allocs {allocs:?} (handoff buffers must recycle)"
+        );
+    }
+}
+
+#[test]
+fn pipelined_mid_step_fault_recovers_and_replays_byte_identically() {
+    // the acceptance drill at the engine level, on the pipelined path:
+    // a scripted fault kills a mid-chain shard while micro-batches are
+    // in flight (partial caches written for earlier micro-batches),
+    // the range reroutes onto survivors, and replaying the interrupted
+    // step verbatim — now micro-batched over the contracted chain —
+    // completes byte-identical to the unfaulted single-engine run.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..4).map(|i| req(1450 + i, 4 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(4, SEQ)])[0];
+    let (want, _) = engine.generate(batch, 8).unwrap();
+
+    let faults = FaultPlan::scripted(vec![FaultScript { shard: 2, step: 6, block: 0 }]);
+    let se = sharded_with_faults(4, &faults);
+    let mut st = se.prefill_state(batch).unwrap();
+    let mut rerouted = 0;
+    for _ in 0..7 {
+        loop {
+            match se.decode_step(&mut st) {
+                Ok(true) => break,
+                Ok(false) => panic!("context wall before the trace finished"),
+                Err(e) => {
+                    assert!(se.try_recover(), "reroute must succeed with survivors: {e:#}");
+                    rerouted += 1; // replay the interrupted step verbatim
+                }
+            }
+        }
+    }
+    assert_eq!(rerouted, 1, "the scripted fault must interrupt exactly one step");
+    assert_eq!(faults.fired(), 1);
+    assert_eq!(se.n_shards(), 3, "the failed shard must be gone");
+    for (lane, w) in want.iter().enumerate() {
+        assert_eq!(&st.outputs[lane], w, "lane {lane} diverged across the pipelined reroute");
+    }
+}
+
+#[test]
+fn zero_and_one_token_generate_contract_is_pinned_across_engines() {
+    // `generate(max_new = 0)` returns one EMPTY output per request and
+    // `max_new = 1` exactly the prefill token, identically on the solo
+    // and the sharded engine — the scheduler clamps to >= 1 at its
+    // single entry point, so the engines must honor the literal value.
+    let reqs: Vec<Request> = (0..2).map(|i| req(1500 + i, 5 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    let engine = single_engine();
+    let se = sharded(2);
+    for max_new in [0usize, 1] {
+        let (solo, _) = engine.generate(batch, max_new).unwrap();
+        let (shard, _) = se.generate(batch, max_new).unwrap();
+        assert_eq!(solo.len(), reqs.len(), "max_new={max_new}");
+        assert_eq!(solo, shard, "max_new={max_new}: engines disagree on the contract");
+        for (lane, out) in solo.iter().enumerate() {
+            assert_eq!(out.len(), max_new, "max_new={max_new} lane={lane}");
+        }
+    }
+}
+
+#[test]
+fn ttft_is_the_single_prefill_sample_on_both_engines() {
+    // the double-sample regression: ttft_ms must equal prefill_ms
+    // after one prefill (one stopwatch read feeds both gauges), on the
+    // solo engine and on the sharded engine alike.
+    let reqs: Vec<Request> = (0..2).map(|i| req(1600 + i, 6 + i as usize)).collect();
+    let batch = &pack(&reqs, &[(2, SEQ)])[0];
+    for (name, m) in [
+        ("solo", single_engine().prefill_state(batch).unwrap().metrics),
+        ("sharded", sharded(2).prefill_state(batch).unwrap().metrics),
+    ] {
+        assert!(m.prefill_ms > 0.0, "{name}: prefill must take measurable time");
+        assert_eq!(
+            m.ttft_ms, m.prefill_ms,
+            "{name}: ttft must be the one prefill stopwatch sample"
+        );
+    }
 }
