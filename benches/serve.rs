@@ -5,7 +5,10 @@
 //! the continuous-batching scheduler), a decode-only series (a full
 //! 8-lane batch stepped to context exhaustion — the isolated
 //! cross-request pipeline-parallelism measurement, reported as
-//! `pipeline_speedup_4shards`), plus fault drills (a scripted shard
+//! `pipeline_speedup_4shards`), a compressed-KV series (resident cache
+//! bytes per lane, compression ratio, and capacity uplift per
+//! `--kv-mode`, with steady-state `fresh_allocs` pinned to 0 and the
+//! default f8 config asserted >= 3x), plus fault drills (a scripted shard
 //! kill mid-trace) that track reroute behavior, the recovery stall of
 //! the incremental splice versus the legacy full reopen, the
 //! contract→expand rejoin, and the shared-storage memory gauges
@@ -14,7 +17,7 @@
 //! which also shrinks the trace; `BENCH_SERVE_JSON` overrides the
 //! path).
 
-use entquant::coordinator::EngineOpts;
+use entquant::coordinator::{EngineOpts, KvCfg, KvMode, ServingEngine, TailFmt};
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
 use entquant::runtime::fault::{FaultPlan, FaultRuntime, FaultScript};
@@ -192,6 +195,74 @@ fn main() {
     };
     println!("pipeline speedup at 4 shards: {speedup_4:.2}x");
 
+    // compressed KV-cache series: the same 8-lane batch decoded to
+    // context exhaustion per kv mode on a single engine.  At the wall
+    // every lane's cache is full (len == CTX), so the sweep reads the
+    // steady-state footprint: resident bytes per lane, the compression
+    // ratio vs the raw f32 cache, and how many lanes would fit in the
+    // memory the raw cache spends on these 8 (capacity uplift).  The
+    // ring must absorb every materialization — fresh_allocs is pinned
+    // to 0 — and the default QuantTail(F8) config must clear 3x.
+    println!("\n== kv cache: 8 lanes to context exhaustion per kv mode ==");
+    struct KvPoint {
+        mode: &'static str,
+        tokens_per_s: f64,
+        raw_bytes_per_lane: usize,
+        resident_bytes_per_lane: usize,
+        compressed_bytes_per_lane: usize,
+        compression_ratio: f64,
+        lanes_in_raw8_budget: usize,
+        fresh_allocs: usize,
+    }
+    let kv_modes: [(&'static str, KvMode); 4] = [
+        ("raw", KvMode::Raw),
+        ("lossless", KvMode::LosslessTail),
+        ("f8", KvMode::QuantTail(TailFmt::F8)),
+        ("bf16", KvMode::QuantTail(TailFmt::Bf16)),
+    ];
+    let mut kv_points: Vec<KvPoint> = Vec::new();
+    for (name, mode) in kv_modes {
+        let opts = EngineOpts { kv: KvCfg { mode, ..Default::default() }, ..Default::default() };
+        let engine = ServingEngine::new(native_rt(&cm), cm.clone(), opts).expect("engine");
+        let mut st = engine.prefill_state(&decode_batch).expect("prefill");
+        let t0 = std::time::Instant::now();
+        let mut tokens = 0usize;
+        while engine.decode_step(&mut st).expect("decode step") {
+            tokens += decode_batch.requests.len();
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let b = st.kv_bytes();
+        let lanes = decode_batch.requests.len();
+        let ratio = b.raw as f64 / b.resident as f64;
+        let fresh = engine.kv_fresh_allocs();
+        assert_eq!(fresh, 0, "kv mode {name}: steady-state decode must stay on the ring");
+        let point = KvPoint {
+            mode: name,
+            tokens_per_s: tokens as f64 / wall_s,
+            raw_bytes_per_lane: b.raw / lanes,
+            resident_bytes_per_lane: b.resident / lanes,
+            compressed_bytes_per_lane: b.compressed / lanes,
+            compression_ratio: ratio,
+            lanes_in_raw8_budget: b.raw / (b.resident / lanes),
+            fresh_allocs: fresh,
+        };
+        println!(
+            "kv mode={name}: {:.1} tok/s, {} B/lane resident (raw {} B/lane, {:.2}x), {} lanes fit in the raw 8-lane budget",
+            point.tokens_per_s,
+            point.resident_bytes_per_lane,
+            point.raw_bytes_per_lane,
+            point.compression_ratio,
+            point.lanes_in_raw8_budget
+        );
+        if mode == KvMode::QuantTail(TailFmt::F8) {
+            assert!(
+                ratio >= 3.0,
+                "QuantTail(F8) at the default window must compress >= 3x (got {ratio:.2}x)"
+            );
+        }
+        kv_points.push(point);
+    }
+
     // fault drills: kill one shard at a scripted decode step mid-trace
     // on a 2-shard stack — the trace must still complete with zero
     // failures.  Run once with the incremental recovery splice (plus an
@@ -305,6 +376,27 @@ fn main() {
             p.shards, p.pipelined, p.tokens, p.wall_s, p.tokens_per_s
         ));
     }
+    let mut kv_series = String::new();
+    for (i, p) in kv_points.iter().enumerate() {
+        if i > 0 {
+            kv_series.push_str(",\n");
+        }
+        kv_series.push_str(&format!(
+            concat!(
+                "    {{\"kv_mode\": \"{}\", \"tokens_per_s\": {:.1}, \"raw_bytes_per_lane\": {}, ",
+                "\"resident_bytes_per_lane\": {}, \"compressed_bytes_per_lane\": {}, ",
+                "\"compression_ratio\": {:.3}, \"lanes_in_raw8_budget\": {}, \"fresh_allocs\": {}}}"
+            ),
+            p.mode,
+            p.tokens_per_s,
+            p.raw_bytes_per_lane,
+            p.resident_bytes_per_lane,
+            p.compressed_bytes_per_lane,
+            p.compression_ratio,
+            p.lanes_in_raw8_budget,
+            p.fresh_allocs
+        ));
+    }
     let json = format!(
         concat!(
             "{{\n",
@@ -314,6 +406,7 @@ fn main() {
             "  \"max_new\": {max_new},\n",
             "  \"trace\": [\n{series}\n  ],\n",
             "  \"decode\": [\n{decode_series}\n  ],\n",
+            "  \"kv\": [\n{kv_series}\n  ],\n",
             "  \"pipeline_speedup_4shards\": {speedup_4:.3},\n",
             "  \"memory\": {{\"weight_copies\": {copies}, \"resident_compressed_bytes\": {resident}}},\n",
             "  \"fault_drill\": {{\"shards\": 2, \"requests\": {drill_requests}, \"reroutes\": {drill_reroutes}, \"rejoins\": {drill_rejoins}, \"spliced_blocks\": {drill_spliced}, \"recovery_stall_ms_splice\": {stall_splice:.3}, \"recovery_stall_ms_full\": {stall_full:.3}, \"wall_s\": {drill_wall:.3}}}\n",
@@ -324,6 +417,7 @@ fn main() {
         max_new = max_new,
         series = series,
         decode_series = decode_series,
+        kv_series = kv_series,
         speedup_4 = speedup_4,
         copies = drill.weight_copies,
         resident = drill.resident_compressed_bytes,

@@ -1,0 +1,218 @@
+//! Chunk codec for the compressed KV-cache tail (`coordinator::kv`).
+//!
+//! A sealed chunk is a self-contained byte container for a fixed number
+//! of quantized cache rows.  The framing is deliberately tiny — the
+//! 512-byte `FreqTable` serialization used by the weight store would
+//! dwarf a chunk of f8 rows, so present symbols are listed sparsely:
+//!
+//! ```text
+//!   byte 0 == 0 (RAW):  quantized row bytes, verbatim
+//!   byte 0 == 1 (RANS): u16 LE n          present-symbol count (1..=256)
+//!                       n x { u8 sym, u16 LE freq }   freqs sum to 4096
+//!                       rANS payload      (`rans::encode_chunk` framing)
+//! ```
+//!
+//! Sealing deterministically picks whichever encoding is smaller, so a
+//! chunk never costs more than one byte over the quantized rows.  Decode
+//! treats the chunk as untrusted (it can arrive via fault replay of a
+//! half-written step): corrupt framing must surface as `Err`, never a
+//! panic — `entlint`'s `no-panic-on-untrusted` rule covers this module.
+
+use crate::ans::rans::{self, FreqTable, PROB_BITS};
+use crate::entropy::{histogram, normalize_freqs};
+
+pub const FLAG_RAW: u8 = 0;
+pub const FLAG_RANS: u8 = 1;
+
+/// Reusable decode state: the frequency scratch and a slot table that is
+/// rebuilt in place per chunk (`FreqTable::rebuild`), so steady-state
+/// tail decode allocates nothing.
+pub struct ChunkScratch {
+    freq: [u32; 256],
+    table: FreqTable,
+}
+
+impl ChunkScratch {
+    pub fn new() -> Self {
+        ChunkScratch { freq: [0u32; 256], table: FreqTable::from_data(&[]) }
+    }
+}
+
+impl Default for ChunkScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Seal `bytes` (one chunk of quantized rows) into `out`, appending.
+/// Trusted in-process path: the bytes come from our own quantizer.
+pub fn seal_into(bytes: &[u8], out: &mut Vec<u8>) {
+    if bytes.is_empty() {
+        out.push(FLAG_RAW);
+        return;
+    }
+    let freq = normalize_freqs(&histogram(bytes), PROB_BITS);
+    let table = FreqTable::from_freqs(freq);
+    let payload = rans::encode_chunk(bytes, &table);
+    let n_present = freq.iter().filter(|&&f| f > 0).count();
+    let rans_len = 1 + 2 + 3 * n_present + payload.len();
+    if rans_len >= 1 + bytes.len() {
+        out.push(FLAG_RAW);
+        out.extend_from_slice(bytes);
+    } else {
+        out.push(FLAG_RANS);
+        out.extend_from_slice(&(n_present as u16).to_le_bytes());
+        for (sym, &f) in freq.iter().enumerate() {
+            if f > 0 {
+                out.push(sym as u8);
+                out.extend_from_slice(&(f as u16).to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&payload);
+    }
+}
+
+/// Pop `n` bytes off the front of `buf`, erroring (not panicking) on
+/// truncated input.
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8], String> {
+    if buf.len() < n {
+        return Err("kv chunk truncated".into());
+    }
+    let (head, tail) = buf.split_at(n);
+    *buf = tail;
+    Ok(head)
+}
+
+/// Decode a sealed chunk into exactly `out.len()` quantized bytes,
+/// reusing `scratch` so the steady-state decode path is alloc-free.
+// entlint: allow(no-panic-on-untrusted) — every index sits below a `take` length guard
+// (fixed-width reads of slices `take` already bounds-checked)
+// entlint: hot
+pub fn decode_into(chunk: &[u8], scratch: &mut ChunkScratch, out: &mut [u8]) -> Result<(), String> {
+    let mut buf = chunk;
+    let flag = take(&mut buf, 1)?[0];
+    match flag {
+        FLAG_RAW => {
+            if buf.len() != out.len() {
+                return Err("kv chunk raw body length mismatch".into());
+            }
+            out.copy_from_slice(buf);
+            Ok(())
+        }
+        FLAG_RANS => {
+            let nb = take(&mut buf, 2)?;
+            let n = u16::from_le_bytes([nb[0], nb[1]]) as usize;
+            if n == 0 || n > 256 {
+                return Err("kv chunk symbol count out of range".into());
+            }
+            let entries = take(&mut buf, 3 * n)?;
+            scratch.freq.fill(0);
+            for ent in entries.chunks_exact(3) {
+                let sym = ent[0] as usize;
+                let f = u16::from_le_bytes([ent[1], ent[2]]) as u32;
+                if f == 0 {
+                    return Err("kv chunk zero-frequency symbol entry".into());
+                }
+                if scratch.freq[sym] != 0 {
+                    return Err("kv chunk duplicate symbol entry".into());
+                }
+                scratch.freq[sym] = f;
+            }
+            // rebuild validates sum == 2^PROB_BITS; a table that passes
+            // can still mismatch the payload, which the final-state /
+            // consumption checks inside `decode_chunk_into` catch.
+            scratch.table.rebuild(&scratch.freq)?;
+            rans::decode_chunk_into(buf, out, &scratch.table)
+        }
+        _ => Err("kv chunk unknown flag byte".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut sealed = Vec::new();
+        seal_into(data, &mut sealed);
+        let mut scratch = ChunkScratch::new();
+        let mut out = vec![0u8; data.len()];
+        decode_into(&sealed, &mut scratch, &mut out).expect("roundtrip decode");
+        assert_eq!(out, data);
+        sealed
+    }
+
+    #[test]
+    fn raw_fallback_for_incompressible_bytes() {
+        // splitmix-ish pseudo-random bytes: high entropy, rANS with a
+        // sparse-table header cannot win at this size.
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let data: Vec<u8> = (0..256)
+            .map(|_| {
+                x ^= x >> 27;
+                x = x.wrapping_mul(0x2545f4914f6cdd1d);
+                (x >> 56) as u8
+            })
+            .collect();
+        let sealed = roundtrip(&data);
+        assert_eq!(sealed[0], FLAG_RAW);
+        assert_eq!(sealed.len(), 1 + data.len());
+    }
+
+    #[test]
+    fn rans_wins_on_skewed_bytes() {
+        let mut data = vec![0u8; 2048];
+        for (i, b) in data.iter_mut().enumerate() {
+            if i % 17 == 0 {
+                *b = 0x38;
+            }
+        }
+        let sealed = roundtrip(&data);
+        assert_eq!(sealed[0], FLAG_RANS);
+        assert!(sealed.len() < data.len() / 2, "sealed {} bytes", sealed.len());
+    }
+
+    #[test]
+    fn empty_chunk_roundtrips() {
+        let sealed = roundtrip(&[]);
+        assert_eq!(sealed, vec![FLAG_RAW]);
+    }
+
+    #[test]
+    fn corrupt_chunks_error_not_panic() {
+        let mut sealed = Vec::new();
+        seal_into(&vec![0x38u8; 2048], &mut sealed);
+        assert_eq!(sealed[0], FLAG_RANS);
+        let mut scratch = ChunkScratch::new();
+        let mut out = vec![0u8; 2048];
+        // empty container
+        assert!(decode_into(&[], &mut scratch, &mut out).is_err());
+        // unknown flag
+        assert!(decode_into(&[7, 1, 2], &mut scratch, &mut out).is_err());
+        // raw body length mismatch
+        assert!(decode_into(&[FLAG_RAW, 1, 2, 3], &mut scratch, &mut out).is_err());
+        // truncations at every prefix length must error, never panic
+        for cut in 0..sealed.len() {
+            assert!(decode_into(&sealed[..cut], &mut scratch, &mut out).is_err(), "cut {cut}");
+        }
+        // flipped payload byte: caught by the decoder's state checks
+        let mut bad = sealed.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let r = decode_into(&bad, &mut scratch, &mut out);
+        if let Ok(()) = r {
+            // a single flipped byte can in principle still decode to
+            // *different* bytes with valid framing; it must not match
+            assert_ne!(out, vec![0x38u8; 2048]);
+        }
+        // duplicate symbol entry
+        let dup = [FLAG_RANS, 2, 0, 5, 0x00, 0x08, 5, 0x00, 0x08];
+        assert!(decode_into(&dup, &mut scratch, &mut out).is_err());
+        // zero-frequency entry
+        let zf = [FLAG_RANS, 1, 0, 5, 0x00, 0x00];
+        assert!(decode_into(&zf, &mut scratch, &mut out).is_err());
+        // bad sum (single symbol, freq 1 != 4096)
+        let bs = [FLAG_RANS, 1, 0, 5, 0x01, 0x00];
+        assert!(decode_into(&bs, &mut scratch, &mut out).is_err());
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bitstream;
 pub mod huffman;
+pub mod kv_chunk;
 pub mod rans;
 
 pub use bitstream::{Bitstream, DEFAULT_CHUNK, MAX_CHUNK};

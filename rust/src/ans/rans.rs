@@ -43,22 +43,44 @@ pub struct FreqTable {
 }
 
 impl FreqTable {
-    // entlint: allow(no-panic-on-untrusted) — table construction: every index is u8-derived
-    // or bounded by cum[256] == 2^12, asserted before the slot fill
+    // entlint: allow(no-panic-on-untrusted) — table construction: the sum precondition is
+    // checked by `rebuild`, which errors (not panics) on bad input
     pub fn from_freqs(freq: [u32; 256]) -> Self {
+        let mut t = FreqTable {
+            freq: [0u32; 256],
+            cum: [0u32; 257],
+            slots: vec![SlotEntry { sym: 0, freq: 0, cum: 0 }; PROB_SCALE as usize],
+        };
+        let built = t.rebuild(&freq);
+        assert!(built.is_ok(), "frequencies must sum to 2^PROB_BITS");
+        t
+    }
+
+    /// Rebuild this table in place from a new frequency array, reusing
+    /// the slot storage — the alloc-free reuse path for per-step tail
+    /// decode (`ans::kv_chunk`), where a fresh `from_freqs` per chunk
+    /// would put a 4096-entry Vec on every decode step.
+    // entlint: allow(no-panic-on-untrusted) — every index is u8-derived or bounded by
+    // cum[256] == 2^12, checked before the slot fill; bad sums return Err
+    // entlint: hot
+    pub fn rebuild(&mut self, freq: &[u32; 256]) -> Result<(), String> {
         let mut cum = [0u32; 257];
         for i in 0..256 {
             cum[i + 1] = cum[i] + freq[i];
         }
-        assert_eq!(cum[256], PROB_SCALE, "frequencies must sum to 2^PROB_BITS");
-        let mut slots = vec![SlotEntry { sym: 0, freq: 0, cum: 0 }; PROB_SCALE as usize];
+        if cum[256] != PROB_SCALE {
+            return Err("frequencies must sum to 2^PROB_BITS".into());
+        }
+        self.freq = *freq;
+        self.cum = cum;
+        debug_assert_eq!(self.slots.len(), PROB_SCALE as usize);
         for sym in 0..256 {
             for slot in cum[sym]..cum[sym + 1] {
-                slots[slot as usize] =
+                self.slots[slot as usize] =
                     SlotEntry { sym: sym as u8, freq: freq[sym] as u16, cum: cum[sym] as u16 };
             }
         }
-        FreqTable { freq, cum, slots }
+        Ok(())
     }
 
     // entlint: allow(no-panic-on-untrusted) — writes one fixed index of a local [u32; 256]

@@ -26,6 +26,7 @@
 #![allow(clippy::manual_range_contains)]
 
 use super::batcher::Batch;
+use super::kv::{KvBytes, KvCache, KvCfg, KvRing, KvScratch, PackedKv};
 
 use crate::obs::Stopwatch;
 use crate::runtime::{HostTensor, Runtime};
@@ -175,6 +176,12 @@ pub struct EngineOpts {
     /// `false` forces the sequential shard walk — kept for the
     /// pipelined-vs-sequential series in `benches/serve.rs`.
     pub stage_pipeline: bool,
+    /// KV-cache storage knob: `Raw` keeps today's owned-f32 tensors;
+    /// `LosslessTail`/`QuantTail` pack everything older than the
+    /// lossless window into (quantized +) rANS-coded chunks, decoded
+    /// into a recycled ring at attention time.  `LosslessTail` is
+    /// byte-identical to `Raw` on every path.
+    pub kv: KvCfg,
 }
 
 impl Default for EngineOpts {
@@ -187,6 +194,7 @@ impl Default for EngineOpts {
             role: ShardRole::default(),
             splice: true,
             stage_pipeline: true,
+            kv: KvCfg::default(),
         }
     }
 }
@@ -335,6 +343,12 @@ pub struct ServingEngine {
     /// allocations).  Lazily sized on first use, recycled across steps,
     /// cleared whenever the block set changes (splice/truncate/reopen).
     stage_codes: RefCell<Vec<Arc<Vec<f32>>>>,
+    /// double-buffer ring for materialized packed KV caches (None under
+    /// `KvMode::Raw`); sized once from the manifest's decode slots,
+    /// which reroutes never change
+    kv_ring: Option<KvRing>,
+    /// chunk-decode + row staging scratch for the packed KV paths
+    kv_scratch: RefCell<KvScratch>,
 }
 
 impl ServingEngine {
@@ -358,6 +372,15 @@ impl ServingEngine {
         let names = ProgNames::new(&rt.manifest);
         let (resident_codes, offload_paths, decodes) =
             build_residency(&cm, &opts, &value_table, pool.threads(), resolve_offload_dir(&opts))?;
+        // packed-KV materialization ring: one slot pair sized for the
+        // largest decode slot's [b, h, ctx, hd] stream — decode slots
+        // are manifest-level, so reroutes never need to regrow it
+        let kv_ring = opts.kv.mode.tail_fmt().map(|_| {
+            let max_bc = names.block_d.keys().map(|&(b, c)| b * c).max().unwrap_or(0);
+            KvRing::new(max_bc * cfg.n_heads * cfg.head_dim())
+        });
+        let mut kv_scratch = KvScratch::new();
+        kv_scratch.reserve(cfg.n_heads * cfg.head_dim());
         Ok(ServingEngine {
             rt,
             cm,
@@ -375,7 +398,24 @@ impl ServingEngine {
             residency_decodes: Cell::new(decodes),
             spliced: Cell::new(0),
             stage_codes: RefCell::new(Vec::new()),
+            kv_ring,
+            kv_scratch: RefCell::new(kv_scratch),
         })
+    }
+
+    /// Fresh allocations forced on the packed-KV materialization ring
+    /// (0 in steady state, same contract as the decode arena; 0 when
+    /// the ring doesn't exist under `KvMode::Raw`).
+    pub fn kv_fresh_allocs(&self) -> usize {
+        self.kv_ring.as_ref().map_or(0, |r| r.fresh_allocs())
+    }
+
+    /// Run `f` with this engine's packed-KV scratch buffers.  The
+    /// pipelined shard walk materializes/commits packed lanes outside
+    /// `decode_blocks*`, and reusing the engine's scratch keeps that
+    /// path on the same alloc-free budget as the in-engine one.
+    pub(crate) fn with_kv_scratch<R>(&self, f: impl FnOnce(&mut KvScratch) -> R) -> R {
+        f(&mut self.kv_scratch.borrow_mut())
     }
 
     /// Re-aim this engine's pipeline role (reroutes and rejoins promote
@@ -831,7 +871,7 @@ impl ServingEngine {
     pub(crate) fn decode_blocks(
         &self,
         x0: HostTensor,
-        caches: &mut [(HostTensor, HostTensor)],
+        caches: &mut [KvCache],
         pos: i32,
         starts: &HostTensor,
         slot_b: usize,
@@ -851,20 +891,57 @@ impl ServingEngine {
         let mut ans_ms = 0.0;
         self.run_pipelined(&mut ans_ms, |blk, codes| {
             let t1 = Stopwatch::start(); // metrics timing only; never branches decode
-            let (kc, vc) = caches[blk].clone();
             let mut inputs = Vec::with_capacity(21);
-            inputs.push(x.clone());
+            // the executor copies its inputs, so the activation and the
+            // (k, v) pair move in instead of deep-cloning per block
+            inputs.push(std::mem::replace(&mut x, HostTensor::empty()));
             inputs.extend(codes.iter().cloned());
             inputs.extend(consts[blk].scales.iter().cloned());
             inputs.push(consts[blk].norm_attn.clone());
             inputs.push(consts[blk].norm_mlp.clone());
-            inputs.push(kc);
-            inputs.push(vc);
+            let ring_buf = attach_kv(
+                &mut caches[blk],
+                &mut inputs,
+                self.kv_ring.as_ref(),
+                &mut self.kv_scratch.borrow_mut(),
+                blk,
+                slot_b,
+                ctx,
+            )?;
             inputs.push(HostTensor::scalar_i32(pos));
             inputs.push(starts.clone());
-            let mut out = rt.call(block_name, &inputs)?;
+            let mut out = match rt.call(block_name, &inputs) {
+                Ok(out) => out,
+                Err(e) => {
+                    // a replayed step must find the caches it started
+                    // with: move the raw pair back out of the inputs /
+                    // hand the ring buffer home
+                    restore_kv_after_error(
+                        &mut caches[blk],
+                        &mut inputs,
+                        self.kv_ring.as_ref(),
+                        blk,
+                        ring_buf,
+                    );
+                    return Err(e);
+                }
+            };
             x = out.remove(0);
-            caches[blk] = (out.remove(0), out.remove(0));
+            let kn = out.remove(0);
+            let vn = out.remove(0);
+            let committed = commit_kv(
+                &mut caches[blk],
+                kn,
+                vn,
+                pos as usize,
+                slot_b,
+                ctx,
+                &mut self.kv_scratch.borrow_mut(),
+            );
+            if let (Some(buf), Some(ring)) = (&ring_buf, self.kv_ring.as_ref()) {
+                ring.release(blk, buf);
+            }
+            committed?;
             metrics.exec_ms += t1.elapsed_ms();
             Ok(())
         })?;
@@ -933,7 +1010,7 @@ impl ServingEngine {
         &self,
         x0: HostTensor,
         codes: &[Vec<HostTensor>],
-        caches: &mut [(HostTensor, HostTensor)],
+        caches: &mut [KvCache],
         pos: i32,
         starts: &HostTensor,
         slot_b: usize,
@@ -951,20 +1028,57 @@ impl ServingEngine {
         let mut x = x0;
         for blk in 0..self.cm.blocks.len() {
             let t1 = Stopwatch::start(); // metrics timing only; never branches decode
-            let (kc, vc) = caches[blk].clone();
             let mut inputs = Vec::with_capacity(21);
-            inputs.push(x);
+            // the executor copies its inputs, so the activation and the
+            // (k, v) pair move in instead of deep-cloning per block
+            inputs.push(std::mem::replace(&mut x, HostTensor::empty()));
             inputs.extend(codes[blk].iter().cloned());
             inputs.extend(self.consts[blk].scales.iter().cloned());
             inputs.push(self.consts[blk].norm_attn.clone());
             inputs.push(self.consts[blk].norm_mlp.clone());
-            inputs.push(kc);
-            inputs.push(vc);
+            let ring_buf = attach_kv(
+                &mut caches[blk],
+                &mut inputs,
+                self.kv_ring.as_ref(),
+                &mut self.kv_scratch.borrow_mut(),
+                blk,
+                slot_b,
+                ctx,
+            )?;
             inputs.push(HostTensor::scalar_i32(pos));
             inputs.push(starts.clone());
-            let mut out = self.rt.call(block_name, &inputs)?;
+            let mut out = match self.rt.call(block_name, &inputs) {
+                Ok(out) => out,
+                Err(e) => {
+                    // a replayed step must find the caches it started
+                    // with: move the raw pair back out of the inputs /
+                    // hand the ring buffer home
+                    restore_kv_after_error(
+                        &mut caches[blk],
+                        &mut inputs,
+                        self.kv_ring.as_ref(),
+                        blk,
+                        ring_buf,
+                    );
+                    return Err(e);
+                }
+            };
             x = out.remove(0);
-            caches[blk] = (out.remove(0), out.remove(0));
+            let kn = out.remove(0);
+            let vn = out.remove(0);
+            let committed = commit_kv(
+                &mut caches[blk],
+                kn,
+                vn,
+                pos as usize,
+                slot_b,
+                ctx,
+                &mut self.kv_scratch.borrow_mut(),
+            );
+            if let (Some(buf), Some(ring)) = (&ring_buf, self.kv_ring.as_ref()) {
+                ring.release(blk, buf);
+            }
+            committed?;
             metrics.exec_ms += t1.elapsed_ms();
         }
         Ok(x)
@@ -987,7 +1101,7 @@ impl ServingEngine {
         // `prefill` samples one stopwatch for both prefill_ms and
         // ttft_ms (first prefill only) — no second sample here
         let (logits, prefill_caches) = self.prefill(batch, &mut metrics)?;
-        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
+        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, &self.opts.kv, metrics))
     }
 
     /// One greedy decode step for every lane of `st`.  Returns `false`
@@ -1058,8 +1172,10 @@ impl ServingEngine {
 /// lanes' token trajectories — the serve equivalence tests pin this.
 pub struct DecodeState {
     pub batch: Batch,
-    /// per-block (k, v) decode caches, [B, H, C, hd]
-    pub caches: Vec<(HostTensor, HostTensor)>,
+    /// per-block decode caches: raw owned [B, H, C, hd] (k, v) tensor
+    /// pairs, or the packed window+tail layout — uniform across blocks,
+    /// decided at prefill from `EngineOpts::kv`
+    pub caches: Vec<KvCache>,
     /// next token per lane (the most recently generated one)
     pub next: Vec<i32>,
     /// generated bytes per lane (index-aligned with lanes, not
@@ -1080,6 +1196,17 @@ impl DecodeState {
 
     pub fn seq(&self) -> usize {
         self.batch.slot.1
+    }
+
+    /// KV byte accounting summed over every block — alloc-free, swept
+    /// per tick into the `kv_*` serve gauges.
+    // entlint: hot
+    pub fn kv_bytes(&self) -> KvBytes {
+        let mut b = KvBytes::default();
+        for c in &self.caches {
+            b.add(c.bytes());
+        }
+        b
     }
 
     /// Graft a single-lane state (same seq, same `pos`) into `lane`:
@@ -1111,9 +1238,17 @@ impl DecodeState {
             src.caches.len(),
             self.caches.len()
         );
-        for ((dk, dv), (sk, sv)) in self.caches.iter_mut().zip(&src.caches) {
-            copy_cache_lane(dk, lane, sk, 0)?;
-            copy_cache_lane(dv, lane, sv, 0)?;
+        for (dst, srcc) in self.caches.iter_mut().zip(&src.caches) {
+            match (dst, srcc) {
+                (KvCache::Raw(dk, dv), KvCache::Raw(sk, sv)) => {
+                    copy_cache_lane(dk, lane, sk, 0)?;
+                    copy_cache_lane(dv, lane, sv, 0)?;
+                }
+                (KvCache::Packed(dp), KvCache::Packed(sp)) => {
+                    dp.adopt_lane_from(lane, sp, 0).map_err(|e| anyhow!("adopt_lane: {e}"))?;
+                }
+                _ => anyhow::bail!("adopt_lane: kv mode mismatch between states"),
+            }
         }
         let req = src
             .batch
@@ -1159,17 +1294,38 @@ impl DecodeState {
             );
         }
         let mut caches = Vec::with_capacity(self.caches.len());
-        for (k, v) in &self.caches {
-            let dims = k.dims();
-            anyhow::ensure!(dims.len() == 4, "compact: cache must be 4-d, got {dims:?}");
-            let (h, hd) = (dims[1], dims[3]);
-            let mut nk = HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
-            let mut nv = HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
-            for (dst, &src) in keep.iter().enumerate() {
-                copy_cache_lane(&mut nk, dst, k, src)?;
-                copy_cache_lane(&mut nv, dst, v, src)?;
+        for cache in &self.caches {
+            match cache {
+                KvCache::Raw(k, v) => {
+                    let dims = k.dims();
+                    anyhow::ensure!(dims.len() == 4, "compact: cache must be 4-d, got {dims:?}");
+                    let (h, hd) = (dims[1], dims[3]);
+                    let mut nk =
+                        HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
+                    let mut nv =
+                        HostTensor::f32(vec![0.0; nb * h * new_ctx * hd], &[nb, h, new_ctx, hd]);
+                    for (dst, &src) in keep.iter().enumerate() {
+                        copy_cache_lane(&mut nk, dst, k, src)?;
+                        copy_cache_lane(&mut nv, dst, v, src)?;
+                    }
+                    caches.push(KvCache::Raw(nk, nv));
+                }
+                KvCache::Packed(p) => {
+                    let mut np =
+                        PackedKv::new(p.fmt(), p.window(), p.h(), p.hd(), new_ctx, nb);
+                    for (dst, &src) in keep.iter().enumerate() {
+                        np.adopt_lane_from(dst, p, src).map_err(|e| anyhow!("compact: {e}"))?;
+                    }
+                    // unoccupied lanes: `pos` committed zero rows — the
+                    // packed analogue of the raw path's fresh zeroed
+                    // tensor at every readable position
+                    for lane in keep.len()..nb {
+                        np.zero_fill_lane(lane, self.pos)
+                            .map_err(|e| anyhow!("compact zero-fill: {e}"))?;
+                    }
+                    caches.push(KvCache::Packed(Box::new(np)));
+                }
             }
-            caches.push((nk, nv));
         }
         // unoccupied lanes: fully masked (start == seq) with a benign
         // token 0 — lane independence keeps them inert
@@ -1208,10 +1364,18 @@ pub(crate) fn state_from_prefill(
     prefill_caches: &[(HostTensor, HostTensor)],
     cfg: &crate::model::Config,
     ctx: usize,
+    kv: &KvCfg,
     metrics: Metrics,
 ) -> DecodeState {
     let (b, s) = batch.slot;
-    let caches = expand_prefill_caches(prefill_caches, b, cfg.n_heads, cfg.head_dim(), s, ctx);
+    let (h, hd) = (cfg.n_heads, cfg.head_dim());
+    let caches = match kv.mode.tail_fmt() {
+        None => expand_prefill_caches(prefill_caches, b, h, hd, s, ctx)
+            .into_iter()
+            .map(|(k, v)| KvCache::Raw(k, v))
+            .collect(),
+        Some(fmt) => pack_prefill_caches(prefill_caches, b, h, hd, s, ctx, fmt, kv.window),
+    };
     // greedy pick from the last prefill position
     let vsize = cfg.vocab;
     let lf = logits.as_f32();
@@ -1336,6 +1500,152 @@ pub(crate) fn copy_cache_lane(
         }
     }
     Ok(())
+}
+
+/// Indices of the (k, v) cache pair in the 21-input decode executable
+/// calling convention (`[x, 7 codes, 7 scales, norm_attn, norm_mlp,
+/// kc, vc, pos, starts]`) — the error path pulls the moved raw pair
+/// back out of the input vector by these.
+const KV_INPUT_AT: usize = 17;
+
+/// Attach block `blk`'s (k, v) executor inputs from its cache:
+/// `Raw` moves the owned pair in (zero-copy — `restore_kv_after_error`
+/// moves it back if the call fails), `Packed` decodes window + tail
+/// into the materialization ring and attaches Arc-backed views.
+/// Returns the ring buffer to release after the call, if one was
+/// acquired.
+// entlint: hot
+fn attach_kv(
+    cache: &mut KvCache,
+    inputs: &mut Vec<HostTensor>,
+    ring: Option<&KvRing>,
+    scratch: &mut KvScratch,
+    blk: usize,
+    slot_b: usize,
+    ctx: usize,
+) -> Result<Option<Arc<Vec<f32>>>> {
+    debug_assert_eq!(inputs.len(), KV_INPUT_AT);
+    match cache {
+        KvCache::Raw(..) => {
+            let placeholder = KvCache::Raw(HostTensor::empty(), HostTensor::empty());
+            let (kc, vc) = match std::mem::replace(cache, placeholder) {
+                KvCache::Raw(k, v) => (k, v),
+                KvCache::Packed(_) => unreachable!("matched Raw above"),
+            };
+            inputs.push(kc);
+            inputs.push(vc);
+            Ok(None)
+        }
+        KvCache::Packed(p) => {
+            let ring = ring.ok_or_else(|| anyhow!("packed kv cache but no ring (kv mode Raw)"))?;
+            let (h, hd) = (p.h(), p.hd());
+            let n = slot_b * h * ctx * hd;
+            let half = ring.half();
+            anyhow::ensure!(n <= half, "kv ring too small: {n} > {half}");
+            let mut buf = ring.acquire(blk);
+            let materialized = {
+                let data = Arc::get_mut(&mut buf).expect("acquired ring buffer is exclusive");
+                let (dk, dv) = data.split_at_mut(half);
+                p.materialize_into(&mut dk[..n], &mut dv[..n], 0, slot_b, ctx, scratch)
+            };
+            if let Err(e) = materialized {
+                ring.release(blk, &buf);
+                return Err(anyhow!("kv materialize (block {blk}): {e}"));
+            }
+            let dims = [slot_b, h, ctx, hd];
+            inputs.push(HostTensor::f32_view(Arc::clone(&buf), 0, n, &dims));
+            inputs.push(HostTensor::f32_view(Arc::clone(&buf), half, n, &dims));
+            Ok(Some(buf))
+        }
+    }
+}
+
+/// Undo `attach_kv` after a failed executor call so fault replay finds
+/// the caches it started with: the raw pair moves back out of the
+/// input vector; a ring buffer goes home to its slot.
+fn restore_kv_after_error(
+    cache: &mut KvCache,
+    inputs: &mut Vec<HostTensor>,
+    ring: Option<&KvRing>,
+    blk: usize,
+    ring_buf: Option<Arc<Vec<f32>>>,
+) {
+    if let Some(buf) = ring_buf {
+        if let Some(r) = ring {
+            r.release(blk, &buf);
+        }
+        return;
+    }
+    if inputs.len() < KV_INPUT_AT + 2 {
+        return; // attach never ran; nothing was moved
+    }
+    let mut pair = inputs.drain(KV_INPUT_AT..KV_INPUT_AT + 2);
+    if let (Some(kc), Some(vc)) = (pair.next(), pair.next()) {
+        drop(pair);
+        *cache = KvCache::Raw(kc, vc);
+    }
+}
+
+/// Fold one block's executor outputs back into its cache: `Raw`
+/// replaces the owned tensors; `Packed` extracts and commits only row
+/// `pos` (appending, or overwriting verbatim on a replayed step).
+// entlint: hot
+fn commit_kv(
+    cache: &mut KvCache,
+    k_new: HostTensor,
+    v_new: HostTensor,
+    pos: usize,
+    slot_b: usize,
+    ctx: usize,
+    scratch: &mut KvScratch,
+) -> Result<()> {
+    match cache {
+        KvCache::Raw(k, v) => {
+            *k = k_new;
+            *v = v_new;
+            Ok(())
+        }
+        KvCache::Packed(p) => p
+            .commit_from_outputs(k_new.as_f32(), v_new.as_f32(), 0, slot_b, ctx, pos, scratch)
+            .map_err(|e| anyhow!("kv commit at pos {pos}: {e}")),
+    }
+}
+
+/// Pack prefill caches [B,H,S,hd] into the window+tail layout with
+/// rows `0..s` committed per lane — the packed analogue of
+/// `expand_prefill_caches` (positions past `s` simply don't exist yet;
+/// decode steps append them).
+pub(crate) fn pack_prefill_caches(
+    prefill: &[(HostTensor, HostTensor)],
+    b: usize,
+    h: usize,
+    hd: usize,
+    s: usize,
+    ctx: usize,
+    fmt: super::kv::TailFmt,
+    window: usize,
+) -> Vec<KvCache> {
+    let mut row_k = vec![0.0f32; h * hd];
+    let mut row_v = vec![0.0f32; h * hd];
+    prefill
+        .iter()
+        .map(|(k, v)| {
+            let (kf, vf) = (k.as_f32(), v.as_f32());
+            let mut p = PackedKv::new(fmt, window, h, hd, ctx, b);
+            for pos in 0..s {
+                for lane in 0..b {
+                    for head in 0..h {
+                        let so = ((lane * h + head) * s + pos) * hd;
+                        row_k[head * hd..head * hd + hd].copy_from_slice(&kf[so..so + hd]);
+                        row_v[head * hd..head * hd + hd].copy_from_slice(&vf[so..so + hd]);
+                    }
+                    p.commit_row(lane, pos, &row_k, &row_v)
+                        .expect("in-order prefill rows are always in-contract");
+                }
+            }
+            KvCache::Packed(Box::new(p))
+        })
+        .collect()
 }
 
 /// A zero-copy `HostTensor` view over a container's shared matrix.
@@ -1563,6 +1873,7 @@ pub(crate) fn argmax(x: &[f32]) -> usize {
 mod tests {
     use super::*;
     use crate::coordinator::batcher::{pack, Request};
+    use crate::coordinator::kv::{KvMode, TailFmt};
     use crate::model::loader::synthetic_model;
     use crate::model::Config;
     use crate::runtime::Manifest;
@@ -1761,6 +2072,75 @@ mod tests {
             engine.decode_step(&mut one).unwrap();
         }
         assert_eq!(one.outputs[0], want[1]);
+    }
+
+    /// Engine over the same tiny model with a packed-KV config.
+    fn native_engine_kv(kv: KvCfg) -> ServingEngine {
+        let cm = tiny_compressed();
+        let rt = native_rt(&cm);
+        ServingEngine::new(rt, cm, EngineOpts { kv, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn lossless_tail_is_byte_identical_to_raw() {
+        let raw = native_engine();
+        let batch = &pack(&[req(3, 9), req(4, 12)], &[(2, 16)])[0];
+        let (want, _) = raw.generate(batch, 7).unwrap();
+        let kv = native_engine_kv(KvCfg { mode: KvMode::LosslessTail, window: 2 });
+        let (got, _) = kv.generate(batch, 7).unwrap();
+        assert_eq!(got, want, "lossless tail must not change a single token");
+        assert_eq!(kv.kv_fresh_allocs(), 0, "packed decode must stay on the ring");
+    }
+
+    #[test]
+    fn quant_tail_modes_run_deterministically_with_surgery() {
+        for fmt in [TailFmt::F8, TailFmt::Bf16] {
+            let engine =
+                native_engine_kv(KvCfg { mode: KvMode::QuantTail(fmt), window: 2 });
+            let (r0, r1) = (req(3, 9), req(4, 12));
+            let joint = &pack(&[r0.clone(), r1.clone()], &[(2, 16)])[0];
+            let (want, _) = engine.generate(joint, 7).unwrap();
+            let (again, _) = engine.generate(joint, 7).unwrap();
+            assert_eq!(want, again, "{fmt:?}: repeated runs must agree");
+
+            // lane surgery on packed caches: a solo-prefilled lane has a
+            // byte-identical packed stream to the joint-prefilled one
+            // (prefill is lane-independent and chunk/window boundaries
+            // are pure functions of len), so adoption must reproduce
+            // the joint trajectory exactly.
+            let mut main = engine.prefill_state(&pack(&[r0.clone()], &[(2, 16)])[0]).unwrap();
+            let solo = engine.prefill_state(&pack(&[r1.clone()], &[(1, 16)])[0]).unwrap();
+            main.adopt_lane(solo, 1).unwrap();
+            for _ in 0..6 {
+                assert!(engine.decode_step(&mut main).unwrap());
+            }
+            assert_eq!(main.outputs[0], want[0], "{fmt:?}: resident lane perturbed");
+            assert_eq!(main.outputs[1], want[1], "{fmt:?}: adopted lane diverged");
+
+            // compact mid-flight: packed lanes re-seat into the smaller
+            // slot with their sealed chunks and windows intact
+            let wide = &pack(&[r0, r1], &[(4, 16)])[0];
+            let (wide_want, _) = engine.generate(wide, 7).unwrap();
+            let mut st = engine.prefill_state(wide).unwrap();
+            for _ in 0..2 {
+                engine.decode_step(&mut st).unwrap();
+            }
+            let bytes = st.kv_bytes();
+            assert!(
+                bytes.resident < bytes.raw,
+                "{fmt:?}: quantized tail must shrink the cache ({} vs {})",
+                bytes.resident,
+                bytes.raw
+            );
+            let mut small =
+                st.compact(&[0, 1], (2, 16), engine.decode_ctx(2).unwrap()).unwrap();
+            for _ in 0..4 {
+                engine.decode_step(&mut small).unwrap();
+            }
+            assert_eq!(small.outputs[0], wide_want[0], "{fmt:?}: compact lane 0");
+            assert_eq!(small.outputs[1], wide_want[1], "{fmt:?}: compact lane 1");
+            assert_eq!(engine.kv_fresh_allocs(), 0, "{fmt:?}: ring must absorb decode");
+        }
     }
 
     #[test]

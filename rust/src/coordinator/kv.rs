@@ -1,0 +1,872 @@
+//! Compressed per-lane KV cache: the paper's weight machinery
+//! (`quant/` f8/bf16 + chunked rANS from `ans/`) applied to decode
+//! state, which at serving concurrency — with `weight_copies == 1`
+//! pinned — is the resident-bytes ceiling.
+//!
+//! Layout per lane, per block, per stream (K and V separately):
+//!
+//! ```text
+//!   positions 0 .. len
+//!   ├── sealed chunks ──┬── pending ──┬── lossless window ──┤
+//!   │ CHUNK_ROWS rows   │ < CHUNK_ROWS│ last min(len, W)    │
+//!   │ quantized + rANS  │ quantized   │ raw f32 rows        │
+//! ```
+//!
+//! The split is a pure function of `len`: `window_rows = min(len, W)`,
+//! tail rows fill sealed chunks of `CHUNK_ROWS` with the remainder
+//! pending.  That determinism is what makes fault replay rewrite a
+//! partially-committed step verbatim — re-committing row `pos` after a
+//! replay reproduces the exact same chunk boundaries and bytes.
+//!
+//! At attention time the tail is decoded into a `KvRing` — the same
+//! double-buffer `Arc` discipline as the weight `DecodeArena`, with its
+//! own counted `fresh_allocs` gauge pinned to zero in steady state — and
+//! handed to the executor as `F32View` tensors.  Only row `pos` of the
+//! executor's output is re-committed, so decode never persists scratch.
+//!
+//! `LosslessTail` stores exact f32 bytes (quantizer = identity), which
+//! is why it is byte-identical to the `Raw` cache on every path,
+//! including `adopt_lane`/`compact` surgery and fault→recover→rejoin.
+
+// commit/materialize mirror the executor calling convention's wide
+// argument lists (lane ranges + tensor geometry), same as engine.rs
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ans::kv_chunk::{self, ChunkScratch};
+use crate::quant::{bf16, f8e4m3};
+use crate::runtime::HostTensor;
+
+/// Rows per sealed tail chunk.  Small enough that a short context still
+/// reaches the entropy-coded regime, large enough to amortize the
+/// sparse-table header.
+pub const CHUNK_ROWS: usize = 16;
+/// Default lossless-window length (recent positions kept as raw f32).
+pub const DEFAULT_WINDOW: usize = 4;
+
+/// Storage format of tail rows (everything older than the window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TailFmt {
+    /// 4 B/value — exact; `LosslessTail` uses this.
+    F32,
+    /// 1 B/value f8 E4M3 (RNE, saturating) — the default lossy knob.
+    F8,
+    /// 2 B/value bfloat16 (RNE).
+    Bf16,
+}
+
+impl TailFmt {
+    pub fn bytes_per_val(self) -> usize {
+        match self {
+            TailFmt::F32 => 4,
+            TailFmt::F8 => 1,
+            TailFmt::Bf16 => 2,
+        }
+    }
+}
+
+/// The `EngineOpts` quality knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMode {
+    /// Today's raw owned-f32 cache tensors; no packing anywhere.
+    Raw,
+    /// Packed layout, f32 tail: byte-identical outputs to `Raw`, still
+    /// entropy-coded (rANS over f32 bytes) when the data allows.
+    LosslessTail,
+    /// Packed layout with a quantized tail.
+    QuantTail(TailFmt),
+}
+
+impl KvMode {
+    /// Tail storage format, or `None` for the raw path.
+    pub fn tail_fmt(self) -> Option<TailFmt> {
+        match self {
+            KvMode::Raw => None,
+            KvMode::LosslessTail => Some(TailFmt::F32),
+            KvMode::QuantTail(f) => Some(f),
+        }
+    }
+
+    /// Parse a CLI spelling (`serve --kv-mode`).
+    pub fn parse(s: &str) -> Result<KvMode, String> {
+        match s {
+            "raw" => Ok(KvMode::Raw),
+            "lossless" => Ok(KvMode::LosslessTail),
+            "f8" => Ok(KvMode::QuantTail(TailFmt::F8)),
+            "bf16" => Ok(KvMode::QuantTail(TailFmt::Bf16)),
+            _ => Err(format!("unknown kv mode '{s}' (want raw|lossless|f8|bf16)")),
+        }
+    }
+}
+
+/// KV-cache configuration carried by `EngineOpts`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvCfg {
+    pub mode: KvMode,
+    /// Lossless-window length W (raw f32 rows); clamped to >= 1.
+    pub window: usize,
+}
+
+impl Default for KvCfg {
+    fn default() -> Self {
+        KvCfg { mode: KvMode::Raw, window: DEFAULT_WINDOW }
+    }
+}
+
+/// Resident-byte accounting for the gauges swept per scheduler tick.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvBytes {
+    /// What the same cache would occupy as raw f32 `[B,H,C,hd]` pairs.
+    pub raw: usize,
+    /// Bytes actually resident (window + pending + sealed chunks, or the
+    /// full raw tensors in `Raw` mode).
+    pub resident: usize,
+    /// The entropy-coded subset of `resident` (pending + sealed chunks).
+    pub compressed: usize,
+}
+
+impl KvBytes {
+    pub fn add(&mut self, o: KvBytes) {
+        self.raw += o.raw;
+        self.resident += o.resident;
+        self.compressed += o.compressed;
+    }
+}
+
+/// One block's cache in `DecodeState`: either the raw owned-f32
+/// `(k, v)` tensor pair (today's layout, `KvMode::Raw`) or the packed
+/// window+tail layout.  A state is uniform — every block carries the
+/// same variant, decided once at prefill from `EngineOpts::kv`.
+#[derive(Clone)]
+pub enum KvCache {
+    Raw(HostTensor, HostTensor),
+    Packed(Box<PackedKv>),
+}
+
+impl KvCache {
+    /// Byte accounting for the per-tick gauges.  Alloc-free.
+    // entlint: hot
+    pub fn bytes(&self) -> KvBytes {
+        match self {
+            KvCache::Raw(k, v) => {
+                let n = (k.as_f32().len() + v.as_f32().len()) * 4;
+                KvBytes { raw: n, resident: n, compressed: 0 }
+            }
+            KvCache::Packed(p) => p.bytes(),
+        }
+    }
+
+    pub fn packed(&self) -> Option<&PackedKv> {
+        match self {
+            KvCache::Raw(..) => None,
+            KvCache::Packed(p) => Some(p),
+        }
+    }
+
+    pub fn packed_mut(&mut self) -> Option<&mut PackedKv> {
+        match self {
+            KvCache::Raw(..) => None,
+            KvCache::Packed(p) => Some(p),
+        }
+    }
+}
+
+/// One stream (K or V) of one lane.
+#[derive(Clone)]
+struct LaneStream {
+    /// Sealed tail chunks, `CHUNK_ROWS` rows each, oldest first.
+    chunks: Vec<Vec<u8>>,
+    /// Quantized tail rows not yet sealed (< `CHUNK_ROWS` rows).
+    pending: Vec<u8>,
+    /// Raw f32 recent rows, row-contiguous, `min(len, W)` rows.
+    window: Vec<f32>,
+}
+
+impl LaneStream {
+    fn empty() -> Self {
+        LaneStream { chunks: Vec::new(), pending: Vec::new(), window: Vec::new() }
+    }
+}
+
+/// One lane's K and V streams plus the committed-row count.
+#[derive(Clone)]
+struct LaneKv {
+    k: LaneStream,
+    v: LaneStream,
+    /// Committed positions are `0..len`.
+    len: usize,
+}
+
+impl LaneKv {
+    fn empty() -> Self {
+        LaneKv { k: LaneStream::empty(), v: LaneStream::empty(), len: 0 }
+    }
+}
+
+/// Quantize one row (layout `[h][hd]`, `row_vals` f32s) onto `out`.
+// entlint: hot
+fn quantize_row(fmt: TailFmt, row: &[f32], out: &mut Vec<u8>) {
+    match fmt {
+        TailFmt::F32 => {
+            for &x in row {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        TailFmt::F8 => {
+            for &x in row {
+                out.push(f8e4m3::encode(x));
+            }
+        }
+        TailFmt::Bf16 => {
+            for &x in row {
+                out.extend_from_slice(&bf16::encode(x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Dequantize one row from `bytes` into `out` (`row_vals` f32s).
+// entlint: hot
+fn dequant_row(fmt: TailFmt, bytes: &[u8], out: &mut [f32]) {
+    match fmt {
+        TailFmt::F32 => {
+            for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        TailFmt::F8 => {
+            for (o, &b) in out.iter_mut().zip(bytes.iter()) {
+                *o = f8e4m3::decode(b);
+            }
+        }
+        TailFmt::Bf16 => {
+            for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                *o = bf16::decode(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+    }
+}
+
+/// Reusable scratch for packed-cache materialize/commit: chunk decode
+/// state, a chunk-sized byte buffer, and per-row f32 staging.  One per
+/// engine; capacities are sized up front so the steady-state decode
+/// path never grows them.
+pub struct KvScratch {
+    chunk: ChunkScratch,
+    bytes: Vec<u8>,
+    row: Vec<f32>,
+    row_k: Vec<f32>,
+    row_v: Vec<f32>,
+}
+
+impl KvScratch {
+    pub fn new() -> Self {
+        KvScratch {
+            chunk: ChunkScratch::new(),
+            bytes: Vec::new(),
+            row: Vec::new(),
+            row_k: Vec::new(),
+            row_v: Vec::new(),
+        }
+    }
+
+    /// Pre-size for a row of `row_vals` values (chunk buffer sized for
+    /// the widest format, 4 B/value).
+    pub fn reserve(&mut self, row_vals: usize) {
+        let chunk_cap = CHUNK_ROWS * row_vals * 4;
+        if self.bytes.capacity() < chunk_cap {
+            self.bytes.reserve(chunk_cap - self.bytes.len());
+        }
+        if self.row.len() < row_vals {
+            self.row.resize(row_vals, 0.0);
+        }
+        if self.row_k.len() < row_vals {
+            self.row_k.resize(row_vals, 0.0);
+            self.row_v.resize(row_vals, 0.0);
+        }
+    }
+}
+
+impl Default for KvScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Packed K/V storage for every lane of one block.
+#[derive(Clone)]
+pub struct PackedKv {
+    fmt: TailFmt,
+    /// Lossless-window length W (>= 1).
+    window: usize,
+    h: usize,
+    hd: usize,
+    /// Context capacity — only byte accounting reads this (materialize
+    /// takes the live `ctx` as a parameter); `compact` rescales it.
+    ctx: usize,
+    lanes: Vec<LaneKv>,
+}
+
+impl PackedKv {
+    pub fn new(fmt: TailFmt, window: usize, h: usize, hd: usize, ctx: usize, lanes: usize) -> Self {
+        PackedKv {
+            fmt,
+            window: window.max(1),
+            h,
+            hd,
+            ctx,
+            lanes: vec![LaneKv::empty(); lanes],
+        }
+    }
+
+    pub fn fmt(&self) -> TailFmt {
+        self.fmt
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    pub fn hd(&self) -> usize {
+        self.hd
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Committed rows of lane `lane`.
+    pub fn lane_len(&self, lane: usize) -> usize {
+        self.lanes[lane].len
+    }
+
+    fn row_vals(&self) -> usize {
+        self.h * self.hd
+    }
+
+    fn row_bytes(&self) -> usize {
+        self.row_vals() * self.fmt.bytes_per_val()
+    }
+
+    /// Geometry + knob compatibility for lane surgery between states.
+    pub fn compatible(&self, o: &PackedKv) -> bool {
+        self.fmt == o.fmt && self.window == o.window && self.h == o.h && self.hd == o.hd
+    }
+
+    /// Commit one row at `pos` for lane `lane`.  `pos == len` appends
+    /// (rolling the window / sealing a chunk as needed); `pos < len`
+    /// must land inside the lossless window and overwrites in place —
+    /// the fault-replay path, which rewrites the same bytes verbatim.
+    // entlint: hot
+    pub fn commit_row(
+        &mut self,
+        lane: usize,
+        pos: usize,
+        row_k: &[f32],
+        row_v: &[f32],
+    ) -> Result<(), String> {
+        let row_vals = self.row_vals();
+        let (fmt, window) = (self.fmt, self.window);
+        let lk = self
+            .lanes
+            .get_mut(lane)
+            .ok_or_else(|| "kv commit: lane out of range".to_string())?;
+        if row_k.len() != row_vals || row_v.len() != row_vals {
+            return Err("kv commit: row width mismatch".into());
+        }
+        if pos > lk.len {
+            return Err("kv commit: position gap".into());
+        }
+        if pos < lk.len {
+            // Replay overwrite: the interrupted step re-commits the row
+            // it had already written for some lanes.  It is always the
+            // newest row, so it sits inside the window by construction.
+            let wrows = lk.len.min(window);
+            let base = lk.len - wrows;
+            if pos < base {
+                return Err("kv commit: overwrite below the lossless window".into());
+            }
+            let at = (pos - base) * row_vals;
+            lk.k.window[at..at + row_vals].copy_from_slice(row_k);
+            lk.v.window[at..at + row_vals].copy_from_slice(row_v);
+            return Ok(());
+        }
+        let spill = lk.len >= window;
+        for (stream, row) in [(&mut lk.k, row_k), (&mut lk.v, row_v)] {
+            if spill {
+                // Window full: quantize its oldest row onto the tail.
+                quantize_row(fmt, &stream.window[..row_vals], &mut stream.pending);
+                if stream.pending.len() == CHUNK_ROWS * row_vals * fmt.bytes_per_val() {
+                    // entlint: allow(hot-path-alloc-free) — sealing allocates one chunk
+                    // container per CHUNK_ROWS commits per stream (amortized, not
+                    // per-step); the per-step append path below is alloc-free
+                    let mut sealed = Vec::new();
+                    kv_chunk::seal_into(&stream.pending, &mut sealed);
+                    stream.chunks.push(sealed);
+                    stream.pending.clear();
+                }
+                stream.window.copy_within(row_vals.., 0);
+                stream.window.truncate((window - 1) * row_vals);
+            }
+            stream.window.extend_from_slice(row);
+        }
+        lk.len += 1;
+        Ok(())
+    }
+
+    /// Commit row `pos` for `nlanes` lanes (starting at `lane0`) from
+    /// executor output tensors laid out `[nlanes, h, ctx, hd]`.
+    // entlint: hot
+    pub fn commit_from_outputs(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        lane0: usize,
+        nlanes: usize,
+        ctx: usize,
+        pos: usize,
+        scratch: &mut KvScratch,
+    ) -> Result<(), String> {
+        let (h, hd) = (self.h, self.hd);
+        let row_vals = self.row_vals();
+        scratch.reserve(row_vals);
+        if k.len() < nlanes * h * ctx * hd || v.len() < nlanes * h * ctx * hd {
+            return Err("kv commit: output tensor too small".into());
+        }
+        for li in 0..nlanes {
+            for head in 0..h {
+                let src = ((li * h + head) * ctx + pos) * hd;
+                scratch.row_k[head * hd..head * hd + hd].copy_from_slice(&k[src..src + hd]);
+                scratch.row_v[head * hd..head * hd + hd].copy_from_slice(&v[src..src + hd]);
+            }
+            self.commit_row_from_scratch(lane0 + li, pos, scratch)?;
+        }
+        Ok(())
+    }
+
+    // entlint: hot
+    fn commit_row_from_scratch(
+        &mut self,
+        lane: usize,
+        pos: usize,
+        scratch: &mut KvScratch,
+    ) -> Result<(), String> {
+        let row_vals = self.row_vals();
+        let row_k = std::mem::take(&mut scratch.row_k);
+        let row_v = std::mem::take(&mut scratch.row_v);
+        let r = self.commit_row(lane, pos, &row_k[..row_vals], &row_v[..row_vals]);
+        scratch.row_k = row_k;
+        scratch.row_v = row_v;
+        r
+    }
+
+    /// Decode lanes `lane0 .. lane0+nlanes` into `dk`/`dv`, each laid
+    /// out `[nlanes, h, ctx, hd]` (destination lane index is rebased to
+    /// 0).  Rows at positions `>= len` are left untouched: attention
+    /// masks them to an exact-zero softmax weight (and the executor
+    /// overwrites row `pos` before reading it), so they never reach an
+    /// output — skipping the memset keeps the hot path cheap.
+    // entlint: hot
+    pub fn materialize_into(
+        &self,
+        dk: &mut [f32],
+        dv: &mut [f32],
+        lane0: usize,
+        nlanes: usize,
+        ctx: usize,
+        scratch: &mut KvScratch,
+    ) -> Result<(), String> {
+        let (h, hd) = (self.h, self.hd);
+        let row_vals = self.row_vals();
+        let row_bytes = self.row_bytes();
+        scratch.reserve(row_vals);
+        if dk.len() < nlanes * h * ctx * hd || dv.len() < nlanes * h * ctx * hd {
+            return Err("kv materialize: destination too small".into());
+        }
+        if lane0 + nlanes > self.lanes.len() {
+            return Err("kv materialize: lane range out of bounds".into());
+        }
+        for li in 0..nlanes {
+            let lk = &self.lanes[lane0 + li];
+            if lk.len > ctx {
+                return Err("kv materialize: lane longer than context".into());
+            }
+            let wrows = lk.len.min(self.window);
+            let tail = lk.len - wrows;
+            for (stream, dst) in [(&lk.k, &mut *dk), (&lk.v, &mut *dv)] {
+                // sealed chunks
+                for (ci, chunk) in stream.chunks.iter().enumerate() {
+                    scratch.bytes.resize(CHUNK_ROWS * row_bytes, 0);
+                    kv_chunk::decode_into(chunk, &mut scratch.chunk, &mut scratch.bytes)?;
+                    for r in 0..CHUNK_ROWS {
+                        dequant_row(
+                            self.fmt,
+                            &scratch.bytes[r * row_bytes..(r + 1) * row_bytes],
+                            &mut scratch.row[..row_vals],
+                        );
+                        scatter_row(
+                            &scratch.row[..row_vals],
+                            dst,
+                            li,
+                            ci * CHUNK_ROWS + r,
+                            h,
+                            hd,
+                            ctx,
+                        );
+                    }
+                }
+                // pending (quantized, unsealed) rows
+                let chunked = stream.chunks.len() * CHUNK_ROWS;
+                for (r, p) in (chunked..tail).enumerate() {
+                    dequant_row(
+                        self.fmt,
+                        &stream.pending[r * row_bytes..(r + 1) * row_bytes],
+                        &mut scratch.row[..row_vals],
+                    );
+                    scatter_row(&scratch.row[..row_vals], dst, li, p, h, hd, ctx);
+                }
+                // lossless window
+                for w in 0..wrows {
+                    scatter_row(
+                        &stream.window[w * row_vals..(w + 1) * row_vals],
+                        dst,
+                        li,
+                        tail + w,
+                        h,
+                        hd,
+                        ctx,
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Graft lane `src_lane` of `src` into `dst_lane` here (the
+    /// `adopt_lane` path).  Packed lanes are self-contained, so this is
+    /// a byte-exact clone of the lane's streams.
+    pub fn adopt_lane_from(
+        &mut self,
+        dst_lane: usize,
+        src: &PackedKv,
+        src_lane: usize,
+    ) -> Result<(), String> {
+        if !self.compatible(src) {
+            return Err("kv adopt: mode/geometry mismatch".into());
+        }
+        if dst_lane >= self.lanes.len() || src_lane >= src.lanes.len() {
+            return Err("kv adopt: lane out of range".into());
+        }
+        self.lanes[dst_lane] = src.lanes[src_lane].clone();
+        Ok(())
+    }
+
+    /// Fill lane `lane` with `rows` committed all-zero rows (the
+    /// `compact` padding for unoccupied slots — matches the zero rows a
+    /// fresh raw tensor carries at those positions).
+    pub fn zero_fill_lane(&mut self, lane: usize, rows: usize) -> Result<(), String> {
+        let zrow = vec![0.0f32; self.row_vals()];
+        self.lanes[lane] = LaneKv::empty();
+        for p in 0..rows {
+            self.commit_row(lane, p, &zrow, &zrow)?;
+        }
+        Ok(())
+    }
+
+    /// Byte accounting for the per-tick gauges.  Alloc-free.
+    // entlint: hot
+    pub fn bytes(&self) -> KvBytes {
+        let mut b = KvBytes {
+            raw: self.lanes.len() * 2 * self.h * self.ctx * self.hd * 4,
+            resident: 0,
+            compressed: 0,
+        };
+        for lk in &self.lanes {
+            for stream in [&lk.k, &lk.v] {
+                let coded: usize = stream.chunks.iter().map(|c| c.len()).sum::<usize>()
+                    + stream.pending.len();
+                b.compressed += coded;
+                b.resident += coded + stream.window.len() * 4;
+            }
+        }
+        b
+    }
+
+    /// Rescale the context capacity (the `compact` path).
+    pub fn set_ctx(&mut self, ctx: usize) {
+        self.ctx = ctx;
+    }
+}
+
+/// Scatter one row (layout `[h][hd]`) to position `p` of destination
+/// lane `li` in a `[lanes, h, ctx, hd]` tensor.
+// entlint: hot
+#[inline]
+fn scatter_row(row: &[f32], dst: &mut [f32], li: usize, p: usize, h: usize, hd: usize, ctx: usize) {
+    for head in 0..h {
+        let at = ((li * h + head) * ctx + p) * hd;
+        dst[at..at + hd].copy_from_slice(&row[head * hd..head * hd + hd]);
+    }
+}
+
+/// Double-buffer ring for materialized packed caches — the
+/// `DecodeArena` discipline applied to attention state.  One buffer
+/// holds both streams of one block's scratch (K at offset 0, V at
+/// `half`); consecutive blocks alternate slots, so by the time a slot's
+/// turn comes round again its previous tenant's views have been
+/// dropped and the buffer recycles with no allocation.
+pub struct KvRing {
+    slots: [Mutex<Option<Arc<Vec<f32>>>>; 2],
+    /// Elements per stream; a buffer holds `2 * half` f32s.
+    half: usize,
+    /// Fresh allocations forced by a still-referenced slot: 0 in steady
+    /// state (the alloc-free tests pin this, same as the decode arena).
+    fresh_allocs: AtomicUsize,
+}
+
+impl KvRing {
+    pub fn new(half: usize) -> Self {
+        KvRing {
+            slots: [
+                Mutex::new(Some(Arc::new(vec![0.0; 2 * half]))),
+                Mutex::new(Some(Arc::new(vec![0.0; 2 * half]))),
+            ],
+            half,
+            fresh_allocs: AtomicUsize::new(0),
+        }
+    }
+
+    /// Elements per stream (the V-stream offset inside a buffer).
+    pub fn half(&self) -> usize {
+        self.half
+    }
+
+    /// Check block `b`'s buffer out for exclusive materialize use;
+    /// falls back to a fresh (counted) allocation if the slot's
+    /// previous tenant still has live views.
+    // entlint: hot
+    pub fn acquire(&self, b: usize) -> Arc<Vec<f32>> {
+        if let Some(mut arc) = self.slots[b & 1].lock().unwrap().take() {
+            if Arc::get_mut(&mut arc).is_some() {
+                return arc;
+            }
+        }
+        // Relaxed: independent monotonic gauge (allocation-miss count); no other
+        // memory depends on its value
+        self.fresh_allocs.fetch_add(1, Ordering::Relaxed);
+        // entlint: allow(hot-path-alloc-free) — the counted fallback itself: taken only
+        // when a slot's previous views are still live, and the steady-state tests pin
+        // this to zero occurrences
+        Arc::new(vec![0.0; 2 * self.half])
+    }
+
+    /// Return a buffer to its slot so the next `acquire` two blocks
+    /// later can recycle it.
+    // entlint: hot
+    pub fn release(&self, b: usize, buf: &Arc<Vec<f32>>) {
+        *self.slots[b & 1].lock().unwrap() = Some(Arc::clone(buf));
+    }
+
+    pub fn fresh_allocs(&self) -> usize {
+        // Relaxed: gauge read for tests/metrics; no ordering contract with the slots
+        self.fresh_allocs.load(Ordering::Relaxed)
+    }
+
+    /// Grow both slot buffers to at least `half` f32s per stream (a
+    /// reroute absorbed a larger block range); no-op when capacity
+    /// already suffices, so warm buffers survive unrelated reroutes.
+    pub fn ensure_capacity(&mut self, half: usize) {
+        if half <= self.half {
+            return;
+        }
+        self.half = half;
+        for slot in &self.slots {
+            *slot.lock().unwrap() = Some(Arc::new(vec![0.0; 2 * half]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(seed: usize, vals: usize) -> Vec<f32> {
+        (0..vals).map(|i| ((seed * 31 + i * 7) % 100) as f32 * 0.125 - 6.0).collect()
+    }
+
+    fn filled(fmt: TailFmt, window: usize, lanes: usize, rows: usize) -> PackedKv {
+        let (h, hd, ctx) = (2, 4, 64);
+        let mut p = PackedKv::new(fmt, window, h, hd, ctx, lanes);
+        for pos in 0..rows {
+            for lane in 0..lanes {
+                let rk = row(lane * 1000 + pos, h * hd);
+                let rv = row(lane * 1000 + pos + 500, h * hd);
+                p.commit_row(lane, pos, &rk, &rv).unwrap();
+            }
+        }
+        p
+    }
+
+    fn gather_row(dst: &[f32], li: usize, p: usize, h: usize, hd: usize, ctx: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for head in 0..h {
+            let at = ((li * h + head) * ctx + p) * hd;
+            out.extend_from_slice(&dst[at..at + hd]);
+        }
+        out
+    }
+
+    #[test]
+    fn lossless_roundtrips_exactly_across_chunk_boundaries() {
+        let (h, hd, ctx) = (2, 4, 64);
+        // enough rows for sealed chunks + pending + window
+        let rows = CHUNK_ROWS * 2 + 7;
+        let p = filled(TailFmt::F32, 4, 2, rows);
+        let mut scratch = KvScratch::new();
+        let n = 2 * h * ctx * hd;
+        let (mut dk, mut dv) = (vec![9.0f32; n], vec![9.0f32; n]);
+        p.materialize_into(&mut dk, &mut dv, 0, 2, ctx, &mut scratch).unwrap();
+        for lane in 0..2 {
+            for pos in 0..rows {
+                assert_eq!(
+                    gather_row(&dk, lane, pos, h, hd, ctx),
+                    row(lane * 1000 + pos, h * hd),
+                    "k lane {lane} pos {pos}"
+                );
+                assert_eq!(
+                    gather_row(&dv, lane, pos, h, hd, ctx),
+                    row(lane * 1000 + pos + 500, h * hd),
+                    "v lane {lane} pos {pos}"
+                );
+            }
+            // untouched beyond len (masked positions; sentinel survives)
+            assert_eq!(gather_row(&dk, lane, rows, h, hd, ctx), vec![9.0f32; h * hd]);
+        }
+    }
+
+    #[test]
+    fn quantized_tail_roundtrips_through_its_own_quantizer() {
+        let (h, hd, ctx) = (2, 4, 64);
+        let rows = CHUNK_ROWS + 5;
+        let window = 3;
+        for fmt in [TailFmt::F8, TailFmt::Bf16] {
+            let p = filled(fmt, window, 1, rows);
+            let mut scratch = KvScratch::new();
+            let n = h * ctx * hd;
+            let (mut dk, mut dv) = (vec![0.0f32; n], vec![0.0f32; n]);
+            p.materialize_into(&mut dk, &mut dv, 0, 1, ctx, &mut scratch).unwrap();
+            for pos in 0..rows {
+                let want_k = row(pos, h * hd);
+                let got_k = gather_row(&dk, 0, pos, h, hd, ctx);
+                if pos >= rows - window {
+                    assert_eq!(got_k, want_k, "window row must be exact, pos {pos}");
+                } else {
+                    for (g, w) in got_k.iter().zip(&want_k) {
+                        let expect = match fmt {
+                            TailFmt::F8 => f8e4m3::decode(f8e4m3::encode(*w)),
+                            TailFmt::Bf16 => bf16::decode(bf16::encode(*w)),
+                            TailFmt::F32 => *w,
+                        };
+                        assert_eq!(*g, expect, "tail row quantizer roundtrip, pos {pos}");
+                    }
+                }
+            }
+            let _ = dv;
+        }
+    }
+
+    #[test]
+    fn replay_overwrite_is_verbatim_and_gaps_error() {
+        let rows = CHUNK_ROWS + 3;
+        let mut p = filled(TailFmt::F8, 4, 1, rows);
+        let before = snapshot_bytes(&p);
+        // replay: re-commit the newest row with identical values
+        let rk = row(rows - 1, 8);
+        let rv = row(rows - 1 + 500, 8);
+        p.commit_row(0, rows - 1, &rk, &rv).unwrap();
+        assert_eq!(snapshot_bytes(&p), before, "verbatim replay must not change stored bytes");
+        // a gap is a contract violation
+        assert!(p.commit_row(0, rows + 1, &rk, &rv).is_err());
+        // overwriting below the window is one too
+        assert!(p.commit_row(0, 0, &rk, &rv).is_err());
+    }
+
+    fn snapshot_bytes(p: &PackedKv) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        for lk in &p.lanes {
+            for stream in [&lk.k, &lk.v] {
+                for c in &stream.chunks {
+                    out.push(c.clone());
+                }
+                out.push(stream.pending.clone());
+                let mut w = Vec::new();
+                for x in &stream.window {
+                    w.extend_from_slice(&x.to_le_bytes());
+                }
+                out.push(w);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn adopt_and_zero_fill_match_expectations() {
+        let rows = 9;
+        let src = filled(TailFmt::Bf16, 4, 1, rows);
+        let mut dst = PackedKv::new(TailFmt::Bf16, 4, 2, 4, 64, 3);
+        dst.zero_fill_lane(1, rows).unwrap();
+        dst.adopt_lane_from(1, &src, 0).unwrap();
+        assert_eq!(dst.lane_len(1), rows);
+        let mut scratch = KvScratch::new();
+        let n = 3 * 2 * 64 * 4;
+        let (mut dk, mut dv) = (vec![0.0f32; n], vec![0.0f32; n]);
+        dst.materialize_into(&mut dk, &mut dv, 0, 3, 64, &mut scratch).unwrap();
+        // adopted lane reproduces the source's newest (exact) row
+        assert_eq!(gather_row(&dk, 1, rows - 1, 2, 4, 64), row(rows - 1, 8));
+        let _ = dv;
+        // incompatible geometry is rejected
+        let other = PackedKv::new(TailFmt::F8, 4, 2, 4, 64, 1);
+        assert!(dst.adopt_lane_from(0, &other, 0).is_err());
+    }
+
+    #[test]
+    fn byte_accounting_shows_compression() {
+        let (_h, _hd, ctx) = (2, 4, 64);
+        let rows = ctx; // full context
+        let p = filled(TailFmt::F8, 4, 1, rows);
+        let b = p.bytes();
+        assert_eq!(b.raw, 2 * 2 * 64 * 4 * 4);
+        assert!(b.resident < b.raw / 3, "f8 tail must be >= 3x smaller: {b:?}");
+        assert!(b.compressed > 0 && b.compressed < b.resident);
+        // lossless packing never exceeds raw by more than chunk framing
+        let pl = filled(TailFmt::F32, 4, 1, rows);
+        let bl = pl.bytes();
+        assert!(bl.resident <= bl.raw + 64, "{bl:?}");
+    }
+
+    #[test]
+    fn ring_recycles_buffers_alloc_free() {
+        let ring = KvRing::new(128);
+        for step in 0..10 {
+            for blk in 0..4 {
+                let buf = ring.acquire(blk);
+                assert_eq!(buf.len(), 256);
+                ring.release(blk, &buf);
+                let _ = step;
+            }
+        }
+        assert_eq!(ring.fresh_allocs(), 0);
+        // a held buffer forces a counted fresh allocation
+        let held = ring.acquire(0);
+        let fresh = ring.acquire(2); // same slot (2 & 1 == 0)
+        ring.release(2, &fresh);
+        drop(held);
+        assert_eq!(ring.fresh_allocs(), 1);
+    }
+}

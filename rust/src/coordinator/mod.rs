@@ -4,6 +4,8 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod kv;
 
 pub use batcher::{pack, select_slot, Batch, Request};
 pub use engine::{DecodeState, EngineOpts, Metrics, Residency, ServingEngine, ShardRole};
+pub use kv::{KvCache, KvCfg, KvMode, TailFmt};

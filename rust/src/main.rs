@@ -3,7 +3,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use entquant::coordinator::{EngineOpts, Residency};
+use entquant::coordinator::{EngineOpts, KvCfg, KvMode, Residency};
 use entquant::eval::{perplexity, TaskSuite};
 use entquant::model::loader::synthetic_model;
 use entquant::model::{load_eqw, Config};
@@ -26,6 +26,7 @@ fn usage() -> ! {
            compress --model <size|path> [--bits B | --lam L] [--fmt f8|i8] [--sw TH] [--out P] [--threads N]\n\
            eval     --model <size|path> [--compressed P] [--windows N]\n\
            serve    --compressed P [--prompts N] [--max-new N] [--residency MODE] [--threads N] [--shards N]\n\
+                    [--kv-mode raw|lossless|f8|bf16] [--kv-window W]  (KV-cache tail coding + lossless recent window)\n\
                     [--trace-out P]  (write the run's tick-domain trace as Chrome trace-event JSON)\n\
                     [--fault-shard K --fault-step S]  (fault drill: kill shard K at decode step S; reroutes + completes)\n\
                     [--rejoin-shard N --rejoin-step S] (rejoin drill: N replacement runtime(s) — a COUNT, default 1 —\n\
@@ -33,6 +34,7 @@ fn usage() -> ! {
            serve-stdio [--synthetic L] [--shards N] [--max-queue-depth D] [--max-inflight-tokens T]\n\
                     [--min-healthy-shards H] [--step-budget B] [--fault-shard K --fault-step S]\n\
                     [--supervisor-spares N] [--evict-after F] [--threads N] [--trace-out P]\n\
+                    [--kv-mode raw|lossless|f8|bf16] [--kv-window W]\n\
                     (chaos-harness server: a self-contained synthetic stack driven line-by-line over\n\
                      stdin/stdout — SUBMIT <cid> <max_new> <hexprompt> | TRACE <path> | QUIT in; READY,\n\
                      ADMITTED/SHED, FIRST, DONE/EXPIRED/FAILED, TRACED, STATS <json> out; see tools/chaosbench)\n\
@@ -54,6 +56,20 @@ fn arg_threads(args: &[String]) -> Result<usize> {
         Some(v) => v.parse::<usize>()?.max(1),
         None => entquant::parallel::default_threads(),
     })
+}
+
+/// The `--kv-mode`/`--kv-window` knobs shared by the serve commands:
+/// how the attention KV cache holds older rows (`raw`, `lossless`,
+/// `f8`, `bf16`) and the lossless recent-window length.
+fn arg_kv(args: &[String]) -> Result<KvCfg> {
+    let mut kv = KvCfg::default();
+    if let Some(m) = arg_val(args, "--kv-mode") {
+        kv.mode = KvMode::parse(&m).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(w) = arg_val(args, "--kv-window") {
+        kv.window = w.parse::<usize>()?.max(1);
+    }
+    Ok(kv)
 }
 
 fn model_path(spec: &str) -> String {
@@ -217,11 +233,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         runtimes.push(rt);
     }
     let platform = runtimes[0].platform();
+    let kv = arg_kv(args)?;
     let engine = ShardedEngine::new(
         runtimes,
         &cm,
         plan,
-        &EngineOpts { residency, decode_threads, ..Default::default() },
+        &EngineOpts { residency, decode_threads, kv, ..Default::default() },
     )?;
     for _ in 0..rejoin_shards {
         engine.arm_rejoin(Runtime::new(&art)?, rejoin_step);
@@ -272,6 +289,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         m.resident_compressed_bytes,
         m.recovery_spliced_blocks,
         m.recovery_stall_ms
+    );
+    println!(
+        "kv cache ({:?}, window {}): peak resident={} B (final sweep: {} B resident, {} B entropy-coded, {:.2}x vs raw)",
+        kv.mode,
+        kv.window,
+        m.kv_peak_resident_bytes,
+        m.kv_resident_bytes,
+        m.kv_compressed_bytes,
+        m.kv_compression_ratio
     );
     if let Some(plan_faults) = &faults {
         println!(
@@ -388,7 +414,8 @@ fn cmd_serve_stdio(args: &[String]) -> Result<()> {
             }
         })
         .collect();
-    let engine = ShardedEngine::new(rts, &cm, plan, &EngineOpts::default())?;
+    let engine =
+        ShardedEngine::new(rts, &cm, plan, &EngineOpts { kv: arg_kv(args)?, ..Default::default() })?;
     let opts = SchedulerOpts {
         max_queue_depth,
         max_inflight_tokens,
@@ -558,6 +585,8 @@ fn stats_json(m: &entquant::serve::MetricsSnapshot) -> String {
             "\"reroutes\": {}, \"rejoins\": {}, \"backoff_retries\": {}, ",
             "\"healthy_shards\": {}, \"degraded_shards\": {}, \"evicted_shards\": {}, ",
             "\"degradation_tier\": {}, \"weight_copies\": {}, \"queue_depth\": {}, ",
+            "\"kv_resident_bytes\": {}, \"kv_compressed_bytes\": {}, ",
+            "\"kv_peak_resident_bytes\": {}, \"kv_compression_ratio\": {:.3}, ",
             "\"p50_ttft_ms\": {:.3}, \"p99_ttft_ms\": {:.3}, \"p999_ttft_ms\": {:.3}, ",
             "\"p50_step_us\": {:.3}, \"p99_step_us\": {:.3}, \"p999_step_us\": {:.3}, ",
             "\"tokens_per_s\": {:.1}}}"
@@ -579,6 +608,10 @@ fn stats_json(m: &entquant::serve::MetricsSnapshot) -> String {
         m.degradation_tier,
         m.weight_copies,
         m.queue_depth,
+        m.kv_resident_bytes,
+        m.kv_compressed_bytes,
+        m.kv_peak_resident_bytes,
+        m.kv_compression_ratio,
         m.p50_ttft_ms,
         m.p99_ttft_ms,
         m.p999_ttft_ms,

@@ -163,6 +163,13 @@ impl HostTensor {
         HostTensor::I32 { data, dims: dims.to_vec() }
     }
 
+    /// A zero-element, zero-allocation f32 placeholder — what
+    /// `mem::replace` leaves behind when a hot path moves an owned
+    /// tensor into an executor input list instead of cloning it.
+    pub fn empty() -> Self {
+        HostTensor::F32 { data: Vec::new(), dims: Vec::new() }
+    }
+
     pub fn scalar_i32(v: i32) -> Self {
         HostTensor::I32 { data: vec![v], dims: vec![] }
     }

@@ -75,6 +75,17 @@ pub struct ServeMetrics {
     resident_compressed_bytes: AtomicUsize,
     /// gauge: blocks spliced into survivors by reroutes so far
     recovery_spliced_blocks: AtomicUsize,
+    /// gauge: raw f32 bytes the in-flight KV caches would occupy
+    kv_raw_bytes: AtomicUsize,
+    /// gauge: bytes the in-flight KV caches actually hold resident
+    /// (equal to raw under `KvMode::Raw`; lossless window plus coded
+    /// tail when packed)
+    kv_resident_bytes: AtomicUsize,
+    /// gauge: entropy-coded tail bytes within `kv_resident_bytes`
+    kv_compressed_bytes: AtomicUsize,
+    /// high-water mark of `kv_resident_bytes` (the current gauge drops
+    /// to 0 between batches; end-of-run reports read the peak)
+    kv_peak_resident_bytes: AtomicUsize,
     tokens: AtomicUsize,
     decode_steps: AtomicUsize,
     queue_depth: AtomicUsize,
@@ -118,6 +129,12 @@ pub struct MetricsSnapshot {
     pub weight_copies: usize,
     pub resident_compressed_bytes: usize,
     pub recovery_spliced_blocks: usize,
+    pub kv_resident_bytes: usize,
+    pub kv_compressed_bytes: usize,
+    pub kv_peak_resident_bytes: usize,
+    /// raw-over-resident KV footprint ratio (1.0 when nothing is
+    /// in flight or the caches are uncompressed)
+    pub kv_compression_ratio: f64,
     pub tokens: usize,
     pub decode_steps: usize,
     pub queue_depth: usize,
@@ -174,6 +191,10 @@ impl ServeMetrics {
             weight_copies: AtomicUsize::new(1),
             resident_compressed_bytes: AtomicUsize::new(0),
             recovery_spliced_blocks: AtomicUsize::new(0),
+            kv_raw_bytes: AtomicUsize::new(0),
+            kv_resident_bytes: AtomicUsize::new(0),
+            kv_compressed_bytes: AtomicUsize::new(0),
+            kv_peak_resident_bytes: AtomicUsize::new(0),
             tokens: AtomicUsize::new(0),
             decode_steps: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
@@ -270,6 +291,17 @@ impl ServeMetrics {
         self.recovery_spliced_blocks.store(blocks, Ordering::Relaxed);
     }
 
+    /// Gauge sweep of the in-flight KV-cache byte accounting: the
+    /// scheduler driver sums `DecodeState::kv_bytes` across every
+    /// in-flight and speculative state each tick and stores the totals
+    /// here.
+    pub fn set_kv_bytes(&self, raw: usize, resident: usize, compressed: usize) {
+        self.kv_raw_bytes.store(raw, Ordering::Relaxed);
+        self.kv_resident_bytes.store(resident, Ordering::Relaxed);
+        self.kv_compressed_bytes.store(compressed, Ordering::Relaxed);
+        self.kv_peak_resident_bytes.fetch_max(resident, Ordering::Relaxed);
+    }
+
     pub fn add_tokens(&self, n: usize) {
         self.tokens.fetch_add(n, Ordering::Relaxed);
     }
@@ -329,6 +361,7 @@ impl ServeMetrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let kv_resident = self.kv_resident_bytes.load(Ordering::Relaxed);
         let ttft = self.ttft_us.snapshot();
         let step = self.step_us.snapshot();
         let queue_wait = self.queue_wait_steps.snapshot();
@@ -357,6 +390,14 @@ impl ServeMetrics {
             weight_copies: self.weight_copies.load(Ordering::Relaxed),
             resident_compressed_bytes: self.resident_compressed_bytes.load(Ordering::Relaxed),
             recovery_spliced_blocks: self.recovery_spliced_blocks.load(Ordering::Relaxed),
+            kv_resident_bytes: kv_resident,
+            kv_compressed_bytes: self.kv_compressed_bytes.load(Ordering::Relaxed),
+            kv_peak_resident_bytes: self.kv_peak_resident_bytes.load(Ordering::Relaxed),
+            kv_compression_ratio: if kv_resident > 0 {
+                self.kv_raw_bytes.load(Ordering::Relaxed) as f64 / kv_resident as f64
+            } else {
+                1.0
+            },
             tokens,
             decode_steps: self.decode_steps.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
@@ -432,6 +473,7 @@ mod tests {
         m.set_weight_copies(1);
         m.set_resident_compressed_bytes(4096);
         m.set_recovery_spliced_blocks(3);
+        m.set_kv_bytes(12000, 4000, 3000);
         m.add_tokens(42);
         m.inc_decode_steps();
         m.set_queue_depth(2);
@@ -463,6 +505,10 @@ mod tests {
         assert_eq!(s.weight_copies, 1);
         assert_eq!(s.resident_compressed_bytes, 4096);
         assert_eq!(s.recovery_spliced_blocks, 3);
+        assert_eq!(s.kv_resident_bytes, 4000);
+        assert_eq!(s.kv_compressed_bytes, 3000);
+        assert_eq!(s.kv_peak_resident_bytes, 4000);
+        assert!((s.kv_compression_ratio - 3.0).abs() < 1e-9);
         assert_eq!(s.tokens, 42);
         assert_eq!(s.decode_steps, 1);
         assert_eq!(s.queue_depth, 2);

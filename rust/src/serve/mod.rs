@@ -91,8 +91,9 @@ pub trait StepEngine: Send {
     fn decode_step(&self, st: &mut DecodeState) -> Result<bool>;
     fn prefill_slots(&self) -> Vec<(usize, usize)>;
     fn decode_slots(&self) -> Vec<(usize, usize)>;
-    /// Decode-arena fresh allocations per shard (one entry per shard; 0
-    /// each in steady state).
+    /// Fresh allocations forced on the steady-state decode hot path,
+    /// per shard: decode arena plus packed-KV materialization ring
+    /// (one entry per shard; 0 each in steady state).
     fn fresh_allocs_per_shard(&self) -> Vec<usize>;
 
     /// Allocation-free variant of `fresh_allocs_per_shard`: overwrite
@@ -189,12 +190,12 @@ impl StepEngine for ServingEngine {
     }
 
     fn fresh_allocs_per_shard(&self) -> Vec<usize> {
-        vec![self.decode_arena_fresh_allocs()]
+        vec![self.decode_arena_fresh_allocs() + self.kv_fresh_allocs()]
     }
 
     fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
         out.clear();
-        out.push(self.decode_arena_fresh_allocs());
+        out.push(self.decode_arena_fresh_allocs() + self.kv_fresh_allocs());
     }
 
     fn resident_compressed_bytes(&self) -> usize {

@@ -74,6 +74,7 @@ use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::StepEngine;
 use crate::coordinator::batcher::{pack, Request};
 use crate::coordinator::engine::DecodeState;
+use crate::coordinator::kv::KvBytes;
 use crate::obs::{EventKind, Stopwatch, Tracer};
 use crate::parallel::{sched_point, Service};
 use anyhow::Result;
@@ -623,6 +624,18 @@ impl<E: StepEngine> Driver<E> {
         self.speculate();
         self.engine.fresh_allocs_into(&mut self.fresh_allocs_scratch);
         self.shared.metrics.set_shard_fresh_allocs(&self.fresh_allocs_scratch);
+        // KV-cache footprint sweep: every live state's byte accounting
+        // (in-flight batch plus speculative solo) — `kv_bytes` walks
+        // already-resident counters, so the sweep itself allocates
+        // nothing
+        let mut kv = KvBytes::default();
+        if let Some(fl) = &self.flight {
+            kv.add(fl.st.kv_bytes());
+        }
+        if let Some(sp) = &self.spec {
+            kv.add(sp.st.kv_bytes());
+        }
+        self.shared.metrics.set_kv_bytes(kv.raw, kv.resident, kv.compressed);
         self.shared.tracer.drain();
         Ok(true)
     }

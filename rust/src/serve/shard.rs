@@ -51,6 +51,7 @@
 use crate::coordinator::engine::{
     apply_decode_logits, state_from_prefill, truncate_outputs, DecodeState, ShardRole,
 };
+use crate::coordinator::kv::KvCache;
 use crate::coordinator::{Batch, EngineOpts, Metrics, Residency, ServingEngine};
 use crate::obs::{EventKind, Stopwatch, Tracer};
 use crate::runtime::{HostTensor, Runtime};
@@ -395,10 +396,15 @@ impl ShardedEngine {
         self.shards.borrow().iter().map(ServingEngine::residency_decodes).collect()
     }
 
-    /// Per-shard decode-arena fresh allocations (0 per shard in steady
-    /// state — the sharded serving tests pin this).
+    /// Per-shard fresh allocations forced on the steady-state decode
+    /// hot path — decode arena plus packed-KV materialization ring (0
+    /// per shard in steady state; the sharded serving tests pin this).
     pub fn fresh_allocs(&self) -> Vec<usize> {
-        self.shards.borrow().iter().map(|s| s.decode_arena_fresh_allocs()).collect()
+        self.shards
+            .borrow()
+            .iter()
+            .map(|s| s.decode_arena_fresh_allocs() + s.kv_fresh_allocs())
+            .collect()
     }
 
     /// `fresh_allocs` into a reused buffer: the scheduler driver calls
@@ -407,7 +413,7 @@ impl ShardedEngine {
     pub fn fresh_allocs_into(&self, out: &mut Vec<usize>) {
         out.clear();
         for s in self.shards.borrow().iter() {
-            out.push(s.decode_arena_fresh_allocs());
+            out.push(s.decode_arena_fresh_allocs() + s.kv_fresh_allocs());
         }
     }
 
@@ -707,7 +713,7 @@ impl ShardedEngine {
         if metrics.ttft_ms == 0.0 {
             metrics.ttft_ms = prefill_ms;
         }
-        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, metrics))
+        Ok(state_from_prefill(batch, &logits, &prefill_caches, cfg, ctx, &self.opts.kv, metrics))
     }
 
     /// One decode step through the shard pipeline.  Resumable exactly
@@ -822,7 +828,7 @@ impl ShardedEngine {
         let tracer = self.tracer.get().map(|t| &**t);
         let mut ctxs = Vec::with_capacity(n_stages);
         {
-            let mut cache_rest: &mut [(HostTensor, HostTensor)] = &mut st.caches;
+            let mut cache_rest: &mut [KvCache] = &mut st.caches;
             let mut pool_iter = pools.iter_mut();
             let mut metric_iter = stage_metrics.iter_mut();
             for (s, shard) in shards.iter_mut().enumerate() {
@@ -912,7 +918,7 @@ impl ShardedEngine {
 /// decode.
 struct StageCtx<'a> {
     shard: &'a mut ServingEngine,
-    caches: &'a mut [(HostTensor, HostTensor)],
+    caches: &'a mut [KvCache],
     codes: Option<Vec<Vec<HostTensor>>>,
     pool: &'a mut Vec<Vec<f32>>,
     metrics: &'a mut Metrics,
@@ -954,8 +960,8 @@ fn step_stage(s: usize, i: usize, c: &mut StageCtx<'_>, item: &mut StageItem) ->
     }
     let codes = c.codes.as_ref().expect("codes memoized above");
     let mut scratch = Vec::with_capacity(c.caches.len());
-    for (k, v) in c.caches.iter() {
-        scratch.push((gather_lanes(k, &item.lanes, c.pool), gather_lanes(v, &item.lanes, c.pool)));
+    for cache in c.caches.iter() {
+        scratch.push(gather_cache(cache, &item.lanes, c.ctx_len, c.shard, c.pool)?);
     }
     x = c.shard.decode_blocks_with_codes(
         x,
@@ -967,9 +973,8 @@ fn step_stage(s: usize, i: usize, c: &mut StageCtx<'_>, item: &mut StageItem) ->
         c.ctx_len,
         c.metrics,
     )?;
-    for ((k, v), (sk, sv)) in c.caches.iter_mut().zip(scratch) {
-        scatter_lanes(k, &item.lanes, sk, c.pool)?;
-        scatter_lanes(v, &item.lanes, sv, c.pool)?;
+    for (cache, part) in c.caches.iter_mut().zip(scratch) {
+        scatter_cache(cache, &item.lanes, part, c.pos, c.ctx_len, c.shard, c.pool)?;
     }
     if let Some(t) = c.tracer {
         t.record(EventKind::StageRun, s as u64, i as u64, mb as u64);
@@ -1022,6 +1027,91 @@ fn scatter_lanes(
         pool.push(data);
     }
     Ok(())
+}
+
+/// Gather one block cache's micro-batch lane range into an owned
+/// `[mb, H, C, hd]` scratch cache for `decode_blocks_with_codes`.  Raw
+/// caches copy the contiguous lane slice; packed caches decode their
+/// lanes into pool-recycled buffers.  Rows at positions `>=` the lane
+/// length keep whatever the recycled buffer held — attention masks
+/// them to an exact-zero weight and the executor writes row `pos`
+/// before reading it, the same argument `PackedKv::materialize_into`
+/// documents for skipping the memset.
+fn gather_cache(
+    cache: &KvCache,
+    lanes: &Range<usize>,
+    ctx: usize,
+    shard: &ServingEngine,
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<KvCache> {
+    match cache {
+        KvCache::Raw(k, v) => {
+            Ok(KvCache::Raw(gather_lanes(k, lanes, pool), gather_lanes(v, lanes, pool)))
+        }
+        KvCache::Packed(p) => {
+            let (h, hd) = (p.h(), p.hd());
+            let n = lanes.len() * h * ctx * hd;
+            let mut kb = pool.pop().unwrap_or_default();
+            kb.resize(n, 0.0);
+            let mut vb = pool.pop().unwrap_or_default();
+            vb.resize(n, 0.0);
+            shard
+                .with_kv_scratch(|s| {
+                    p.materialize_into(&mut kb, &mut vb, lanes.start, lanes.len(), ctx, s)
+                })
+                .map_err(anyhow::Error::msg)?;
+            let dims = [lanes.len(), h, ctx, hd];
+            Ok(KvCache::Raw(HostTensor::f32(kb, &dims), HostTensor::f32(vb, &dims)))
+        }
+    }
+}
+
+/// Scatter a stepped micro-batch scratch cache back into the full
+/// cache.  Raw caches copy the lane slice in place; packed caches
+/// re-commit row `pos` of each lane through the same quantize/chunk
+/// path the sequential walk uses, so the pipelined step stays
+/// byte-identical to it.  Scratch storage recycles into the stage
+/// pool either way.
+fn scatter_cache(
+    cache: &mut KvCache,
+    lanes: &Range<usize>,
+    part: KvCache,
+    pos: i32,
+    ctx: usize,
+    shard: &ServingEngine,
+    pool: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    let (sk, sv) = match part {
+        KvCache::Raw(k, v) => (k, v),
+        KvCache::Packed(_) => anyhow::bail!("pipelined decode scratch must be a raw cache"),
+    };
+    match cache {
+        KvCache::Raw(k, v) => {
+            scatter_lanes(k, lanes, sk, pool)?;
+            scatter_lanes(v, lanes, sv, pool)
+        }
+        KvCache::Packed(p) => {
+            shard
+                .with_kv_scratch(|s| {
+                    p.commit_from_outputs(
+                        sk.as_f32(),
+                        sv.as_f32(),
+                        lanes.start,
+                        lanes.len(),
+                        ctx,
+                        pos as usize,
+                        s,
+                    )
+                })
+                .map_err(anyhow::Error::msg)?;
+            for t in [sk, sv] {
+                if let HostTensor::F32 { data, .. } = t {
+                    pool.push(data);
+                }
+            }
+            Ok(())
+        }
+    }
 }
 
 #[cfg(test)]

@@ -13,7 +13,8 @@
 //! — served it.
 
 use entquant::coordinator::{
-    pack, Batch, DecodeState, EngineOpts, Request, Residency, ServingEngine,
+    pack, Batch, DecodeState, EngineOpts, KvCfg, KvMode, Request, Residency, ServingEngine,
+    TailFmt,
 };
 use entquant::model::loader::synthetic_model;
 use entquant::model::Config;
@@ -1225,6 +1226,187 @@ fn zero_and_one_token_generate_contract_is_pinned_across_engines() {
             assert_eq!(out.len(), max_new, "max_new={max_new} lane={lane}");
         }
     }
+}
+
+// ---------------------------------------------- compressed KV cache
+
+/// Engine opts for a packed KV cache: mode plus a deliberately short
+/// lossless window (2), so even the 8-token traces here push most
+/// rows into the coded tail and across a sealed-chunk boundary.
+fn kv_opts(mode: KvMode) -> EngineOpts {
+    EngineOpts { kv: KvCfg { mode, window: 2 }, ..Default::default() }
+}
+
+fn single_engine_opts(opts: EngineOpts) -> ServingEngine {
+    let model = cm().clone();
+    let rt = native_rt(&model);
+    ServingEngine::new(rt, model, opts).unwrap()
+}
+
+#[test]
+fn lossless_tail_kv_is_byte_identical_to_raw_across_shard_counts() {
+    // the tentpole contract: `LosslessTail` re-codes the cache layout
+    // (f32 window + rANS-chunked f32 tail) without quantization, so
+    // every token stream must equal the raw-cache reference — on the
+    // solo engine and at 1/2/4 shards, pipelined and sequential, with
+    // the materialization ring alloc-free in steady state.
+    let reqs: Vec<Request> = (0..4).map(|i| req(1700 + i, 4 + i as usize * 3)).collect();
+    let batch = &pack(&reqs, &[(4, SEQ)])[0];
+    let (want, _) = single_engine().generate(batch, 8).unwrap();
+
+    let solo = single_engine_opts(kv_opts(KvMode::LosslessTail));
+    for round in 0..2 {
+        let (got, _) = solo.generate(batch, 8).unwrap();
+        assert_eq!(got, want, "solo lossless round={round}");
+    }
+    assert_eq!(solo.kv_fresh_allocs(), 0, "solo kv ring must stay steady-state");
+
+    for shards in [1usize, 2, 4] {
+        for stage_pipeline in [true, false] {
+            let se = sharded_opts(
+                shards,
+                EngineOpts { stage_pipeline, ..kv_opts(KvMode::LosslessTail) },
+            );
+            for round in 0..2 {
+                let (got, _) = se.generate(batch, 8).unwrap();
+                assert_eq!(
+                    got, want,
+                    "shards={shards} pipeline={stage_pipeline} round={round}"
+                );
+            }
+            let allocs = se.fresh_allocs();
+            assert!(
+                allocs.iter().all(|&a| a == 0),
+                "shards={shards} pipeline={stage_pipeline}: fresh allocs {allocs:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_tail_kv_is_deterministic_across_engines_and_compresses() {
+    // `QuantTail` quantizes tail rows, so outputs may legitimately
+    // drift from the raw reference — but every engine shape must agree
+    // with the solo quantized run bit-for-bit (the quantization points
+    // are a pure function of committed row values), and the byte
+    // accounting must show the f8 tail actually shrinking the cache.
+    let reqs: Vec<Request> = (0..4).map(|i| req(1750 + i, 4 + i as usize * 3)).collect();
+    let batch = &pack(&reqs, &[(4, SEQ)])[0];
+    for fmt in [TailFmt::F8, TailFmt::Bf16] {
+        let solo = single_engine_opts(kv_opts(KvMode::QuantTail(fmt)));
+        let (want, _) = solo.generate(batch, 8).unwrap();
+        let (again, _) = solo.generate(batch, 8).unwrap();
+        assert_eq!(want, again, "{fmt:?}: repeated quantized runs must agree");
+        assert_eq!(solo.kv_fresh_allocs(), 0, "{fmt:?}: solo kv ring allocated");
+        for shards in [2usize, 4] {
+            for stage_pipeline in [true, false] {
+                let se = sharded_opts(
+                    shards,
+                    EngineOpts { stage_pipeline, ..kv_opts(KvMode::QuantTail(fmt)) },
+                );
+                let (got, _) = se.generate(batch, 8).unwrap();
+                assert_eq!(got, want, "{fmt:?} shards={shards} pipeline={stage_pipeline}");
+                let allocs = se.fresh_allocs();
+                assert!(
+                    allocs.iter().all(|&a| a == 0),
+                    "{fmt:?} shards={shards} pipeline={stage_pipeline}: {allocs:?}"
+                );
+            }
+        }
+        // byte accounting on a live state: the packed layout must be
+        // smaller than its raw equivalent, and the coded tail nonempty
+        let st = solo.prefill_state(batch).unwrap();
+        let b = st.kv_bytes();
+        assert!(b.resident < b.raw, "{fmt:?}: resident {} !< raw {}", b.resident, b.raw);
+        assert!(b.compressed > 0, "{fmt:?}: no bytes ever reached the coded tail");
+    }
+}
+
+#[test]
+fn packed_kv_survives_mid_step_kill_reroute_and_rejoin() {
+    // the fault drill under packed caches, both modes: a scripted
+    // fault kills shard 1 of 3 mid-step (partial tail appends already
+    // committed for earlier blocks), the range reroutes, the armed
+    // replacement rejoins one step later, and the generation finishes
+    // byte-identical to the unfaulted solo run with the same kv mode —
+    // partial appends must replay verbatim through recovery.
+    for mode in [KvMode::LosslessTail, KvMode::QuantTail(TailFmt::F8)] {
+        let solo = single_engine_opts(kv_opts(mode));
+        let reqs: Vec<Request> = (0..2).map(|i| req(1800 + i, 5 + i as usize)).collect();
+        let batch = &pack(&reqs, &[(2, SEQ)])[0];
+        let (want, _) = solo.generate(batch, 8).unwrap();
+        if mode == KvMode::LosslessTail {
+            // lossless must also match the raw-cache reference
+            let (raw_want, _) = single_engine().generate(batch, 8).unwrap();
+            assert_eq!(want, raw_want, "lossless solo diverged from raw");
+        }
+
+        let faults = FaultPlan::scripted(vec![FaultScript { shard: 1, step: 2, block: 1 }]);
+        let se = sharded_with_faults_opts(3, &faults, kv_opts(mode));
+        se.arm_rejoin(native_rt(cm()), 1);
+        let mut st = se.prefill_state(batch).unwrap();
+        let mut rejoined = false;
+        for _ in 0..7 {
+            loop {
+                match se.decode_step(&mut st) {
+                    Ok(true) => break,
+                    Ok(false) => panic!("context wall before the trace finished"),
+                    Err(e) => {
+                        assert!(se.try_recover(), "{mode:?}: reroute must succeed: {e:#}");
+                    }
+                }
+            }
+            if se.try_rejoin() {
+                rejoined = true;
+            }
+        }
+        assert!(rejoined, "{mode:?}: the armed replacement never rejoined");
+        assert_eq!(faults.fired(), 1, "{mode:?}: the scripted fault must fire");
+        assert_eq!(se.n_shards(), 3, "{mode:?}: topology must be restored");
+        for (lane, w) in want.iter().enumerate() {
+            assert_eq!(&st.outputs[lane], w, "{mode:?} lane {lane} diverged across recovery");
+        }
+    }
+}
+
+#[test]
+fn scheduler_trace_under_lossless_kv_matches_raw_references() {
+    // end-to-end through the continuous-batching scheduler with packed
+    // lossless caches: fused admission (adopt_lane), batch compaction,
+    // and speculative adoption all run against `KvCache::Packed`
+    // states, and every output equals the raw-cache solo reference.
+    // The driver's per-tick sweep must surface the kv gauges.
+    let engine = single_engine();
+    let reqs: Vec<Request> = (0..24).map(|i| req(1850 + i, 1 + (i as usize * 5) % 14)).collect();
+    let max_new = |id: u64| 2 + (id as usize % 7);
+    let want: Vec<Vec<u8>> = reqs.iter().map(|r| reference(&engine, r, max_new(r.id))).collect();
+
+    let se = sharded_opts(2, kv_opts(KvMode::LosslessTail));
+    let sched = Scheduler::new(se, SchedulerOpts { paused: true, ..Default::default() });
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|r| sched.submit(r.prompt.clone(), max_new(r.id)).expect_admitted())
+        .collect();
+    sched.resume();
+    sched.drain(Duration::from_secs(300)).unwrap();
+    for (i, id) in ids.iter().enumerate() {
+        let (status, out) = sched.poll(*id).unwrap();
+        assert_eq!(status, Status::Done, "request {i}");
+        assert_eq!(out, want[i], "request {i} diverged under packed kv");
+    }
+    let m = sched.metrics();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.failed, 0);
+    assert!(
+        m.shard_fresh_allocs.iter().all(|&a| a == 0),
+        "kv ring + arena must stay steady-state: {:?}",
+        m.shard_fresh_allocs
+    );
+    assert!(
+        m.kv_peak_resident_bytes > 0,
+        "the tick sweep never observed a live packed cache: {m:?}"
+    );
+    sched.shutdown().unwrap();
 }
 
 #[test]

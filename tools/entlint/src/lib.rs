@@ -11,7 +11,7 @@
 //! | `no-stray-threads` | `thread::spawn`/`scope`/`Builder` | everywhere except `parallel/` |
 //! | `hot-path-alloc-free` | `Vec::new`/`with_capacity`, `vec!`, `format!`, `.to_vec()`, `.collect()`, `.clone()` | fns marked `// entlint: hot` |
 //! | `no-panic-on-untrusted` | `.unwrap()`, `.expect()`, direct `[..]` indexing | `ans/`, `store/` |
-//! | `no-wallclock-in-replay` | `Instant::now`, `SystemTime` | engine, fault injection, serve replay paths |
+//! | `no-wallclock-in-replay` | `Instant::now`, `SystemTime` | engine, packed KV cache, fault injection, serve replay paths |
 //! | `ordering-audit` | `Ordering::Relaxed` without a justifying comment | everywhere |
 //! | `safety-comment` | `unsafe { .. }` without a `// SAFETY:` comment | everywhere (moot while lib.rs forbids unsafe) |
 //!

@@ -32,6 +32,7 @@ pub const RULES: &[&str] = &[
 /// replay must not read wall time.
 const REPLAY_PATHS: &[&str] = &[
     "coordinator/engine.rs",
+    "coordinator/kv.rs",
     "runtime/fault.rs",
     "serve/shard.rs",
     "serve/scheduler.rs",
